@@ -1,0 +1,66 @@
+//! Interactive design-space exploration (paper §VI-C): sweep the 108
+//! single-cluster configurations over a workload suite, print the Pareto
+//! frontier, and write the full point cloud to `out/dse_explore.csv`.
+//!
+//! `--quick` shrinks the suite for CI-speed runs.
+//!
+//! Run: `cargo run --release --example dse_explore [-- --quick]`
+
+use hsv::config::SimConfig;
+use hsv::dse;
+use hsv::sched::SchedulerKind;
+use hsv::util::cli::Args;
+use hsv::workload::{suite_33, WorkloadSpec};
+
+fn main() {
+    let args = Args::from_env();
+    let quick = args.has("quick");
+    let configs = dse::single_cluster_space();
+    let workloads = if quick {
+        vec![
+            WorkloadSpec::ratio(0.2, 6, 11).generate(),
+            WorkloadSpec::ratio(0.8, 6, 11).generate(),
+        ]
+    } else {
+        suite_33(args.usize("requests", 12))
+    };
+    let threads =
+        args.usize("threads", std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4));
+    eprintln!(
+        "sweeping {} configs x {} workloads on {} threads...",
+        configs.len(),
+        workloads.len(),
+        threads
+    );
+    let t0 = std::time::Instant::now();
+    let pts = dse::sweep(&configs, &workloads, SchedulerKind::Has, &SimConfig::default(), threads);
+    eprintln!("{} points in {:.1}s", pts.len(), t0.elapsed().as_secs_f64());
+
+    let agg = dse::aggregate_by_config(&pts);
+    dse::to_csv(&pts).save("out/dse_explore.csv").expect("write csv");
+    dse::to_csv(&agg).save("out/dse_explore_agg.csv").expect("write csv");
+
+    // Pareto frontier on (perf, area).
+    let mut frontier: Vec<&dse::DsePoint> = Vec::new();
+    let mut sorted: Vec<&dse::DsePoint> = agg.iter().collect();
+    sorted.sort_by(|a, b| a.area_mm2.partial_cmp(&b.area_mm2).unwrap());
+    let mut best = f64::MIN;
+    for p in sorted {
+        if p.tops > best {
+            best = p.tops;
+            frontier.push(p);
+        }
+    }
+    println!("\nperformance/area Pareto frontier ({} of {} configs):", frontier.len(), agg.len());
+    println!(
+        "{:<24} {:>9} {:>9} {:>9} {:>10}",
+        "config", "TOPS", "watts", "mm²", "TOPS/W"
+    );
+    for p in frontier {
+        println!(
+            "{:<24} {:>9.2} {:>9.2} {:>9.1} {:>10.3}",
+            p.label, p.tops, p.watts, p.area_mm2, p.tops_per_watt
+        );
+    }
+    println!("\nfull data: out/dse_explore.csv (per workload), out/dse_explore_agg.csv (per config)");
+}

@@ -1,0 +1,53 @@
+//! Quickstart: simulate a mixed CNN/transformer workload on the paper's
+//! GPU-comparable HSV configuration with both schedulers, and show the
+//! headline comparison (Fig 8's HAS-over-RR gain on one workload).
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use hsv::config::{HardwareConfig, SimConfig};
+use hsv::coordinator::Coordinator;
+use hsv::gpu;
+use hsv::report;
+use hsv::sched::SchedulerKind;
+use hsv::workload::WorkloadSpec;
+
+fn main() {
+    // 1. A 50/50 CNN:transformer workload of 40 requests (seeded).
+    let wl = WorkloadSpec::ratio(0.5, 40, 42).generate();
+    println!("workload: {} requests, {:.1} Gops total", wl.requests.len(), wl.total_ops() as f64 / 1e9);
+    for (name, count) in wl.mix_summary() {
+        println!("  {count:>3} x {name}");
+    }
+
+    // 2. The paper's flagship config: 4 clusters x [4xSA64 + 8xVP64 + 40MB].
+    let hw = HardwareConfig::gpu_comparable();
+    println!("\nhardware: {} ({:.0} TOPS peak, {:.1} mm²)", hw.label(), hw.peak_gops() / 1000.0,
+             hsv::sim::physical::config_area_mm2(&hw));
+
+    // 3. Run with both schedulers.
+    let rr = Coordinator::new(hw.clone(), SchedulerKind::RoundRobin, SimConfig::default()).run(&wl);
+    let has = Coordinator::new(hw.clone(), SchedulerKind::Has, SimConfig::default()).run(&wl);
+    println!("\n--- round-robin baseline ---");
+    print!("{}", report::summarize(&rr));
+    println!("--- heterogeneity-aware (HAS) ---");
+    print!("{}", report::summarize(&has));
+    println!(
+        "\nHAS vs RR: {:.2}x throughput, {:.2}x energy efficiency",
+        has.tops() / rr.tops(),
+        has.tops_per_watt() / rr.tops_per_watt()
+    );
+
+    // 4. GPU reference (Fig 10's baseline).
+    let g = gpu::run_workload(&gpu::GpuSpec::titan_rtx(), &wl);
+    println!(
+        "\nTitan RTX model: {:.2} TOPS, {:.3} TOPS/W (vector kernels {:.1}% of time)",
+        g.tops(),
+        g.tops_per_watt(),
+        g.breakdown.vector_fraction() * 100.0
+    );
+    println!(
+        "HSV-HAS vs GPU: {:.1}x throughput, {:.1}x energy efficiency",
+        has.tops() / g.tops(),
+        has.tops_per_watt() / g.tops_per_watt()
+    );
+}

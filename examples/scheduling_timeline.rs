@@ -1,0 +1,48 @@
+//! Fig 6 — the RR vs HAS scheduling example: a handful of mixed requests on
+//! one small SV cluster, rendered as per-processor ASCII timetables. HAS
+//! visibly reduces the idle (`.`) segments and finishes earlier.
+//!
+//! Run: `cargo run --release --example scheduling_timeline`
+
+use hsv::config::{HardwareConfig, SimConfig};
+use hsv::coordinator::Coordinator;
+use hsv::report::timeline;
+use hsv::sched::SchedulerKind;
+use hsv::util::cli::Args;
+use hsv::workload::WorkloadSpec;
+
+fn main() {
+    let args = Args::from_env();
+    let wl = WorkloadSpec::ratio(
+        args.f64("ratio", 0.6),
+        args.usize("requests", 3),
+        args.u64("seed", 4),
+    )
+    .generate();
+    println!("requests:");
+    for (name, n) in wl.mix_summary() {
+        println!("  {n} x {name}");
+    }
+    let hw = HardwareConfig::small();
+    let width = args.usize("width", 100);
+
+    let mut results = Vec::new();
+    for sched in [SchedulerKind::RoundRobin, SchedulerKind::Has] {
+        let mut coord = Coordinator::new(hw.clone(), sched, SimConfig::default().with_timeline());
+        let rep = coord.run(&wl);
+        println!("\n=== {} ===", sched.name());
+        println!("{}", timeline::render(&rep, width));
+        let idle: f64 = timeline::idle_fractions(&rep).iter().map(|(_, f)| f).sum::<f64>()
+            / timeline::idle_fractions(&rep).len().max(1) as f64;
+        println!(
+            "makespan {:.3} ms | mean processor idle {:.1}%",
+            rep.makespan as f64 / (hw.clock_ghz * 1e6),
+            idle * 100.0
+        );
+        results.push(rep.makespan);
+    }
+    println!(
+        "\nHAS finishes {:.1}% earlier than RR (the Fig 6 effect)",
+        (1.0 - results[1] as f64 / results[0] as f64) * 100.0
+    );
+}

@@ -1,0 +1,40 @@
+//! UMF in practice: encode every zoo model as a `model-load` frame, decode
+//! it back, verify structural equality, and print the compactness numbers
+//! that motivate the format (paper §III).
+//!
+//! Run: `cargo run --release --example umf_roundtrip`
+
+use hsv::model::zoo;
+use hsv::umf;
+
+fn main() {
+    println!(
+        "{:<14} {:>7} {:>12} {:>14} {:>10}",
+        "model", "layers", "frame bytes", "bytes/layer", "roundtrip"
+    );
+    for g in zoo::all_models() {
+        let frame = umf::encode_model(&g, 1, 1, 1);
+        let bytes = frame.encode();
+        let decoded = umf::Frame::decode(&bytes).expect("decode");
+        let g2 = umf::decode_model(&decoded).expect("reconstruct");
+        let ok = g2.layers.len() == g.layers.len()
+            && g2.total_ops() == g.total_ops()
+            && g2.total_param_bytes() == g.total_param_bytes();
+        println!(
+            "{:<14} {:>7} {:>12} {:>14.1} {:>10}",
+            g.name,
+            g.layers.len(),
+            bytes.len(),
+            bytes.len() as f64 / g.layers.len() as f64,
+            if ok { "OK" } else { "MISMATCH" }
+        );
+        assert!(ok);
+    }
+
+    // The three packet types.
+    let ack = umf::Frame::check_ack(1, 2, 3);
+    let req = umf::Frame::request(1, 2, 3, vec![]);
+    println!("\ncheck-ack frame: {} bytes (header only)", ack.encode().len());
+    println!("request-return frame: {} bytes", req.encode().len());
+    println!("\nall zoo models roundtrip through UMF losslessly");
+}

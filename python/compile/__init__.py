@@ -1,0 +1,5 @@
+"""Build-time compile path: L2 JAX models + L1 Pallas kernels + AOT lowering.
+
+Never imported at serving time — the rust binary consumes the HLO-text
+artifacts this package emits.
+"""

@@ -1,0 +1,101 @@
+"""AOT compiler: lower the L2/L1 entry points to HLO *text* artifacts.
+
+Runs once at build time (`make artifacts`); the rust runtime loads the text,
+compiles it on the PJRT CPU client, and serves with python out of the loop.
+
+HLO text — NOT `.serialize()` — is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids cleanly. Lowered
+with return_tuple=True so the rust side unwraps a 1-tuple (see
+/opt/xla-example/README.md).
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import gelu_lut, layernorm, maxpool2d, softmax, systolic_matmul
+
+S, H, F = model.SEQ, model.HIDDEN, model.FFN
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+# name -> (fn, example_args). Every fn returns a tuple (return_tuple=True
+# keeps the rust unwrap path uniform).
+ENTRY_POINTS = {
+    # L1 kernels, standalone
+    "gemm_128": (lambda x, w: (systolic_matmul(x, w),), [_spec(128, 128), _spec(128, 128)]),
+    "gemm_256x512x128": (
+        lambda x, w: (systolic_matmul(x, w),),
+        [_spec(256, 512), _spec(512, 128)],
+    ),
+    "softmax_32x32": (lambda x: (softmax(x),), [_spec(32, 32)]),
+    "layernorm_32x128": (
+        lambda x, g, b: (layernorm(x, g, b),),
+        [_spec(32, 128), _spec(128), _spec(128)],
+    ),
+    "gelu_32x512": (lambda x: (gelu_lut(x),), [_spec(32, 512)]),
+    "maxpool_16x16x32": (lambda x: (maxpool2d(x, 2),), [_spec(16, 16, 32)]),
+    # L2 blocks
+    "attention_32x128": (
+        lambda *a: (model.attention_block(*a),),
+        [_spec(S, H)] + [_spec(H, H)] * 4 + [_spec(H), _spec(H)],
+    ),
+    "ffn_32x128": (
+        lambda *a: (model.ffn_block(*a),),
+        [_spec(S, H), _spec(H, F), _spec(F), _spec(F, H), _spec(H), _spec(H)],
+    ),
+    "encoder_layer_32x128": (
+        lambda *a: (model.encoder_layer(*a),),
+        [_spec(S, H)]
+        + [_spec(H, H)] * 4
+        + [_spec(H), _spec(H)]
+        + [_spec(H, F), _spec(F), _spec(F, H), _spec(H), _spec(H)],
+    ),
+    "cnn_block_16x16x32": (
+        lambda x, w, b: (model.cnn_block(x, w, b),),
+        [_spec(16, 16, 32), _spec(3, 3, 32, 32), _spec(32)],
+    ),
+}
+
+
+def to_hlo_text(fn, example_args) -> str:
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts", help="artifact directory")
+    ap.add_argument("--only", default=None, help="lower a single entry point")
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+    names = [args.only] if args.only else list(ENTRY_POINTS)
+    total = 0
+    for name in names:
+        fn, example = ENTRY_POINTS[name]
+        text = to_hlo_text(fn, example)
+        path = os.path.join(args.outdir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        total += len(text)
+        print(f"  {name}: {len(text)} chars -> {path}")
+    # stamp for make's dependency tracking
+    with open(os.path.join(args.outdir, ".stamp"), "w") as f:
+        f.write(f"{len(names)} artifacts, {total} chars\n")
+    print(f"wrote {len(names)} artifacts ({total} chars total)")
+
+
+if __name__ == "__main__":
+    main()

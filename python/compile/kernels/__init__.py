@@ -1,0 +1,13 @@
+"""L1 Pallas kernels: the systolic array and the vector processor."""
+
+from . import ref  # noqa: F401
+from .systolic import conv2d_im2col, systolic_matmul  # noqa: F401
+from .vector import (  # noqa: F401
+    bias_relu,
+    gelu_lut,
+    layernorm,
+    lut_activation,
+    maxpool2d,
+    softmax,
+    tanh_lut,
+)

@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for every L1 kernel — the correctness contract pytest
+checks the Pallas kernels against (and the reference the rust e2e example
+reimplements in f32)."""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul(x, w):
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def conv2d(x, w, stride=1, padding=0):
+    """x: [h, w, cin]; w: [kh, kw, cin, cout] -> [oh, ow, cout]."""
+    lhs = x[None].transpose(0, 3, 1, 2)          # NCHW
+    rhs = w.transpose(3, 2, 0, 1)                # OIHW
+    out = jax.lax.conv_general_dilated(
+        lhs, rhs, window_strides=(stride, stride),
+        padding=((padding, padding), (padding, padding)))
+    return out[0].transpose(1, 2, 0)
+
+
+def softmax(x):
+    return jax.nn.softmax(x, axis=-1)
+
+
+def layernorm(x, gamma, beta, eps=1e-5):
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    return (x - mean) * jax.lax.rsqrt(var + eps) * gamma + beta
+
+
+def gelu(x):
+    return jax.nn.gelu(x)
+
+
+def tanh(x):
+    return jnp.tanh(x)
+
+
+def bias_relu(x, b):
+    return jnp.maximum(x + b, 0.0)
+
+
+def maxpool2d(x, win):
+    h, w, c = x.shape
+    return jnp.max(x.reshape(h // win, win, w // win, win, c), axis=(1, 3))

@@ -1,0 +1,121 @@
+"""L1 — the systolic array as a Pallas kernel.
+
+The paper's processor is a weight-stationary dim x dim PE array: weight tiles
+are pinned while input rows stream through, partial sums accumulate down the
+columns, and double-buffered SRAMs hide the HBM<->on-chip traffic.
+
+The Pallas expression of the same schedule: a grid over (M-tiles, N-tiles,
+K-tiles); for each (m, n) output tile the kernel holds an accumulator in VMEM
+(the accumulation units) while the K-grid axis streams weight/input tiles
+through VMEM blocks (BlockSpec index maps — the compiler double-buffers the
+HBM->VMEM copies across sequential grid steps, exactly the role of the
+input/weight buffers in Fig 5(a)).
+
+interpret=True everywhere: the CPU PJRT client cannot run Mosaic
+custom-calls; correctness is checked against ref.py and the real-TPU
+resource estimate lives in DESIGN.md / EXPERIMENTS.md.
+
+VMEM budget at the default (128, 128, 128) tiles, fp32:
+  x-block 64 KiB + w-block 64 KiB + acc 64 KiB + out 64 KiB = 256 KiB
+comfortably inside a TPU core's ~16 MiB VMEM; the MXU sees 128x128 operands,
+its native systolic shape.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, n_k: int):
+    """One grid step: accumulate x_tile @ w_tile into the output tile.
+
+    The K axis is the innermost grid dimension, so for a fixed (m, n) output
+    tile the same VMEM output block persists across the K steps — it *is*
+    the paper's accumulation unit, storing intermediate partial sums
+    "through multiple iterations for large matrix operations".
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # MXU-shaped multiply-accumulate (weight tile stationary this step).
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+    del n_k  # flush is implicit: the block writes back when (m, n) advances
+
+
+def systolic_matmul(x, w, *, bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+                    bk: int = DEFAULT_BK, interpret: bool = True):
+    """`x [m,k] @ w [k,n]` through the weight-stationary Pallas kernel.
+
+    Dimensions must be multiples of the tile sizes (the hardware pads its
+    SRAM tiles the same way; callers pad once at graph construction).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"shape ({m},{k},{n}) not aligned to tiles ({bm},{bk},{bn})")
+    n_k = k // bk
+    grid = (m // bm, n // bn, n_k)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            # input rows stream along K for a fixed M tile
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            # weight tile: stationary w.r.t. the M axis
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, w)
+
+
+def conv2d_im2col(x, w, *, stride: int = 1, padding: int = 0,
+                  interpret: bool = True):
+    """3-D convolution via im2col + the systolic matmul — the paper's weight
+    mapping ("each 3-D weight kernel is flattened and mapped to each column
+    of the PE array").
+
+    x: [h, w_dim, c_in]; w: [kh, kw, c_in, c_out]. Returns [oh, ow, c_out].
+    """
+    h, wd, cin = x.shape
+    kh, kw, cin2, cout = w.shape
+    assert cin == cin2
+    if padding:
+        x = jnp.pad(x, ((padding, padding), (padding, padding), (0, 0)))
+    oh = (h + 2 * padding - kh) // stride + 1
+    ow = (wd + 2 * padding - kw) // stride + 1
+    # im2col: gather kh*kw*cin patch rows (data-movement op in the taxonomy)
+    patches = []
+    for i in range(kh):
+        for j in range(kw):
+            sl = x[i:i + stride * oh:stride, j:j + stride * ow:stride, :]
+            patches.append(sl.reshape(oh * ow, cin))
+    a = jnp.concatenate(patches, axis=1)            # [oh*ow, kh*kw*cin]
+    b = w.transpose(0, 1, 2, 3).reshape(kh * kw * cin, cout)
+    m, k = a.shape
+    # pad to tile alignment
+    bm = 128 if m >= 128 else m
+    pad_m = (-m) % bm
+    pad_k = (-k) % min(128, k) if k >= 128 else 0
+    bk = min(128, k + pad_k)
+    pad_n = (-cout) % min(128, cout) if cout >= 128 else 0
+    bn = min(128, cout + pad_n)
+    a = jnp.pad(a, ((0, pad_m), (0, pad_k)))
+    b = jnp.pad(b, ((0, pad_k), (0, pad_n)))
+    out = systolic_matmul(a, b, bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return out[:m, :cout].reshape(oh, ow, cout)

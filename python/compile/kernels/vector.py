@@ -1,0 +1,184 @@
+"""L1 — the vector processor's op set as lane-parallel Pallas kernels.
+
+Each kernel mirrors a datapath of the paper's SIMD vector processor
+(Fig 5(b)): the special-function unit (reciprocal + exponent) carries
+softmax; the reduction path carries layernorm; the LUT function unit — a
+preloaded table addressed by the input, followed by a linear-interpolation
+MAC — carries the non-linear activations; pooling uses the compare/ALU path.
+
+Rows map to grid steps, the feature dimension maps to the vector lanes.
+interpret=True throughout (see systolic.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+# ---------------------------------------------------------------- softmax --
+
+def _softmax_kernel(x_ref, o_ref):
+    """Row softmax: max-reduce, exp (SFU), sum-reduce, reciprocal (SFU),
+    scale — the paper's five-pass sequence."""
+    x = x_ref[...]
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    s = jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[...] = e * (1.0 / s)
+
+
+def softmax(x, *, block_rows: int = 8, interpret: bool = True):
+    """Row-wise softmax over a [rows, cols] tensor."""
+    rows, cols = x.shape
+    br = min(block_rows, rows)
+    assert rows % br == 0
+    return pl.pallas_call(
+        _softmax_kernel,
+        grid=(rows // br,),
+        in_specs=[pl.BlockSpec((br, cols), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        interpret=interpret,
+    )(x)
+
+
+# --------------------------------------------------------------- layernorm --
+
+def _layernorm_kernel(x_ref, g_ref, b_ref, o_ref, *, eps: float):
+    x = x_ref[...]
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    o_ref[...] = (x - mean) * inv * g_ref[...] + b_ref[...]
+
+
+def layernorm(x, gamma, beta, *, eps: float = 1e-5, block_rows: int = 8,
+              interpret: bool = True):
+    """Row layernorm over [rows, features] with affine parameters."""
+    rows, feat = x.shape
+    assert gamma.shape == (feat,) and beta.shape == (feat,)
+    br = min(block_rows, rows)
+    assert rows % br == 0
+    return pl.pallas_call(
+        functools.partial(_layernorm_kernel, eps=eps),
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec((br, feat), lambda i: (i, 0)),
+            pl.BlockSpec((feat,), lambda i: (0,)),
+            pl.BlockSpec((feat,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, feat), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, feat), jnp.float32),
+        interpret=interpret,
+    )(x, gamma, beta)
+
+
+# ----------------------------------------------------- LUT activation unit --
+
+LUT_SIZE = 256
+LUT_LO = -8.0
+LUT_HI = 8.0
+
+
+def build_lut(fn):
+    """Preload the LUT unit's tables: per-segment (weight, bias) pairs —
+    exactly the paper's datapath, which "selects a weight and a bias from
+    preloaded datasets using an input value" and evaluates `w·x + b` in the
+    MAC unit. Boundary segments extrapolate, so smooth activations with
+    linear tails (GELU → identity, tanh → ±1) stay accurate outside the
+    table range."""
+    xs = jnp.linspace(LUT_LO, LUT_HI, LUT_SIZE + 1)
+    ys = fn(xs).astype(jnp.float32)
+    w = (ys[1:] - ys[:-1]) / (xs[1:] - xs[:-1])
+    b = ys[:-1] - w * xs[:-1]
+    return w.astype(jnp.float32), b.astype(jnp.float32)
+
+
+def _lut_kernel(x_ref, w_ref, b_ref, o_ref):
+    """LUT function unit: segment select + linear-interpolation MAC."""
+    x = x_ref[...]
+    step = (LUT_HI - LUT_LO) / LUT_SIZE
+    idx = jnp.clip(((x - LUT_LO) / step).astype(jnp.int32), 0, LUT_SIZE - 1)
+    o_ref[...] = w_ref[idx] * x + b_ref[idx]
+
+
+def lut_activation(x, lut_w, lut_b, *, block_rows: int = 8, interpret: bool = True):
+    """Apply a LUT-interpolated activation over [rows, cols]."""
+    rows, cols = x.shape
+    br = min(block_rows, rows)
+    assert rows % br == 0
+    return pl.pallas_call(
+        _lut_kernel,
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec((br, cols), lambda i: (i, 0)),
+            pl.BlockSpec((LUT_SIZE,), lambda i: (0,)),
+            pl.BlockSpec((LUT_SIZE,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        interpret=interpret,
+    )(x, lut_w, lut_b)
+
+
+def gelu_lut(x, *, interpret: bool = True):
+    """GELU via the LUT unit (tables built once at trace time)."""
+    w, b = build_lut(jax.nn.gelu)
+    return lut_activation(x, w, b, interpret=interpret)
+
+
+def tanh_lut(x, *, interpret: bool = True):
+    w, b = build_lut(jnp.tanh)
+    return lut_activation(x, w, b, interpret=interpret)
+
+
+# ------------------------------------------------------------ bias + ReLU --
+
+def _bias_relu_kernel(x_ref, b_ref, o_ref):
+    o_ref[...] = jnp.maximum(x_ref[...] + b_ref[...], 0.0)
+
+
+def bias_relu(x, bias, *, block_rows: int = 8, interpret: bool = True):
+    """Fused bias-add + ReLU epilogue (ALU path)."""
+    rows, cols = x.shape
+    assert bias.shape == (cols,)
+    br = min(block_rows, rows)
+    assert rows % br == 0
+    return pl.pallas_call(
+        _bias_relu_kernel,
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec((br, cols), lambda i: (i, 0)),
+            pl.BlockSpec((cols,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        interpret=interpret,
+    )(x, bias)
+
+
+# ---------------------------------------------------------------- pooling --
+
+def _maxpool_kernel(x_ref, o_ref, *, win: int):
+    """Non-overlapping win x win max pooling over one [h, w, c] block —
+    window compares on the ALU path."""
+    x = x_ref[...]
+    h, w, c = x.shape
+    x = x.reshape(h // win, win, w // win, win, c)
+    o_ref[...] = jnp.max(x, axis=(1, 3))
+
+
+def maxpool2d(x, win: int, *, interpret: bool = True):
+    """Non-overlapping max pooling over [h, w, c]; h and w divisible by win."""
+    h, w, c = x.shape
+    assert h % win == 0 and w % win == 0
+    return pl.pallas_call(
+        functools.partial(_maxpool_kernel, win=win),
+        grid=(1,),
+        in_specs=[pl.BlockSpec((h, w, c), lambda i: (0, 0, 0))],
+        out_specs=pl.BlockSpec((h // win, w // win, c), lambda i: (0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h // win, w // win, c), jnp.float32),
+        interpret=interpret,
+    )(x)

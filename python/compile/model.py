@@ -1,0 +1,79 @@
+"""L2 — JAX compute graphs assembled from the L1 Pallas kernels.
+
+These are the *functional* models the HSV accelerator executes: a
+transformer encoder layer (attention + FFN, the BERT/GPT building block) and
+a CNN conv-pool block, every hot op routed through the kernels in
+`kernels/`. `aot.py` lowers the entry points here to HLO text once; the rust
+runtime executes them via PJRT with python out of the loop.
+"""
+
+import math
+
+import jax.numpy as jnp
+
+from .kernels import (
+    bias_relu,
+    conv2d_im2col,
+    gelu_lut,
+    layernorm,
+    maxpool2d,
+    softmax,
+    systolic_matmul,
+)
+
+# bert-tiny-ish dimensions used by the AOT entry points (small enough for
+# fast interpret-mode execution, aligned to the kernel tile constraints).
+SEQ = 32
+HIDDEN = 128
+FFN = 4 * HIDDEN
+
+
+def attention_block(x, wq, wk, wv, wo, gamma, beta):
+    """Single-head self-attention + residual + layernorm over x [SEQ, HIDDEN].
+
+    QKV projections and both attention matmuls run on the systolic kernel;
+    softmax and layernorm run on the vector-processor kernels — exactly the
+    array/vector split the scheduler exploits.
+    """
+    q = systolic_matmul(x, wq)
+    k = systolic_matmul(x, wk)
+    v = systolic_matmul(x, wv)
+    scores = systolic_matmul(q, k.T) * (1.0 / math.sqrt(HIDDEN))
+    probs = softmax(scores)
+    ctx = systolic_matmul(probs, v)
+    out = systolic_matmul(ctx, wo)
+    return layernorm(x + out, gamma, beta)
+
+
+def ffn_block(x, w1, b1, w2, gamma, beta):
+    """Feed-forward network: h → 4h (GELU via the LUT unit) → h, residual +
+    layernorm."""
+    hidden = systolic_matmul(x, w1) + b1
+    hidden = gelu_lut(hidden)
+    out = systolic_matmul(hidden, w2)
+    return layernorm(x + out, gamma, beta)
+
+
+def encoder_layer(x, wq, wk, wv, wo, g1, b1, w1, fb1, w2, g2, b2):
+    """One full transformer encoder layer (the per-layer unit the rust
+    serving example schedules and executes)."""
+    x = attention_block(x, wq, wk, wv, wo, g1, b1)
+    return ffn_block(x, w1, fb1, w2, g2, b2)
+
+
+def cnn_block(x, w, b):
+    """Conv 3x3 (im2col on the systolic kernel) + bias/ReLU + 2x2 maxpool
+    over x [H, W, C_in], w [3, 3, C_in, C_out]."""
+    y = conv2d_im2col(x, w, stride=1, padding=1)
+    oh, ow, c = y.shape
+    y = bias_relu(y.reshape(oh * ow, c), b).reshape(oh, ow, c)
+    return maxpool2d(y, 2)
+
+
+def classifier_head(x, w, gamma, beta):
+    """Mean-pool + layernorm + linear head (the discriminative output path)."""
+    pooled = jnp.mean(x, axis=0, keepdims=True)
+    normed = layernorm(pooled, gamma, beta)
+    return systolic_matmul(
+        jnp.broadcast_to(normed, (8, normed.shape[1])), w
+    )[:1]

@@ -1,0 +1,151 @@
+"""L1 kernel correctness: Pallas (interpret=True) vs the pure-jnp oracle,
+with hypothesis sweeping shapes and value ranges."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import (
+    bias_relu,
+    conv2d_im2col,
+    gelu_lut,
+    layernorm,
+    maxpool2d,
+    ref,
+    softmax,
+    systolic_matmul,
+    tanh_lut,
+)
+
+hypothesis.settings.register_profile(
+    "kernels", deadline=None, max_examples=20, derandomize=True
+)
+hypothesis.settings.load_profile("kernels")
+
+
+def rand(key, *shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32) * scale
+
+
+# ------------------------------------------------------------------- gemm --
+
+@given(
+    m=st.sampled_from([8, 32, 128, 256]),
+    k=st.sampled_from([16, 128, 512]),
+    n=st.sampled_from([8, 128, 256]),
+    seed=st.integers(0, 3),
+)
+def test_systolic_matmul_matches_ref(m, k, n, seed):
+    x = rand(seed, m, k)
+    w = rand(seed + 1, k, n)
+    got = systolic_matmul(x, w)
+    want = ref.matmul(x, w)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_systolic_matmul_multi_k_tile_accumulation():
+    # k spans several tiles: exercises the accumulate-across-grid-steps path
+    x = rand(0, 128, 512)
+    w = rand(1, 512, 128)
+    np.testing.assert_allclose(
+        systolic_matmul(x, w, bk=128), ref.matmul(x, w), rtol=2e-4, atol=2e-4
+    )
+
+
+def test_systolic_matmul_rejects_misaligned():
+    with pytest.raises(AssertionError):
+        systolic_matmul(rand(0, 100, 128), rand(1, 128, 128), bm=64)
+
+
+# ---------------------------------------------------------------- softmax --
+
+@given(rows=st.sampled_from([8, 32, 64]), cols=st.sampled_from([8, 32, 333]),
+       scale=st.sampled_from([0.1, 1.0, 30.0]))
+def test_softmax_matches_ref(rows, cols, scale):
+    x = rand(2, rows, cols, scale=scale)
+    got = softmax(x)
+    np.testing.assert_allclose(got, ref.softmax(x), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.sum(np.asarray(got), axis=-1), 1.0, rtol=1e-5)
+
+
+def test_softmax_numerically_stable_at_large_logits():
+    x = jnp.full((8, 16), 1e4, jnp.float32)
+    got = np.asarray(softmax(x))
+    assert np.all(np.isfinite(got))
+    np.testing.assert_allclose(got, 1.0 / 16, rtol=1e-5)
+
+
+# -------------------------------------------------------------- layernorm --
+
+@given(rows=st.sampled_from([8, 32]), feat=st.sampled_from([64, 128, 384]),
+       seed=st.integers(0, 3))
+def test_layernorm_matches_ref(rows, feat, seed):
+    x = rand(seed, rows, feat, scale=3.0)
+    g = rand(seed + 10, feat) + 1.0
+    b = rand(seed + 20, feat)
+    np.testing.assert_allclose(
+        layernorm(x, g, b), ref.layernorm(x, g, b), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_layernorm_output_statistics():
+    x = rand(5, 8, 256, scale=7.0)
+    ones = jnp.ones(256)
+    zeros = jnp.zeros(256)
+    y = np.asarray(layernorm(x, ones, zeros))
+    np.testing.assert_allclose(y.mean(axis=-1), 0.0, atol=1e-4)
+    np.testing.assert_allclose(y.var(axis=-1), 1.0, rtol=1e-2)
+
+
+# ---------------------------------------------------------- LUT activation --
+
+@given(rows=st.sampled_from([8, 32]), cols=st.sampled_from([16, 512]),
+       scale=st.sampled_from([0.5, 2.0, 6.0]))
+def test_gelu_lut_close_to_exact(rows, cols, scale):
+    x = rand(3, rows, cols, scale=scale)
+    got = gelu_lut(x)
+    # LUT linear interpolation over 256 entries on [-8, 8]: small but nonzero
+    # approximation error — the hardware's own accuracy envelope.
+    np.testing.assert_allclose(got, ref.gelu(x), atol=5e-3)
+
+
+def test_tanh_lut_saturates_correctly():
+    x = jnp.array([[-100.0, -8.0, 0.0, 8.0, 100.0]] * 8, jnp.float32)
+    got = np.asarray(tanh_lut(x))
+    np.testing.assert_allclose(got, np.tanh(np.clip(np.asarray(x), -8, 8)), atol=5e-3)
+
+
+# -------------------------------------------------------------- bias+relu --
+
+@given(rows=st.sampled_from([8, 64]), cols=st.sampled_from([32, 128]),
+       seed=st.integers(0, 3))
+def test_bias_relu_matches_ref(rows, cols, seed):
+    x = rand(seed, rows, cols)
+    b = rand(seed + 5, cols)
+    np.testing.assert_allclose(bias_relu(x, b), ref.bias_relu(x, b), rtol=1e-6)
+
+
+# ---------------------------------------------------------------- pooling --
+
+@given(hw=st.sampled_from([8, 16, 32]), c=st.sampled_from([4, 32]),
+       win=st.sampled_from([2, 4]))
+def test_maxpool_matches_ref(hw, c, win):
+    x = rand(4, hw, hw, c)
+    np.testing.assert_allclose(maxpool2d(x, win), ref.maxpool2d(x, win), rtol=1e-6)
+
+
+# ------------------------------------------------------------------- conv --
+
+@settings(max_examples=8)
+@given(hw=st.sampled_from([8, 16]), cin=st.sampled_from([3, 32]),
+       cout=st.sampled_from([16, 32]), stride=st.sampled_from([1, 2]))
+def test_conv_im2col_matches_lax_conv(hw, cin, cout, stride):
+    x = rand(6, hw, hw, cin)
+    w = rand(7, 3, 3, cin, cout, scale=0.3)
+    got = conv2d_im2col(x, w, stride=stride, padding=1)
+    want = ref.conv2d(x, w, stride=stride, padding=1)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)

@@ -1,0 +1,96 @@
+"""L2 block correctness: the kernel-composed model graphs vs a pure-jnp
+re-implementation, plus AOT lowering smoke checks."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.aot import ENTRY_POINTS, to_hlo_text
+from compile.kernels import ref
+
+S, H, F = model.SEQ, model.HIDDEN, model.FFN
+
+
+def rand(key, *shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32) * scale
+
+
+def attention_ref(x, wq, wk, wv, wo, g, b):
+    q, k, v = x @ wq, x @ wk, x @ wv
+    probs = jax.nn.softmax(q @ k.T / math.sqrt(H), axis=-1)
+    return ref.layernorm(x + (probs @ v) @ wo, g, b)
+
+
+def ffn_ref(x, w1, b1, w2, g, b):
+    h = jax.nn.gelu(x @ w1 + b1)
+    return ref.layernorm(x + h @ w2, g, b)
+
+
+def attn_params(seed=0):
+    return [rand(seed + i, H, H, scale=0.1) for i in range(4)] + [
+        rand(seed + 8, H) + 1.0,
+        rand(seed + 9, H),
+    ]
+
+
+def ffn_params(seed=100):
+    return [
+        rand(seed, H, F, scale=0.1),
+        rand(seed + 1, F, scale=0.1),
+        rand(seed + 2, F, H, scale=0.1),
+        rand(seed + 3, H) + 1.0,
+        rand(seed + 4, H),
+    ]
+
+
+def test_attention_block_matches_reference():
+    x = rand(42, S, H)
+    p = attn_params()
+    got = model.attention_block(x, *p)
+    want = attention_ref(x, *p)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_ffn_block_matches_reference():
+    x = rand(43, S, H)
+    p = ffn_params()
+    got = model.ffn_block(x, *p)
+    want = ffn_ref(x, *p)
+    # gelu goes through the LUT unit: widened tolerance
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+
+def test_encoder_layer_composes():
+    x = rand(44, S, H)
+    pa, pf = attn_params(1), ffn_params(101)
+    got = model.encoder_layer(x, *pa, *pf)
+    want = ffn_ref(attention_ref(x, *pa), *pf)
+    np.testing.assert_allclose(got, want, rtol=3e-2, atol=3e-2)
+    # layernorm output: bounded activations
+    assert np.all(np.isfinite(np.asarray(got)))
+
+
+def test_cnn_block_shapes_and_reference():
+    x = rand(45, 16, 16, 32)
+    w = rand(46, 3, 3, 32, 32, scale=0.2)
+    b = rand(47, 32, scale=0.1)
+    got = model.cnn_block(x, w, b)
+    assert got.shape == (8, 8, 32)
+    conv = ref.conv2d(x, w, stride=1, padding=1)
+    want = ref.maxpool2d(ref.bias_relu(conv.reshape(-1, 32), b).reshape(16, 16, 32), 2)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_all_entry_points_lower_to_hlo_text():
+    for name, (fn, example) in ENTRY_POINTS.items():
+        text = to_hlo_text(fn, example)
+        assert "ENTRY" in text, f"{name}: no ENTRY computation"
+        assert len(text) > 200, f"{name}: suspiciously small HLO"
+
+
+def test_lowering_is_deterministic():
+    fn, example = ENTRY_POINTS["gemm_128"]
+    assert to_hlo_text(fn, example) == to_hlo_text(fn, example)

@@ -1,0 +1,92 @@
+//! Scheduler-feature ablations — which HAS mechanism buys what (the design
+//! choices DESIGN.md calls out):
+//!
+//!  - `vp_runs_array_ops` — the vector processor's array-op flexibility,
+//!  - `sublayer_partitioning` — layer → sub-layer splitting,
+//!  - `memory_access_scheduling` — Algorithm 2 (residency-aware fetch
+//!    stalls, weight sharing, proactive flushing).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use hsv::config::{HardwareConfig, SimConfig};
+use hsv::coordinator::Coordinator;
+use hsv::sched::SchedulerKind;
+use hsv::util::json::Json;
+use hsv::util::stats::geomean;
+use hsv::workload::WorkloadSpec;
+
+fn run(hw: &HardwareConfig, sim: &SimConfig, n: usize) -> (f64, f64) {
+    let mut tops = Vec::new();
+    let mut eff = Vec::new();
+    for &seed in common::sweep_seeds() {
+        for ratio in [0.8, 0.5, 0.2] {
+            let wl = WorkloadSpec::ratio(ratio, n, seed).generate();
+            let r = Coordinator::new(hw.clone(), SchedulerKind::Has, sim.clone()).run(&wl);
+            tops.push(r.tops());
+            eff.push(r.tops_per_watt());
+        }
+    }
+    (geomean(&tops), geomean(&eff))
+}
+
+fn main() {
+    let mut b = common::Bench::new(
+        "ablation_scheduler_features",
+        "HAS with individual mechanisms disabled (plus the RR floor)",
+    );
+    let hw = HardwareConfig::gpu_comparable().with_clusters(1);
+    let n = common::sweep_requests() * 2;
+
+    let variants: Vec<(&str, SimConfig)> = vec![
+        ("HAS (full)", SimConfig::default()),
+        ("HAS - vp_array", {
+            let mut s = SimConfig::default();
+            s.vp_runs_array_ops = false;
+            s
+        }),
+        ("HAS - partitioning", {
+            let mut s = SimConfig::default();
+            s.sublayer_partitioning = false;
+            s
+        }),
+        ("HAS - memsched(Alg2)", {
+            let mut s = SimConfig::default();
+            s.memory_access_scheduling = false;
+            s
+        }),
+    ];
+
+    let mut full_tops = 0.0;
+    println!("{:<24} {:>10} {:>10} {:>12}", "variant", "TOPS", "TOPS/W", "vs full");
+    for (name, sim) in &variants {
+        let (t, e) = run(&hw, sim, n);
+        if *name == "HAS (full)" {
+            full_tops = t;
+        }
+        println!("{:<24} {:>10.2} {:>10.3} {:>12.2}", name, t, e, t / full_tops);
+        let mut row = Json::obj();
+        row.set("variant", *name).set("tops", t).set("tops_per_watt", e);
+        b.row(row);
+    }
+    // RR floor for context.
+    {
+        let mut tops = Vec::new();
+        for &seed in common::sweep_seeds() {
+            for ratio in [0.8, 0.5, 0.2] {
+                let wl = WorkloadSpec::ratio(ratio, n, seed).generate();
+                let r = Coordinator::new(hw.clone(), SchedulerKind::RoundRobin, SimConfig::default())
+                    .run(&wl);
+                tops.push(r.tops());
+            }
+        }
+        let t = geomean(&tops);
+        println!("{:<24} {:>10.2} {:>10} {:>12.2}", "RR baseline", t, "-", t / full_tops);
+        let mut row = Json::obj();
+        row.set("variant", "RR baseline").set("tops", t);
+        b.row(row);
+        println!();
+        common::check_band("every HAS variant beats the RR floor", full_tops / t, 1.0, 10.0);
+    }
+    b.finish();
+}

@@ -1,0 +1,87 @@
+//! Shared bench harness (criterion is unavailable offline).
+//!
+//! Every figure/table bench prints a paper-vs-measured report to stdout and
+//! writes its machine-readable series under `out/`. `HSV_BENCH_FULL=1`
+//! switches from the quick default to the paper-scale sweep.
+
+#![allow(dead_code)]
+
+use hsv::util::json::Json;
+use std::time::Instant;
+
+/// Quick mode trims workload sizes so `cargo bench` completes on one core.
+pub fn full_mode() -> bool {
+    std::env::var("HSV_BENCH_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Requests per workload for sweeps.
+pub fn sweep_requests() -> usize {
+    if full_mode() {
+        24
+    } else {
+        8
+    }
+}
+
+/// Seeds per ratio (3 in the paper's 33-workload suite).
+pub fn sweep_seeds() -> &'static [u64] {
+    if full_mode() {
+        &[11, 22, 33]
+    } else {
+        &[11]
+    }
+}
+
+pub struct Bench {
+    name: &'static str,
+    t0: Instant,
+    rows: Vec<Json>,
+}
+
+impl Bench {
+    pub fn new(name: &'static str, description: &str) -> Bench {
+        println!("=== {name} ===");
+        println!("{description}");
+        if !full_mode() {
+            println!("(quick mode; set HSV_BENCH_FULL=1 for the paper-scale sweep)");
+        }
+        println!();
+        Bench { name, t0: Instant::now(), rows: Vec::new() }
+    }
+
+    /// Record one machine-readable result row.
+    pub fn row(&mut self, row: Json) {
+        self.rows.push(row);
+    }
+
+    /// Print a paper-vs-measured comparison line.
+    pub fn compare(&self, metric: &str, paper: f64, measured: f64) {
+        let ratio = if paper != 0.0 { measured / paper } else { f64::NAN };
+        println!(
+            "  {metric:<46} paper {paper:>9.3} | measured {measured:>9.3} | x{ratio:.2} of paper"
+        );
+    }
+
+    /// Finish: write rows to out/<name>.json and print elapsed time.
+    pub fn finish(self) {
+        let mut doc = Json::obj();
+        doc.set("bench", self.name);
+        doc.set("full_mode", full_mode());
+        doc.set("rows", Json::Arr(self.rows));
+        let path = format!("out/{}.json", self.name);
+        std::fs::create_dir_all("out").ok();
+        std::fs::write(&path, doc.to_pretty()).expect("write bench output");
+        println!("\n[{}] done in {:.1}s -> {path}", self.name, self.t0.elapsed().as_secs_f64());
+    }
+}
+
+/// Assert-with-report: checks a reproduction band and prints PASS/FAIL
+/// without aborting the whole bench binary.
+pub fn check_band(what: &str, value: f64, lo: f64, hi: f64) -> bool {
+    let ok = value >= lo && value <= hi;
+    println!(
+        "  [{}] {what}: {value:.3} (expected band {lo:.3}..{hi:.3})",
+        if ok { "PASS" } else { "WARN" }
+    );
+    ok
+}

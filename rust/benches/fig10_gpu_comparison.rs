@@ -1,0 +1,103 @@
+//! Fig 10 — HSV-HAS (the GPU-comparable flagship: 4 clusters ×
+//! [4×64×64 SA + 8×64-lane VP + 40 MB], 633.8 mm² @ 28 nm, 800 MHz) versus
+//! the Titan RTX model across the ratio sweep.
+//!
+//! Paper: 10.9× throughput and 30.17× energy efficiency on average (ranges
+//! 10.15–13.7× and 28.93–39.2×), with larger wins on CNN-heavy mixes.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use hsv::config::{HardwareConfig, SimConfig};
+use hsv::coordinator::Coordinator;
+use hsv::gpu::{run_workload, GpuSpec};
+use hsv::sched::SchedulerKind;
+use hsv::util::json::Json;
+use hsv::util::stats::geomean;
+use hsv::workload::WorkloadSpec;
+
+fn main() {
+    let mut b = common::Bench::new(
+        "fig10_gpu_comparison",
+        "HSV-HAS flagship vs Titan RTX: throughput and energy efficiency per ratio",
+    );
+    let hw = HardwareConfig::gpu_comparable();
+    let spec = GpuSpec::titan_rtx();
+    println!(
+        "HSV: {} = {:.1} mm² (28nm) | GPU: {} = {:.0} mm² (12nm)\n",
+        hw.label(),
+        hsv::sim::physical::config_area_mm2(&hw),
+        spec.name,
+        spec.die_mm2
+    );
+    let n = common::sweep_requests() * 4;
+    let mut perf_ratios = Vec::new();
+    let mut eff_ratios = Vec::new();
+    let mut hsv_tops_all = Vec::new();
+    let mut hsv_eff_all = Vec::new();
+    println!(
+        "{:>9} {:>10} {:>10} {:>10} {:>10} {:>10} {:>10}",
+        "cnn_ratio", "HSV TOPS", "GPU TOPS", "perf x", "HSV T/W", "GPU T/W", "eff x"
+    );
+    for i in 0..=10 {
+        if !common::full_mode() && i % 2 == 1 {
+            continue;
+        }
+        let ratio = i as f64 / 10.0;
+        let mut hsv_t = Vec::new();
+        let mut hsv_e = Vec::new();
+        let mut gpu_t = Vec::new();
+        let mut gpu_e = Vec::new();
+        for &seed in common::sweep_seeds() {
+            let wl = WorkloadSpec::ratio(ratio, n, seed).generate();
+            let r = Coordinator::new(hw.clone(), SchedulerKind::Has, SimConfig::default()).run(&wl);
+            let g = run_workload(&spec, &wl);
+            hsv_t.push(r.tops());
+            hsv_e.push(r.tops_per_watt());
+            gpu_t.push(g.tops());
+            gpu_e.push(g.tops_per_watt());
+        }
+        let (ht, he) = (geomean(&hsv_t), geomean(&hsv_e));
+        let (gt, ge) = (geomean(&gpu_t), geomean(&gpu_e));
+        perf_ratios.push(ht / gt);
+        eff_ratios.push(he / ge);
+        hsv_tops_all.push(ht);
+        hsv_eff_all.push(he);
+        println!(
+            "{:>9.1} {:>10.2} {:>10.2} {:>10.2} {:>10.3} {:>10.4} {:>10.1}",
+            ratio,
+            ht,
+            gt,
+            ht / gt,
+            he,
+            ge,
+            he / ge
+        );
+        let mut row = Json::obj();
+        row.set("cnn_ratio", ratio)
+            .set("hsv_tops", ht)
+            .set("gpu_tops", gt)
+            .set("perf_ratio", ht / gt)
+            .set("hsv_tops_per_watt", he)
+            .set("gpu_tops_per_watt", ge)
+            .set("eff_ratio", he / ge);
+        b.row(row);
+    }
+    println!();
+    b.compare("avg HSV/GPU throughput ratio", 10.9, geomean(&perf_ratios));
+    b.compare("avg HSV/GPU energy-efficiency ratio", 30.17, geomean(&eff_ratios));
+    b.compare("HSV sustained TOPS", 81.45, geomean(&hsv_tops_all));
+    b.compare("HSV TOPS/W", 12.96, geomean(&hsv_eff_all));
+    // Shape checks: HSV wins everywhere; CNN-heavy mixes win more.
+    let min_perf = perf_ratios.iter().cloned().fold(f64::MAX, f64::min);
+    common::check_band("HSV beats GPU at every ratio (min perf x)", min_perf, 1.5, 100.0);
+    common::check_band(
+        "CNN-heavy wins more than transformer-heavy (ratio)",
+        perf_ratios.last().unwrap() / perf_ratios.first().unwrap(),
+        1.0,
+        10.0,
+    );
+    let min_eff = eff_ratios.iter().cloned().fold(f64::MAX, f64::min);
+    common::check_band("energy-efficiency win (min x)", min_eff, 5.0, 100.0);
+    b.finish();
+}

@@ -1,0 +1,53 @@
+//! Fig 1 — breakdown of GPU execution time by operation class as the
+//! CNN:transformer ratio sweeps 0–100 %. The paper's headline: vector
+//! operations average 31.55 % of execution time, motivating first-class
+//! vector processors.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use hsv::gpu::{run_workload, GpuSpec};
+use hsv::util::json::Json;
+use hsv::workload::WorkloadSpec;
+
+fn main() {
+    let mut b = common::Bench::new(
+        "fig1_op_breakdown",
+        "GPU execution-time breakdown by op class vs CNN:transformer ratio",
+    );
+    let spec = GpuSpec::titan_rtx();
+    let n = common::sweep_requests() * 3;
+    println!("{:>10} {:>10} {:>10} {:>10}", "cnn_ratio", "array_ms", "vector_ms", "vector_%");
+    let mut fracs = Vec::new();
+    for i in 0..=10 {
+        let ratio = i as f64 / 10.0;
+        let mut arr = 0.0;
+        let mut vec_t = 0.0;
+        for &seed in common::sweep_seeds() {
+            let wl = WorkloadSpec::ratio(ratio, n, seed).generate();
+            let r = run_workload(&spec, &wl);
+            arr += r.breakdown.array_s + r.breakdown.data_s;
+            vec_t += r.breakdown.vector_s;
+        }
+        let frac = vec_t / (arr + vec_t);
+        fracs.push(frac);
+        println!(
+            "{:>10.1} {:>10.2} {:>10.2} {:>10.1}",
+            ratio,
+            arr * 1e3,
+            vec_t * 1e3,
+            frac * 100.0
+        );
+        let mut row = Json::obj();
+        row.set("cnn_ratio", ratio)
+            .set("array_s", arr)
+            .set("vector_s", vec_t)
+            .set("vector_fraction", frac);
+        b.row(row);
+    }
+    let avg = fracs.iter().sum::<f64>() / fracs.len() as f64;
+    println!();
+    b.compare("avg vector fraction of GPU time (%)", 31.55, avg * 100.0);
+    common::check_band("vector ops are a significant share", avg, 0.12, 0.50);
+    b.finish();
+}

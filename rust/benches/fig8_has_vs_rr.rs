@@ -1,0 +1,95 @@
+//! Fig 8 — throughput and energy-efficiency improvement of HAS over RR
+//! across hardware configurations and CNN:transformer ratios.
+//!
+//! Paper: HAS averages 1.81× throughput (range 1.29–2.97×) and 1.20× energy
+//! efficiency (1.07–1.51×) over RR, with the gain shrinking as the
+//! transformer share grows.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use hsv::config::{ClusterConfig, HardwareConfig, SimConfig, SystolicConfig, VectorConfig, MB};
+use hsv::coordinator::Coordinator;
+use hsv::sched::SchedulerKind;
+use hsv::util::json::Json;
+use hsv::util::stats::geomean;
+use hsv::workload::WorkloadSpec;
+
+fn configs() -> Vec<HardwareConfig> {
+    // Representative spread of the DSE space (small/medium/large clusters).
+    let mk = |sa: (u32, u32), vp: (u32, u32), sm: u64| HardwareConfig {
+        clusters: 1,
+        cluster: ClusterConfig {
+            systolic: SystolicConfig { count: sa.0, dim: sa.1 },
+            vector: VectorConfig { count: vp.0, lanes: vp.1 },
+            shared_mem_bytes: sm * MB,
+        },
+        clock_ghz: 0.8,
+        hbm: Default::default(),
+    };
+    vec![mk((8, 16), (8, 16), 45), mk((4, 32), (4, 32), 65), mk((4, 64), (8, 64), 105)]
+}
+
+fn main() {
+    let mut b = common::Bench::new(
+        "fig8_has_vs_rr",
+        "HAS vs RR: normalized throughput and energy efficiency per ratio/config",
+    );
+    let n = common::sweep_requests() * 2;
+    let mut all_thr = Vec::new();
+    let mut all_eff = Vec::new();
+    println!(
+        "{:<22} {:>9} {:>12} {:>12}",
+        "config", "cnn_ratio", "thr HAS/RR", "eff HAS/RR"
+    );
+    for hw in configs() {
+        let mut per_cfg_first = f64::NAN;
+        let mut per_cfg_last = f64::NAN;
+        for i in 0..=10 {
+            if !common::full_mode() && i % 2 == 1 {
+                continue; // every other ratio point in quick mode
+            }
+            let ratio = i as f64 / 10.0;
+            let mut thr_r = Vec::new();
+            let mut eff_r = Vec::new();
+            for &seed in common::sweep_seeds() {
+                let wl = WorkloadSpec::ratio(ratio, n, seed).generate();
+                let has =
+                    Coordinator::new(hw.clone(), SchedulerKind::Has, SimConfig::default()).run(&wl);
+                let rr = Coordinator::new(hw.clone(), SchedulerKind::RoundRobin, SimConfig::default())
+                    .run(&wl);
+                thr_r.push(has.tops() / rr.tops());
+                eff_r.push(has.tops_per_watt() / rr.tops_per_watt());
+            }
+            let (t, e) = (geomean(&thr_r), geomean(&eff_r));
+            if i == 0 {
+                per_cfg_first = t;
+            }
+            per_cfg_last = t;
+            all_thr.push(t);
+            all_eff.push(e);
+            println!("{:<22} {:>9.1} {:>12.2} {:>12.2}", hw.label(), ratio, t, e);
+            let mut row = Json::obj();
+            row.set("config", hw.label())
+                .set("cnn_ratio", ratio)
+                .set("throughput_ratio", t)
+                .set("efficiency_ratio", e);
+            b.row(row);
+        }
+        // trend: gain shrinks as transformer share grows (ratio 0 = all
+        // transformer is the FIRST row here)
+        println!(
+            "  -> {}: gain at all-CNN {per_cfg_last:.2} vs all-transformer {per_cfg_first:.2}",
+            hw.label()
+        );
+    }
+    println!();
+    b.compare("avg HAS/RR throughput", 1.81, geomean(&all_thr));
+    b.compare("avg HAS/RR energy efficiency", 1.20, geomean(&all_eff));
+    let min = all_thr.iter().cloned().fold(f64::MAX, f64::min);
+    let max = all_thr.iter().cloned().fold(f64::MIN, f64::max);
+    println!("  throughput gain range: {min:.2}–{max:.2} (paper 1.29–2.97)");
+    common::check_band("HAS beats RR on throughput everywhere", min, 1.0, 10.0);
+    common::check_band("avg energy-efficiency gain", geomean(&all_eff), 1.0, 1.6);
+    b.finish();
+}

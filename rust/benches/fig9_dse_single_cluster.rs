@@ -1,0 +1,84 @@
+//! Fig 9(a)–(c) — single-cluster design-space exploration: performance vs
+//! power, performance vs area, and efficiency vs area over the paper's 108
+//! configurations (6 SA × 6 VP × 3 shared-memory options).
+//!
+//! Reproduced observations:
+//!  - systolic-array provisioning dominates performance,
+//!  - large-but-few arrays are more area-efficient than small-but-many at
+//!    iso-performance,
+//!  - vector-processor size matters more than shared-memory size.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use hsv::config::SimConfig;
+use hsv::dse;
+use hsv::sched::SchedulerKind;
+use hsv::util::json::Json;
+use hsv::workload::{Workload, WorkloadSpec};
+
+fn main() {
+    let mut b = common::Bench::new(
+        "fig9_dse_single_cluster",
+        "108-config single-cluster DSE: perf vs power / perf vs area / eff vs area",
+    );
+    let configs = dse::single_cluster_space();
+    assert_eq!(configs.len(), 108);
+    let mut workloads: Vec<Workload> = Vec::new();
+    for i in 0..=10 {
+        if !common::full_mode() && i % 2 == 1 {
+            continue;
+        }
+        for &seed in common::sweep_seeds() {
+            workloads.push(WorkloadSpec::ratio(i as f64 / 10.0, common::sweep_requests(), seed).generate());
+        }
+    }
+    eprintln!("sweeping {} configs x {} workloads...", configs.len(), workloads.len());
+    let pts = dse::sweep(&configs, &workloads, SchedulerKind::Has, &SimConfig::default(), 1);
+    let agg = dse::aggregate_by_config(&pts);
+    dse::to_csv(&pts).save("out/fig9_points.csv").expect("csv");
+    dse::to_csv(&agg).save("out/fig9_agg.csv").expect("csv");
+
+    for p in &agg {
+        let mut row = Json::obj();
+        row.set("config", p.label.clone())
+            .set("tops", p.tops)
+            .set("watts", p.watts)
+            .set("area_mm2", p.area_mm2)
+            .set("tops_per_watt", p.tops_per_watt);
+        b.row(row);
+    }
+
+    // --- observation 1: SA provisioning dominates performance -------------
+    let mean_tops = |f: &dyn Fn(&dse::DsePoint) -> bool| {
+        let sel: Vec<f64> = agg.iter().filter(|p| f(p)).map(|p| p.tops).collect();
+        sel.iter().sum::<f64>() / sel.len() as f64
+    };
+    let sa_small = mean_tops(&|p| p.sa_dim == 16);
+    let sa_big = mean_tops(&|p| p.sa_dim == 64 && p.sa_count == 4);
+    println!("mean TOPS: 8x16x16 arrays {sa_small:.2} vs 4x64x64 arrays {sa_big:.2}");
+    common::check_band("big arrays >> small arrays (x)", sa_big / sa_small, 2.0, 100.0);
+
+    // --- observation 2: big-few arrays are more area-efficient ------------
+    let eff = |p: &dse::DsePoint| p.tops / p.area_mm2;
+    let big_few: Vec<f64> = agg.iter().filter(|p| p.sa_dim == 64 && p.sa_count == 2).map(eff).collect();
+    let small_many: Vec<f64> = agg.iter().filter(|p| p.sa_dim == 16 && p.sa_count == 8).map(eff).collect();
+    let bf = big_few.iter().sum::<f64>() / big_few.len() as f64;
+    let sm = small_many.iter().sum::<f64>() / small_many.len() as f64;
+    println!("TOPS/mm²: two 64x64 {bf:.3} vs eight 16x16 {sm:.3}");
+    common::check_band("area efficiency of big-few over small-many (x)", bf / sm, 1.0, 20.0);
+
+    // --- observation 3 is ablated separately (ablation_* benches) ---------
+    // Print the Fig 9(a) scatter corners for eyeballing.
+    let mut by_tops: Vec<&dse::DsePoint> = agg.iter().collect();
+    by_tops.sort_by(|a, b| b.tops.partial_cmp(&a.tops).unwrap());
+    println!("\ntop-5 configs by performance:");
+    for p in by_tops.iter().take(5) {
+        println!(
+            "  {:<24} {:>7.2} TOPS {:>7.2} W {:>7.1} mm² {:>7.3} TOPS/W",
+            p.label, p.tops, p.watts, p.area_mm2, p.tops_per_watt
+        );
+    }
+    println!("\nscatter data: out/fig9_points.csv, out/fig9_agg.csv");
+    b.finish();
+}

@@ -1,0 +1,88 @@
+//! §Perf — simulator performance microbenchmarks (the L3 hot path):
+//! scheduling-decision rate, end-to-end simulated-tasks/second, UMF
+//! decode throughput, and the HBM/SM model costs. These are the numbers the
+//! EXPERIMENTS.md §Perf iteration log tracks.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use hsv::config::{HardwareConfig, SimConfig};
+use hsv::coordinator::Coordinator;
+use hsv::model::zoo;
+use hsv::sched::SchedulerKind;
+use hsv::umf;
+use hsv::util::json::Json;
+use hsv::workload::WorkloadSpec;
+use std::time::Instant;
+
+fn main() {
+    let mut b = common::Bench::new(
+        "perf_simulator",
+        "L3 hot-path microbenchmarks: decisions/s, tasks/s, UMF decode MB/s",
+    );
+
+    // --- end-to-end simulation rate ---------------------------------------
+    for (label, sched) in [("has", SchedulerKind::Has), ("rr", SchedulerKind::RoundRobin)] {
+        let wl = WorkloadSpec::ratio(0.5, 48, 7).generate();
+        let hw = HardwareConfig::gpu_comparable();
+        let t0 = Instant::now();
+        let r = Coordinator::new(hw, sched, SimConfig::default()).run(&wl);
+        let dt = t0.elapsed().as_secs_f64();
+        let dps = r.decisions as f64 / dt;
+        println!(
+            "{label}: {} decisions in {:.2}s -> {:.0} decisions/s ({:.1} sim-ms/wall-s)",
+            r.decisions,
+            dt,
+            dps,
+            (r.makespan as f64 / 0.8e6) / dt
+        );
+        let mut row = Json::obj();
+        row.set("scheduler", label)
+            .set("decisions", r.decisions)
+            .set("wall_s", dt)
+            .set("decisions_per_s", dps);
+        b.row(row);
+    }
+
+    // --- UMF decode throughput --------------------------------------------
+    {
+        let g = zoo::resnet50();
+        let bytes = umf::encode_model(&g, 1, 1, 1).encode();
+        let iters = 2000;
+        let t0 = Instant::now();
+        let mut total = 0usize;
+        for _ in 0..iters {
+            let f = umf::Frame::decode(&bytes).unwrap();
+            total += f.info.len();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let mbs = (bytes.len() * iters) as f64 / dt / 1e6;
+        println!(
+            "umf decode: {iters} x resnet50 frames ({} B) in {:.2}s -> {:.0} MB/s ({} layers)",
+            bytes.len(),
+            dt,
+            mbs,
+            total / iters
+        );
+        let mut row = Json::obj();
+        row.set("umf_decode_mb_s", mbs);
+        b.row(row);
+        common::check_band("UMF decode rate (MB/s)", mbs, 50.0, 1e6);
+    }
+
+    // --- DSE throughput (the heavy consumer) -------------------------------
+    {
+        let configs = &hsv::dse::single_cluster_space()[..8];
+        let wls = vec![WorkloadSpec::ratio(0.5, 6, 1).generate()];
+        let t0 = Instant::now();
+        let pts =
+            hsv::dse::sweep(configs, &wls, SchedulerKind::Has, &SimConfig::default(), 1);
+        let dt = t0.elapsed().as_secs_f64();
+        println!("dse: {} config-evals in {:.2}s -> {:.1} evals/s", pts.len(), dt, pts.len() as f64 / dt);
+        let mut row = Json::obj();
+        row.set("dse_evals_per_s", pts.len() as f64 / dt);
+        b.row(row);
+    }
+
+    b.finish();
+}

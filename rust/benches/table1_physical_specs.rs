@@ -1,0 +1,98 @@
+//! Table I — physical specification of each processor (28 nm post-layout).
+//! Regenerates the table from the in-tree physical database and verifies
+//! the internal-consistency relations the paper's numbers obey.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use hsv::ops::EnergyRow;
+use hsv::sim::physical;
+use hsv::util::json::Json;
+
+fn main() {
+    let mut b = common::Bench::new(
+        "table1_physical_specs",
+        "Table I: peak GOPS / area / energy-per-op for VP(16/32/64) and SA(16/32/64)",
+    );
+
+    println!("Vector Processor");
+    println!(
+        "{:<22} {:>10} {:>10} {:>10}",
+        "", "16 lanes", "32 lanes", "64 lanes"
+    );
+    let lanes = [16u32, 32, 64];
+    let p = |name: &str, f: &dyn Fn(u32) -> f64| {
+        println!(
+            "{:<22} {:>10.2} {:>10.2} {:>10.2}",
+            name,
+            f(lanes[0]),
+            f(lanes[1]),
+            f(lanes[2])
+        );
+    };
+    p("Peak Perf. [GOPs]", &|l| physical::vector_processor(l).peak_gops);
+    p("Area [mm2]", &|l| physical::vector_processor(l).area_mm2);
+    for (label, row) in [
+        ("E/op MAC [pJ]", EnergyRow::Mac),
+        ("E/op Pooling [pJ]", EnergyRow::Pooling),
+        ("E/op LUT [pJ]", EnergyRow::Lut),
+        ("E/op Reduction [pJ]", EnergyRow::Reduction),
+        ("E/op Softmax [pJ]", EnergyRow::Softmax),
+        ("E/op etc [pJ]", EnergyRow::Etc),
+    ] {
+        p(label, &|l| physical::vp_energy_pj(l, row));
+    }
+
+    println!("\nSystolic Array");
+    println!("{:<22} {:>10} {:>10} {:>10}", "", "16x16", "32x32", "64x64");
+    let dims = [16u32, 32, 64];
+    let q = |name: &str, f: &dyn Fn(u32) -> f64| {
+        println!(
+            "{:<22} {:>10.2} {:>10.2} {:>10.2}",
+            name,
+            f(dims[0]),
+            f(dims[1]),
+            f(dims[2])
+        );
+    };
+    q("Peak Perf. [GOPs]", &|d| physical::systolic_array(d).peak_gops);
+    q("Area [mm2]", &|d| physical::systolic_array(d).area_mm2);
+    q("E/op MAC [pJ]", &|d| physical::sa_mac_energy_pj(d));
+
+    println!("\nconsistency checks:");
+    // peak = 2 ops × units × 0.8 GHz
+    for d in dims {
+        let expect = 2.0 * (d as f64).powi(2) * 0.8;
+        common::check_band(
+            &format!("SA{d} peak vs 2*{d}^2*0.8GHz"),
+            physical::systolic_array(d).peak_gops / expect,
+            0.999,
+            1.001,
+        );
+    }
+    for l in lanes {
+        let expect = 2.0 * l as f64 * 0.8;
+        common::check_band(
+            &format!("VP{l} peak vs 2*{l}*0.8GHz"),
+            physical::vector_processor(l).peak_gops / expect,
+            0.999,
+            1.001,
+        );
+    }
+    // bigger arrays amortize control: strictly decreasing pJ/op
+    common::check_band(
+        "SA energy/op decreases with size",
+        (physical::sa_mac_energy_pj(16) > physical::sa_mac_energy_pj(32)
+            && physical::sa_mac_energy_pj(32) > physical::sa_mac_energy_pj(64)) as u8 as f64,
+        1.0,
+        1.0,
+    );
+    // flagship area vs the paper's 633.8 mm²
+    let hw = hsv::config::HardwareConfig::gpu_comparable();
+    b.compare("flagship die area (mm²)", 633.8, physical::config_area_mm2(&hw));
+
+    let mut row = Json::obj();
+    row.set("flagship_area_mm2", physical::config_area_mm2(&hw));
+    b.row(row);
+    b.finish();
+}

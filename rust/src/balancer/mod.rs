@@ -1,0 +1,196 @@
+//! Top-level load balancer (paper §IV-B).
+//!
+//! "The load balancer is the entry module ... it consists of a UMF decoder,
+//! RISC-V controller, request queue, request table, and status table." The
+//! UMF decoder identifies the user/model of each incoming packet; the
+//! controller dispatches requests to SV clusters by consulting the status
+//! table.
+
+use crate::cluster::SvCluster;
+use crate::sim::Cycle;
+use crate::umf::{self, Frame, PacketType};
+use crate::workload::{ModelRegistry, WorkloadRequest};
+use std::collections::HashMap;
+
+/// Dispatch policy of the RISC-V controller.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DispatchPolicy {
+    /// Strict round-robin over clusters (the paper's FIFO-to-next-available).
+    RoundRobin,
+    /// Least outstanding estimated work (status-table-driven).
+    LeastLoaded,
+}
+
+/// One request-table row.
+#[derive(Debug, Clone)]
+pub struct RequestEntry {
+    pub request_id: u64,
+    pub user_id: u32,
+    pub model_id: u32,
+    pub arrival: Cycle,
+    pub cluster: Option<u32>,
+}
+
+/// The load balancer: request table + status view + dispatch.
+#[derive(Debug)]
+pub struct LoadBalancer {
+    pub policy: DispatchPolicy,
+    pub request_table: Vec<RequestEntry>,
+    /// model table: user-visible model ids registered via UMF `model-load`.
+    pub model_table: HashMap<u32, u32>, // umf model id -> registry model id
+    rr_next: usize,
+    /// Decoded-packet counter (reporting).
+    pub umf_packets_decoded: u64,
+}
+
+impl LoadBalancer {
+    pub fn new(policy: DispatchPolicy) -> LoadBalancer {
+        LoadBalancer {
+            policy,
+            request_table: Vec::new(),
+            model_table: HashMap::new(),
+            rr_next: 0,
+            umf_packets_decoded: 0,
+        }
+    }
+
+    /// Register a model (UMF `model-load` handling): maps the user-visible
+    /// model id to a registry graph.
+    pub fn register_model(&mut self, umf_model_id: u32, registry_model_id: u32) {
+        self.model_table.insert(umf_model_id, registry_model_id);
+    }
+
+    /// Ingest a UMF frame (decoder step 2–3 of the processing flow). Returns
+    /// the request entry created for `request-return` frames; `model-load`
+    /// frames register the model; `check-ack` frames answer liveness.
+    pub fn ingest_umf(
+        &mut self,
+        bytes: &[u8],
+        registry: &ModelRegistry,
+        arrival: Cycle,
+    ) -> Result<Option<u64>, umf::UmfError> {
+        let frame = Frame::decode(bytes)?;
+        self.umf_packets_decoded += 1;
+        match frame.header.packet_type {
+            PacketType::ModelLoad => {
+                // Resolve the model by its descriptor name carried in the
+                // info packets (the converter embeds the zoo name).
+                let name = frame.model_name();
+                let reg_id = registry
+                    .id_of(&name)
+                    .ok_or_else(|| umf::UmfError::Malformed(format!("unknown model '{name}'")))?;
+                self.register_model(frame.header.model_id, reg_id);
+                Ok(None)
+            }
+            PacketType::RequestReturn => {
+                let reg_id = *self
+                    .model_table
+                    .get(&frame.header.model_id)
+                    .ok_or_else(|| umf::UmfError::Malformed("model not loaded".into()))?;
+                let request_id = frame.header.transaction_id as u64;
+                self.request_table.push(RequestEntry {
+                    request_id,
+                    user_id: frame.header.user_id,
+                    model_id: reg_id,
+                    arrival,
+                    cluster: None,
+                });
+                Ok(Some(request_id))
+            }
+            PacketType::CheckAck => Ok(None),
+        }
+    }
+
+    /// Enqueue a request directly (the simulation front-end path, bypassing
+    /// UMF encode/decode).
+    pub fn submit(&mut self, req: WorkloadRequest, user_id: u32) {
+        self.request_table.push(RequestEntry {
+            request_id: req.id,
+            user_id,
+            model_id: req.model_id,
+            arrival: req.arrival,
+            cluster: None,
+        });
+    }
+
+    /// Dispatch every undispatched request-table entry to a cluster
+    /// (processing-flow steps 4–5). Requests are dispatched in arrival order.
+    pub fn dispatch(&mut self, clusters: &mut [SvCluster], registry: &ModelRegistry) {
+        let mut order: Vec<usize> = (0..self.request_table.len())
+            .filter(|&i| self.request_table[i].cluster.is_none())
+            .collect();
+        order.sort_by_key(|&i| self.request_table[i].arrival);
+        for i in order {
+            let target = match self.policy {
+                DispatchPolicy::RoundRobin => {
+                    let t = self.rr_next % clusters.len();
+                    self.rr_next += 1;
+                    t
+                }
+                DispatchPolicy::LeastLoaded => clusters
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|(_, c)| c.outstanding(registry))
+                    .map(|(i, _)| i)
+                    .unwrap(),
+            };
+            let e = &mut self.request_table[i];
+            e.cluster = Some(target as u32);
+            clusters[target].assign(WorkloadRequest {
+                id: e.request_id,
+                model_id: e.model_id,
+                arrival: e.arrival,
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{HardwareConfig, SimConfig};
+    use crate::sched::SchedulerKind;
+
+    fn clusters(n: u32) -> Vec<SvCluster> {
+        let hw = HardwareConfig::small();
+        (0..n).map(|i| SvCluster::new(i, &hw, SchedulerKind::Has, SimConfig::default())).collect()
+    }
+
+    #[test]
+    fn round_robin_spreads_requests() {
+        let reg = ModelRegistry::standard();
+        let mut lb = LoadBalancer::new(DispatchPolicy::RoundRobin);
+        let mut cs = clusters(2);
+        for i in 0..4 {
+            lb.submit(WorkloadRequest { id: i, model_id: 0, arrival: i * 10 }, 1);
+        }
+        lb.dispatch(&mut cs, &reg);
+        let assigned: Vec<u32> = lb.request_table.iter().map(|e| e.cluster.unwrap()).collect();
+        assert_eq!(assigned, vec![0, 1, 0, 1]);
+    }
+
+    #[test]
+    fn least_loaded_prefers_idle_cluster() {
+        let reg = ModelRegistry::standard();
+        let mut lb = LoadBalancer::new(DispatchPolicy::LeastLoaded);
+        let mut cs = clusters(2);
+        // preload cluster 0 with a heavy model
+        let vgg = reg.id_of("vgg16").unwrap();
+        cs[0].assign(WorkloadRequest { id: 99, model_id: vgg, arrival: 0 });
+        lb.submit(WorkloadRequest { id: 1, model_id: 0, arrival: 0 }, 1);
+        lb.dispatch(&mut cs, &reg);
+        assert_eq!(lb.request_table[0].cluster, Some(1));
+    }
+
+    #[test]
+    fn dispatch_is_idempotent() {
+        let reg = ModelRegistry::standard();
+        let mut lb = LoadBalancer::new(DispatchPolicy::RoundRobin);
+        let mut cs = clusters(2);
+        lb.submit(WorkloadRequest { id: 1, model_id: 0, arrival: 0 }, 1);
+        lb.dispatch(&mut cs, &reg);
+        lb.dispatch(&mut cs, &reg); // no double assignment
+        let assigned = lb.request_table.iter().filter(|e| e.cluster.is_some()).count();
+        assert_eq!(assigned, 1);
+    }
+}

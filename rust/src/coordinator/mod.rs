@@ -1,0 +1,282 @@
+//! Top-level coordinator: the whole HSV accelerator (paper Fig 4(a)).
+//!
+//! Owns the load balancer and the SV clusters, runs a workload trace through
+//! them, and aggregates throughput / energy / latency into a [`RunReport`].
+//! Clusters simulate independently (the hardware property behind the paper's
+//! linear cluster scaling) — on multi-cluster configs they run on the
+//! in-tree thread pool.
+
+use crate::balancer::{DispatchPolicy, LoadBalancer};
+use crate::cluster::SvCluster;
+use crate::config::{HardwareConfig, SimConfig};
+use crate::sched::state::{CompletedRequest, TaskRecord};
+use crate::sched::SchedulerKind;
+use crate::sim::power::EnergyMeter;
+use crate::sim::{physical, Cycle, ProcKind};
+use crate::util::json::Json;
+use crate::util::threadpool::ThreadPool;
+use crate::workload::Workload;
+
+/// Aggregated result of one simulation run.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub hw_label: String,
+    pub scheduler: &'static str,
+    pub workload: String,
+    pub clock_ghz: f64,
+    /// End-to-end makespan in cycles (first arrival assumed at ~0).
+    pub makespan: Cycle,
+    /// Useful operations executed.
+    pub total_ops: u64,
+    /// Total energy, joules.
+    pub energy_j: f64,
+    /// Die area of the configuration, mm².
+    pub area_mm2: f64,
+    /// Per-request latencies in cycles (arrival → completion).
+    pub latencies: Vec<u64>,
+    /// Compute-processor utilization (busy / (procs × makespan)).
+    pub utilization: f64,
+    /// Idle cycles across all processors.
+    pub idle_cycles: u64,
+    /// Scheduling decisions taken (perf accounting).
+    pub decisions: u64,
+    /// Completed request records.
+    pub completed: Vec<CompletedRequest>,
+    /// Merged timeline (empty unless `SimConfig::record_timeline`).
+    pub timeline: Vec<(u32, TaskRecord)>,
+    /// HBM bytes moved.
+    pub dram_bytes: u64,
+}
+
+impl RunReport {
+    /// Sustained throughput in TOPS.
+    pub fn tops(&self) -> f64 {
+        if self.makespan == 0 {
+            return 0.0;
+        }
+        let seconds = self.makespan as f64 / (self.clock_ghz * 1e9);
+        self.total_ops as f64 / seconds / 1e12
+    }
+
+    /// Energy efficiency in TOPS/W (== tera-ops per joule).
+    pub fn tops_per_watt(&self) -> f64 {
+        if self.energy_j <= 0.0 {
+            return 0.0;
+        }
+        self.total_ops as f64 / self.energy_j / 1e12
+    }
+
+    /// Average power in watts.
+    pub fn avg_watts(&self) -> f64 {
+        let seconds = self.makespan as f64 / (self.clock_ghz * 1e9);
+        if seconds <= 0.0 {
+            return 0.0;
+        }
+        self.energy_j / seconds
+    }
+
+    /// Mean request latency in milliseconds.
+    pub fn mean_latency_ms(&self) -> f64 {
+        if self.latencies.is_empty() {
+            return 0.0;
+        }
+        let mean = self.latencies.iter().sum::<u64>() as f64 / self.latencies.len() as f64;
+        mean / (self.clock_ghz * 1e6)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("hw", self.hw_label.as_str())
+            .set("scheduler", self.scheduler)
+            .set("workload", self.workload.as_str())
+            .set("makespan_cycles", self.makespan)
+            .set("tops", self.tops())
+            .set("tops_per_watt", self.tops_per_watt())
+            .set("watts", self.avg_watts())
+            .set("area_mm2", self.area_mm2)
+            .set("utilization", self.utilization)
+            .set("mean_latency_ms", self.mean_latency_ms())
+            .set("requests", self.latencies.len())
+            .set("dram_bytes", self.dram_bytes);
+        j
+    }
+}
+
+/// The accelerator: balancer + clusters, parameterized by scheduler policy.
+pub struct Coordinator {
+    pub hw: HardwareConfig,
+    pub sched: SchedulerKind,
+    pub sim: SimConfig,
+    pub policy: DispatchPolicy,
+}
+
+impl Coordinator {
+    pub fn new(hw: HardwareConfig, sched: SchedulerKind, sim: SimConfig) -> Coordinator {
+        Coordinator { hw, sched, sim, policy: DispatchPolicy::LeastLoaded }
+    }
+
+    pub fn with_policy(mut self, policy: DispatchPolicy) -> Coordinator {
+        self.policy = policy;
+        self
+    }
+
+    /// Run a workload trace to completion and aggregate the report.
+    pub fn run(&mut self, wl: &Workload) -> RunReport {
+        let mut clusters: Vec<SvCluster> = (0..self.hw.clusters)
+            .map(|i| SvCluster::new(i, &self.hw, self.sched, self.sim.clone()))
+            .collect();
+        let mut lb = LoadBalancer::new(self.policy);
+        for r in &wl.requests {
+            lb.submit(*r, (r.id % 16) as u32);
+        }
+        lb.dispatch(&mut clusters, &wl.registry);
+
+        // Clusters are independent: simulate in parallel when there are
+        // several (each owns its state; the registry is shared read-only).
+        if clusters.len() > 1 {
+            let registry = wl.registry.clone();
+            let pool = ThreadPool::new(clusters.len());
+            clusters = pool.map(clusters, move |mut c| {
+                c.run(&registry);
+                c
+            });
+        } else {
+            for c in &mut clusters {
+                c.run(&wl.registry);
+            }
+        }
+
+        self.aggregate(wl, clusters)
+    }
+
+    fn aggregate(&self, wl: &Workload, clusters: Vec<SvCluster>) -> RunReport {
+        let makespan = clusters.iter().map(|c| c.state.makespan).max().unwrap_or(0);
+        let mut meter = EnergyMeter::new();
+        let mut latencies = Vec::new();
+        let mut completed = Vec::new();
+        let mut timeline = Vec::new();
+        let mut busy = 0u64;
+        let mut idle = 0u64;
+        let mut decisions = 0u64;
+        let mut dram_bytes = 0u64;
+        let mut proc_count = 0u64;
+        for c in &clusters {
+            let st = &c.state;
+            meter.sa_pj += st.meter.sa_pj;
+            meter.vp_pj += st.meter.vp_pj;
+            meter.sram_pj += st.meter.sram_pj;
+            meter.total_ops += st.meter.total_ops;
+            meter.add_dram_pj(st.hbm.energy_pj());
+            dram_bytes += st.hbm.total_bytes;
+            for r in &st.completed {
+                let mut rec = *r;
+                rec.ops = wl.registry.graph(r.model_id).total_ops();
+                latencies.push(rec.end - rec.arrival);
+                completed.push(rec);
+            }
+            for t in &st.timeline {
+                timeline.push((c.id, t.clone()));
+            }
+            busy += st.procs.iter().map(|p| p.busy_cycles).sum::<u64>();
+            idle += st.total_idle();
+            decisions += st.decisions;
+            proc_count += st.procs.iter().filter(|p| p.kind != ProcKind::Dma).count() as u64;
+            // Idle-but-clocked dynamic power: every cycle a processor is not
+            // executing still burns a fraction of its full-rate power.
+            for p in &st.procs {
+                let idle_cycles = makespan.saturating_sub(p.busy_cycles);
+                let mw = match p.kind {
+                    ProcKind::Systolic => physical::sa_idle_mw(p.size),
+                    ProcKind::Vector => physical::vp_idle_mw(p.size),
+                    ProcKind::Dma => 0.0,
+                };
+                let seconds = idle_cycles as f64 / (self.hw.clock_ghz * 1e9);
+                meter.static_pj += mw * 1e-3 * seconds * 1e12;
+            }
+        }
+        meter.add_static(&self.hw, makespan);
+        let utilization = if makespan > 0 && proc_count > 0 {
+            busy as f64 / (makespan as f64 * proc_count as f64)
+        } else {
+            0.0
+        };
+        RunReport {
+            hw_label: self.hw.label(),
+            scheduler: self.sched.name(),
+            workload: wl.name.clone(),
+            clock_ghz: self.hw.clock_ghz,
+            makespan,
+            total_ops: meter.total_ops,
+            energy_j: meter.total_joules(),
+            area_mm2: physical::config_area_mm2(&self.hw),
+            latencies,
+            utilization,
+            idle_cycles: idle,
+            decisions,
+            completed,
+            timeline,
+            dram_bytes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::WorkloadSpec;
+
+    #[test]
+    fn small_run_produces_sane_report() {
+        let wl = WorkloadSpec::ratio(0.5, 6, 42).generate();
+        let mut c = Coordinator::new(HardwareConfig::small(), SchedulerKind::Has, SimConfig::default());
+        let r = c.run(&wl);
+        assert_eq!(r.latencies.len(), 6);
+        assert!(r.tops() > 0.0);
+        assert!(r.tops_per_watt() > 0.0);
+        assert!(r.utilization > 0.0 && r.utilization <= 1.0);
+        assert_eq!(r.total_ops, wl.total_ops());
+    }
+
+    #[test]
+    fn has_beats_rr_end_to_end() {
+        let wl = WorkloadSpec::ratio(0.7, 10, 11).generate();
+        let hw = HardwareConfig::small();
+        let has = Coordinator::new(hw.clone(), SchedulerKind::Has, SimConfig::default()).run(&wl);
+        let rr =
+            Coordinator::new(hw, SchedulerKind::RoundRobin, SimConfig::default()).run(&wl);
+        assert!(
+            has.tops() > rr.tops(),
+            "HAS {:.2} TOPS !> RR {:.2} TOPS",
+            has.tops(),
+            rr.tops()
+        );
+    }
+
+    #[test]
+    fn multi_cluster_scales_throughput() {
+        // CNN-only mix: many medium requests, so the makespan is not pinned
+        // by one long-tail generative request (a single request never spans
+        // clusters — matching the paper's architecture).
+        let wl = WorkloadSpec::ratio(1.0, 24, 5).generate();
+        let hw1 = HardwareConfig::small();
+        let hw2 = HardwareConfig::small().with_clusters(2);
+        let r1 = Coordinator::new(hw1, SchedulerKind::Has, SimConfig::default()).run(&wl);
+        let r2 = Coordinator::new(hw2, SchedulerKind::Has, SimConfig::default()).run(&wl);
+        assert!(
+            r2.tops() > 1.5 * r1.tops(),
+            "2 clusters {:.2} vs 1 cluster {:.2}",
+            r2.tops(),
+            r1.tops()
+        );
+    }
+
+    #[test]
+    fn report_json_shape() {
+        let wl = WorkloadSpec::ratio(1.0, 3, 9).generate();
+        let mut c = Coordinator::new(HardwareConfig::small(), SchedulerKind::RoundRobin, SimConfig::default());
+        let r = c.run(&wl);
+        let j = r.to_json();
+        assert!(j.get("tops").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(j.get("scheduler").unwrap().as_str(), Some("rr"));
+    }
+}

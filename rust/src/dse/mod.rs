@@ -1,0 +1,201 @@
+//! Design-space exploration driver (paper §VI-C).
+//!
+//! Enumerates the paper's single-cluster design space — six systolic-array
+//! provisionings × six vector-processor provisionings × three shared-memory
+//! sizes = 108 configurations — runs each against a workload suite, and
+//! collects (performance, power, area, efficiency) points for Fig 9.
+
+use crate::config::{ClusterConfig, HardwareConfig, SimConfig, SystolicConfig, VectorConfig, MB};
+use crate::coordinator::Coordinator;
+use crate::sched::SchedulerKind;
+use crate::util::csv::CsvWriter;
+use crate::util::threadpool::ThreadPool;
+use crate::workload::Workload;
+
+/// The six systolic-array options: (count, dim).
+pub const SA_OPTIONS: [(u32, u32); 6] = [(8, 16), (2, 32), (4, 32), (8, 32), (2, 64), (4, 64)];
+
+/// The six vector-processor options: (count, lanes).
+pub const VP_OPTIONS: [(u32, u32); 6] = [(8, 16), (4, 32), (8, 32), (2, 64), (4, 64), (8, 64)];
+
+/// The three shared-memory sizes (MB).
+pub const SM_OPTIONS_MB: [u64; 3] = [45, 65, 105];
+
+/// Enumerate the 108 single-cluster configurations.
+pub fn single_cluster_space() -> Vec<HardwareConfig> {
+    let mut out = Vec::with_capacity(108);
+    for (sa_count, sa_dim) in SA_OPTIONS {
+        for (vp_count, vp_lanes) in VP_OPTIONS {
+            for sm_mb in SM_OPTIONS_MB {
+                out.push(HardwareConfig {
+                    clusters: 1,
+                    cluster: ClusterConfig {
+                        systolic: SystolicConfig { dim: sa_dim, count: sa_count },
+                        vector: VectorConfig { lanes: vp_lanes, count: vp_count },
+                        shared_mem_bytes: sm_mb * MB,
+                    },
+                    clock_ghz: 0.8,
+                    hbm: Default::default(),
+                });
+            }
+        }
+    }
+    out
+}
+
+/// One DSE measurement point.
+#[derive(Debug, Clone)]
+pub struct DsePoint {
+    pub label: String,
+    pub sa_dim: u32,
+    pub sa_count: u32,
+    pub vp_lanes: u32,
+    pub vp_count: u32,
+    pub sm_mb: u64,
+    pub clusters: u32,
+    pub cnn_ratio: f64,
+    pub seed: u64,
+    pub tops: f64,
+    pub watts: f64,
+    pub area_mm2: f64,
+    pub tops_per_watt: f64,
+    pub utilization: f64,
+}
+
+/// Run one configuration over one workload.
+pub fn evaluate(hw: &HardwareConfig, wl: &Workload, sched: SchedulerKind, sim: &SimConfig) -> DsePoint {
+    let report = Coordinator::new(hw.clone(), sched, sim.clone()).run(wl);
+    DsePoint {
+        label: hw.label(),
+        sa_dim: hw.cluster.systolic.dim,
+        sa_count: hw.cluster.systolic.count,
+        vp_lanes: hw.cluster.vector.lanes,
+        vp_count: hw.cluster.vector.count,
+        sm_mb: hw.cluster.shared_mem_bytes / MB,
+        clusters: hw.clusters,
+        cnn_ratio: wl.cnn_ratio,
+        seed: wl.seed,
+        tops: report.tops(),
+        watts: report.avg_watts(),
+        area_mm2: report.area_mm2,
+        tops_per_watt: report.tops_per_watt(),
+        utilization: report.utilization,
+    }
+}
+
+/// Sweep a config space × workload suite on the thread pool.
+pub fn sweep(
+    configs: &[HardwareConfig],
+    workloads: &[Workload],
+    sched: SchedulerKind,
+    sim: &SimConfig,
+    threads: usize,
+) -> Vec<DsePoint> {
+    let mut jobs: Vec<(HardwareConfig, Workload)> = Vec::new();
+    for hw in configs {
+        for wl in workloads {
+            jobs.push((hw.clone(), wl.clone()));
+        }
+    }
+    let sim = sim.clone();
+    let pool = ThreadPool::new(threads);
+    pool.map(jobs, move |(hw, wl)| evaluate(&hw, &wl, sched, &sim))
+}
+
+/// Aggregate points per configuration (mean over the workload suite) — the
+/// marker positions of Fig 9.
+pub fn aggregate_by_config(points: &[DsePoint]) -> Vec<DsePoint> {
+    use std::collections::BTreeMap;
+    let mut groups: BTreeMap<String, Vec<&DsePoint>> = BTreeMap::new();
+    for p in points {
+        groups.entry(p.label.clone()).or_default().push(p);
+    }
+    groups
+        .into_values()
+        .map(|g| {
+            let n = g.len() as f64;
+            let f = |sel: fn(&DsePoint) -> f64| g.iter().map(|p| sel(p)).sum::<f64>() / n;
+            let first = g[0];
+            DsePoint {
+                label: first.label.clone(),
+                sa_dim: first.sa_dim,
+                sa_count: first.sa_count,
+                vp_lanes: first.vp_lanes,
+                vp_count: first.vp_count,
+                sm_mb: first.sm_mb,
+                clusters: first.clusters,
+                cnn_ratio: -1.0,
+                seed: 0,
+                tops: f(|p| p.tops),
+                watts: f(|p| p.watts),
+                area_mm2: first.area_mm2,
+                tops_per_watt: f(|p| p.tops_per_watt),
+                utilization: f(|p| p.utilization),
+            }
+        })
+        .collect()
+}
+
+/// Render points as CSV (Fig 9's plotting data).
+pub fn to_csv(points: &[DsePoint]) -> CsvWriter {
+    let mut w = CsvWriter::new(vec![
+        "config", "sa_dim", "sa_count", "vp_lanes", "vp_count", "sm_mb", "clusters", "cnn_ratio",
+        "seed", "tops", "watts", "area_mm2", "tops_per_watt", "utilization",
+    ]);
+    for p in points {
+        w.row(vec![
+            p.label.clone(),
+            p.sa_dim.to_string(),
+            p.sa_count.to_string(),
+            p.vp_lanes.to_string(),
+            p.vp_count.to_string(),
+            p.sm_mb.to_string(),
+            p.clusters.to_string(),
+            format!("{:.2}", p.cnn_ratio),
+            p.seed.to_string(),
+            format!("{:.4}", p.tops),
+            format!("{:.4}", p.watts),
+            format!("{:.2}", p.area_mm2),
+            format!("{:.4}", p.tops_per_watt),
+            format!("{:.4}", p.utilization),
+        ]);
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::WorkloadSpec;
+
+    #[test]
+    fn space_is_108_configs() {
+        let space = single_cluster_space();
+        assert_eq!(space.len(), 108);
+        // all labels unique
+        let labels: std::collections::BTreeSet<String> =
+            space.iter().map(|h| h.label()).collect();
+        assert_eq!(labels.len(), 108);
+    }
+
+    #[test]
+    fn evaluate_produces_positive_metrics() {
+        let hw = &single_cluster_space()[0];
+        let wl = WorkloadSpec::ratio(0.5, 4, 1).generate();
+        let p = evaluate(hw, &wl, SchedulerKind::Has, &SimConfig::default());
+        assert!(p.tops > 0.0 && p.watts > 0.0 && p.area_mm2 > 0.0);
+    }
+
+    #[test]
+    fn aggregate_means_over_workloads() {
+        let hw = single_cluster_space()[0].clone();
+        let wls: Vec<Workload> =
+            (0..2).map(|s| WorkloadSpec::ratio(0.5, 3, s).generate()).collect();
+        let pts = sweep(&[hw], &wls, SchedulerKind::Has, &SimConfig::default(), 2);
+        assert_eq!(pts.len(), 2);
+        let agg = aggregate_by_config(&pts);
+        assert_eq!(agg.len(), 1);
+        let mean = (pts[0].tops + pts[1].tops) / 2.0;
+        assert!((agg[0].tops - mean).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,249 @@
+//! GPU reference model — Nvidia Titan RTX (paper §VI-D and Fig 1).
+//!
+//! The paper measures PyTorch + cuDNN on real hardware; offline we model the
+//! same machine analytically: a roofline (tensor-core compute vs GDDR6
+//! bandwidth) with per-op-class efficiency factors plus per-kernel launch
+//! overhead. Batch-1 inference serving executes requests sequentially, one
+//! CUDA kernel per layer — launch overhead and low tensor-core occupancy at
+//! batch 1 are what the published MLPerf-style numbers show, and the factors
+//! below are calibrated so the model reproduces the paper's Fig 1 breakdown
+//! (vector ops ≈ 31.6 % of execution time on the mixed workloads).
+
+use crate::model::ModelGraph;
+use crate::ops::{OpClass, OpKind};
+use crate::workload::Workload;
+
+/// Static GPU specification.
+#[derive(Debug, Clone)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    /// Dense tensor-core throughput at boost clock, TOPS (int8/fp16 class).
+    pub tensor_tops: f64,
+    /// CUDA-core throughput for non-matrix (vector) kernels, GOPS.
+    pub cuda_gops: f64,
+    /// Memory bandwidth, GB/s.
+    pub mem_gb_s: f64,
+    /// Achievable fraction of peak bandwidth.
+    pub mem_eff: f64,
+    /// Kernel launch + framework overhead per layer, seconds.
+    pub launch_s: f64,
+    /// Tensor-core efficiency on batch-1 conv/GEMM layers.
+    pub array_eff: f64,
+    /// CUDA-core efficiency on element-wise/reduction kernels.
+    pub vector_eff: f64,
+    /// Board power: idle and TDP, watts.
+    pub idle_w: f64,
+    pub tdp_w: f64,
+    /// Die area, mm² (12 nm).
+    pub die_mm2: f64,
+    pub boost_ghz: f64,
+}
+
+impl GpuSpec {
+    /// Titan RTX (TU102): 72 SMs, 576 tensor cores, 24 GB GDDR6.
+    pub fn titan_rtx() -> GpuSpec {
+        GpuSpec {
+            name: "titan-rtx",
+            tensor_tops: 130.0,
+            cuda_gops: 16_300.0,
+            mem_gb_s: 672.0,
+            mem_eff: 0.75,
+            launch_s: 6.0e-6,
+            array_eff: 0.17,
+            vector_eff: 0.18,
+            idle_w: 62.0,
+            tdp_w: 280.0,
+            die_mm2: 754.0,
+            boost_ghz: 1.77,
+        }
+    }
+}
+
+/// Per-class time breakdown of one run (drives Fig 1).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct GpuBreakdown {
+    pub array_s: f64,
+    pub vector_s: f64,
+    pub data_s: f64,
+}
+
+impl GpuBreakdown {
+    pub fn total_s(&self) -> f64 {
+        self.array_s + self.vector_s + self.data_s
+    }
+
+    pub fn vector_fraction(&self) -> f64 {
+        let t = self.total_s();
+        if t <= 0.0 {
+            0.0
+        } else {
+            self.vector_s / t
+        }
+    }
+}
+
+/// Result of executing a workload on the GPU model.
+#[derive(Debug, Clone)]
+pub struct GpuRunResult {
+    pub total_s: f64,
+    pub breakdown: GpuBreakdown,
+    pub total_ops: u64,
+    pub energy_j: f64,
+}
+
+impl GpuRunResult {
+    pub fn tops(&self) -> f64 {
+        if self.total_s <= 0.0 {
+            return 0.0;
+        }
+        self.total_ops as f64 / self.total_s / 1e12
+    }
+
+    pub fn tops_per_watt(&self) -> f64 {
+        if self.energy_j <= 0.0 {
+            return 0.0;
+        }
+        self.total_ops as f64 / self.energy_j / 1e12
+    }
+
+    pub fn avg_watts(&self) -> f64 {
+        if self.total_s <= 0.0 {
+            return 0.0;
+        }
+        self.energy_j / self.total_s
+    }
+}
+
+/// PyTorch serves fp32; the model IR counts int8 bytes, so GPU memory
+/// traffic scales by 4.
+const GPU_DTYPE_BYTES: f64 = 4.0;
+
+/// Time for one layer on the GPU: launch + max(compute, memory).
+/// Returns `(seconds, compute_bound)`.
+pub fn layer_time(spec: &GpuSpec, g: &ModelGraph, idx: usize) -> (f64, bool) {
+    let l = &g.layers[idx];
+    let bytes = (l.param_bytes + l.input_bytes + l.output_bytes) as f64 * GPU_DTYPE_BYTES;
+    let mem_s = bytes / (spec.mem_gb_s * 1e9 * spec.mem_eff);
+    let compute_s = match l.class() {
+        OpClass::Array => l.ops() as f64 / (spec.tensor_tops * 1e12 * spec.array_eff),
+        OpClass::Vector => l.ops() as f64 / (spec.cuda_gops * 1e9 * spec.vector_eff),
+        OpClass::Data => 0.0,
+    };
+    let busy = compute_s.max(mem_s);
+    (spec.launch_s + busy, compute_s >= mem_s)
+}
+
+/// Is this op folded away at inference time? BatchNorm folds into the
+/// preceding convolution's weights (standard inference practice); every
+/// other vector op — ReLU included — is a standalone kernel in eager
+/// PyTorch, which is why vector work is a large share of GPU wall-clock
+/// (the paper's Fig 1 observation, 31.55 % on average).
+fn fused_into_prev(g: &ModelGraph, idx: usize) -> bool {
+    let l = &g.layers[idx];
+    if l.op != OpKind::BatchNorm {
+        return false;
+    }
+    l.deps.iter().any(|&d| g.layers[d as usize].class() == OpClass::Array)
+}
+
+/// Execute one model end-to-end (sequential layers — PyTorch eager serving).
+pub fn run_model(spec: &GpuSpec, g: &ModelGraph) -> GpuBreakdown {
+    let mut b = GpuBreakdown::default();
+    for (i, l) in g.layers.iter().enumerate() {
+        if fused_into_prev(g, i) {
+            continue; // absorbed into the producer kernel's epilogue
+        }
+        let (t, _) = layer_time(spec, g, i);
+        match l.class() {
+            OpClass::Array => b.array_s += t,
+            OpClass::Vector => b.vector_s += t,
+            OpClass::Data => b.data_s += t,
+        }
+    }
+    b
+}
+
+/// Execute a workload trace (requests back-to-back; the GPU is the
+/// throughput baseline, so arrival gaps don't idle it in this accounting).
+pub fn run_workload(spec: &GpuSpec, wl: &Workload) -> GpuRunResult {
+    let mut breakdown = GpuBreakdown::default();
+    let mut total_ops = 0u64;
+    for r in &wl.requests {
+        let g = wl.registry.graph(r.model_id);
+        let b = run_model(spec, g);
+        breakdown.array_s += b.array_s;
+        breakdown.vector_s += b.vector_s;
+        breakdown.data_s += b.data_s;
+        total_ops += g.total_ops();
+    }
+    let total_s = breakdown.total_s();
+    // Power: idle floor plus dynamic share scaled by how compute-dense the
+    // run is (launch-bound time burns close to idle power).
+    let busy_frac = 0.45;
+    let energy_j = total_s * (spec.idle_w + (spec.tdp_w - spec.idle_w) * busy_frac);
+    GpuRunResult { total_s, breakdown, total_ops, energy_j }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+    use crate::workload::WorkloadSpec;
+
+    #[test]
+    fn resnet_latency_in_plausible_range() {
+        // Published Titan RTX batch-1 ResNet-50 latency is ~1–3 ms.
+        let spec = GpuSpec::titan_rtx();
+        let b = run_model(&spec, &zoo::resnet50());
+        let ms = b.total_s() * 1e3;
+        assert!(ms > 0.5 && ms < 6.0, "resnet50 {ms:.2} ms");
+    }
+
+    #[test]
+    fn vector_fraction_near_paper_fig1() {
+        // Fig 1: vector ops average 31.55 % of execution time across the
+        // ratio sweep. Accept 20–45 % for the average of our mix.
+        let spec = GpuSpec::titan_rtx();
+        let mut fracs = Vec::new();
+        for i in 0..=10 {
+            let wl = WorkloadSpec::ratio(i as f64 / 10.0, 20, 7).generate();
+            let r = run_workload(&spec, &wl);
+            fracs.push(r.breakdown.vector_fraction());
+        }
+        let avg = fracs.iter().sum::<f64>() / fracs.len() as f64;
+        assert!(avg > 0.20 && avg < 0.45, "avg vector fraction {avg:.3}");
+    }
+
+    #[test]
+    fn gpu_tops_far_below_peak_at_batch1() {
+        let spec = GpuSpec::titan_rtx();
+        let wl = WorkloadSpec::ratio(0.5, 20, 3).generate();
+        let r = run_workload(&spec, &wl);
+        assert!(r.tops() < 0.25 * spec.tensor_tops, "{}", r.tops());
+        assert!(r.tops() > 0.3, "{}", r.tops());
+    }
+
+    #[test]
+    fn energy_power_within_board_limits() {
+        let spec = GpuSpec::titan_rtx();
+        let wl = WorkloadSpec::ratio(0.5, 10, 3).generate();
+        let r = run_workload(&spec, &wl);
+        let w = r.avg_watts();
+        assert!(w >= spec.idle_w && w <= spec.tdp_w, "{w}");
+    }
+
+    #[test]
+    fn vector_time_is_significant_at_every_ratio() {
+        // The Fig 1 motivation: vector kernels are a large share of GPU
+        // wall-clock regardless of the workload mix (the paper reports
+        // 31.55 % on average) — which is what motivates first-class vector
+        // processors in the HSV architecture.
+        let spec = GpuSpec::titan_rtx();
+        for i in 0..=10 {
+            let wl = WorkloadSpec::ratio(i as f64 / 10.0, 20, 3).generate();
+            let r = run_workload(&spec, &wl);
+            let f = r.breakdown.vector_fraction();
+            assert!(f > 0.12 && f < 0.55, "ratio {i}: vector fraction {f:.3}");
+        }
+    }
+}

@@ -1,0 +1,62 @@
+//! # hsv — Heterogeneous Systolic-Vector architecture with resource scheduling
+//!
+//! A full-system reproduction of *"Exploration of Systolic-Vector Architecture
+//! with Resource Scheduling for Dynamic ML Workloads"* (Kim, Yoo, Moon, Kim —
+//! cs.AR 2022).
+//!
+//! The crate is organised along the paper's own system decomposition:
+//!
+//! - [`umf`] — the Unified Model Format: a compact, hardware-decodable binary
+//!   packet format for DNN model description (paper §III).
+//! - [`ops`] / [`model`] — the operator taxonomy and the layer-graph IR, plus a
+//!   model zoo reproducing the paper's eight benchmark networks.
+//! - [`sim`] — the cycle-level simulator: systolic-array / vector-processor /
+//!   shared-memory / HBM timing models calibrated by the paper's 28 nm
+//!   post-layout database (Table I) (paper §VI-A).
+//! - [`sched`] — round-robin baseline and the heterogeneity-aware scheduling
+//!   (HAS) algorithm with external-memory-access scheduling (paper §V).
+//! - [`cluster`] / [`balancer`] / [`coordinator`] — the SV cluster, the
+//!   top-level load balancer, and the multi-cluster runtime (paper §IV).
+//! - [`workload`] — the datacenter workload generator (paper §VI-A).
+//! - [`gpu`] — the Titan RTX reference model used for Fig 1 and Fig 10.
+//! - [`dse`] — the design-space-exploration driver (paper §VI-C).
+//! - [`runtime`] — the PJRT functional-execution path: loads the AOT-compiled
+//!   JAX/Pallas artifacts and runs real numerics from rust.
+//! - [`report`] — performance analyzer, timeline visualiser, figure emitters.
+//! - [`util`] — in-tree substrates (PRNG, JSON, CLI, stats, thread pool,
+//!   property-testing) — this environment is offline, so everything beyond the
+//!   `xla`/`anyhow`/`thiserror` crates is built here.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use hsv::config::{HardwareConfig, SimConfig};
+//! use hsv::workload::WorkloadSpec;
+//! use hsv::coordinator::Coordinator;
+//! use hsv::sched::SchedulerKind;
+//!
+//! let hw = HardwareConfig::gpu_comparable();             // the paper's Fig 10 config
+//! let wl = WorkloadSpec::ratio(0.5, 40, 42).generate();  // 50/50 CNN:transformer
+//! let mut coord = Coordinator::new(hw, SchedulerKind::Has, SimConfig::default());
+//! let report = coord.run(&wl);
+//! println!("throughput = {:.2} TOPS, {:.2} TOPS/W", report.tops(), report.tops_per_watt());
+//! ```
+
+pub mod util;
+pub mod config;
+pub mod ops;
+pub mod model;
+pub mod umf;
+pub mod sim;
+pub mod sched;
+pub mod cluster;
+pub mod balancer;
+pub mod coordinator;
+pub mod workload;
+pub mod gpu;
+pub mod dse;
+pub mod report;
+pub mod runtime;
+
+/// Crate version string (mirrors Cargo.toml).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

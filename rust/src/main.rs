@@ -1,0 +1,199 @@
+//! `hsv` — command-line front-end for the HSV accelerator simulator.
+//!
+//! Subcommands:
+//!   simulate   run one workload on one configuration and print the report
+//!   dse        sweep the single-cluster design space (Fig 9 data)
+//!   gpu        run the Titan RTX reference model (Fig 1 / Fig 10 baseline)
+//!   timeline   render the scheduling timeline (Fig 6)
+//!   convert    encode a zoo model as a UMF binary file
+//!   zoo        list the benchmark models
+//!   serve      functional serving through the PJRT artifacts
+
+use hsv::balancer::DispatchPolicy;
+use hsv::config::{HardwareConfig, SimConfig};
+use hsv::coordinator::Coordinator;
+use hsv::gpu;
+use hsv::model::zoo;
+use hsv::report::{self, timeline};
+use hsv::sched::SchedulerKind;
+use hsv::umf;
+use hsv::util::cli::Args;
+use hsv::workload::{suite_33, WorkloadSpec};
+
+const USAGE: &str = "hsv <simulate|dse|gpu|timeline|convert|zoo|serve> [--options]
+  simulate --ratio 0.5 --requests 40 --seed 42 --sched has|rr [--clusters N] [--small] [--timeline]
+  dse      --requests 12 [--threads N] [--out out/dse.csv]
+  gpu      --ratio 0.5 --requests 40 --seed 42
+  timeline --ratio 0.5 --requests 6 --seed 1 --sched has [--width 100]
+  convert  --model resnet50 --out out/resnet50.umf
+  zoo
+  serve    --model bert-tiny --requests 4   (needs `make artifacts`)";
+
+fn main() {
+    let args = Args::from_env();
+    match args.subcommand() {
+        Some("simulate") => simulate(&args),
+        Some("dse") => dse(&args),
+        Some("gpu") => gpu_cmd(&args),
+        Some("timeline") => timeline_cmd(&args),
+        Some("convert") => convert(&args),
+        Some("zoo") => zoo_cmd(),
+        Some("serve") => serve(&args),
+        _ => {
+            eprintln!("{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn hw_from_args(args: &Args) -> HardwareConfig {
+    let mut hw = if args.has("small") {
+        HardwareConfig::small()
+    } else {
+        HardwareConfig::gpu_comparable()
+    };
+    if let Some(c) = args.str_opt("clusters") {
+        hw = hw.with_clusters(c.parse().expect("--clusters expects an integer"));
+    }
+    hw
+}
+
+fn sim_from_args(args: &Args) -> SimConfig {
+    let mut sim = SimConfig::default();
+    if args.has("timeline") {
+        sim.record_timeline = true;
+    }
+    sim.vp_runs_array_ops = args.bool("vp-array", true);
+    sim.sublayer_partitioning = args.bool("partition", true);
+    sim.memory_access_scheduling = args.bool("memsched", true);
+    sim
+}
+
+fn workload_from_args(args: &Args) -> hsv::workload::Workload {
+    WorkloadSpec::ratio(
+        args.f64("ratio", 0.5),
+        args.usize("requests", 40),
+        args.u64("seed", 42),
+    )
+    .generate()
+}
+
+fn simulate(args: &Args) {
+    let hw = hw_from_args(args);
+    let sched = SchedulerKind::from_name(&args.str("sched", "has")).expect("--sched has|rr");
+    let wl = workload_from_args(args);
+    let mut coord = Coordinator::new(hw, sched, sim_from_args(args))
+        .with_policy(DispatchPolicy::LeastLoaded);
+    let r = coord.run(&wl);
+    print!("{}", report::summarize(&r));
+    println!("{}", r.to_json().to_pretty());
+}
+
+fn dse(args: &Args) {
+    let configs = hsv::dse::single_cluster_space();
+    let workloads = suite_33(args.usize("requests", 12));
+    let threads = args.usize("threads", std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4));
+    eprintln!(
+        "DSE: {} configs x {} workloads on {} threads ...",
+        configs.len(),
+        workloads.len(),
+        threads
+    );
+    let t0 = std::time::Instant::now();
+    let pts = hsv::dse::sweep(&configs, &workloads, SchedulerKind::Has, &SimConfig::default(), threads);
+    eprintln!("swept {} points in {:.1}s", pts.len(), t0.elapsed().as_secs_f64());
+    let out = args.str("out", "out/dse_single_cluster.csv");
+    hsv::dse::to_csv(&pts).save(&out).expect("write csv");
+    let agg = hsv::dse::aggregate_by_config(&pts);
+    hsv::dse::to_csv(&agg).save(&out.replace(".csv", "_agg.csv")).expect("write csv");
+    println!("wrote {out}");
+}
+
+fn gpu_cmd(args: &Args) {
+    let wl = workload_from_args(args);
+    let spec = gpu::GpuSpec::titan_rtx();
+    let r = gpu::run_workload(&spec, &wl);
+    println!(
+        "gpu {}: {:.3} s | {:.3} TOPS | {:.1} W | {:.4} TOPS/W | vector {:.1}% of time",
+        spec.name,
+        r.total_s,
+        r.tops(),
+        r.avg_watts(),
+        r.tops_per_watt(),
+        r.breakdown.vector_fraction() * 100.0
+    );
+}
+
+fn timeline_cmd(args: &Args) {
+    let hw = if args.has("small") { HardwareConfig::small() } else { HardwareConfig::small() };
+    let sched = SchedulerKind::from_name(&args.str("sched", "has")).expect("--sched has|rr");
+    let wl = workload_from_args(args);
+    let mut coord = Coordinator::new(hw, sched, SimConfig::default().with_timeline());
+    let r = coord.run(&wl);
+    println!("{}", timeline::render(&r, args.usize("width", 100)));
+    print!("{}", report::summarize(&r));
+}
+
+fn convert(args: &Args) {
+    let name = args.str("model", "resnet50");
+    let g = zoo::by_name(&name).unwrap_or_else(|| {
+        eprintln!("unknown model '{name}' (try: {})", zoo::MODEL_NAMES.join(", "));
+        std::process::exit(2);
+    });
+    let frame = umf::encode_model(&g, 1, 1, 1);
+    let bytes = frame.encode();
+    let out = args.str("out", &format!("out/{name}.umf"));
+    if let Some(parent) = std::path::Path::new(&out).parent() {
+        std::fs::create_dir_all(parent).unwrap();
+    }
+    std::fs::write(&out, &bytes).expect("write umf");
+    println!(
+        "{name}: {} layers, {:.1} MB params -> {} ({} bytes, {:.1} B/layer)",
+        g.layers.len(),
+        g.total_param_bytes() as f64 / 1e6,
+        out,
+        bytes.len(),
+        bytes.len() as f64 / g.layers.len() as f64
+    );
+}
+
+fn zoo_cmd() {
+    println!(
+        "{:<14} {:>7} {:>12} {:>12} {:>8}",
+        "model", "layers", "params(MB)", "ops(G)", "vec-ops%"
+    );
+    for g in zoo::all_models() {
+        println!(
+            "{:<14} {:>7} {:>12.1} {:>12.2} {:>8.1}",
+            g.name,
+            g.layers.len(),
+            g.total_param_bytes() as f64 / 1e6,
+            g.total_ops() as f64 / 1e9,
+            g.vector_op_fraction() * 100.0
+        );
+    }
+}
+
+fn serve(args: &Args) {
+    let mut rt = hsv::runtime::Runtime::new(hsv::runtime::Runtime::default_dir())
+        .expect("pjrt client");
+    let names = rt.load_all().expect("load artifacts (run `make artifacts`)");
+    println!("loaded {} artifacts on {}: {:?}", names.len(), rt.platform(), names);
+    let n = args.usize("requests", 2);
+    // Exercise the largest GEMM artifact as a smoke request loop.
+    if names.iter().any(|n| n == "gemm_128") {
+        let dim = 128usize;
+        let a: Vec<f32> = (0..dim * dim).map(|i| (i % 13) as f32 * 0.1).collect();
+        let b: Vec<f32> = (0..dim * dim).map(|i| (i % 11) as f32 * 0.1).collect();
+        for i in 0..n {
+            let t0 = std::time::Instant::now();
+            let out = rt.execute_f32("gemm_128", &[(&a, &[dim, dim]), (&b, &[dim, dim])]).unwrap();
+            println!(
+                "request {i}: gemm_128 -> {} outputs, first={:.3}, {:.2} ms",
+                out.len(),
+                out[0][0],
+                t0.elapsed().as_secs_f64() * 1e3
+            );
+        }
+    }
+}

@@ -1,0 +1,283 @@
+//! Fluent builder for [`ModelGraph`]s.
+//!
+//! The zoo uses this to express networks layer-by-layer with real shapes;
+//! parameter/activation byte accounting and dependency wiring are derived
+//! here so every zoo model gets them consistently.
+
+use super::{Layer, ModelFamily, ModelGraph, BYTES_PER_ELEM};
+use crate::ops::shape::vector_shape;
+use crate::ops::{ConvAttrs, GemmDims, OpKind, TaskShape};
+
+/// Handle to a built layer (its id), used to wire residual/branch deps.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerRef(pub u32);
+
+/// Builder state: appends layers; by default each layer depends on the
+/// previously appended one (sequential chain), overridable per call.
+pub struct GraphBuilder {
+    name: String,
+    family: ModelFamily,
+    layers: Vec<Layer>,
+    last: Option<LayerRef>,
+}
+
+impl GraphBuilder {
+    pub fn new(name: &str, family: ModelFamily) -> GraphBuilder {
+        GraphBuilder { name: name.to_string(), family, layers: Vec::new(), last: None }
+    }
+
+    /// The most recently appended layer.
+    pub fn last(&self) -> LayerRef {
+        self.last.expect("no layers yet")
+    }
+
+    /// Look up a layer by exact name (used to wire weight sharing).
+    pub fn by_name(&self, name: &str) -> Option<LayerRef> {
+        self.layers.iter().find(|l| l.name == name).map(|l| LayerRef(l.id))
+    }
+
+    /// Reset the implicit predecessor (for starting a parallel branch).
+    pub fn set_cursor(&mut self, at: LayerRef) {
+        self.last = Some(at);
+    }
+
+    fn push(
+        &mut self,
+        name: String,
+        op: OpKind,
+        shape: TaskShape,
+        conv: Option<ConvAttrs>,
+        deps: Vec<LayerRef>,
+        param_bytes: u64,
+        input_bytes: u64,
+        output_bytes: u64,
+    ) -> LayerRef {
+        let id = self.layers.len() as u32;
+        let deps: Vec<u32> = if deps.is_empty() {
+            self.last.iter().map(|r| r.0).collect()
+        } else {
+            deps.iter().map(|r| r.0).collect()
+        };
+        self.layers.push(Layer {
+            id,
+            name,
+            op,
+            shape,
+            conv,
+            deps,
+            param_owner: id,
+            param_bytes,
+            input_bytes,
+            output_bytes,
+        });
+        self.last = Some(LayerRef(id));
+        LayerRef(id)
+    }
+
+    /// Standard convolution. Returns its ref; output spatial dims available
+    /// via the attrs.
+    pub fn conv(&mut self, name: &str, attrs: ConvAttrs) -> LayerRef {
+        assert_eq!(attrs.groups, 1);
+        let g = attrs.as_gemm();
+        let params = (attrs.in_c as u64 * attrs.kh as u64 * attrs.kw as u64 + 1)
+            * attrs.out_c as u64
+            * BYTES_PER_ELEM;
+        let input = attrs.in_c as u64 * attrs.in_h as u64 * attrs.in_w as u64 * BYTES_PER_ELEM;
+        let output =
+            attrs.out_c as u64 * attrs.out_h() as u64 * attrs.out_w() as u64 * BYTES_PER_ELEM;
+        self.push(
+            name.to_string(),
+            OpKind::Conv,
+            TaskShape::Gemm(g),
+            Some(attrs),
+            vec![],
+            params,
+            input,
+            output,
+        )
+    }
+
+    /// Depthwise convolution (groups == channels).
+    pub fn dwconv(&mut self, name: &str, attrs: ConvAttrs) -> LayerRef {
+        assert_eq!(attrs.groups, attrs.in_c);
+        let g = attrs.as_depthwise_gemm();
+        let params = (attrs.kh as u64 * attrs.kw as u64 + 1) * attrs.in_c as u64 * BYTES_PER_ELEM;
+        let input = attrs.in_c as u64 * attrs.in_h as u64 * attrs.in_w as u64 * BYTES_PER_ELEM;
+        let output =
+            attrs.in_c as u64 * attrs.out_h() as u64 * attrs.out_w() as u64 * BYTES_PER_ELEM;
+        self.push(
+            name.to_string(),
+            OpKind::DepthwiseConv,
+            TaskShape::Gemm(g),
+            Some(attrs),
+            vec![],
+            params,
+            input,
+            output,
+        )
+    }
+
+    /// Fully-connected / projection GEMM over `m` rows: `[m,k]·[k,n]`.
+    pub fn gemm(&mut self, name: &str, m: u64, k: u64, n: u64) -> LayerRef {
+        let op = if m == 1 { OpKind::MatVec } else { OpKind::Gemm };
+        self.push(
+            name.to_string(),
+            op,
+            TaskShape::Gemm(GemmDims::new(m, k, n)),
+            None,
+            vec![],
+            (k + 1) * n * BYTES_PER_ELEM,
+            m * k * BYTES_PER_ELEM,
+            m * n * BYTES_PER_ELEM,
+        )
+    }
+
+    /// GEMM that reads the weights owned by `owner` (decode-phase timesteps
+    /// of generative models — one resident weight tensor serves them all).
+    pub fn gemm_shared(&mut self, name: &str, m: u64, k: u64, n: u64, owner: LayerRef) -> LayerRef {
+        let owner_bytes = self.layers[owner.0 as usize].param_bytes;
+        debug_assert_eq!(
+            owner_bytes,
+            (k + 1) * n * BYTES_PER_ELEM,
+            "shared gemm shape must match owner weights"
+        );
+        let r = self.gemm(name, m, k, n);
+        self.layers[r.0 as usize].param_owner = owner.0;
+        r
+    }
+
+    /// Activation-by-activation GEMM (attention score/context matmuls): no
+    /// parameters; both operands are activations.
+    pub fn act_gemm(&mut self, name: &str, m: u64, k: u64, n: u64, deps: Vec<LayerRef>) -> LayerRef {
+        self.push(
+            name.to_string(),
+            OpKind::Gemm,
+            TaskShape::Gemm(GemmDims::new(m, k, n)),
+            None,
+            deps,
+            0,
+            (m * k + k * n) * BYTES_PER_ELEM,
+            m * n * BYTES_PER_ELEM,
+        )
+    }
+
+    /// Generic vector op over `elems` output elements.
+    pub fn vector(&mut self, name: &str, op: OpKind, elems: u64, window: u64) -> LayerRef {
+        let shape = vector_shape(op, elems, window);
+        let params = match op {
+            // affine norms carry scale+shift per element of the normalized dim
+            OpKind::LayerNorm | OpKind::BatchNorm => 2 * window.max(1) * BYTES_PER_ELEM,
+            _ => 0,
+        };
+        self.push(
+            name.to_string(),
+            op,
+            shape,
+            None,
+            vec![],
+            params,
+            elems * BYTES_PER_ELEM,
+            elems * BYTES_PER_ELEM,
+        )
+    }
+
+    /// Vector op with explicit dependencies (residual adds).
+    pub fn vector_with_deps(
+        &mut self,
+        name: &str,
+        op: OpKind,
+        elems: u64,
+        window: u64,
+        deps: Vec<LayerRef>,
+    ) -> LayerRef {
+        let shape = vector_shape(op, elems, window);
+        self.push(
+            name.to_string(),
+            op,
+            shape,
+            None,
+            deps,
+            0,
+            2 * elems * BYTES_PER_ELEM,
+            elems * BYTES_PER_ELEM,
+        )
+    }
+
+    /// Pooling over CHW activations with the given square window/stride.
+    pub fn pool(
+        &mut self,
+        name: &str,
+        op: OpKind,
+        c: u64,
+        in_h: u64,
+        in_w: u64,
+        win: u64,
+        stride: u64,
+    ) -> (LayerRef, u64, u64) {
+        let oh = (in_h - win) / stride + 1;
+        let ow = (in_w - win) / stride + 1;
+        let r = self.vector(name, op, c * oh * ow, win * win);
+        (r, oh, ow)
+    }
+
+    /// Data-movement op (reshape/transpose/concat/embed table lookup).
+    pub fn data(&mut self, name: &str, op: OpKind, bytes: u64, deps: Vec<LayerRef>) -> LayerRef {
+        self.push(
+            name.to_string(),
+            op,
+            TaskShape::Data { bytes },
+            None,
+            deps,
+            if op == OpKind::Embed { bytes } else { 0 },
+            bytes,
+            bytes,
+        )
+    }
+
+    pub fn finish(self) -> ModelGraph {
+        let g = ModelGraph { name: self.name, family: self.family, layers: self.layers };
+        g.validate().expect("builder produced invalid graph");
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequential_wiring() {
+        let mut b = GraphBuilder::new("t", ModelFamily::Cnn);
+        let a = b.gemm("fc1", 8, 16, 32);
+        let c = b.vector("relu1", OpKind::Relu, 8 * 32, 1);
+        let g = b.finish();
+        assert_eq!(g.layers[c.0 as usize].deps, vec![a.0]);
+        assert_eq!(g.layers[a.0 as usize].deps, Vec::<u32>::new());
+    }
+
+    #[test]
+    fn residual_wiring() {
+        let mut b = GraphBuilder::new("t", ModelFamily::Cnn);
+        let x = b.gemm("fc1", 8, 16, 16);
+        let y = b.gemm("fc2", 8, 16, 16);
+        let add = b.vector_with_deps("add", OpKind::Add, 8 * 16, 1, vec![x, y]);
+        let g = b.finish();
+        assert_eq!(g.layers[add.0 as usize].deps, vec![x.0, y.0]);
+    }
+
+    #[test]
+    fn matvec_detection() {
+        let mut b = GraphBuilder::new("t", ModelFamily::Transformer);
+        b.gemm("dec", 1, 768, 768);
+        let g = b.finish();
+        assert_eq!(g.layers[0].op, OpKind::MatVec);
+    }
+
+    #[test]
+    fn pool_output_dims() {
+        let mut b = GraphBuilder::new("t", ModelFamily::Cnn);
+        b.gemm("stem", 4, 4, 4);
+        let (_, oh, ow) = b.pool("p", OpKind::MaxPool, 64, 112, 112, 2, 2);
+        assert_eq!((oh, ow), (56, 56));
+    }
+}

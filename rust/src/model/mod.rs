@@ -1,0 +1,160 @@
+//! DNN model intermediate representation and the benchmark model zoo.
+//!
+//! A [`ModelGraph`] is the layer-level view the HSV hardware consumes: each
+//! [`Layer`] names an operator, its arithmetic [`TaskShape`], its dependency
+//! edges, and its parameter/activation byte footprints. The zoo reproduces the
+//! paper's eight benchmark networks (paper §VI-A, "Workload Generation").
+
+pub mod builder;
+pub mod zoo;
+
+use crate::ops::{ConvAttrs, OpClass, OpKind, TaskShape};
+
+/// Inference data precision. The paper's GOPS accounting is
+/// precision-agnostic; int8 is the datacenter-inference default.
+pub const BYTES_PER_ELEM: u64 = 1;
+
+/// Model family — controls workload-mix classification (CNN : transformer).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ModelFamily {
+    Cnn,
+    Transformer,
+}
+
+/// One operator instance in a model graph.
+#[derive(Debug, Clone)]
+pub struct Layer {
+    /// Dense id; also the index into `ModelGraph::layers`.
+    pub id: u32,
+    /// Human-readable name ("layer3.conv2", "enc5.attn.qk").
+    pub name: String,
+    pub op: OpKind,
+    pub shape: TaskShape,
+    /// Convolution attributes, kept for UMF attribute payloads.
+    pub conv: Option<ConvAttrs>,
+    /// Ids of layers whose outputs this layer consumes. Always < `id`
+    /// (graphs are topologically ordered by construction).
+    pub deps: Vec<u32>,
+    /// Layer that *owns* the weights this layer reads. Equal to `id` for
+    /// ordinary layers; decode-phase layers of generative models point at
+    /// the first timestep's layer so every timestep reuses one resident
+    /// tensor (the paper's weight sharing "between tasks").
+    pub param_owner: u32,
+    /// Weight/bias bytes fetched from HBM (0 for parameterless ops).
+    pub param_bytes: u64,
+    /// Input activation bytes.
+    pub input_bytes: u64,
+    /// Output activation bytes.
+    pub output_bytes: u64,
+}
+
+impl Layer {
+    /// Operation count for throughput accounting.
+    pub fn ops(&self) -> u64 {
+        self.shape.ops()
+    }
+
+    pub fn class(&self) -> OpClass {
+        self.op.class()
+    }
+}
+
+/// A whole model: topologically-ordered layer list.
+#[derive(Debug, Clone)]
+pub struct ModelGraph {
+    pub name: String,
+    pub family: ModelFamily,
+    pub layers: Vec<Layer>,
+}
+
+impl ModelGraph {
+    /// Total operation count of one inference.
+    pub fn total_ops(&self) -> u64 {
+        self.layers.iter().map(|l| l.ops()).sum()
+    }
+
+    /// Total parameter bytes (model size). Weight-sharing layers (decode
+    /// timesteps) count once via their owner.
+    pub fn total_param_bytes(&self) -> u64 {
+        self.layers.iter().filter(|l| l.param_owner == l.id).map(|l| l.param_bytes).sum()
+    }
+
+    /// Fraction of ops that are vector-class.
+    pub fn vector_op_fraction(&self) -> f64 {
+        let total = self.total_ops().max(1);
+        let vec: u64 =
+            self.layers.iter().filter(|l| l.class() == OpClass::Vector).map(|l| l.ops()).sum();
+        vec as f64 / total as f64
+    }
+
+    /// Structural validation: ids dense & ordered, deps point backwards.
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, l) in self.layers.iter().enumerate() {
+            if l.id as usize != i {
+                return Err(format!("layer {} has id {} (expected {})", l.name, l.id, i));
+            }
+            for &d in &l.deps {
+                if d >= l.id {
+                    return Err(format!(
+                        "layer {} ({}) depends on non-earlier layer {}",
+                        l.id, l.name, d
+                    ));
+                }
+            }
+            if l.param_owner > l.id {
+                return Err(format!("layer {} has forward param owner {}", l.id, l.param_owner));
+            }
+            if l.param_owner != l.id {
+                let owner = &self.layers[l.param_owner as usize];
+                if owner.param_owner != owner.id {
+                    return Err(format!("layer {} shares weights with a non-owner", l.id));
+                }
+                if owner.param_bytes != l.param_bytes {
+                    return Err(format!(
+                        "layer {} shares weights with {} but byte sizes differ ({} vs {})",
+                        l.id, owner.id, l.param_bytes, owner.param_bytes
+                    ));
+                }
+            }
+        }
+        if self.layers.is_empty() {
+            return Err("empty model".into());
+        }
+        Ok(())
+    }
+
+    /// Count of layers per op class `(array, vector, data)`.
+    pub fn class_counts(&self) -> (usize, usize, usize) {
+        let mut a = 0;
+        let mut v = 0;
+        let mut d = 0;
+        for l in &self.layers {
+            match l.class() {
+                OpClass::Array => a += 1,
+                OpClass::Vector => v += 1,
+                OpClass::Data => d += 1,
+            }
+        }
+        (a, v, d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::zoo;
+
+    #[test]
+    fn all_zoo_models_validate() {
+        for m in zoo::all_models() {
+            m.validate().unwrap_or_else(|e| panic!("{}: {e}", m.name));
+        }
+    }
+
+    #[test]
+    fn zoo_has_eight_models() {
+        let models = zoo::all_models();
+        assert_eq!(models.len(), 8);
+        let cnn = models.iter().filter(|m| m.family == super::ModelFamily::Cnn).count();
+        assert_eq!(cnn, 4);
+    }
+}

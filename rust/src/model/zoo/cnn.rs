@@ -1,0 +1,233 @@
+//! CNN zoo: AlexNet, VGG-16, ResNet-50, MobileNetV2 (torchvision shapes,
+//! 224×224×3 input, batch 1, 1000-class head).
+
+use crate::model::builder::GraphBuilder;
+use crate::model::{ModelFamily, ModelGraph};
+use crate::ops::{ConvAttrs, OpKind};
+
+fn ca(in_c: u32, out_c: u32, hw: u32, k: u32, stride: u32, pad: u32) -> ConvAttrs {
+    ConvAttrs { in_c, out_c, in_h: hw, in_w: hw, kh: k, kw: k, stride, padding: pad, groups: 1 }
+}
+
+/// AlexNet (Krizhevsky et al. 2012; torchvision single-tower variant).
+pub fn alexnet() -> ModelGraph {
+    let mut b = GraphBuilder::new("alexnet", ModelFamily::Cnn);
+
+    b.conv("conv1", ca(3, 64, 224, 11, 4, 2)); // -> 55x55
+    b.vector("relu1", OpKind::Relu, 64 * 55 * 55, 1);
+    b.pool("pool1", OpKind::MaxPool, 64, 55, 55, 3, 2); // -> 27
+
+    b.conv("conv2", ca(64, 192, 27, 5, 1, 2));
+    b.vector("relu2", OpKind::Relu, 192 * 27 * 27, 1);
+    b.pool("pool2", OpKind::MaxPool, 192, 27, 27, 3, 2); // -> 13
+
+    b.conv("conv3", ca(192, 384, 13, 3, 1, 1));
+    b.vector("relu3", OpKind::Relu, 384 * 13 * 13, 1);
+    b.conv("conv4", ca(384, 256, 13, 3, 1, 1));
+    b.vector("relu4", OpKind::Relu, 256 * 13 * 13, 1);
+    b.conv("conv5", ca(256, 256, 13, 3, 1, 1));
+    b.vector("relu5", OpKind::Relu, 256 * 13 * 13, 1);
+    b.pool("pool5", OpKind::MaxPool, 256, 13, 13, 3, 2); // -> 6
+
+    b.data("flatten", OpKind::Reshape, 256 * 6 * 6, vec![]);
+    b.gemm("fc6", 1, 256 * 6 * 6, 4096);
+    b.vector("relu6", OpKind::Relu, 4096, 1);
+    b.gemm("fc7", 1, 4096, 4096);
+    b.vector("relu7", OpKind::Relu, 4096, 1);
+    b.gemm("fc8", 1, 4096, 1000);
+    b.finish()
+}
+
+/// VGG-16 (Simonyan & Zisserman 2014, configuration D).
+pub fn vgg16() -> ModelGraph {
+    let mut b = GraphBuilder::new("vgg16", ModelFamily::Cnn);
+    // (blocks of [out_c; n] at spatial dim, then 2x2/2 maxpool)
+    let stages: [(u32, u32, u32); 5] =
+        [(64, 2, 224), (128, 2, 112), (256, 3, 56), (512, 3, 28), (512, 3, 14)];
+    let mut in_c = 3u32;
+    for (si, (out_c, n, hw)) in stages.iter().enumerate() {
+        for ci in 0..*n {
+            b.conv(&format!("conv{}_{}", si + 1, ci + 1), ca(in_c, *out_c, *hw, 3, 1, 1));
+            b.vector(&format!("relu{}_{}", si + 1, ci + 1), OpKind::Relu, (*out_c as u64) * (*hw as u64) * (*hw as u64), 1);
+            in_c = *out_c;
+        }
+        b.pool(&format!("pool{}", si + 1), OpKind::MaxPool, *out_c as u64, *hw as u64, *hw as u64, 2, 2);
+    }
+    b.data("flatten", OpKind::Reshape, 512 * 7 * 7, vec![]);
+    b.gemm("fc1", 1, 512 * 7 * 7, 4096);
+    b.vector("relu_fc1", OpKind::Relu, 4096, 1);
+    b.gemm("fc2", 1, 4096, 4096);
+    b.vector("relu_fc2", OpKind::Relu, 4096, 1);
+    b.gemm("fc3", 1, 4096, 1000);
+    b.finish()
+}
+
+/// ResNet-50 (He et al. 2015).
+pub fn resnet50() -> ModelGraph {
+    let mut b = GraphBuilder::new("resnet50", ModelFamily::Cnn);
+
+    b.conv("conv1", ca(3, 64, 224, 7, 2, 3)); // -> 112
+    b.vector("bn1", OpKind::BatchNorm, 64 * 112 * 112, 1);
+    b.vector("relu1", OpKind::Relu, 64 * 112 * 112, 1);
+    // 3x3/2 maxpool with pad 1: 112 -> 56; model as window 9 over 56x56 out.
+    b.vector("maxpool", OpKind::MaxPool, 64 * 56 * 56, 9);
+
+    // (mid_c, out_c, blocks, first-stride), input starts 64ch @ 56x56
+    let stages: [(u32, u32, u32, u32); 4] =
+        [(64, 256, 3, 1), (128, 512, 4, 2), (256, 1024, 6, 2), (512, 2048, 3, 2)];
+    let mut in_c: u32 = 64;
+    let mut hw: u32 = 56;
+    for (si, (mid, out, blocks, stride1)) in stages.iter().enumerate() {
+        for blk in 0..*blocks {
+            let stride = if blk == 0 { *stride1 } else { 1 };
+            let out_hw = hw / stride;
+            let prefix = format!("layer{}.{}", si + 1, blk);
+            let skip_src = b.last();
+
+            // 1x1 reduce
+            b.conv(&format!("{prefix}.conv1"), ca(in_c, *mid, hw, 1, 1, 0));
+            b.vector(&format!("{prefix}.bn1"), OpKind::BatchNorm, (*mid as u64) * (hw as u64) * (hw as u64), 1);
+            b.vector(&format!("{prefix}.relu1"), OpKind::Relu, (*mid as u64) * (hw as u64) * (hw as u64), 1);
+            // 3x3 (stride here, torchvision v1.5 style)
+            b.conv(&format!("{prefix}.conv2"), ca(*mid, *mid, hw, 3, stride, 1));
+            b.vector(&format!("{prefix}.bn2"), OpKind::BatchNorm, (*mid as u64) * (out_hw as u64) * (out_hw as u64), 1);
+            b.vector(&format!("{prefix}.relu2"), OpKind::Relu, (*mid as u64) * (out_hw as u64) * (out_hw as u64), 1);
+            // 1x1 expand
+            b.conv(&format!("{prefix}.conv3"), ca(*mid, *out, out_hw, 1, 1, 0));
+            let main = b.vector(&format!("{prefix}.bn3"), OpKind::BatchNorm, (*out as u64) * (out_hw as u64) * (out_hw as u64), 1);
+
+            // projection shortcut on the first block of each stage
+            let skip = if blk == 0 {
+                b.set_cursor(skip_src);
+                b.conv(&format!("{prefix}.downsample"), ca(in_c, *out, hw, 1, stride, 0));
+                b.vector(&format!("{prefix}.bn_ds"), OpKind::BatchNorm, (*out as u64) * (out_hw as u64) * (out_hw as u64), 1)
+            } else {
+                skip_src
+            };
+            let elems = (*out as u64) * (out_hw as u64) * (out_hw as u64);
+            b.vector_with_deps(&format!("{prefix}.add"), OpKind::Add, elems, 1, vec![main, skip]);
+            b.vector(&format!("{prefix}.relu_out"), OpKind::Relu, elems, 1);
+            in_c = *out;
+            hw = out_hw;
+        }
+    }
+    b.vector("gavgpool", OpKind::GlobalAvgPool, 2048, (hw as u64) * (hw as u64));
+    b.gemm("fc", 1, 2048, 1000);
+    b.finish()
+}
+
+/// MobileNetV2 (Sandler et al. 2018).
+pub fn mobilenet_v2() -> ModelGraph {
+    let mut b = GraphBuilder::new("mobilenetv2", ModelFamily::Cnn);
+
+    b.conv("stem", ca(3, 32, 224, 3, 2, 1)); // -> 112
+    b.vector("stem.bn", OpKind::BatchNorm, 32 * 112 * 112, 1);
+    b.vector("stem.relu6", OpKind::Relu, 32 * 112 * 112, 1);
+
+    // (expansion t, out_c, repeats n, first-stride s)
+    let cfg: [(u32, u32, u32, u32); 7] = [
+        (1, 16, 1, 1),
+        (6, 24, 2, 2),
+        (6, 32, 3, 2),
+        (6, 64, 4, 2),
+        (6, 96, 3, 1),
+        (6, 160, 3, 2),
+        (6, 320, 1, 1),
+    ];
+    let mut in_c: u32 = 32;
+    let mut hw: u32 = 112;
+    for (bi, (t, out_c, n, s)) in cfg.iter().enumerate() {
+        for r in 0..*n {
+            let stride = if r == 0 { *s } else { 1 };
+            let out_hw = hw / stride;
+            let exp_c = in_c * t;
+            let p = format!("block{}.{}", bi, r);
+            let block_in = b.last();
+
+            if *t != 1 {
+                b.conv(&format!("{p}.expand"), ca(in_c, exp_c, hw, 1, 1, 0));
+                b.vector(&format!("{p}.bn0"), OpKind::BatchNorm, (exp_c as u64) * (hw as u64) * (hw as u64), 1);
+                b.vector(&format!("{p}.relu6_0"), OpKind::Relu, (exp_c as u64) * (hw as u64) * (hw as u64), 1);
+            }
+            b.dwconv(
+                &format!("{p}.dw"),
+                ConvAttrs {
+                    in_c: exp_c,
+                    out_c: exp_c,
+                    in_h: hw,
+                    in_w: hw,
+                    kh: 3,
+                    kw: 3,
+                    stride,
+                    padding: 1,
+                    groups: exp_c,
+                },
+            );
+            b.vector(&format!("{p}.bn1"), OpKind::BatchNorm, (exp_c as u64) * (out_hw as u64) * (out_hw as u64), 1);
+            b.vector(&format!("{p}.relu6_1"), OpKind::Relu, (exp_c as u64) * (out_hw as u64) * (out_hw as u64), 1);
+            b.conv(&format!("{p}.project"), ca(exp_c, *out_c, out_hw, 1, 1, 0));
+            let main = b.vector(&format!("{p}.bn2"), OpKind::BatchNorm, (*out_c as u64) * (out_hw as u64) * (out_hw as u64), 1);
+
+            if stride == 1 && in_c == *out_c {
+                let elems = (*out_c as u64) * (out_hw as u64) * (out_hw as u64);
+                b.vector_with_deps(&format!("{p}.add"), OpKind::Add, elems, 1, vec![main, block_in]);
+            }
+            in_c = *out_c;
+            hw = out_hw;
+        }
+    }
+    b.conv("head", ca(in_c, 1280, hw, 1, 1, 0));
+    b.vector("head.bn", OpKind::BatchNorm, 1280 * (hw as u64) * (hw as u64), 1);
+    b.vector("head.relu6", OpKind::Relu, 1280 * (hw as u64) * (hw as u64), 1);
+    b.vector("gavgpool", OpKind::GlobalAvgPool, 1280, (hw as u64) * (hw as u64));
+    b.gemm("classifier", 1, 1280, 1000);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet50_block_structure() {
+        let m = resnet50();
+        // 16 bottleneck blocks → 16 residual adds
+        let adds = m.layers.iter().filter(|l| l.op == OpKind::Add).count();
+        assert_eq!(adds, 16);
+        // 1 stem + 16*3 bottleneck convs + 4 downsample convs = 53 convs
+        let convs = m.layers.iter().filter(|l| l.op == OpKind::Conv).count();
+        assert_eq!(convs, 53);
+    }
+
+    #[test]
+    fn vgg16_has_13_convs_3_fc() {
+        let m = vgg16();
+        let convs = m.layers.iter().filter(|l| l.op == OpKind::Conv).count();
+        assert_eq!(convs, 13);
+        let fcs = m
+            .layers
+            .iter()
+            .filter(|l| matches!(l.op, OpKind::Gemm | OpKind::MatVec) && l.conv.is_none())
+            .count();
+        assert_eq!(fcs, 3);
+    }
+
+    #[test]
+    fn mobilenet_has_17_dwconvs() {
+        let m = mobilenet_v2();
+        let dw = m.layers.iter().filter(|l| l.op == OpKind::DepthwiseConv).count();
+        assert_eq!(dw, 17); // 1+2+3+4+3+3+1
+    }
+
+    #[test]
+    fn alexnet_fc_params_dominate() {
+        let m = alexnet();
+        let fc_params: u64 = m
+            .layers
+            .iter()
+            .filter(|l| l.name.starts_with("fc"))
+            .map(|l| l.param_bytes)
+            .sum();
+        assert!(fc_params as f64 > 0.9 * m.total_param_bytes() as f64 * 0.95);
+    }
+}

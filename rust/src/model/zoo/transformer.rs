@@ -1,0 +1,196 @@
+//! Transformer zoo: BERT-base/large (discriminative, full-sequence encode)
+//! and GPT-2/medium (generative: prefill + token-by-token decode with KV
+//! cache — the decode tail is matrix-vector work, strongly memory-bound,
+//! exactly the paper's characterization of generative models).
+
+use crate::model::builder::GraphBuilder;
+use crate::model::{ModelFamily, ModelGraph};
+use crate::ops::OpKind;
+
+/// Encoder-stack configuration.
+struct EncCfg {
+    layers: u32,
+    hidden: u64,
+    ffn: u64,
+    seq: u64,
+}
+
+fn encoder_layer(b: &mut GraphBuilder, p: &str, c: &EncCfg) {
+    let (s, h, f) = (c.seq, c.hidden, c.ffn);
+    let block_in = b.last();
+
+    // Self-attention: QKV projections, scores, softmax, context, out-proj.
+    let q = b.gemm(&format!("{p}.attn.q"), s, h, h);
+    b.set_cursor(block_in);
+    let k = b.gemm(&format!("{p}.attn.k"), s, h, h);
+    b.set_cursor(block_in);
+    let v = b.gemm(&format!("{p}.attn.v"), s, h, h);
+    // scores: per-head [s,d]·[d,s] summed over heads == s·h·s MACs total
+    let qk = b.act_gemm(&format!("{p}.attn.qk"), s, h, s, vec![q, k]);
+    let sm = b.vector(&format!("{p}.attn.softmax"), OpKind::Softmax, s * s, 1);
+    let _ = qk;
+    let av = b.act_gemm(&format!("{p}.attn.av"), s, s, h, vec![sm, v]);
+    let proj = b.gemm(&format!("{p}.attn.proj"), s, h, h);
+    let _ = av;
+    let add1 = b.vector_with_deps(&format!("{p}.attn.add"), OpKind::Add, s * h, 1, vec![proj, block_in]);
+    let ln1 = b.vector(&format!("{p}.ln1"), OpKind::LayerNorm, s * h, h);
+    let _ = add1;
+
+    // Feed-forward network.
+    b.gemm(&format!("{p}.ffn.fc1"), s, h, f);
+    b.vector(&format!("{p}.ffn.gelu"), OpKind::Gelu, s * f, 1);
+    let fc2 = b.gemm(&format!("{p}.ffn.fc2"), s, f, h);
+    b.vector_with_deps(&format!("{p}.ffn.add"), OpKind::Add, s * h, 1, vec![fc2, ln1]);
+    b.vector(&format!("{p}.ln2"), OpKind::LayerNorm, s * h, h);
+}
+
+fn bert(name: &str, layers: u32, hidden: u64, seq: u64) -> ModelGraph {
+    let mut b = GraphBuilder::new(name, ModelFamily::Transformer);
+    let c = EncCfg { layers, hidden, ffn: 4 * hidden, seq };
+    b.data("embed", OpKind::Embed, seq * hidden, vec![]);
+    b.vector("embed.ln", OpKind::LayerNorm, seq * hidden, hidden);
+    for l in 0..c.layers {
+        encoder_layer(&mut b, &format!("enc{l}"), &c);
+    }
+    // Pooler + classifier head (discriminative).
+    b.gemm("pooler", 1, hidden, hidden);
+    b.vector("pooler.tanh", OpKind::Tanh, hidden, 1);
+    b.gemm("classifier", 1, hidden, 2);
+    b.finish()
+}
+
+/// BERT-base-cased: L=12, H=768, seq=128.
+pub fn bert_base() -> ModelGraph {
+    bert("bert-base", 12, 768, 128)
+}
+
+/// BERT-large-cased: L=24, H=1024, seq=128.
+pub fn bert_large() -> ModelGraph {
+    bert("bert-large", 24, 1024, 128)
+}
+
+/// One decode step for all layers: matrix-vector attention against the KV
+/// cache of length `ctx`, plus FFN matvecs — low reuse, memory-bound. All
+/// weights are shared with the prefill stack (`param_owner`), so Algorithm 2
+/// keeps one resident copy across every token of every request.
+fn decode_step(b: &mut GraphBuilder, p: &str, layers: u32, h: u64, f: u64, ctx: u64) {
+    for l in 0..layers {
+        let lp = format!("{p}.l{l}");
+        let own = |b: &GraphBuilder, suffix: &str| {
+            b.by_name(&format!("prefill.l{l}.{suffix}")).expect("prefill owner layer")
+        };
+        let block_in = b.last();
+        let q_owner = own(b, "attn.q");
+        let k_owner = own(b, "attn.k");
+        let v_owner = own(b, "attn.v");
+        b.gemm_shared(&format!("{lp}.q"), 1, h, h, q_owner);
+        b.set_cursor(block_in);
+        b.gemm_shared(&format!("{lp}.k"), 1, h, h, k_owner);
+        b.set_cursor(block_in);
+        let v = b.gemm_shared(&format!("{lp}.v"), 1, h, h, v_owner);
+        let qk = b.act_gemm(&format!("{lp}.qk"), 1, h, ctx, vec![v]);
+        let sm = b.vector(&format!("{lp}.softmax"), OpKind::Softmax, ctx, 1);
+        let _ = (qk, sm);
+        b.act_gemm(&format!("{lp}.av"), 1, ctx, h, vec![b.last()]);
+        let proj_owner = own(b, "attn.proj");
+        let proj = b.gemm_shared(&format!("{lp}.proj"), 1, h, h, proj_owner);
+        b.vector_with_deps(&format!("{lp}.add1"), OpKind::Add, h, 1, vec![proj, block_in]);
+        b.vector(&format!("{lp}.ln1"), OpKind::LayerNorm, h, h);
+        let fc1_owner = own(b, "ffn.fc1");
+        let fc2_owner = own(b, "ffn.fc2");
+        b.gemm_shared(&format!("{lp}.fc1"), 1, h, f, fc1_owner);
+        b.vector(&format!("{lp}.gelu"), OpKind::Gelu, f, 1);
+        b.gemm_shared(&format!("{lp}.fc2"), 1, f, h, fc2_owner);
+        b.vector(&format!("{lp}.ln2"), OpKind::LayerNorm, h, h);
+    }
+}
+
+fn gpt(name: &str, layers: u32, hidden: u64, prefill: u64, decode_tokens: u64, vocab: u64) -> ModelGraph {
+    let mut b = GraphBuilder::new(name, ModelFamily::Transformer);
+    let c = EncCfg { layers, hidden, ffn: 4 * hidden, seq: prefill };
+    // Prefill: full-sequence forward (same structure as an encoder stack,
+    // causal masking does not change the arithmetic footprint).
+    b.data("embed", OpKind::Embed, prefill * hidden, vec![]);
+    for l in 0..layers {
+        encoder_layer(&mut b, &format!("prefill.l{l}"), &c);
+    }
+    // Decode: token-by-token with growing KV cache + LM head each token
+    // (lm_head weights — tied with the embedding table — shared across
+    // tokens).
+    let mut lm_head_owner = None;
+    for t in 0..decode_tokens {
+        let ctx = prefill + t + 1;
+        decode_step(&mut b, &format!("dec{t}"), layers, hidden, 4 * hidden, ctx);
+        let head = match lm_head_owner {
+            None => b.gemm(&format!("dec{t}.lm_head"), 1, hidden, vocab),
+            Some(owner) => b.gemm_shared(&format!("dec{t}.lm_head"), 1, hidden, vocab, owner),
+        };
+        lm_head_owner.get_or_insert(head);
+    }
+    b.finish()
+}
+
+/// GPT-2 (124 M): L=12, H=768; one full seq-128 forward (the paper's
+/// PyTorch measurement regime) plus a 4-token generative decode tail with
+/// KV cache — the memory-bound matvec work that characterizes generation.
+pub fn gpt2() -> ModelGraph {
+    gpt("gpt2", 12, 768, 128, 4, 50257)
+}
+
+/// GPT-2-medium (355 M): L=24, H=1024; seq-128 forward + 2 decode tokens.
+pub fn gpt2_medium() -> ModelGraph {
+    gpt("gpt2-medium", 24, 1024, 128, 2, 50257)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::OpClass;
+
+    #[test]
+    fn bert_base_layer_count() {
+        let m = bert_base();
+        // 12 encoder layers, each 14 ops, + embed + embed.ln + 3 head ops
+        assert_eq!(m.layers.len(), 2 + 12 * 14 + 3);
+    }
+
+    #[test]
+    fn bert_softmax_per_layer() {
+        let m = bert_large();
+        let softmaxes = m.layers.iter().filter(|l| l.op == OpKind::Softmax).count();
+        assert_eq!(softmaxes, 24);
+    }
+
+    #[test]
+    fn gpt2_decode_is_memory_bound() {
+        let m = gpt2();
+        // decode-phase array layers are all matvecs: ops/param_bytes ≈ 2
+        let decode_arrays: Vec<_> = m
+            .layers
+            .iter()
+            .filter(|l| l.name.starts_with("dec") && l.class() == OpClass::Array && l.param_bytes > 0)
+            .collect();
+        assert!(!decode_arrays.is_empty());
+        for l in &decode_arrays {
+            let intensity = l.ops() as f64 / l.param_bytes as f64;
+            assert!(intensity < 4.0, "{}: arithmetic intensity {intensity}", l.name);
+        }
+    }
+
+    #[test]
+    fn bert_encoder_is_compute_denser_than_gpt_decode() {
+        let bert = bert_base();
+        let gpt = gpt2();
+        let intensity = |m: &ModelGraph| {
+            m.total_ops() as f64 / m.total_param_bytes().max(1) as f64
+        };
+        assert!(intensity(&bert) > intensity(&gpt));
+    }
+
+    #[test]
+    fn gpt2_has_lm_head_per_token() {
+        let m = gpt2();
+        let heads = m.layers.iter().filter(|l| l.name.ends_with("lm_head")).count();
+        assert_eq!(heads, 4);
+    }
+}

@@ -1,0 +1,267 @@
+//! Operator taxonomy (paper §II-D).
+//!
+//! A DNN model decomposes into **array** operations (convolution and
+//! matrix-matrix multiplication — MAC-dominated, systolic-array friendly),
+//! **vector** operations (pooling, normalization, non-linear activation,
+//! softmax, element-wise arithmetic — SIMD-lane friendly), and **data**
+//! operations (reshape / concat / transpose — pure data movement).
+//!
+//! Each operator carries a [`TaskShape`] from which the timing models derive
+//! cycle counts and the schedulers derive compute/memory estimates.
+
+pub mod shape;
+
+pub use shape::{ConvAttrs, GemmDims, TaskShape};
+
+/// Coarse operator class — determines which processor types can run the op.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpClass {
+    /// MAC-array operations: runnable on a systolic array, or (slower) on a
+    /// vector processor via its MAC lanes (paper §IV: "the vector processor
+    /// can also run matrix operations through programs").
+    Array,
+    /// SIMD operations: runnable only on a vector processor.
+    Vector,
+    /// Pure data movement: handled by DMA/shared-memory, no compute unit.
+    Data,
+}
+
+/// Concrete operator kinds, mirroring the UMF operation-type field.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    // -- array ops ---------------------------------------------------------
+    /// 3-D convolution (im2col-mapped onto the PE array).
+    Conv,
+    /// Depthwise convolution (array op with k = kh·kw, poor SA utilization).
+    DepthwiseConv,
+    /// General matrix-matrix multiply (fully-connected, attention projections).
+    Gemm,
+    /// Matrix-vector multiply (classifier layers, decode-phase attention) —
+    /// array op with M = 1, strongly memory-bound.
+    MatVec,
+    // -- vector ops --------------------------------------------------------
+    MaxPool,
+    AvgPool,
+    GlobalAvgPool,
+    Relu,
+    Gelu,
+    Tanh,
+    Sigmoid,
+    Softmax,
+    LayerNorm,
+    BatchNorm,
+    /// Element-wise add (residual connections).
+    Add,
+    /// Element-wise multiply (gating, scaling).
+    Mul,
+    // -- data ops ----------------------------------------------------------
+    Reshape,
+    Transpose,
+    Concat,
+    Embed,
+}
+
+impl OpKind {
+    /// The operator's class (array / vector / data).
+    pub fn class(self) -> OpClass {
+        use OpKind::*;
+        match self {
+            Conv | DepthwiseConv | Gemm | MatVec => OpClass::Array,
+            MaxPool | AvgPool | GlobalAvgPool | Relu | Gelu | Tanh | Sigmoid | Softmax
+            | LayerNorm | BatchNorm | Add | Mul => OpClass::Vector,
+            Reshape | Transpose | Concat | Embed => OpClass::Data,
+        }
+    }
+
+    /// The Table I energy row this op draws from when run on a vector
+    /// processor (MAC / Pooling / LUT / Reduction / Softmax / etc).
+    pub fn energy_row(self) -> EnergyRow {
+        use OpKind::*;
+        match self {
+            Conv | DepthwiseConv | Gemm | MatVec => EnergyRow::Mac,
+            MaxPool | AvgPool | GlobalAvgPool => EnergyRow::Pooling,
+            Relu | Gelu | Tanh | Sigmoid => EnergyRow::Lut,
+            LayerNorm | BatchNorm => EnergyRow::Reduction,
+            Softmax => EnergyRow::Softmax,
+            Add | Mul | Reshape | Transpose | Concat | Embed => EnergyRow::Etc,
+        }
+    }
+
+    /// Short mnemonic used in UMF packets and reports.
+    pub fn mnemonic(self) -> &'static str {
+        use OpKind::*;
+        match self {
+            Conv => "conv",
+            DepthwiseConv => "dwconv",
+            Gemm => "gemm",
+            MatVec => "matvec",
+            MaxPool => "maxpool",
+            AvgPool => "avgpool",
+            GlobalAvgPool => "gavgpool",
+            Relu => "relu",
+            Gelu => "gelu",
+            Tanh => "tanh",
+            Sigmoid => "sigmoid",
+            Softmax => "softmax",
+            LayerNorm => "layernorm",
+            BatchNorm => "batchnorm",
+            Add => "add",
+            Mul => "mul",
+            Reshape => "reshape",
+            Transpose => "transpose",
+            Concat => "concat",
+            Embed => "embed",
+        }
+    }
+
+    /// Inverse of [`OpKind::mnemonic`] (used by the UMF decoder).
+    pub fn from_mnemonic(s: &str) -> Option<OpKind> {
+        use OpKind::*;
+        Some(match s {
+            "conv" => Conv,
+            "dwconv" => DepthwiseConv,
+            "gemm" => Gemm,
+            "matvec" => MatVec,
+            "maxpool" => MaxPool,
+            "avgpool" => AvgPool,
+            "gavgpool" => GlobalAvgPool,
+            "relu" => Relu,
+            "gelu" => Gelu,
+            "tanh" => Tanh,
+            "sigmoid" => Sigmoid,
+            "softmax" => Softmax,
+            "layernorm" => LayerNorm,
+            "batchnorm" => BatchNorm,
+            "add" => Add,
+            "mul" => Mul,
+            "reshape" => Reshape,
+            "transpose" => Transpose,
+            "concat" => Concat,
+            "embed" => Embed,
+            _ => return None,
+        })
+    }
+
+    /// Stable numeric code used in the UMF binary encoding.
+    pub fn code(self) -> u8 {
+        use OpKind::*;
+        match self {
+            Conv => 0,
+            DepthwiseConv => 1,
+            Gemm => 2,
+            MatVec => 3,
+            MaxPool => 4,
+            AvgPool => 5,
+            GlobalAvgPool => 6,
+            Relu => 7,
+            Gelu => 8,
+            Tanh => 9,
+            Sigmoid => 10,
+            Softmax => 11,
+            LayerNorm => 12,
+            BatchNorm => 13,
+            Add => 14,
+            Mul => 15,
+            Reshape => 16,
+            Transpose => 17,
+            Concat => 18,
+            Embed => 19,
+        }
+    }
+
+    /// Inverse of [`OpKind::code`].
+    pub fn from_code(c: u8) -> Option<OpKind> {
+        use OpKind::*;
+        Some(match c {
+            0 => Conv,
+            1 => DepthwiseConv,
+            2 => Gemm,
+            3 => MatVec,
+            4 => MaxPool,
+            5 => AvgPool,
+            6 => GlobalAvgPool,
+            7 => Relu,
+            8 => Gelu,
+            9 => Tanh,
+            10 => Sigmoid,
+            11 => Softmax,
+            12 => LayerNorm,
+            13 => BatchNorm,
+            14 => Add,
+            15 => Mul,
+            16 => Reshape,
+            17 => Transpose,
+            18 => Concat,
+            19 => Embed,
+            _ => return None,
+        })
+    }
+
+    /// All operator kinds (for exhaustive tests).
+    pub fn all() -> &'static [OpKind] {
+        use OpKind::*;
+        &[
+            Conv, DepthwiseConv, Gemm, MatVec, MaxPool, AvgPool, GlobalAvgPool, Relu, Gelu,
+            Tanh, Sigmoid, Softmax, LayerNorm, BatchNorm, Add, Mul, Reshape, Transpose, Concat,
+            Embed,
+        ]
+    }
+}
+
+/// Energy accounting rows of Table I (vector-processor pJ/op categories).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EnergyRow {
+    Mac,
+    Pooling,
+    Lut,
+    Reduction,
+    Softmax,
+    Etc,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_partition_is_total() {
+        for &op in OpKind::all() {
+            // every op has a class and an energy row
+            let _ = op.class();
+            let _ = op.energy_row();
+        }
+    }
+
+    #[test]
+    fn code_roundtrip() {
+        for &op in OpKind::all() {
+            assert_eq!(OpKind::from_code(op.code()), Some(op));
+        }
+        assert_eq!(OpKind::from_code(200), None);
+    }
+
+    #[test]
+    fn mnemonic_roundtrip() {
+        for &op in OpKind::all() {
+            assert_eq!(OpKind::from_mnemonic(op.mnemonic()), Some(op));
+        }
+        assert_eq!(OpKind::from_mnemonic("nope"), None);
+    }
+
+    #[test]
+    fn array_ops_are_mac() {
+        for &op in OpKind::all() {
+            if op.class() == OpClass::Array {
+                assert_eq!(op.energy_row(), EnergyRow::Mac);
+            }
+        }
+    }
+
+    #[test]
+    fn codes_are_unique() {
+        let mut seen = std::collections::HashSet::new();
+        for &op in OpKind::all() {
+            assert!(seen.insert(op.code()), "duplicate code for {op:?}");
+        }
+    }
+}

@@ -1,0 +1,245 @@
+//! Task shapes: the arithmetic footprint of an operator instance.
+//!
+//! The timing models ([`crate::sim`]) and the schedulers' estimators
+//! ([`crate::sched::estimate`]) consume these shapes; the model zoo produces
+//! them from real layer dimensions.
+
+use super::OpKind;
+
+/// GEMM dimensions: `C[m×n] = A[m×k] · B[k×n]`.
+///
+/// Convolutions are im2col-mapped: `m = out_h·out_w`, `k = in_c·kh·kw`,
+/// `n = out_c` — exactly the paper's weight mapping ("each 3-D weight kernel
+/// is flattened and mapped to each column of the PE array").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct GemmDims {
+    pub m: u64,
+    pub k: u64,
+    pub n: u64,
+}
+
+impl GemmDims {
+    pub fn new(m: u64, k: u64, n: u64) -> GemmDims {
+        assert!(m > 0 && k > 0 && n > 0, "degenerate gemm {m}x{k}x{n}");
+        GemmDims { m, k, n }
+    }
+
+    /// Multiply-accumulate count.
+    pub fn macs(&self) -> u64 {
+        self.m * self.k * self.n
+    }
+
+    /// Operation count (1 MAC = 2 ops, the convention behind Table I GOPS).
+    pub fn ops(&self) -> u64 {
+        2 * self.macs()
+    }
+}
+
+/// Convolution attributes kept for UMF fidelity (the information-packet
+/// attribute payload) and for functional execution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ConvAttrs {
+    pub in_c: u32,
+    pub out_c: u32,
+    pub in_h: u32,
+    pub in_w: u32,
+    pub kh: u32,
+    pub kw: u32,
+    pub stride: u32,
+    pub padding: u32,
+    pub groups: u32,
+}
+
+impl ConvAttrs {
+    pub fn out_h(&self) -> u32 {
+        (self.in_h + 2 * self.padding - self.kh) / self.stride + 1
+    }
+
+    pub fn out_w(&self) -> u32 {
+        (self.in_w + 2 * self.padding - self.kw) / self.stride + 1
+    }
+
+    /// The im2col GEMM this convolution lowers to (groups=1 path).
+    pub fn as_gemm(&self) -> GemmDims {
+        assert_eq!(self.groups, 1, "grouped conv must use depthwise mapping");
+        GemmDims::new(
+            self.out_h() as u64 * self.out_w() as u64,
+            self.in_c as u64 * self.kh as u64 * self.kw as u64,
+            self.out_c as u64,
+        )
+    }
+
+    /// Depthwise mapping: per-channel kh·kw dot products. Expressed as a
+    /// GEMM with n = 1 so the systolic-array model sees its (realistically
+    /// poor) column utilization.
+    pub fn as_depthwise_gemm(&self) -> GemmDims {
+        GemmDims::new(
+            self.out_h() as u64 * self.out_w() as u64 * self.in_c as u64,
+            self.kh as u64 * self.kw as u64,
+            1,
+        )
+    }
+}
+
+/// The arithmetic footprint of one operator instance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TaskShape {
+    /// Array op: a (possibly im2col-mapped) GEMM.
+    Gemm(GemmDims),
+    /// Vector op over `elems` output elements; `ops_per_elem` captures window
+    /// size (pooling), reduction width factors, etc.
+    Vector { elems: u64, ops_per_elem: u64 },
+    /// Pure data movement of `bytes`.
+    Data { bytes: u64 },
+}
+
+impl TaskShape {
+    /// Total operation count (2·MACs for array ops; elems·ops_per_elem for
+    /// vector ops; 0 for data movement — it contributes time, not ops).
+    pub fn ops(&self) -> u64 {
+        match self {
+            TaskShape::Gemm(g) => g.ops(),
+            TaskShape::Vector { elems, ops_per_elem } => elems * ops_per_elem,
+            TaskShape::Data { .. } => 0,
+        }
+    }
+
+    /// Split this shape into `parts` roughly equal sub-shapes along the
+    /// outermost (M / element) dimension. Used by the HAS sub-layer
+    /// partitioner. Returns fewer parts if the shape is too small to split.
+    pub fn split(&self, parts: u64) -> Vec<TaskShape> {
+        assert!(parts > 0);
+        match *self {
+            TaskShape::Gemm(g) => split_dim(g.m, parts)
+                .into_iter()
+                .map(|m| TaskShape::Gemm(GemmDims::new(m, g.k, g.n)))
+                .collect(),
+            TaskShape::Vector { elems, ops_per_elem } => split_dim(elems, parts)
+                .into_iter()
+                .map(|e| TaskShape::Vector { elems: e, ops_per_elem })
+                .collect(),
+            TaskShape::Data { bytes } => split_dim(bytes, parts)
+                .into_iter()
+                .map(|b| TaskShape::Data { bytes: b })
+                .collect(),
+        }
+    }
+}
+
+/// Split `total` into at most `parts` positive chunks summing to `total`.
+fn split_dim(total: u64, parts: u64) -> Vec<u64> {
+    let parts = parts.min(total).max(1);
+    let base = total / parts;
+    let rem = total % parts;
+    (0..parts).map(|i| base + u64::from(i < rem)).collect()
+}
+
+/// Construct the vector-op shape for a given op kind over `elems` elements.
+///
+/// `ops_per_elem` reflects the datapath work per output element:
+/// pooling windows do `window` compares/adds; softmax does ~5 passes
+/// (max, sub+exp, sum, reciprocal, scale); layernorm ~4 (mean, var, norm,
+/// affine); LUT activations ~2 (select + interpolate MAC) — matching the
+/// vector-processor cycle model in `sim::vector`.
+pub fn vector_shape(op: OpKind, elems: u64, window: u64) -> TaskShape {
+    use OpKind::*;
+    let ops_per_elem = match op {
+        MaxPool | AvgPool => window,
+        GlobalAvgPool => window,
+        Relu => 1,
+        Gelu | Tanh | Sigmoid => 2, // LUT select + interpolation MAC
+        Softmax => 5,
+        LayerNorm => 4,
+        BatchNorm => 2, // scale + shift (folded mean/var at inference)
+        Add | Mul => 1,
+        _ => panic!("vector_shape on non-vector op {op:?}"),
+    };
+    TaskShape::Vector { elems, ops_per_elem }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_as_gemm_resnet_conv1() {
+        // ResNet-50 conv1: 7x7/2, 3->64, 224x224 -> 112x112
+        let c = ConvAttrs {
+            in_c: 3,
+            out_c: 64,
+            in_h: 224,
+            in_w: 224,
+            kh: 7,
+            kw: 7,
+            stride: 2,
+            padding: 3,
+            groups: 1,
+        };
+        assert_eq!(c.out_h(), 112);
+        assert_eq!(c.out_w(), 112);
+        let g = c.as_gemm();
+        assert_eq!(g.m, 112 * 112);
+        assert_eq!(g.k, 3 * 49);
+        assert_eq!(g.n, 64);
+        // 2*112*112*147*64 ≈ 236 MFLOPs — the textbook number for conv1.
+        assert_eq!(g.ops(), 2 * 112 * 112 * 147 * 64);
+    }
+
+    #[test]
+    fn depthwise_gemm_shape() {
+        let c = ConvAttrs {
+            in_c: 32,
+            out_c: 32,
+            in_h: 112,
+            in_w: 112,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            padding: 1,
+            groups: 32,
+        };
+        let g = c.as_depthwise_gemm();
+        assert_eq!(g.m, 112 * 112 * 32);
+        assert_eq!(g.k, 9);
+        assert_eq!(g.n, 1);
+    }
+
+    #[test]
+    fn split_preserves_totals() {
+        let g = TaskShape::Gemm(GemmDims::new(1000, 64, 64));
+        let parts = g.split(7);
+        assert_eq!(parts.len(), 7);
+        let total_m: u64 = parts
+            .iter()
+            .map(|p| match p {
+                TaskShape::Gemm(g) => g.m,
+                _ => unreachable!(),
+            })
+            .sum();
+        assert_eq!(total_m, 1000);
+        let total_ops: u64 = parts.iter().map(|p| p.ops()).sum();
+        assert_eq!(total_ops, g.ops());
+    }
+
+    #[test]
+    fn split_small_shape_clamps() {
+        let v = TaskShape::Vector { elems: 3, ops_per_elem: 1 };
+        let parts = v.split(10);
+        assert_eq!(parts.len(), 3);
+        assert!(parts.iter().all(|p| p.ops() == 1));
+    }
+
+    #[test]
+    fn vector_shape_ops() {
+        let s = vector_shape(OpKind::Softmax, 128 * 128, 1);
+        assert_eq!(s.ops(), 5 * 128 * 128);
+        let p = vector_shape(OpKind::MaxPool, 56 * 56 * 64, 9);
+        assert_eq!(p.ops(), 9 * 56 * 56 * 64);
+    }
+
+    #[test]
+    #[should_panic(expected = "degenerate")]
+    fn zero_gemm_rejected() {
+        GemmDims::new(0, 1, 1);
+    }
+}

@@ -1,0 +1,168 @@
+//! Performance analysis and visualization (the paper's "performance analyzer
+//! and timeline visualizer", §VI-A).
+
+pub mod timeline;
+
+use crate::coordinator::RunReport;
+use crate::ops::OpClass;
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+/// Per-op-class busy-time breakdown of a run (the HSV-side analogue of the
+/// GPU's Fig 1 breakdown).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ClassBreakdown {
+    pub array_cycles: u64,
+    pub vector_cycles: u64,
+}
+
+impl ClassBreakdown {
+    pub fn of(report: &RunReport) -> ClassBreakdown {
+        let mut b = ClassBreakdown::default();
+        for (_, rec) in &report.timeline {
+            let dur = rec.end - rec.start;
+            match rec.op.class() {
+                OpClass::Array => b.array_cycles += dur,
+                OpClass::Vector => b.vector_cycles += dur,
+                OpClass::Data => {}
+            }
+        }
+        b
+    }
+
+    pub fn vector_fraction(&self) -> f64 {
+        let t = self.array_cycles + self.vector_cycles;
+        if t == 0 {
+            0.0
+        } else {
+            self.vector_cycles as f64 / t as f64
+        }
+    }
+}
+
+/// Human-readable run summary.
+pub fn summarize(report: &RunReport) -> String {
+    let lat: Vec<f64> = report.latencies.iter().map(|&c| c as f64).collect();
+    let lat_summary = if lat.is_empty() { None } else { Some(Summary::of(&lat)) };
+    let mut s = String::new();
+    s.push_str(&format!(
+        "run: {} | sched={} | workload={}\n",
+        report.hw_label, report.scheduler, report.workload
+    ));
+    s.push_str(&format!(
+        "  makespan {:.3} ms | {:.2} TOPS | {:.2} W | {:.3} TOPS/W | util {:.1}%\n",
+        report.makespan as f64 / (report.clock_ghz * 1e6),
+        report.tops(),
+        report.avg_watts(),
+        report.tops_per_watt(),
+        report.utilization * 100.0
+    ));
+    if let Some(l) = lat_summary {
+        let to_ms = |c: f64| c / (report.clock_ghz * 1e6);
+        s.push_str(&format!(
+            "  latency ms: mean {:.3} p50 {:.3} p95 {:.3} p99 {:.3} (n={})\n",
+            to_ms(l.mean),
+            to_ms(l.p50),
+            to_ms(l.p95),
+            to_ms(l.p99),
+            l.n
+        ));
+    }
+    s.push_str(&format!(
+        "  dram {:.1} MB | idle {} kcycles | {} scheduling decisions\n",
+        report.dram_bytes as f64 / 1e6,
+        report.idle_cycles / 1000,
+        report.decisions
+    ));
+    s
+}
+
+/// Machine-readable figure series: a labeled list of (x, y) points.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub label: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(label: &str) -> Series {
+        Series { label: label.to_string(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.points.push((x, y));
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("label", self.label.as_str());
+        j.set(
+            "points",
+            Json::Arr(
+                self.points
+                    .iter()
+                    .map(|&(x, y)| Json::Arr(vec![Json::Num(x), Json::Num(y)]))
+                    .collect(),
+            ),
+        );
+        j
+    }
+}
+
+/// Write a figure (several series) as a JSON document under `out/`.
+pub fn save_figure(name: &str, series: &[Series]) -> std::io::Result<String> {
+    let mut j = Json::obj();
+    j.set("figure", name);
+    j.set("series", Json::Arr(series.iter().map(|s| s.to_json()).collect()));
+    let path = format!("out/{name}.json");
+    if let Some(parent) = std::path::Path::new(&path).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(&path, j.to_pretty())?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{HardwareConfig, SimConfig};
+    use crate::coordinator::Coordinator;
+    use crate::sched::SchedulerKind;
+    use crate::workload::WorkloadSpec;
+
+    #[test]
+    fn summary_contains_key_metrics() {
+        let wl = WorkloadSpec::ratio(0.5, 4, 1).generate();
+        let mut c = Coordinator::new(
+            HardwareConfig::small(),
+            SchedulerKind::Has,
+            SimConfig::default().with_timeline(),
+        );
+        let r = c.run(&wl);
+        let s = summarize(&r);
+        assert!(s.contains("TOPS"));
+        assert!(s.contains("latency"));
+    }
+
+    #[test]
+    fn class_breakdown_nonzero_for_mixed_workload() {
+        let wl = WorkloadSpec::ratio(0.5, 4, 1).generate();
+        let mut c = Coordinator::new(
+            HardwareConfig::small(),
+            SchedulerKind::RoundRobin,
+            SimConfig::default().with_timeline(),
+        );
+        let r = c.run(&wl);
+        let b = ClassBreakdown::of(&r);
+        assert!(b.array_cycles > 0 && b.vector_cycles > 0);
+        assert!(b.vector_fraction() > 0.0 && b.vector_fraction() < 1.0);
+    }
+
+    #[test]
+    fn series_json() {
+        let mut s = Series::new("has/rr");
+        s.push(0.0, 1.81);
+        let j = s.to_json();
+        assert_eq!(j.get("label").unwrap().as_str(), Some("has/rr"));
+    }
+}

@@ -1,0 +1,116 @@
+//! ASCII timeline visualizer — renders the scheduling result as a per-
+//! processor Gantt chart (paper Fig 6's timetables; orange-box idle time is
+//! shown as `.`).
+
+use crate::coordinator::RunReport;
+use crate::sim::ProcKind;
+use std::collections::BTreeMap;
+
+/// Render the run's timeline as text. `width` is the chart width in
+/// characters; each processor of each cluster becomes one row. Request ids
+/// are drawn with single characters (0–9, a–z cycling); idle time is `.`.
+pub fn render(report: &RunReport, width: usize) -> String {
+    if report.timeline.is_empty() {
+        return "(timeline empty — run with SimConfig::record_timeline)".to_string();
+    }
+    let t_end = report.makespan.max(1);
+    let scale = t_end as f64 / width as f64;
+
+    // Group records by (cluster, proc).
+    let mut rows: BTreeMap<(u32, usize), Vec<&(u32, crate::sched::state::TaskRecord)>> =
+        BTreeMap::new();
+    for rec in &report.timeline {
+        rows.entry((rec.0, rec.1.proc)).or_default().push(rec);
+    }
+
+    let mut out = String::new();
+    out.push_str(&format!(
+        "timeline: {} cycles ({:.3} ms), 1 char ≈ {:.0} cycles\n",
+        t_end,
+        t_end as f64 / (report.clock_ghz * 1e6),
+        scale
+    ));
+    for ((cluster, proc), recs) in rows {
+        let kind = recs[0].1.kind;
+        let label = format!("c{cluster}.{}{proc:<2}", short(kind));
+        let mut chars = vec!['.'; width];
+        for (_, r) in recs {
+            let a = ((r.start as f64 / scale) as usize).min(width - 1);
+            let b = ((r.end as f64 / scale) as usize).clamp(a + 1, width);
+            let ch = req_char(r.request_id);
+            for c in chars.iter_mut().take(b).skip(a) {
+                *c = ch;
+            }
+        }
+        out.push_str(&format!("{label} |{}|\n", chars.into_iter().collect::<String>()));
+    }
+    out.push_str("legend: chars = request ids, '.' = idle\n");
+    out
+}
+
+fn short(kind: ProcKind) -> &'static str {
+    match kind {
+        ProcKind::Systolic => "SA",
+        ProcKind::Vector => "VP",
+        ProcKind::Dma => "DM",
+    }
+}
+
+fn req_char(id: u64) -> char {
+    const CHARS: &[u8] = b"0123456789abcdefghijklmnopqrstuvwxyzABCDEFGHIJKLMNOPQRSTUVWXYZ";
+    CHARS[(id % CHARS.len() as u64) as usize] as char
+}
+
+/// Idle fraction per processor row (for quantitative Fig 6-style claims).
+pub fn idle_fractions(report: &RunReport) -> Vec<((u32, usize), f64)> {
+    let mut rows: BTreeMap<(u32, usize), u64> = BTreeMap::new();
+    for (cluster, r) in &report.timeline {
+        *rows.entry((*cluster, r.proc)).or_default() += r.end - r.start;
+    }
+    let span = report.makespan.max(1) as f64;
+    rows.into_iter().map(|(k, busy)| (k, 1.0 - busy as f64 / span)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{HardwareConfig, SimConfig};
+    use crate::coordinator::Coordinator;
+    use crate::sched::SchedulerKind;
+    use crate::workload::WorkloadSpec;
+
+    fn run() -> RunReport {
+        let wl = WorkloadSpec::ratio(0.5, 4, 1).generate();
+        Coordinator::new(
+            HardwareConfig::small(),
+            SchedulerKind::Has,
+            SimConfig::default().with_timeline(),
+        )
+        .run(&wl)
+    }
+
+    #[test]
+    fn renders_rows_for_busy_procs() {
+        let r = run();
+        let txt = render(&r, 80);
+        assert!(txt.contains("SA"));
+        assert!(txt.contains("VP"));
+        assert!(txt.lines().count() >= 3);
+    }
+
+    #[test]
+    fn empty_timeline_message() {
+        let wl = WorkloadSpec::ratio(0.5, 2, 1).generate();
+        let r = Coordinator::new(HardwareConfig::small(), SchedulerKind::Has, SimConfig::default())
+            .run(&wl);
+        assert!(render(&r, 80).contains("timeline empty"));
+    }
+
+    #[test]
+    fn idle_fractions_bounded() {
+        let r = run();
+        for (_, f) in idle_fractions(&r) {
+            assert!((0.0..=1.0).contains(&f));
+        }
+    }
+}

@@ -1,0 +1,167 @@
+//! PJRT functional-execution runtime.
+//!
+//! Loads the HLO-text artifacts produced once at build time by
+//! `python/compile/aot.py` (JAX + Pallas kernels, lowered with
+//! `interpret=True`), compiles them on the PJRT CPU client, and executes
+//! them from the rust request path. Python never runs at serving time.
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 emits HloModuleProto with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A compiled artifact registry backed by one PJRT client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    execs: HashMap<String, xla::PjRtLoadedExecutable>,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client rooted at an artifact directory.
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime { client, execs: HashMap::new(), dir: artifact_dir.as_ref().to_path_buf() })
+    }
+
+    /// Default artifact location (`artifacts/` at the repo root).
+    pub fn default_dir() -> PathBuf {
+        std::env::var("HSV_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile `<dir>/<name>.hlo.txt`. Idempotent.
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.execs.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        self.execs.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Load every `*.hlo.txt` in the artifact directory. Returns the names.
+    pub fn load_all(&mut self) -> Result<Vec<String>> {
+        let mut names = Vec::new();
+        let entries = std::fs::read_dir(&self.dir)
+            .with_context(|| format!("artifact dir {:?} (run `make artifacts`)", self.dir))?;
+        for e in entries {
+            let e = e?;
+            let fname = e.file_name().to_string_lossy().to_string();
+            if let Some(stem) = fname.strip_suffix(".hlo.txt") {
+                self.load(stem)?;
+                names.push(stem.to_string());
+            }
+        }
+        names.sort();
+        Ok(names)
+    }
+
+    /// Names of loaded artifacts.
+    pub fn loaded(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.execs.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    /// Execute artifact `name` on f32 tensors `(data, shape)`; returns the
+    /// flattened f32 outputs (artifacts are lowered with `return_tuple=True`).
+    pub fn execute_f32(&self, name: &str, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        let exe = self
+            .execs
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not loaded"))?;
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs {
+            let expect: usize = shape.iter().product();
+            if expect != data.len() {
+                return Err(anyhow!(
+                    "input shape {shape:?} wants {expect} elems, got {}",
+                    data.len()
+                ));
+            }
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .map_err(|e| anyhow!("reshape: {e:?}"))?;
+            literals.push(lit);
+        }
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let elems = tuple.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let mut out = Vec::with_capacity(elems.len());
+        for lit in elems {
+            out.push(lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_available() -> bool {
+        Runtime::default_dir().join("gemm_128.hlo.txt").exists()
+    }
+
+    #[test]
+    fn runtime_creates_cpu_client() {
+        let rt = Runtime::new("artifacts").unwrap();
+        assert_eq!(rt.platform(), "cpu");
+    }
+
+    #[test]
+    fn missing_artifact_is_an_error() {
+        let mut rt = Runtime::new("artifacts").unwrap();
+        assert!(rt.load("definitely_not_there").is_err());
+        assert!(rt.execute_f32("definitely_not_there", &[]).is_err());
+    }
+
+    #[test]
+    fn gemm_artifact_matches_cpu_reference() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
+        let mut rt = Runtime::new(Runtime::default_dir()).unwrap();
+        rt.load("gemm_128").unwrap();
+        let n = 128usize;
+        let a: Vec<f32> = (0..n * n).map(|i| ((i % 7) as f32) * 0.25 - 0.5).collect();
+        let b: Vec<f32> = (0..n * n).map(|i| ((i % 5) as f32) * 0.5 - 1.0).collect();
+        let out = rt.execute_f32("gemm_128", &[(&a, &[n, n]), (&b, &[n, n])]).unwrap();
+        assert_eq!(out.len(), 1);
+        let got = &out[0];
+        assert_eq!(got.len(), n * n);
+        // check a few entries against a naive matmul
+        for &(i, j) in &[(0usize, 0usize), (3, 17), (100, 99), (127, 127)] {
+            let mut acc = 0f32;
+            for k in 0..n {
+                acc += a[i * n + k] * b[k * n + j];
+            }
+            let g = got[i * n + j];
+            assert!((acc - g).abs() < 1e-2 * acc.abs().max(1.0), "({i},{j}): {acc} vs {g}");
+        }
+    }
+}

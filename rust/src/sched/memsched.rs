@@ -1,0 +1,297 @@
+//! External-memory-access scheduling — Algorithm 2.
+//!
+//! Computes when a candidate task's parameters and input activations will be
+//! ready in shared memory, scheduling HBM fetches and shared-memory flushes
+//! as needed:
+//!
+//! 1. If the parameters are already resident (fetched for an earlier task,
+//!    possibly of a *different request of the same model*), reuse them —
+//!    no external access.
+//! 2. Otherwise stall the fetch until enough shared-memory space exists;
+//!    space appears when previously-scheduled tasks finish and their tensors
+//!    have no remaining readers (then they are flushed, Alg. 2 lines 13–21).
+//! 3. Input activations produced by dependency layers are consumed from
+//!    shared memory; if they were spilled, they are re-fetched. First-layer
+//!    inputs arrive from the host through HBM.
+//! 4. Output space is reserved at commit time; outputs that cannot fit even
+//!    after flushing are written back to external memory (the consumers will
+//!    re-fetch).
+
+use super::state::{ClusterState, QueuedTask};
+use crate::sim::sharedmem::TensorKey;
+use crate::sim::Cycle;
+
+/// Readiness times produced by the memory scheduler.
+#[derive(Debug, Clone, Copy)]
+pub struct MemReady {
+    /// Cycle at which parameters are valid in on-chip memory.
+    pub params: Cycle,
+    /// Cycle at which input activations are valid.
+    pub inputs: Cycle,
+}
+
+impl MemReady {
+    pub fn ready(&self) -> Cycle {
+        self.params.max(self.inputs)
+    }
+}
+
+/// Estimate (without committing) when `task`'s data would be ready.
+/// Mirrors [`commit_fetch`] but uses the HBM model's non-mutating estimator.
+pub fn estimate_fetch(
+    st: &ClusterState,
+    task: &QueuedTask,
+    param_earliest: Cycle,
+    input_earliest: Cycle,
+) -> MemReady {
+    let reuse = st.sim.memory_access_scheduling;
+    // --- parameters ---
+    let pkey = TensorKey::Param { model_id: task.model_id, layer: task.param_layer, slice: task.param_slice };
+    let params = if task.param_bytes == 0 {
+        0
+    } else if reuse && st.sm.contains(&pkey) {
+        st.sm.ready_at(&pkey).unwrap()
+    } else {
+        let space_at = st
+            .sm
+            .space_available_at(task.param_bytes.min(st.sm.capacity()), param_earliest)
+            .unwrap_or(param_earliest);
+        st.hbm.estimate_transfer(task.param_bytes, param_earliest.max(space_at))
+    };
+    // --- input activations ---
+    let inputs = if task.deps.is_empty() {
+        // host input through HBM
+        st.hbm.estimate_transfer(task.input_bytes, input_earliest)
+    } else {
+        let mut t = input_earliest;
+        let mut refetch = 0u64;
+        for &d in &task.deps {
+            let akey = TensorKey::Act { request_id: task.request_id, layer: d };
+            if !st.sm.contains(&akey) {
+                refetch += task.input_bytes / task.deps.len().max(1) as u64;
+            }
+        }
+        if refetch > 0 {
+            t = st.hbm.estimate_transfer(refetch, input_earliest);
+        }
+        t
+    };
+    MemReady { params, inputs }
+}
+
+/// Commit the fetch schedule for `task` (mutates the HBM timeline and the
+/// shared-memory residency). `param_readers` is the number of unscheduled
+/// tasks (across requests) that will read this parameter tensor.
+pub fn commit_fetch(
+    st: &mut ClusterState,
+    task: &QueuedTask,
+    param_earliest: Cycle,
+    input_earliest: Cycle,
+) -> MemReady {
+    let reuse = st.sim.memory_access_scheduling;
+    let pkey = TensorKey::Param { model_id: task.model_id, layer: task.param_layer, slice: task.param_slice };
+    let params = if task.param_bytes == 0 {
+        0
+    } else if reuse && st.sm.contains(&pkey) {
+        st.sm.ready_at(&pkey).unwrap()
+    } else {
+        let bytes = task.param_bytes;
+        if bytes <= st.sm.capacity() {
+            // Stall until flushable space exists, then fetch.
+            let space_at = match st.sm.space_available_at(bytes, param_earliest) {
+                Some(t) => {
+                    let when = st.sm.evict_for(bytes, param_earliest);
+                    debug_assert!(when <= t.max(param_earliest).max(when));
+                    when
+                }
+                // Everything is pinned by unscheduled tasks: stream the
+                // weights without residency (avoids deadlock; rare).
+                None => {
+                    let end = st.hbm.transfer(bytes, param_earliest, true);
+                    return finish_inputs(st, task, input_earliest, end);
+                }
+            };
+            let end = st.hbm.transfer(bytes, param_earliest.max(space_at), true);
+            let readers = st.param_demand.get(&(task.model_id, task.param_layer)).copied().unwrap_or(1);
+            st.sm.insert(pkey, bytes, end, readers);
+            end
+        } else {
+            // Larger than all of shared memory: stream directly.
+            st.hbm.transfer(bytes, param_earliest, true)
+        }
+    };
+    finish_inputs(st, task, input_earliest, params)
+}
+
+fn finish_inputs(
+    st: &mut ClusterState,
+    task: &QueuedTask,
+    input_earliest: Cycle,
+    params: Cycle,
+) -> MemReady {
+    let inputs = if task.deps.is_empty() {
+        st.hbm.transfer(task.input_bytes, input_earliest, false)
+    } else {
+        let mut t = input_earliest;
+        let mut refetch = 0u64;
+        for &d in &task.deps {
+            let akey = TensorKey::Act { request_id: task.request_id, layer: d };
+            if !st.sm.contains(&akey) {
+                refetch += task.input_bytes / task.deps.len().max(1) as u64;
+            }
+        }
+        if refetch > 0 {
+            t = st.hbm.transfer(refetch, input_earliest, false);
+        }
+        t
+    };
+    MemReady { params, inputs }
+}
+
+/// After a task is booked (ends at `end`): release its parameter pin, mark
+/// dependency activations consumed, and admit its output activation.
+pub fn commit_task_effects(st: &mut ClusterState, task: &QueuedTask, end: Cycle) {
+    // Parameter readers bookkeeping.
+    if task.param_bytes > 0 {
+        let dkey = (task.model_id, task.param_layer);
+        if let Some(d) = st.param_demand.get_mut(&dkey) {
+            *d = d.saturating_sub(1);
+            if *d == 0 {
+                st.param_demand.remove(&dkey);
+            }
+        }
+        let pkey = TensorKey::Param { model_id: task.model_id, layer: task.param_layer, slice: task.param_slice };
+        st.sm.commit_reader(&pkey, end);
+    }
+    // Consume dependency activations.
+    for &d in &task.deps {
+        let akey = TensorKey::Act { request_id: task.request_id, layer: d };
+        st.sm.commit_reader(&akey, end);
+    }
+    // Admit output activation (readers = future consumer layers).
+    if task.output_bytes > 0 && task.consumers > 0 {
+        let okey = TensorKey::Act { request_id: task.request_id, layer: task.layer };
+        if task.output_bytes <= st.sm.capacity() {
+            match st.sm.space_available_at(task.output_bytes, end) {
+                Some(_) => {
+                    st.sm.evict_for(task.output_bytes, end);
+                    st.sm.insert(okey, task.output_bytes, end, task.consumers);
+                }
+                None => {
+                    // Spill: write back to HBM; consumers re-fetch.
+                    st.hbm.transfer(task.output_bytes, end, false);
+                }
+            }
+        } else {
+            st.hbm.transfer(task.output_bytes, end, false);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{HardwareConfig, SimConfig, MB};
+    use crate::model::zoo;
+    use crate::sched::state::ClusterState;
+
+    fn state() -> ClusterState {
+        let hw = HardwareConfig::small();
+        ClusterState::new(hw.cluster, hw.hbm, SimConfig::default())
+    }
+
+    fn first_param_task(st: &ClusterState) -> QueuedTask {
+        st.queues[0].tasks.iter().find(|t| t.param_bytes > 0).unwrap().clone()
+    }
+
+    #[test]
+    fn params_fetch_then_reuse() {
+        let mut st = state();
+        let g = zoo::by_name("alexnet").unwrap();
+        st.enqueue_request(&g, 1, 0, 0);
+        st.enqueue_request(&g, 2, 0, 0);
+        let t1 = first_param_task(&st);
+        let r1 = commit_fetch(&mut st, &t1, 0, 0);
+        assert!(r1.params > 0, "first fetch takes HBM time");
+        // Same model, second request: params already resident.
+        let mut t2 = t1.clone();
+        t2.request_id = 2;
+        let r2 = commit_fetch(&mut st, &t2, 0, 0);
+        assert_eq!(r2.params, r1.params, "reuse returns residency ready time");
+        // Reuse must not re-fetch parameters: only input activations (the
+        // host input of this dep-less first layer) hit HBM again.
+        let bytes_before = st.hbm.total_bytes;
+        commit_fetch(&mut st, &t2, 0, 0);
+        assert_eq!(
+            st.hbm.total_bytes - bytes_before,
+            t2.input_bytes,
+            "only host-input traffic on parameter reuse"
+        );
+    }
+
+    #[test]
+    fn reuse_disabled_refetches() {
+        let mut st = state();
+        st.sim.memory_access_scheduling = false;
+        let g = zoo::by_name("alexnet").unwrap();
+        st.enqueue_request(&g, 1, 0, 0);
+        let t = first_param_task(&st);
+        commit_fetch(&mut st, &t, 0, 0);
+        let before = st.hbm.total_bytes;
+        commit_fetch(&mut st, &t, 0, 0);
+        assert!(st.hbm.total_bytes > before, "ablated scheduler re-fetches");
+    }
+
+    #[test]
+    fn oversized_params_stream_without_residency() {
+        let mut st = state();
+        let g = zoo::by_name("vgg16").unwrap(); // fc1 ≈ 102 MB > 8 MB SM
+        st.enqueue_request(&g, 1, 0, 0);
+        let fc1 = st.queues[0]
+            .tasks
+            .iter()
+            .find(|t| t.param_bytes > 8 * MB)
+            .expect("vgg16 fc1 larger than small SM")
+            .clone();
+        let r = commit_fetch(&mut st, &fc1, 0, 0);
+        assert!(r.params > 0);
+        assert!(!st
+            .sm
+            .contains(&TensorKey::Param { model_id: fc1.model_id, layer: fc1.layer, slice: 0 }));
+    }
+
+    #[test]
+    fn estimate_matches_commit_for_simple_fetch() {
+        let mut st = state();
+        let g = zoo::by_name("alexnet").unwrap();
+        st.enqueue_request(&g, 1, 0, 0);
+        let t = first_param_task(&st);
+        let est = estimate_fetch(&st, &t, 0, 0);
+        let com = commit_fetch(&mut st, &t, 0, 0);
+        // The estimator approximates row overheads; allow small slack.
+        let rel = (est.params as f64 - com.params as f64).abs() / com.params as f64;
+        assert!(rel < 0.35, "estimate {} vs commit {}", est.params, com.params);
+    }
+
+    #[test]
+    fn output_admission_and_spill() {
+        let mut st = state();
+        let g = zoo::by_name("alexnet").unwrap();
+        st.enqueue_request(&g, 1, 0, 0);
+        let t = st.queues[0].tasks[0].clone();
+        commit_task_effects(&mut st, &t, 1000);
+        let okey = TensorKey::Act { request_id: 1, layer: t.layer };
+        assert!(st.sm.contains(&okey));
+    }
+
+    #[test]
+    fn host_input_fetch_for_first_layer() {
+        let mut st = state();
+        let g = zoo::by_name("alexnet").unwrap();
+        st.enqueue_request(&g, 1, 0, 0);
+        let t = st.queues[0].tasks[0].clone();
+        assert!(t.deps.is_empty());
+        let r = commit_fetch(&mut st, &t, 0, 0);
+        assert!(r.inputs > 0, "host input goes through HBM");
+    }
+}

@@ -1,0 +1,58 @@
+//! Runtime task scheduling (paper §V).
+//!
+//! The RISC-V scheduler inside each SV cluster runs one of two policies:
+//!
+//! - [`rr`] — the round-robin baseline: circular queue order, each op class
+//!   pinned to its dedicated processor type.
+//! - [`has`] — the heterogeneity-aware scheduling algorithm (Algorithm 1):
+//!   greedy minimum-idle-time selection over the candidate task group, with
+//!   external-memory-access scheduling (Algorithm 2, [`memsched`]) and
+//!   sub-layer partitioning ([`partition`]).
+//!
+//! Both operate on [`state::ClusterState`], the scheduling table plus the
+//! processor/memory timing models.
+
+pub mod estimate;
+pub mod state;
+pub mod memsched;
+pub mod partition;
+pub mod rr;
+pub mod has;
+
+use state::ClusterState;
+
+/// Which scheduling policy to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SchedulerKind {
+    /// Round-robin baseline (paper §V-A).
+    RoundRobin,
+    /// Heterogeneity-aware scheduling (paper §V-B).
+    Has,
+}
+
+impl SchedulerKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedulerKind::RoundRobin => "rr",
+            SchedulerKind::Has => "has",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<SchedulerKind> {
+        match s {
+            "rr" | "round-robin" => Some(SchedulerKind::RoundRobin),
+            "has" | "heterogeneity-aware" => Some(SchedulerKind::Has),
+            _ => None,
+        }
+    }
+
+    /// Run one scheduling decision: pick a candidate task and commit it to
+    /// the scheduling table. Returns `false` when no task could be scheduled
+    /// (all queues empty).
+    pub fn step(&self, st: &mut ClusterState) -> bool {
+        match self {
+            SchedulerKind::RoundRobin => rr::step(st),
+            SchedulerKind::Has => has::step(st),
+        }
+    }
+}

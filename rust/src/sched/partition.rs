@@ -1,0 +1,239 @@
+//! Sub-layer task partitioning (HAS step 1, paper §V-B).
+//!
+//! Two motivations, both from the paper:
+//!
+//! - **Parallelism**: a large layer is split along its outer (M / element)
+//!   dimension into sub-tasks that run on several processors concurrently
+//!   ("assigns the multiple sub-layer tasks to multiple processors in
+//!   parallel to minimize the execution time latency").
+//! - **Capacity**: a layer whose parameters would monopolize shared memory
+//!   is split along the output-channel (N) dimension into slices that are
+//!   fetched and flushed one after another (the Fig 6 example: "the memory
+//!   capacity requirement for each sub-task is reduced by dividing the third
+//!   task of request 3 into sub-tasks ... whenever a sub-task finishes,
+//!   parameters are flushed").
+
+use super::state::{ClusterState, QueuedTask};
+use crate::ops::{GemmDims, OpClass, TaskShape};
+use crate::sim::ProcKind;
+
+/// How the sub-tasks of one layer relate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SplitKind {
+    /// No split: one task.
+    None,
+    /// M-split: sub-tasks share parameters and may run in parallel.
+    Parallel,
+    /// N-split: sub-tasks own parameter slices, fetched/flushed in sequence.
+    Capacity,
+}
+
+/// A partitioning plan.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    pub kind: SplitKind,
+    pub subs: Vec<QueuedTask>,
+}
+
+/// Parameter budget: a single layer may hold at most this fraction of shared
+/// memory before capacity splitting kicks in.
+const PARAM_BUDGET_FRACTION: u64 = 4;
+
+/// Minimum M rows (or vector elements) per parallel sub-task — splitting
+/// below the array dimension only adds fill/drain overhead.
+fn min_rows(proc_dim: u32) -> u64 {
+    2 * proc_dim as u64
+}
+
+/// Decide how to partition `task` given the cluster state.
+pub fn plan(st: &ClusterState, task: &QueuedTask) -> Plan {
+    if !st.sim.sublayer_partitioning || task.class() == OpClass::Data {
+        return Plan { kind: SplitKind::None, subs: vec![task.clone()] };
+    }
+
+    let budget = st.sm.capacity() / PARAM_BUDGET_FRACTION;
+
+    // Capacity split: parameters larger than the budget (but the layer must
+    // be an N-splittable GEMM with enough columns).
+    if let TaskShape::Gemm(g) = task.shape {
+        if task.param_bytes > budget && g.n >= 2 {
+            let parts =
+                (task.param_bytes.div_ceil(budget.max(1))).min(st.sim.max_partitions as u64).min(g.n);
+            if parts >= 2 {
+                return Plan { kind: SplitKind::Capacity, subs: split_n(task, g, parts) };
+            }
+        }
+    }
+
+    // Parallel split: enough outer extent and more than one capable
+    // processor.
+    let (capable, dim) = capable_procs(st, task);
+    if capable >= 2 {
+        let max_by_rows = match task.shape {
+            TaskShape::Gemm(g) => g.m / min_rows(dim).max(1),
+            TaskShape::Vector { elems, .. } => elems / (4096u64).max(1),
+            TaskShape::Data { .. } => 0,
+        };
+        let parts = capable.min(st.sim.max_partitions as u64).min(max_by_rows);
+        if parts >= 2 {
+            return Plan { kind: SplitKind::Parallel, subs: split_m(task, parts) };
+        }
+    }
+
+    Plan { kind: SplitKind::None, subs: vec![task.clone()] }
+}
+
+/// Processors that could run this task (and the relevant array dim for the
+/// minimum-rows rule).
+fn capable_procs(st: &ClusterState, task: &QueuedTask) -> (u64, u32) {
+    match task.class() {
+        OpClass::Array => {
+            let sa = st.procs.iter().filter(|p| p.kind == ProcKind::Systolic).count() as u64;
+            let vp = if st.sim.vp_runs_array_ops {
+                st.procs.iter().filter(|p| p.kind == ProcKind::Vector).count() as u64
+            } else {
+                0
+            };
+            (sa + vp, st.cfg.systolic.dim)
+        }
+        OpClass::Vector => {
+            (st.procs.iter().filter(|p| p.kind == ProcKind::Vector).count() as u64, st.cfg.vector.lanes)
+        }
+        OpClass::Data => (0, 1),
+    }
+}
+
+/// Split along M (parallel): parameters shared, activations divided.
+fn split_m(task: &QueuedTask, parts: u64) -> Vec<QueuedTask> {
+    let shapes = task.shape.split(parts);
+    let n = shapes.len() as u64;
+    shapes
+        .into_iter()
+        .enumerate()
+        .map(|(i, shape)| {
+            let mut t = task.clone();
+            t.shape = shape;
+            t.input_bytes = per_part(task.input_bytes, n, i as u64);
+            t.output_bytes = per_part(task.output_bytes, n, i as u64);
+            // param_bytes stays whole: sub-tasks share the tensor (slice 0).
+            t
+        })
+        .collect()
+}
+
+/// Split along N (capacity): each slice owns params/outputs; inputs shared.
+fn split_n(task: &QueuedTask, g: GemmDims, parts: u64) -> Vec<QueuedTask> {
+    let cols: Vec<u64> = {
+        let base = g.n / parts;
+        let rem = g.n % parts;
+        (0..parts).map(|i| base + u64::from(i < rem)).collect()
+    };
+    cols.into_iter()
+        .enumerate()
+        .map(|(i, n)| {
+            let mut t = task.clone();
+            t.shape = TaskShape::Gemm(GemmDims::new(g.m, g.k, n));
+            t.param_bytes = per_part(task.param_bytes, parts, i as u64);
+            t.output_bytes = per_part(task.output_bytes, parts, i as u64);
+            t.param_slice = i as u32 + 1; // distinct residency keys
+            t
+        })
+        .collect()
+}
+
+fn per_part(total: u64, parts: u64, i: u64) -> u64 {
+    let base = total / parts;
+    let rem = total % parts;
+    base + u64::from(i < rem)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{HardwareConfig, SimConfig};
+    use crate::ops::OpKind;
+    use crate::sched::state::ClusterState;
+
+    fn state() -> ClusterState {
+        let hw = HardwareConfig::small(); // 2×SA16, 2×VP16, 8 MB
+        ClusterState::new(hw.cluster, hw.hbm, SimConfig::default())
+    }
+
+    fn gemm_task(m: u64, k: u64, n: u64, param_bytes: u64) -> QueuedTask {
+        QueuedTask {
+            request_id: 1,
+            model_id: 0,
+            layer: 0,
+            name_idx: 0,
+            op: OpKind::Gemm,
+            shape: TaskShape::Gemm(GemmDims::new(m, k, n)),
+            param_layer: 0,
+            param_bytes,
+            input_bytes: m * k,
+            output_bytes: m * n,
+            deps: vec![],
+            consumers: 1,
+            param_slice: 0,
+        }
+    }
+
+    #[test]
+    fn big_gemm_splits_in_parallel() {
+        let st = state();
+        let t = gemm_task(4096, 256, 256, 256 * 256);
+        let p = plan(&st, &t);
+        assert_eq!(p.kind, SplitKind::Parallel);
+        assert!(p.subs.len() >= 2);
+        // totals preserved
+        let ops: u64 = p.subs.iter().map(|s| s.ops()).sum();
+        assert_eq!(ops, t.ops());
+        let out: u64 = p.subs.iter().map(|s| s.output_bytes).sum();
+        assert_eq!(out, t.output_bytes);
+        // params shared
+        assert!(p.subs.iter().all(|s| s.param_bytes == t.param_bytes && s.param_slice == 0));
+    }
+
+    #[test]
+    fn huge_params_split_by_capacity() {
+        let st = state(); // 8 MB SM → budget 2 MB
+        let t = gemm_task(1, 4096, 4096, 16 * 1024 * 1024);
+        let p = plan(&st, &t);
+        assert_eq!(p.kind, SplitKind::Capacity);
+        let params: u64 = p.subs.iter().map(|s| s.param_bytes).sum();
+        assert_eq!(params, t.param_bytes);
+        // distinct slices
+        let mut slices: Vec<u32> = p.subs.iter().map(|s| s.param_slice).collect();
+        slices.dedup();
+        assert_eq!(slices.len(), p.subs.len());
+    }
+
+    #[test]
+    fn small_task_not_split() {
+        let st = state();
+        let t = gemm_task(16, 64, 64, 64 * 64);
+        let p = plan(&st, &t);
+        assert_eq!(p.kind, SplitKind::None);
+        assert_eq!(p.subs.len(), 1);
+    }
+
+    #[test]
+    fn ablation_flag_disables_splitting() {
+        let mut st = state();
+        st.sim.sublayer_partitioning = false;
+        let t = gemm_task(4096, 256, 256, 16 * 1024 * 1024);
+        let p = plan(&st, &t);
+        assert_eq!(p.kind, SplitKind::None);
+    }
+
+    #[test]
+    fn vector_task_splits_across_vps() {
+        let st = state();
+        let mut t = gemm_task(1, 1, 2, 0);
+        t.op = OpKind::Relu;
+        t.shape = TaskShape::Vector { elems: 1 << 20, ops_per_elem: 1 };
+        t.param_bytes = 0;
+        let p = plan(&st, &t);
+        assert_eq!(p.kind, SplitKind::Parallel);
+        assert_eq!(p.subs.len(), 2); // two VPs in the small config
+    }
+}

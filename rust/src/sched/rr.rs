@@ -1,0 +1,180 @@
+//! Round-robin baseline scheduler (paper §V-A).
+//!
+//! "The scheduler chooses a task out of a task queue in a circular order and
+//! assigns it to an available processor ... each type of task is only
+//! assigned to the dedicated processor" — array ops to systolic arrays,
+//! vector ops to vector processors, no sub-layer partitioning, no
+//! idle-time-aware selection.
+
+use super::estimate;
+use super::memsched;
+use super::state::{ClusterState, QueuedTask};
+use crate::ops::OpClass;
+use crate::sim::{Cycle, ProcKind};
+
+/// Schedule one task in round-robin order. Returns false if no queue has a
+/// schedulable task.
+pub fn step(st: &mut ClusterState) -> bool {
+    let nq = st.queues.len();
+    if nq == 0 {
+        return false;
+    }
+    let mut qi = None;
+    for i in 0..nq {
+        let j = (st.rr_cursor + i) % nq;
+        if !st.queues[j].tasks.is_empty() {
+            qi = Some(j);
+            break;
+        }
+    }
+    let Some(qi) = qi else {
+        return false;
+    };
+    st.decisions += 1;
+    let task = st.queues[qi].tasks.front().unwrap().clone();
+    let arrival = st.queues[qi].arrival;
+    let deps = st.deps_ready(&st.queues[qi], &task);
+
+    match task.class() {
+        OpClass::Data => {
+            schedule_data(st, &task, deps);
+        }
+        class => {
+            // Dedicated processor type only.
+            let kind = match class {
+                OpClass::Array => ProcKind::Systolic,
+                OpClass::Vector => ProcKind::Vector,
+                OpClass::Data => unreachable!(),
+            };
+            let proc = st
+                .earliest_free(kind)
+                .or_else(|| st.earliest_free(ProcKind::Vector))
+                .expect("cluster has no capable processor");
+            let comp = estimate::comp_cycles(&st.procs[proc], &task, true)
+                .expect("dedicated processor must run its class");
+            let mem = memsched::commit_fetch(&mut *st, &task, arrival, deps);
+            let start =
+                deps.max(mem.ready()).max(st.procs[proc].free_at).max(arrival);
+            let total = comp + st.sim.sched_overhead_cycles;
+            let end = st.book(proc, &task, 0, start, total, task.ops());
+            memsched::commit_task_effects(st, &task, end);
+            st.complete_layer(&task, end);
+        }
+    }
+
+    finish_head(st, qi);
+    true
+}
+
+/// Data-movement tasks go through the shared-memory DMA port, occupying no
+/// compute processor. Shared by both schedulers.
+pub fn schedule_data(st: &mut ClusterState, task: &QueuedTask, deps: Cycle) -> Cycle {
+    let bytes = match task.shape {
+        crate::ops::TaskShape::Data { bytes } => bytes,
+        _ => task.input_bytes,
+    };
+    let end = deps + estimate::dma_cycles(bytes);
+    st.meter.add_sram_bytes(2 * bytes);
+    memsched::commit_task_effects(st, task, end);
+    st.complete_layer(task, end);
+    st.makespan = st.makespan.max(end);
+    end
+}
+
+/// Pop the head of queue `qi`; finish the request if the queue is now empty;
+/// advance the round-robin cursor.
+pub fn finish_head(st: &mut ClusterState, qi: usize) {
+    st.queues[qi].tasks.pop_front();
+    if st.queues[qi].tasks.is_empty() {
+        st.finish_request(qi);
+    } else {
+        st.rr_cursor = (qi + 1) % st.queues.len();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{HardwareConfig, SimConfig};
+    use crate::model::zoo;
+
+    fn run_model(name: &str) -> ClusterState {
+        let hw = HardwareConfig::small();
+        let mut st = ClusterState::new(hw.cluster, hw.hbm, SimConfig::default().with_timeline());
+        let g = zoo::by_name(name).unwrap();
+        st.enqueue_request(&g, 1, 0, 0);
+        while step(&mut st) {}
+        st
+    }
+
+    #[test]
+    fn completes_alexnet() {
+        let st = run_model("alexnet");
+        assert_eq!(st.completed.len(), 1);
+        assert!(st.completed[0].end > 0);
+        assert!(st.queues.is_empty());
+        // every compute layer appears in the timeline
+        assert!(st.timeline.len() > 15);
+    }
+
+    #[test]
+    fn array_tasks_on_sa_vector_on_vp() {
+        let st = run_model("alexnet");
+        for rec in &st.timeline {
+            match rec.op.class() {
+                OpClass::Array => assert_eq!(rec.kind, ProcKind::Systolic, "{rec:?}"),
+                OpClass::Vector => assert_eq!(rec.kind, ProcKind::Vector, "{rec:?}"),
+                OpClass::Data => {}
+            }
+        }
+    }
+
+    #[test]
+    fn dependencies_respected() {
+        let st = run_model("resnet50");
+        // For every record, its start must be >= end of all deps of its layer.
+        let g = zoo::by_name("resnet50").unwrap();
+        for rec in &st.timeline {
+            for &d in &g.layers[rec.layer as usize].deps {
+                let dep_end = st.layer_end[&(1, d)];
+                assert!(
+                    rec.start >= dep_end,
+                    "layer {} starts {} before dep {} ends {}",
+                    rec.layer,
+                    rec.start,
+                    d,
+                    dep_end
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn two_requests_interleave() {
+        let hw = HardwareConfig::small();
+        let mut st = ClusterState::new(hw.cluster, hw.hbm, SimConfig::default().with_timeline());
+        let g = zoo::by_name("alexnet").unwrap();
+        st.enqueue_request(&g, 1, 0, 0);
+        st.enqueue_request(&g, 2, 0, 0);
+        while step(&mut st) {}
+        assert_eq!(st.completed.len(), 2);
+        // RR alternates queues: the first few timeline records should not all
+        // belong to one request.
+        let first: Vec<u64> = st.timeline.iter().take(6).map(|r| r.request_id).collect();
+        assert!(first.contains(&1) && first.contains(&2), "{first:?}");
+    }
+
+    #[test]
+    fn makespan_monotone_with_load() {
+        let hw = HardwareConfig::small();
+        let g = zoo::by_name("mobilenetv2").unwrap();
+        let mut one = ClusterState::new(hw.cluster, hw.hbm, SimConfig::default());
+        one.enqueue_request(&g, 1, 0, 0);
+        while step(&mut one) {}
+        let mut two = ClusterState::new(hw.cluster, hw.hbm, SimConfig::default());
+        two.enqueue_request(&g, 1, 0, 0);
+        two.enqueue_request(&g, 2, 0, 0);
+        while step(&mut two) {}
+        assert!(two.makespan > one.makespan);
+    }
+}

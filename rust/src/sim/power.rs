@@ -1,0 +1,143 @@
+//! Energy integration and TOPS / TOPS-per-watt accounting.
+//!
+//! Dynamic energy comes from the Table I pJ/op database ([`super::physical`]),
+//! SRAM access energy from the memory-compiler characterization, DRAM energy
+//! from the HBM model, and static power from post-layout leakage estimates.
+
+use crate::config::HardwareConfig;
+use crate::ops::EnergyRow;
+use crate::sim::{physical, Cycle};
+
+/// Accumulates energy by source over a simulation run.
+#[derive(Debug, Clone, Default)]
+pub struct EnergyMeter {
+    /// Dynamic energy, picojoules.
+    pub sa_pj: f64,
+    pub vp_pj: f64,
+    pub sram_pj: f64,
+    pub dram_pj: f64,
+    pub static_pj: f64,
+    /// Useful operations executed (for TOPS accounting).
+    pub total_ops: u64,
+}
+
+impl EnergyMeter {
+    pub fn new() -> EnergyMeter {
+        EnergyMeter::default()
+    }
+
+    /// Account `ops` executed on a `dim`×`dim` systolic array.
+    pub fn add_sa_ops(&mut self, dim: u32, ops: u64) {
+        self.sa_pj += ops as f64 * physical::sa_mac_energy_pj(dim);
+        self.total_ops += ops;
+    }
+
+    /// Account `ops` of the given Table I row on a vector processor.
+    pub fn add_vp_ops(&mut self, lanes: u32, row: EnergyRow, ops: u64) {
+        self.vp_pj += ops as f64 * physical::vp_energy_pj(lanes, row);
+        self.total_ops += ops;
+    }
+
+    /// Account shared-memory traffic.
+    pub fn add_sram_bytes(&mut self, bytes: u64) {
+        self.sram_pj += bytes as f64 * physical::shared_mem::PJ_PER_BYTE;
+    }
+
+    /// Account DRAM traffic energy (pre-multiplied by the HBM model).
+    pub fn add_dram_pj(&mut self, pj: f64) {
+        self.dram_pj += pj;
+    }
+
+    /// Add leakage/clock-tree energy for `elapsed` cycles of the whole
+    /// configuration.
+    pub fn add_static(&mut self, hw: &HardwareConfig, elapsed: Cycle) {
+        let c = &hw.cluster;
+        let mw_per_cluster = physical::sa_static_mw(c.systolic.dim) * c.systolic.count as f64
+            + physical::vp_static_mw(c.vector.lanes) * c.vector.count as f64
+            + (c.shared_mem_bytes as f64 / (1024.0 * 1024.0))
+                * physical::shared_mem::LEAKAGE_MW_PER_MB;
+        let mw = mw_per_cluster * hw.clusters as f64 + 50.0; // +balancer/NoC/PHY
+        let seconds = elapsed as f64 / (hw.clock_ghz * 1e9);
+        self.static_pj += mw * 1e-3 * seconds * 1e12;
+    }
+
+    /// Total energy in joules.
+    pub fn total_joules(&self) -> f64 {
+        (self.sa_pj + self.vp_pj + self.sram_pj + self.dram_pj + self.static_pj) * 1e-12
+    }
+
+    /// Average power in watts over `elapsed` cycles at `clock_ghz`.
+    pub fn avg_watts(&self, elapsed: Cycle, clock_ghz: f64) -> f64 {
+        if elapsed == 0 {
+            return 0.0;
+        }
+        let seconds = elapsed as f64 / (clock_ghz * 1e9);
+        self.total_joules() / seconds
+    }
+
+    /// Energy efficiency: tera-operations per joule == TOPS/W.
+    pub fn tops_per_watt(&self) -> f64 {
+        let j = self.total_joules();
+        if j <= 0.0 {
+            return 0.0;
+        }
+        self.total_ops as f64 / j / 1e12
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HardwareConfig;
+
+    #[test]
+    fn sa_energy_uses_table1() {
+        let mut m = EnergyMeter::new();
+        m.add_sa_ops(64, 1_000_000);
+        assert!((m.sa_pj - 380_000.0).abs() < 1e-6);
+        assert_eq!(m.total_ops, 1_000_000);
+    }
+
+    #[test]
+    fn vp_softmax_is_expensive() {
+        let mut a = EnergyMeter::new();
+        let mut b = EnergyMeter::new();
+        a.add_vp_ops(16, EnergyRow::Mac, 1000);
+        b.add_vp_ops(16, EnergyRow::Softmax, 1000);
+        assert!(b.vp_pj > 20.0 * a.vp_pj);
+    }
+
+    #[test]
+    fn tops_per_watt_sane_for_flagship_mix() {
+        // All-MAC workload on 64×64 arrays: 1/0.38pJ ≈ 2.6 TOPS/W dynamic
+        // ceiling before SRAM/DRAM/static.
+        let mut m = EnergyMeter::new();
+        m.add_sa_ops(64, 10u64.pow(12));
+        let eff = m.tops_per_watt();
+        assert!((eff - 1.0 / 0.38).abs() < 0.01, "eff={eff}");
+    }
+
+    #[test]
+    fn static_power_scales_with_time_and_size() {
+        let hw = HardwareConfig::gpu_comparable();
+        let mut a = EnergyMeter::new();
+        let mut b = EnergyMeter::new();
+        a.add_static(&hw, 1_000_000);
+        b.add_static(&hw, 2_000_000);
+        assert!((b.static_pj / a.static_pj - 2.0).abs() < 1e-9);
+        let small = HardwareConfig::small();
+        let mut c = EnergyMeter::new();
+        c.add_static(&small, 1_000_000);
+        assert!(c.static_pj < a.static_pj);
+    }
+
+    #[test]
+    fn avg_watts() {
+        let hw = HardwareConfig::gpu_comparable();
+        let mut m = EnergyMeter::new();
+        m.add_static(&hw, 800_000_000); // 1 s at 0.8 GHz
+        let w = m.avg_watts(800_000_000, hw.clock_ghz);
+        // static-only power of the flagship: a few watts
+        assert!(w > 1.0 && w < 50.0, "w={w}");
+    }
+}

@@ -1,0 +1,297 @@
+//! Banked shared-memory residency model (paper §IV-C "Shared Memory" and the
+//! dynamic analysis behind Algorithm 2).
+//!
+//! The scheduler tracks which tensors (parameters and activations) are
+//! resident, how many not-yet-scheduled tasks still need each one, and when
+//! each becomes flushable. Parameters are keyed per *model* so concurrent
+//! requests of the same DNN share one copy ("sharing the weights between
+//! tasks and between different requests using the same DNN model");
+//! activations are keyed per *request*.
+//!
+//! Flushable tensors are kept in a `BTreeMap` ordered by release time so the
+//! scheduler's space queries — the hottest operation in Algorithm 1's
+//! candidate loop (§Perf) — walk in order instead of sorting per call.
+
+use crate::sim::Cycle;
+use std::collections::{BTreeMap, HashMap};
+
+/// Identity of a tensor in shared memory.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum TensorKey {
+    /// Weights/bias of `layer` of model `model_id` — shared across requests.
+    /// `slice` > 0 identifies a parameter slice created by capacity-driven
+    /// sub-layer partitioning (slices are fetched and flushed one by one).
+    Param { model_id: u32, layer: u32, slice: u32 },
+    /// Output activations of `layer` of request `request_id`.
+    Act { request_id: u64, layer: u32 },
+}
+
+#[derive(Debug, Clone)]
+struct Resident {
+    bytes: u64,
+    /// Cycle at which the tensor's data is valid in shared memory.
+    ready_at: Cycle,
+    /// Not-yet-scheduled tasks that will read this tensor. While > 0 the
+    /// tensor must not be flushed.
+    pending_readers: u32,
+    /// Latest end time among *scheduled* readers — the tensor may be
+    /// flushed at this cycle once `pending_readers == 0`.
+    busy_until: Cycle,
+}
+
+/// Shared-memory state for one SV cluster.
+#[derive(Debug, Clone)]
+pub struct SharedMem {
+    capacity: u64,
+    used: u64,
+    resident: HashMap<TensorKey, Resident>,
+    /// Tensors with no pending readers, ordered by the cycle their space
+    /// becomes reclaimable → value is the tensor's byte size.
+    flushable: BTreeMap<(Cycle, TensorKey), u64>,
+    /// Flush counter (reporting).
+    pub flushes: u64,
+    /// Total bytes ever admitted (reporting).
+    pub admitted_bytes: u64,
+}
+
+impl SharedMem {
+    pub fn new(capacity: u64) -> SharedMem {
+        SharedMem {
+            capacity,
+            used: 0,
+            resident: HashMap::new(),
+            flushable: BTreeMap::new(),
+            flushes: 0,
+            admitted_bytes: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    pub fn used(&self) -> u64 {
+        self.used
+    }
+
+    pub fn free_bytes(&self) -> u64 {
+        self.capacity - self.used
+    }
+
+    /// If `key` is resident, the cycle at which its data is ready.
+    pub fn ready_at(&self, key: &TensorKey) -> Option<Cycle> {
+        self.resident.get(key).map(|r| r.ready_at)
+    }
+
+    pub fn contains(&self, key: &TensorKey) -> bool {
+        self.resident.contains_key(key)
+    }
+
+    /// Declare a future reader of `key` (called when a task enters a queue).
+    /// No-op if the tensor is not resident yet — `insert` takes an initial
+    /// reader count instead.
+    pub fn add_pending_reader(&mut self, key: &TensorKey) {
+        if let Some(r) = self.resident.get_mut(key) {
+            if r.pending_readers == 0 {
+                self.flushable.remove(&(r.busy_until, *key));
+            }
+            r.pending_readers += 1;
+        }
+    }
+
+    /// A reader task got scheduled: it no longer pins the tensor beyond its
+    /// own end time.
+    pub fn commit_reader(&mut self, key: &TensorKey, reader_end: Cycle) {
+        if let Some(r) = self.resident.get_mut(key) {
+            let was_flushable = r.pending_readers == 0;
+            let old_busy = r.busy_until;
+            r.pending_readers = r.pending_readers.saturating_sub(1);
+            r.busy_until = r.busy_until.max(reader_end);
+            if was_flushable {
+                // Repeated release: busy time may have advanced.
+                if old_busy != r.busy_until {
+                    self.flushable.remove(&(old_busy, *key));
+                    self.flushable.insert((r.busy_until, *key), r.bytes);
+                }
+            } else if r.pending_readers == 0 {
+                self.flushable.insert((r.busy_until, *key), r.bytes);
+            }
+        }
+    }
+
+    /// Admit a tensor. Panics if it does not fit — callers must make space
+    /// first via [`SharedMem::space_available_at`] + [`SharedMem::evict_for`].
+    pub fn insert(&mut self, key: TensorKey, bytes: u64, ready_at: Cycle, pending_readers: u32) {
+        if let Some(prev) = self.resident.remove(&key) {
+            // Re-insert of the same tensor (refetch after flush): drop old.
+            self.used -= prev.bytes;
+            if prev.pending_readers == 0 {
+                self.flushable.remove(&(prev.busy_until, key));
+            }
+        }
+        assert!(
+            bytes <= self.free_bytes(),
+            "shared-memory overflow: {} bytes into {} free",
+            bytes,
+            self.free_bytes()
+        );
+        self.used += bytes;
+        self.admitted_bytes += bytes;
+        self.resident.insert(
+            key,
+            Resident { bytes, ready_at, pending_readers, busy_until: ready_at },
+        );
+        if pending_readers == 0 {
+            self.flushable.insert((ready_at, key), bytes);
+        }
+    }
+
+    /// Earliest cycle at which `bytes` of space can exist, flushing tensors
+    /// with no pending readers in release order (Alg. 2 lines 13–21).
+    /// Returns `None` if even flushing everything flushable cannot make room.
+    pub fn space_available_at(&self, bytes: u64, _now: Cycle) -> Option<Cycle> {
+        if bytes <= self.free_bytes() {
+            return Some(0);
+        }
+        let mut free = self.free_bytes();
+        for (&(busy, _), &b) in self.flushable.iter() {
+            free += b;
+            if free >= bytes {
+                return Some(busy);
+            }
+        }
+        None
+    }
+
+    /// Flush flushable tensors (no pending readers) in release order until
+    /// `bytes` fit. Returns the cycle at which the space is actually free.
+    /// Panics if space cannot be made (callers check `space_available_at`).
+    pub fn evict_for(&mut self, bytes: u64, _now: Cycle) -> Cycle {
+        let mut when = 0;
+        while bytes > self.free_bytes() {
+            let Some((&(busy, key), &b)) = self.flushable.iter().next() else {
+                panic!(
+                    "evict_for could not free {} bytes (used {} / cap {})",
+                    bytes, self.used, self.capacity
+                );
+            };
+            self.flushable.remove(&(busy, key));
+            self.resident.remove(&key);
+            self.used -= b;
+            self.flushes += 1;
+            when = when.max(busy);
+        }
+        when
+    }
+
+    /// Number of resident tensors (reporting / tests).
+    pub fn resident_count(&self) -> usize {
+        self.resident.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pk(layer: u32) -> TensorKey {
+        TensorKey::Param { model_id: 1, layer, slice: 0 }
+    }
+
+    #[test]
+    fn basic_admission_and_reuse() {
+        let mut sm = SharedMem::new(1000);
+        sm.insert(pk(0), 400, 50, 2);
+        assert_eq!(sm.used(), 400);
+        assert_eq!(sm.ready_at(&pk(0)), Some(50));
+        assert!(!sm.contains(&pk(1)));
+    }
+
+    #[test]
+    fn pinned_tensors_are_not_flushable() {
+        let mut sm = SharedMem::new(1000);
+        sm.insert(pk(0), 600, 0, 1); // one pending reader
+        assert_eq!(sm.space_available_at(500, 0), None);
+        sm.commit_reader(&pk(0), 300);
+        // now flushable at cycle 300
+        assert_eq!(sm.space_available_at(500, 0), Some(300));
+    }
+
+    #[test]
+    fn evict_order_is_earliest_free_first() {
+        let mut sm = SharedMem::new(1000);
+        sm.insert(pk(0), 400, 0, 1);
+        sm.insert(pk(1), 400, 0, 1);
+        sm.commit_reader(&pk(0), 500);
+        sm.commit_reader(&pk(1), 100);
+        // need 300: flush layer-1 (free at 100) first
+        let when = sm.evict_for(300, 0);
+        assert_eq!(when, 100);
+        assert!(!sm.contains(&pk(1)));
+        assert!(sm.contains(&pk(0)));
+    }
+
+    #[test]
+    fn evicting_more_needs_later_time() {
+        let mut sm = SharedMem::new(1000);
+        sm.insert(pk(0), 500, 0, 1);
+        sm.insert(pk(1), 500, 0, 1);
+        sm.commit_reader(&pk(0), 500);
+        sm.commit_reader(&pk(1), 100);
+        let when = sm.evict_for(900, 0);
+        assert_eq!(when, 500); // both flushed; ready when the later frees
+        assert_eq!(sm.used(), 0);
+        assert_eq!(sm.flushes, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "overflow")]
+    fn overflow_panics() {
+        let mut sm = SharedMem::new(100);
+        sm.insert(pk(0), 200, 0, 0);
+    }
+
+    #[test]
+    fn reinsert_replaces() {
+        let mut sm = SharedMem::new(1000);
+        sm.insert(pk(0), 400, 0, 0);
+        sm.insert(pk(0), 300, 10, 1);
+        assert_eq!(sm.used(), 300);
+        assert_eq!(sm.ready_at(&pk(0)), Some(10));
+    }
+
+    #[test]
+    fn param_sharing_across_requests_uses_one_key() {
+        // Two requests of the same model touch the same Param key.
+        let mut sm = SharedMem::new(1000);
+        sm.insert(pk(3), 200, 0, 1);
+        sm.add_pending_reader(&pk(3)); // second request's task enqueued
+        sm.commit_reader(&pk(3), 50);
+        assert_eq!(sm.space_available_at(900, 0), None); // still one pending
+        sm.commit_reader(&pk(3), 80);
+        assert_eq!(sm.space_available_at(900, 0), Some(80));
+    }
+
+    #[test]
+    fn flushable_index_tracks_repins() {
+        // flushable → repinned → flushable again with a later busy time.
+        let mut sm = SharedMem::new(1000);
+        sm.insert(pk(0), 800, 0, 1);
+        sm.commit_reader(&pk(0), 100); // flushable @100
+        assert_eq!(sm.space_available_at(500, 0), Some(100));
+        sm.add_pending_reader(&pk(0)); // repin
+        assert_eq!(sm.space_available_at(500, 0), None);
+        sm.commit_reader(&pk(0), 250); // flushable @250
+        assert_eq!(sm.space_available_at(500, 0), Some(250));
+    }
+
+    #[test]
+    fn repeated_release_advances_busy_time() {
+        let mut sm = SharedMem::new(1000);
+        sm.insert(pk(0), 800, 0, 0); // flushable immediately
+        sm.commit_reader(&pk(0), 400); // extra release: busy → 400
+        assert_eq!(sm.space_available_at(500, 0), Some(400));
+        let when = sm.evict_for(900, 0);
+        assert_eq!(when, 400);
+    }
+}

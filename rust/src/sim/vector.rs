@@ -1,0 +1,150 @@
+//! Vector-processor cycle model (paper §IV-C).
+//!
+//! An in-order SIMD machine with `lanes` lanes, each with a MAC unit, ALU,
+//! a multi-cycle special-function unit (reciprocal, exponent) and a LUT
+//! function unit performing linear interpolation for non-linear activations.
+//! The microcode generator adds a small fixed per-task startup cost; the
+//! vector-lane controller then issues one lane-wide operation per cycle,
+//! with multi-cycle SFU ops pipelined.
+
+use crate::ops::{GemmDims, OpKind, TaskShape};
+use crate::sim::Cycle;
+
+/// Fixed per-task microcode-generation + DMA-setup cycles.
+pub const STARTUP_CYCLES: Cycle = 32;
+
+/// Exponent SFU latency (pipelined, so it costs extra issue slots only when
+/// the pipeline drains — modeled as an amortized per-vector-op multiplier).
+pub const EXP_CYCLES: Cycle = 4;
+/// Reciprocal SFU latency.
+pub const RECIP_CYCLES: Cycle = 6;
+/// Tree-reduction step cost across lanes.
+pub const REDUCE_STEP_CYCLES: Cycle = 1;
+
+/// Cycle count for a vector-class op over `elems` output elements.
+///
+/// `window` is the pooling window (elements reduced per output) where
+/// applicable; for LayerNorm it is the normalized-dimension width.
+pub fn vector_op_cycles(lanes: u32, op: OpKind, elems: u64, window: u64) -> Cycle {
+    let l = lanes as u64;
+    let vecs = elems.div_ceil(l); // lane-wide issue slots for one pass
+    let log_lanes = 64 - (l.max(1)).leading_zeros() as u64;
+    let body = match op {
+        // One compare/add per window element, vectorized across outputs.
+        OpKind::MaxPool | OpKind::AvgPool => vecs * window,
+        // Global pooling: sequential accumulate over the window then one
+        // cross-lane tree reduction per output vector.
+        OpKind::GlobalAvgPool => vecs * window + log_lanes * REDUCE_STEP_CYCLES,
+        OpKind::Relu => vecs,
+        // LUT path: select (1) + interpolation MAC (1).
+        OpKind::Gelu | OpKind::Tanh | OpKind::Sigmoid => 2 * vecs,
+        // softmax: max-reduce, sub+exp, sum-reduce, reciprocal, scale.
+        OpKind::Softmax => {
+            vecs // max pass
+                + vecs * EXP_CYCLES.max(1) // exp pass (SFU-bound)
+                + vecs // sum pass
+                + RECIP_CYCLES
+                + vecs // scale pass
+                + 2 * log_lanes * REDUCE_STEP_CYCLES
+        }
+        // layernorm: mean, variance, normalize, affine.
+        OpKind::LayerNorm => 4 * vecs + 2 * log_lanes * REDUCE_STEP_CYCLES,
+        // inference batchnorm: fused scale+shift.
+        OpKind::BatchNorm => vecs,
+        OpKind::Add | OpKind::Mul => vecs,
+        _ => panic!("vector_op_cycles on non-vector op {op:?}"),
+    };
+    STARTUP_CYCLES + body
+}
+
+/// Cycle count for running an *array-class* GEMM on the vector processor's
+/// MAC lanes (the paper's flexibility feature, §IV: "the vector processor
+/// can also run matrix-matrix multiplication or 3-D convolution").
+///
+/// Each cycle the `lanes` MACs compute one k-step for `lanes` output
+/// elements: total ≈ m·n·k / lanes, plus startup.
+pub fn gemm_cycles(lanes: u32, g: GemmDims) -> Cycle {
+    let l = lanes as u64;
+    let out_vecs = (g.m * g.n).div_ceil(l);
+    STARTUP_CYCLES + out_vecs * g.k
+}
+
+/// Dispatch on a task shape (vector ops and VP-executed array ops).
+pub fn task_cycles(lanes: u32, op: OpKind, shape: &TaskShape) -> Cycle {
+    match shape {
+        TaskShape::Gemm(g) => gemm_cycles(lanes, *g),
+        TaskShape::Vector { elems, ops_per_elem } => {
+            // ops_per_elem encodes the window/pass structure chosen at graph
+            // construction; recover the window for pooling-style ops.
+            let window = match op {
+                OpKind::MaxPool | OpKind::AvgPool | OpKind::GlobalAvgPool => *ops_per_elem,
+                OpKind::LayerNorm => *ops_per_elem, // not used by the formula
+                _ => 1,
+            };
+            vector_op_cycles(lanes, op, *elems, window)
+        }
+        TaskShape::Data { .. } => panic!("data ops are DMA-scheduled, not VP-executed"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relu_throughput_is_one_elem_per_lane_cycle() {
+        let c = vector_op_cycles(16, OpKind::Relu, 16_000, 1);
+        assert_eq!(c, STARTUP_CYCLES + 1000);
+    }
+
+    #[test]
+    fn softmax_is_much_more_expensive_than_relu() {
+        let relu = vector_op_cycles(64, OpKind::Relu, 65536, 1);
+        let sm = vector_op_cycles(64, OpKind::Softmax, 65536, 1);
+        assert!(sm > 6 * relu, "softmax {sm} vs relu {relu}");
+    }
+
+    #[test]
+    fn pooling_scales_with_window() {
+        let p3 = vector_op_cycles(32, OpKind::MaxPool, 10_000, 9);
+        let p2 = vector_op_cycles(32, OpKind::MaxPool, 10_000, 4);
+        assert!(p3 > 2 * p2 - STARTUP_CYCLES as u64);
+    }
+
+    #[test]
+    fn vp_gemm_matches_mac_budget() {
+        // m·n·k MACs on `lanes` MAC units.
+        let g = GemmDims::new(64, 128, 64);
+        let c = gemm_cycles(64, g);
+        assert_eq!(c, STARTUP_CYCLES + (64 * 64 / 64) * 128);
+    }
+
+    #[test]
+    fn vp_slower_than_sa_for_big_gemms() {
+        // The SA does dim² MACs/cycle vs the VP's `lanes` — for a 64×64 array
+        // vs 64 lanes the SA should win by ~dim²/lanes = 64×.
+        let g = GemmDims::new(4096, 512, 512);
+        let sa = crate::sim::systolic::gemm_cycles(64, g);
+        let vp = gemm_cycles(64, g);
+        let ratio = vp as f64 / sa as f64;
+        assert!(ratio > 40.0 && ratio < 80.0, "ratio={ratio}");
+    }
+
+    #[test]
+    fn vp_competitive_for_matvec() {
+        // For m=1, n=1 work the SA wastes its columns; the VP is closer.
+        let g = GemmDims::new(1, 4096, 1000);
+        let sa = crate::sim::systolic::gemm_cycles(16, g);
+        let vp = gemm_cycles(64, g);
+        // VP within ~2× of a 16×16 SA on matvec (vs ~64× on square GEMMs).
+        assert!((vp as f64) < 2.0 * sa as f64, "vp={vp} sa={sa}");
+    }
+
+    #[test]
+    fn more_lanes_help_linearly() {
+        let c16 = vector_op_cycles(16, OpKind::Gelu, 1 << 20, 1);
+        let c64 = vector_op_cycles(64, OpKind::Gelu, 1 << 20, 1);
+        let speedup = (c16 - STARTUP_CYCLES) as f64 / (c64 - STARTUP_CYCLES) as f64;
+        assert!((speedup - 4.0).abs() < 0.01);
+    }
+}

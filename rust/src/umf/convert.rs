@@ -1,0 +1,178 @@
+//! Model-graph ⇄ UMF conversion (the paper's ONNX→UMF converter, §III /
+//! Fig 2 — here sourced from the in-tree model IR; see DESIGN.md §3 for the
+//! substitution rationale).
+
+use super::packet::{
+    AttrFlags, DataPacket, DataType, Frame, FrameHeader, InfoPacket, PacketType, TensorRole,
+};
+use super::UmfError;
+use crate::model::{Layer, ModelFamily, ModelGraph};
+use crate::ops::{GemmDims, OpClass, TaskShape};
+
+/// Encode a model graph into a `model-load` UMF frame. Parameter tensors are
+/// descriptor-only data packets (logical size, elided payload) — the
+/// simulator schedules by footprint; the functional runtime loads real
+/// weights through the PJRT artifacts instead.
+pub fn encode_model(g: &ModelGraph, user_id: u32, transaction_id: u32, model_id: u32) -> Frame {
+    let info = g.layers.iter().map(info_packet).collect();
+    let data = g
+        .layers
+        .iter()
+        .filter(|l| l.param_bytes > 0 && l.param_owner == l.id)
+        .map(|l| DataPacket {
+            tensor_id: l.id,
+            dtype: DataType::Int8,
+            logical_bytes: l.param_bytes,
+            payload: Vec::new(),
+        })
+        .collect();
+    Frame {
+        header: FrameHeader { packet_type: PacketType::ModelLoad, user_id, transaction_id, model_id },
+        name: g.name.clone(),
+        info,
+        data,
+    }
+}
+
+fn info_packet(l: &Layer) -> InfoPacket {
+    let mut attrs = AttrFlags::default();
+    let mut gemm = None;
+    let mut vector = None;
+    let mut data_bytes = None;
+    match l.shape {
+        TaskShape::Gemm(g) => {
+            attrs.gemm = true;
+            gemm = Some((g.m, g.k, g.n));
+        }
+        TaskShape::Vector { elems, ops_per_elem } => {
+            attrs.vector = true;
+            vector = Some((elems, ops_per_elem));
+        }
+        TaskShape::Data { bytes } => {
+            attrs.data = true;
+            data_bytes = Some(bytes);
+        }
+    }
+    if l.conv.is_some() {
+        attrs.conv = true;
+    }
+    let mut inputs = vec![TensorRole::Activation];
+    if l.param_bytes > 0 {
+        inputs.push(TensorRole::Weight);
+    }
+    InfoPacket {
+        layer_id: l.id,
+        op: l.op,
+        inputs,
+        outputs: 1,
+        attrs,
+        gemm,
+        conv: l.conv,
+        vector,
+        data_bytes,
+        deps: l.deps.clone(),
+        param_owner: l.param_owner,
+        param_bytes: l.param_bytes,
+        input_bytes: l.input_bytes,
+        output_bytes: l.output_bytes,
+    }
+}
+
+/// Decode a `model-load` frame back into a model graph (the accelerator-side
+/// interpretation, processing-flow step 6).
+pub fn decode_model(frame: &Frame) -> Result<ModelGraph, UmfError> {
+    if frame.header.packet_type != PacketType::ModelLoad {
+        return Err(UmfError::Malformed("not a model-load frame".into()));
+    }
+    let mut layers = Vec::with_capacity(frame.info.len());
+    for (i, p) in frame.info.iter().enumerate() {
+        if p.layer_id as usize != i {
+            return Err(UmfError::Malformed(format!(
+                "layer ids must be dense: got {} at {}",
+                p.layer_id, i
+            )));
+        }
+        let shape = if let Some((m, k, n)) = p.gemm {
+            if m == 0 || k == 0 || n == 0 {
+                return Err(UmfError::Malformed("zero gemm dim".into()));
+            }
+            TaskShape::Gemm(GemmDims::new(m, k, n))
+        } else if let Some((e, o)) = p.vector {
+            TaskShape::Vector { elems: e, ops_per_elem: o }
+        } else if let Some(b) = p.data_bytes {
+            TaskShape::Data { bytes: b }
+        } else {
+            return Err(UmfError::Malformed(format!("layer {i} carries no shape attrs")));
+        };
+        for &d in &p.deps {
+            if d as usize >= i {
+                return Err(UmfError::Malformed(format!("layer {i} has forward dep {d}")));
+            }
+        }
+        layers.push(Layer {
+            id: p.layer_id,
+            name: format!("layer{}", p.layer_id),
+            op: p.op,
+            shape,
+            conv: p.conv,
+            deps: p.deps.clone(),
+            param_owner: p.param_owner,
+            param_bytes: p.param_bytes,
+            input_bytes: p.input_bytes,
+            output_bytes: p.output_bytes,
+        });
+    }
+    let g = ModelGraph {
+        name: frame.name.clone(),
+        // family is recoverable from the op mix; default to the vector-op
+        // heuristic the balancer uses for statistics.
+        family: if layers.iter().any(|l| l.op == crate::ops::OpKind::Softmax) {
+            ModelFamily::Transformer
+        } else {
+            ModelFamily::Cnn
+        },
+        layers,
+    };
+    g.validate().map_err(UmfError::Malformed)?;
+    let _ = OpClass::Array; // linked for docs
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    #[test]
+    fn family_heuristic() {
+        for g in zoo::all_models() {
+            let f = encode_model(&g, 1, 1, 1);
+            let back = decode_model(&f).unwrap();
+            assert_eq!(back.family, g.family, "{}", g.name);
+        }
+    }
+
+    #[test]
+    fn decode_rejects_request_frames() {
+        let f = Frame::request(1, 1, 1, vec![]);
+        assert!(decode_model(&f).is_err());
+    }
+
+    #[test]
+    fn data_packets_only_for_parameterized_layers() {
+        let g = zoo::bert_base();
+        let f = encode_model(&g, 1, 1, 1);
+        let with_params =
+            g.layers.iter().filter(|l| l.param_bytes > 0 && l.param_owner == l.id).count();
+        assert_eq!(f.data.len(), with_params);
+    }
+
+    #[test]
+    fn total_ops_preserved() {
+        let g = zoo::gpt2();
+        let f = encode_model(&g, 1, 1, 1);
+        let back = decode_model(&f).unwrap();
+        assert_eq!(back.total_ops(), g.total_ops());
+        assert_eq!(back.total_param_bytes(), g.total_param_bytes());
+    }
+}

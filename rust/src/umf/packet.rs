@@ -1,0 +1,494 @@
+//! UMF packet structures and their binary encoding (paper Fig 3).
+
+use super::bytes::{ByteReader, ByteWriter};
+use super::UmfError;
+use crate::ops::{ConvAttrs, OpKind};
+
+/// Frame magic: "UMF1".
+pub const UMF_MAGIC: u32 = 0x554D_4631;
+/// Format version.
+pub const UMF_VERSION: u16 = 1;
+
+/// Frame packet types (paper §III-B).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PacketType {
+    /// Load a DNN model: frame header + info packets + data packets.
+    ModelLoad,
+    /// Request inference / return results: frame header + data packets.
+    RequestReturn,
+    /// Acknowledgement / liveness check: frame header only.
+    CheckAck,
+}
+
+impl PacketType {
+    fn code(self) -> u8 {
+        match self {
+            PacketType::ModelLoad => 0,
+            PacketType::RequestReturn => 1,
+            PacketType::CheckAck => 2,
+        }
+    }
+
+    fn from_code(c: u8) -> Result<PacketType, UmfError> {
+        Ok(match c {
+            0 => PacketType::ModelLoad,
+            1 => PacketType::RequestReturn,
+            2 => PacketType::CheckAck,
+            _ => return Err(UmfError::Malformed(format!("bad packet type {c}"))),
+        })
+    }
+}
+
+/// Frame header: UMF properties + user / transaction / model description
+/// ("the accelerator can identify a specific request among many other
+/// in-flight requests").
+#[derive(Debug, Clone, PartialEq)]
+pub struct FrameHeader {
+    pub packet_type: PacketType,
+    pub user_id: u32,
+    pub transaction_id: u32,
+    pub model_id: u32,
+}
+
+/// Which attributes the info-packet payload carries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct AttrFlags {
+    pub conv: bool,
+    pub gemm: bool,
+    pub vector: bool,
+    pub data: bool,
+}
+
+impl AttrFlags {
+    fn bits(self) -> u8 {
+        (self.conv as u8) | (self.gemm as u8) << 1 | (self.vector as u8) << 2 | (self.data as u8) << 3
+    }
+
+    fn from_bits(b: u8) -> AttrFlags {
+        AttrFlags { conv: b & 1 != 0, gemm: b & 2 != 0, vector: b & 4 != 0, data: b & 8 != 0 }
+    }
+}
+
+/// Role of an input tensor (the info-header "input type" field).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TensorRole {
+    Weight,
+    Activation,
+}
+
+/// One information packet: complete description of a single operation layer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InfoPacket {
+    pub layer_id: u32,
+    pub op: OpKind,
+    /// Input tensor roles (count + per-tensor weight/activation flag).
+    pub inputs: Vec<TensorRole>,
+    /// Output tensor count.
+    pub outputs: u8,
+    pub attrs: AttrFlags,
+    // -- payload --
+    /// GEMM dims (m,k,n) when `attrs.gemm`.
+    pub gemm: Option<(u64, u64, u64)>,
+    /// Conv attributes when `attrs.conv`.
+    pub conv: Option<ConvAttrs>,
+    /// Vector extent (elems, ops_per_elem) when `attrs.vector`.
+    pub vector: Option<(u64, u64)>,
+    /// Data movement bytes when `attrs.data`.
+    pub data_bytes: Option<u64>,
+    /// Dependency layer ids.
+    pub deps: Vec<u32>,
+    /// Weight-owning layer (weight sharing across decode timesteps).
+    pub param_owner: u32,
+    /// Byte footprints (params, input acts, output acts).
+    pub param_bytes: u64,
+    pub input_bytes: u64,
+    pub output_bytes: u64,
+}
+
+impl InfoPacket {
+    fn encode_payload(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        if let Some((m, k, n)) = self.gemm {
+            w.u64(m).u64(k).u64(n);
+        }
+        if let Some(c) = self.conv {
+            w.u32(c.in_c).u32(c.out_c).u32(c.in_h).u32(c.in_w);
+            w.u32(c.kh).u32(c.kw).u32(c.stride).u32(c.padding).u32(c.groups);
+        }
+        if let Some((e, o)) = self.vector {
+            w.u64(e).u64(o);
+        }
+        if let Some(b) = self.data_bytes {
+            w.u64(b);
+        }
+        w.u16(self.deps.len() as u16);
+        for &d in &self.deps {
+            w.u32(d);
+        }
+        w.u32(self.param_owner);
+        w.u64(self.param_bytes).u64(self.input_bytes).u64(self.output_bytes);
+        w.into_vec()
+    }
+
+    pub fn encode(&self, w: &mut ByteWriter, next_payload_size: u32) {
+        let payload = self.encode_payload();
+        // Info-packet header: current/next payload size, layer id, op type,
+        // input/output type, attribute type (paper Fig 3).
+        w.u32(payload.len() as u32);
+        w.u32(next_payload_size);
+        w.u32(self.layer_id);
+        w.u8(self.op.code());
+        w.u8(self.inputs.len() as u8);
+        for role in &self.inputs {
+            w.u8(matches!(role, TensorRole::Weight) as u8);
+        }
+        w.u8(self.outputs);
+        w.u8(self.attrs.bits());
+        w.raw(&payload);
+    }
+
+    pub fn payload_size(&self) -> u32 {
+        self.encode_payload().len() as u32
+    }
+
+    pub fn decode(r: &mut ByteReader) -> Result<InfoPacket, UmfError> {
+        let payload_size = r.u32()?;
+        let _next = r.u32()?;
+        let layer_id = r.u32()?;
+        let op = OpKind::from_code(r.u8()?)
+            .ok_or_else(|| UmfError::Malformed("bad op code".into()))?;
+        let n_in = r.u8()? as usize;
+        if n_in > 8 {
+            return Err(UmfError::Malformed(format!("too many inputs: {n_in}")));
+        }
+        let mut inputs = Vec::with_capacity(n_in);
+        for _ in 0..n_in {
+            inputs.push(if r.u8()? != 0 { TensorRole::Weight } else { TensorRole::Activation });
+        }
+        let outputs = r.u8()?;
+        let attrs = AttrFlags::from_bits(r.u8()?);
+        let start = r.pos();
+        let gemm = if attrs.gemm { Some((r.u64()?, r.u64()?, r.u64()?)) } else { None };
+        let conv = if attrs.conv {
+            Some(ConvAttrs {
+                in_c: r.u32()?,
+                out_c: r.u32()?,
+                in_h: r.u32()?,
+                in_w: r.u32()?,
+                kh: r.u32()?,
+                kw: r.u32()?,
+                stride: r.u32()?,
+                padding: r.u32()?,
+                groups: r.u32()?,
+            })
+        } else {
+            None
+        };
+        let vector = if attrs.vector { Some((r.u64()?, r.u64()?)) } else { None };
+        let data_bytes = if attrs.data { Some(r.u64()?) } else { None };
+        let n_deps = r.u16()? as usize;
+        if n_deps > 4096 {
+            return Err(UmfError::Malformed(format!("too many deps: {n_deps}")));
+        }
+        let mut deps = Vec::with_capacity(n_deps);
+        for _ in 0..n_deps {
+            deps.push(r.u32()?);
+        }
+        let param_owner = r.u32()?;
+        let param_bytes = r.u64()?;
+        let input_bytes = r.u64()?;
+        let output_bytes = r.u64()?;
+        let consumed = (r.pos() - start) as u32;
+        if consumed != payload_size {
+            return Err(UmfError::Malformed(format!(
+                "info payload size mismatch: declared {payload_size}, consumed {consumed}"
+            )));
+        }
+        Ok(InfoPacket {
+            layer_id,
+            op,
+            inputs,
+            outputs,
+            attrs,
+            gemm,
+            conv,
+            vector,
+            data_bytes,
+            deps,
+            param_owner,
+            param_bytes,
+            input_bytes,
+            output_bytes,
+        })
+    }
+}
+
+/// Data type of a data-packet payload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DataType {
+    Int8,
+    Fp16,
+    Fp32,
+}
+
+impl DataType {
+    fn code(self) -> u8 {
+        match self {
+            DataType::Int8 => 0,
+            DataType::Fp16 => 1,
+            DataType::Fp32 => 2,
+        }
+    }
+
+    fn from_code(c: u8) -> Result<DataType, UmfError> {
+        Ok(match c {
+            0 => DataType::Int8,
+            1 => DataType::Fp16,
+            2 => DataType::Fp32,
+            _ => return Err(UmfError::Malformed(format!("bad dtype {c}"))),
+        })
+    }
+}
+
+/// One data packet: a parameter (or input/output) tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DataPacket {
+    /// Unique tensor id referenced by info payloads.
+    pub tensor_id: u32,
+    pub dtype: DataType,
+    /// Logical tensor size in bytes. The payload may be elided (sim traces
+    /// carry shapes, not weights) — then `payload` is empty while
+    /// `logical_bytes` still describes the real footprint.
+    pub logical_bytes: u64,
+    pub payload: Vec<u8>,
+}
+
+impl DataPacket {
+    pub fn encode(&self, w: &mut ByteWriter) {
+        w.u32(self.tensor_id);
+        w.u8(self.dtype.code());
+        w.u64(self.logical_bytes);
+        w.u32(self.payload.len() as u32);
+        w.raw(&self.payload);
+    }
+
+    pub fn decode(r: &mut ByteReader) -> Result<DataPacket, UmfError> {
+        let tensor_id = r.u32()?;
+        let dtype = DataType::from_code(r.u8()?)?;
+        let logical_bytes = r.u64()?;
+        let n = r.u32()? as usize;
+        let payload = r.raw(n)?.to_vec();
+        Ok(DataPacket { tensor_id, dtype, logical_bytes, payload })
+    }
+}
+
+/// A complete UMF frame.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Frame {
+    pub header: FrameHeader,
+    /// Model name (carried in the model-description region of the header).
+    pub name: String,
+    pub info: Vec<InfoPacket>,
+    pub data: Vec<DataPacket>,
+}
+
+impl Frame {
+    /// Model name accessor used by the load balancer.
+    pub fn model_name(&self) -> String {
+        self.name.clone()
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.u32(UMF_MAGIC);
+        w.u16(UMF_VERSION);
+        w.u8(self.header.packet_type.code());
+        w.u32(self.header.user_id);
+        w.u32(self.header.transaction_id);
+        w.u32(self.header.model_id);
+        w.str(&self.name);
+        match self.header.packet_type {
+            PacketType::ModelLoad => {
+                // information message header: packet count
+                w.u32(self.info.len() as u32);
+                for (i, p) in self.info.iter().enumerate() {
+                    let next = self.info.get(i + 1).map(|n| n.payload_size()).unwrap_or(0);
+                    p.encode(&mut w, next);
+                }
+                w.u32(self.data.len() as u32);
+                for d in &self.data {
+                    d.encode(&mut w);
+                }
+            }
+            PacketType::RequestReturn => {
+                w.u32(self.data.len() as u32);
+                for d in &self.data {
+                    d.encode(&mut w);
+                }
+            }
+            PacketType::CheckAck => {}
+        }
+        w.into_vec()
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<Frame, UmfError> {
+        let mut r = ByteReader::new(bytes);
+        let magic = r.u32()?;
+        if magic != UMF_MAGIC {
+            return Err(UmfError::BadMagic(magic));
+        }
+        let version = r.u16()?;
+        if version != UMF_VERSION {
+            return Err(UmfError::BadVersion(version));
+        }
+        let packet_type = PacketType::from_code(r.u8()?)?;
+        let user_id = r.u32()?;
+        let transaction_id = r.u32()?;
+        let model_id = r.u32()?;
+        let name = r.str()?;
+        let mut info = Vec::new();
+        let mut data = Vec::new();
+        match packet_type {
+            PacketType::ModelLoad => {
+                let n_info = r.u32()? as usize;
+                if n_info > 1_000_000 {
+                    return Err(UmfError::Malformed(format!("absurd info count {n_info}")));
+                }
+                for _ in 0..n_info {
+                    info.push(InfoPacket::decode(&mut r)?);
+                }
+                let n_data = r.u32()? as usize;
+                if n_data > 1_000_000 {
+                    return Err(UmfError::Malformed(format!("absurd data count {n_data}")));
+                }
+                for _ in 0..n_data {
+                    data.push(DataPacket::decode(&mut r)?);
+                }
+            }
+            PacketType::RequestReturn => {
+                let n_data = r.u32()? as usize;
+                if n_data > 1_000_000 {
+                    return Err(UmfError::Malformed(format!("absurd data count {n_data}")));
+                }
+                for _ in 0..n_data {
+                    data.push(DataPacket::decode(&mut r)?);
+                }
+            }
+            PacketType::CheckAck => {}
+        }
+        if r.remaining() != 0 {
+            return Err(UmfError::Malformed(format!("{} trailing bytes", r.remaining())));
+        }
+        Ok(Frame { header: FrameHeader { packet_type, user_id, transaction_id, model_id }, name, info, data })
+    }
+
+    /// Construct a `request-return` frame (inference request).
+    pub fn request(user_id: u32, transaction_id: u32, model_id: u32, inputs: Vec<DataPacket>) -> Frame {
+        Frame {
+            header: FrameHeader { packet_type: PacketType::RequestReturn, user_id, transaction_id, model_id },
+            name: String::new(),
+            info: Vec::new(),
+            data: inputs,
+        }
+    }
+
+    /// Construct a `check-ack` frame.
+    pub fn check_ack(user_id: u32, transaction_id: u32, model_id: u32) -> Frame {
+        Frame {
+            header: FrameHeader { packet_type: PacketType::CheckAck, user_id, transaction_id, model_id },
+            name: String::new(),
+            info: Vec::new(),
+            data: Vec::new(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_ack_roundtrip() {
+        let f = Frame::check_ack(3, 77, 12);
+        let bytes = f.encode();
+        let back = Frame::decode(&bytes).unwrap();
+        assert_eq!(f, back);
+        // check-ack is tiny: header only
+        assert!(bytes.len() < 32, "{}", bytes.len());
+    }
+
+    #[test]
+    fn request_return_roundtrip_with_payload() {
+        let input = DataPacket {
+            tensor_id: 0,
+            dtype: DataType::Fp32,
+            logical_bytes: 16,
+            payload: vec![1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15, 16],
+        };
+        let f = Frame::request(1, 2, 3, vec![input]);
+        let back = Frame::decode(&f.encode()).unwrap();
+        assert_eq!(back.data[0].payload.len(), 16);
+        assert_eq!(back.header.packet_type, PacketType::RequestReturn);
+    }
+
+    #[test]
+    fn info_packet_payload_size_consistency() {
+        let p = InfoPacket {
+            layer_id: 5,
+            op: OpKind::Conv,
+            inputs: vec![TensorRole::Activation, TensorRole::Weight],
+            outputs: 1,
+            attrs: AttrFlags { conv: true, gemm: true, ..Default::default() },
+            gemm: Some((10, 20, 30)),
+            conv: Some(ConvAttrs {
+                in_c: 3,
+                out_c: 64,
+                in_h: 224,
+                in_w: 224,
+                kh: 7,
+                kw: 7,
+                stride: 2,
+                padding: 3,
+                groups: 1,
+            }),
+            vector: None,
+            data_bytes: None,
+            deps: vec![1, 2],
+            param_owner: 5,
+            param_bytes: 100,
+            input_bytes: 200,
+            output_bytes: 300,
+        };
+        let mut w = ByteWriter::new();
+        p.encode(&mut w, 0);
+        let v = w.into_vec();
+        let mut r = ByteReader::new(&v);
+        let back = InfoPacket::decode(&mut r).unwrap();
+        assert_eq!(p, back);
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn wrong_magic_rejected() {
+        let f = Frame::check_ack(1, 1, 1);
+        let mut bytes = f.encode();
+        bytes[0] ^= 0xff;
+        assert!(matches!(Frame::decode(&bytes), Err(UmfError::BadMagic(_))));
+    }
+
+    #[test]
+    fn wrong_version_rejected() {
+        let f = Frame::check_ack(1, 1, 1);
+        let mut bytes = f.encode();
+        bytes[4] = 0xee;
+        assert!(matches!(Frame::decode(&bytes), Err(UmfError::BadVersion(_))));
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let f = Frame::check_ack(1, 1, 1);
+        let mut bytes = f.encode();
+        bytes.push(0);
+        assert!(Frame::decode(&bytes).is_err());
+    }
+}

@@ -1,0 +1,121 @@
+//! Tiny command-line argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional arguments,
+//! with typed accessors and defaults. Each binary declares its own usage text.
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    /// `--key value` / `--key=value` pairs; bare `--flag` maps to "true".
+    pub opts: BTreeMap<String, String>,
+    /// Positional arguments in order.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (testable).
+    pub fn from_iter<I: IntoIterator<Item = String>>(iter: I) -> Args {
+        let mut args = Args::default();
+        let mut it = iter.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    args.opts.insert(stripped.to_string(), v);
+                } else {
+                    args.opts.insert(stripped.to_string(), "true".to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Args {
+        Args::from_iter(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.opts.contains_key(key)
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.opts.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn str_opt(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> u64 {
+        self.opts
+            .get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.u64(key, default as u64) as usize
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.opts
+            .get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn bool(&self, key: &str, default: bool) -> bool {
+        self.opts
+            .get(key)
+            .map(|v| matches!(v.as_str(), "true" | "1" | "yes" | "on"))
+            .unwrap_or(default)
+    }
+
+    /// First positional argument (the subcommand), if any.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::from_iter(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn key_value_forms() {
+        let a = parse("simulate --ratio 0.5 --sched=has --verbose --requests 40 out.json");
+        assert_eq!(a.subcommand(), Some("simulate"));
+        assert_eq!(a.f64("ratio", 0.0), 0.5);
+        assert_eq!(a.str("sched", "rr"), "has");
+        assert!(a.bool("verbose", false));
+        assert_eq!(a.u64("requests", 0), 40);
+        assert_eq!(a.positional[1], "out.json");
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("");
+        assert_eq!(a.subcommand(), None);
+        assert_eq!(a.f64("x", 1.25), 1.25);
+        assert!(!a.bool("flag", false));
+        assert!(a.bool("flag", true));
+    }
+
+    #[test]
+    fn flag_before_flag() {
+        let a = parse("--a --b 3");
+        assert!(a.bool("a", false));
+        assert_eq!(a.u64("b", 0), 3);
+    }
+}

@@ -1,0 +1,104 @@
+//! Minimal CSV writer for bench/DSE output (readable by pandas/matplotlib
+//! downstream). Quotes fields only when needed; numbers are written as-is.
+
+use std::fmt::Write as _;
+
+/// Accumulates rows and renders an RFC-4180-ish CSV document.
+#[derive(Debug, Clone)]
+pub struct CsvWriter {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl CsvWriter {
+    pub fn new<S: Into<String>>(header: Vec<S>) -> CsvWriter {
+        CsvWriter { header: header.into_iter().map(Into::into).collect(), rows: Vec::new() }
+    }
+
+    /// Append a row; must match the header arity.
+    pub fn row<S: Into<String>>(&mut self, fields: Vec<S>) -> &mut Self {
+        let fields: Vec<String> = fields.into_iter().map(Into::into).collect();
+        assert_eq!(
+            fields.len(),
+            self.header.len(),
+            "csv row arity {} != header arity {}",
+            fields.len(),
+            self.header.len()
+        );
+        self.rows.push(fields);
+        self
+    }
+
+    /// Convenience for numeric rows.
+    pub fn row_f64(&mut self, fields: &[f64]) -> &mut Self {
+        self.row(fields.iter().map(|f| format!("{f}")).collect())
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        write_record(&mut out, &self.header);
+        for r in &self.rows {
+            write_record(&mut out, r);
+        }
+        out
+    }
+
+    /// Write to a file, creating parent directories.
+    pub fn save(&self, path: &str) -> std::io::Result<()> {
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.render())
+    }
+}
+
+fn write_record(out: &mut String, fields: &[String]) {
+    for (i, f) in fields.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        if f.contains(',') || f.contains('"') || f.contains('\n') {
+            let escaped = f.replace('"', "\"\"");
+            let _ = write!(out, "\"{escaped}\"");
+        } else {
+            out.push_str(f);
+        }
+    }
+    out.push('\n');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_with_header() {
+        let mut w = CsvWriter::new(vec!["a", "b"]);
+        w.row(vec!["1", "x,y"]);
+        w.row_f64(&[2.5, 3.0]);
+        assert_eq!(w.render(), "a,b\n1,\"x,y\"\n2.5,3\n");
+        assert_eq!(w.len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_mismatch_panics() {
+        let mut w = CsvWriter::new(vec!["a", "b"]);
+        w.row(vec!["1"]);
+    }
+
+    #[test]
+    fn quote_escaping() {
+        let mut w = CsvWriter::new(vec!["q"]);
+        w.row(vec!["say \"hi\""]);
+        assert_eq!(w.render(), "q\n\"say \"\"hi\"\"\"\n");
+    }
+}

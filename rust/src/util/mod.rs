@@ -1,0 +1,16 @@
+//! In-tree substrate utilities.
+//!
+//! This build environment has no crates.io access beyond the handful of
+//! crates vendored with the PJRT example, so the usual ecosystem pieces
+//! (rand, serde, clap, rayon, proptest, criterion) are reimplemented here at
+//! the scale this project needs.
+
+pub mod prng;
+pub mod json;
+pub mod cli;
+pub mod stats;
+pub mod threadpool;
+pub mod quick;
+pub mod csv;
+
+pub use prng::Rng;

@@ -1,0 +1,123 @@
+//! Lightweight property-based testing (proptest is unavailable offline).
+//!
+//! `check(seed, cases, |g| { ... })` runs a property over `cases` randomly
+//! generated inputs; on failure it re-raises with the failing case index and
+//! the generator seed so the case can be replayed deterministically.
+
+use super::prng::Rng;
+
+/// Generator handle passed to properties: a seeded RNG plus sizing helpers.
+pub struct Gen {
+    pub rng: Rng,
+    /// Grows with the case index, so later cases explore bigger inputs.
+    pub size: usize,
+}
+
+impl Gen {
+    /// Uniform usize in [lo, hi] inclusive.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range_i64(lo as i64, hi as i64) as usize
+    }
+
+    /// Uniform u64 in [lo, hi] inclusive.
+    pub fn u64_in(&mut self, lo: u64, hi: u64) -> u64 {
+        self.rng.range_i64(lo as i64, hi as i64) as u64
+    }
+
+    /// Uniform f64 in [lo, hi).
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    /// A vec of `n` items from `f` where n scales with case size.
+    pub fn vec<T>(&mut self, max_len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let n = self.usize_in(0, max_len.min(self.size.max(1)));
+        (0..n).map(|_| f(self)).collect()
+    }
+
+    /// Pick one of the given options.
+    pub fn pick<'a, T>(&mut self, options: &'a [T]) -> &'a T {
+        let i = self.rng.index(options.len());
+        &options[i]
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+}
+
+/// Run `prop` over `cases` generated inputs. Panics (with replay info) on the
+/// first failing case — either a `false` return or a panic inside the
+/// property.
+pub fn check<F: FnMut(&mut Gen) -> bool>(seed: u64, cases: usize, mut prop: F) {
+    let mut master = Rng::new(seed);
+    for case in 0..cases {
+        let case_seed = master.next_u64();
+        let mut g = Gen { rng: Rng::new(case_seed), size: 4 + case };
+        let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+        match ok {
+            Ok(true) => {}
+            Ok(false) => panic!(
+                "property failed at case {case}/{cases} (master seed {seed}, case seed {case_seed})"
+            ),
+            Err(e) => {
+                let msg = e
+                    .downcast_ref::<String>()
+                    .map(|s| s.as_str())
+                    .or_else(|| e.downcast_ref::<&str>().copied())
+                    .unwrap_or("<non-string panic>");
+                panic!(
+                    "property panicked at case {case}/{cases} (master seed {seed}, case seed {case_seed}): {msg}"
+                )
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check(1, 50, |g| {
+            count += 1;
+            let a = g.u64_in(0, 1000);
+            let b = g.u64_in(0, 1000);
+            a + b >= a
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports() {
+        check(2, 100, |g| g.u64_in(0, 10) < 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property panicked")]
+    fn panicking_property_reports() {
+        check(3, 10, |g| {
+            let v = g.vec(5, |g| g.u64_in(0, 5));
+            assert!(v.len() < 3, "boom");
+            true
+        });
+    }
+
+    #[test]
+    fn deterministic_replay() {
+        let mut first: Vec<u64> = Vec::new();
+        check(7, 10, |g| {
+            first.push(g.u64_in(0, 1_000_000));
+            true
+        });
+        let mut second: Vec<u64> = Vec::new();
+        check(7, 10, |g| {
+            second.push(g.u64_in(0, 1_000_000));
+            true
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,225 @@
+//! Datacenter workload generation (paper §VI-A, "Workload Generation").
+//!
+//! Workloads mix the four CNN and four transformer zoo models. The
+//! CNN : transformer ratio is swept systematically (0 %–100 % in 10 % steps);
+//! the specific model of each request is drawn uniformly within its family;
+//! arrivals follow a Poisson process ("we attach the time information on
+//! every request").
+
+use crate::model::zoo;
+use crate::model::{ModelFamily, ModelGraph};
+use crate::sim::Cycle;
+use crate::util::prng::Rng;
+
+/// Registry of model graphs; `model_id` is an index into it.
+#[derive(Debug, Clone)]
+pub struct ModelRegistry {
+    graphs: Vec<ModelGraph>,
+}
+
+impl ModelRegistry {
+    /// The standard eight-model registry.
+    pub fn standard() -> ModelRegistry {
+        ModelRegistry { graphs: zoo::all_models() }
+    }
+
+    /// A registry over caller-provided graphs (custom deployments, e2e
+    /// serving examples).
+    pub fn custom(graphs: Vec<ModelGraph>) -> ModelRegistry {
+        assert!(!graphs.is_empty());
+        ModelRegistry { graphs }
+    }
+
+    pub fn graph(&self, id: u32) -> &ModelGraph {
+        &self.graphs[id as usize]
+    }
+
+    pub fn id_of(&self, name: &str) -> Option<u32> {
+        self.graphs.iter().position(|g| g.name == name).map(|i| i as u32)
+    }
+
+    pub fn len(&self) -> usize {
+        self.graphs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.graphs.is_empty()
+    }
+
+    pub fn ids_by_family(&self, family: ModelFamily) -> Vec<u32> {
+        self.graphs
+            .iter()
+            .enumerate()
+            .filter(|(_, g)| g.family == family)
+            .map(|(i, _)| i as u32)
+            .collect()
+    }
+}
+
+/// One inference request in a workload trace.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkloadRequest {
+    pub id: u64,
+    pub model_id: u32,
+    pub arrival: Cycle,
+}
+
+/// A full workload: a request trace plus the registry it indexes.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub name: String,
+    pub cnn_ratio: f64,
+    pub seed: u64,
+    pub requests: Vec<WorkloadRequest>,
+    pub registry: ModelRegistry,
+}
+
+impl Workload {
+    /// Total useful operations across all requests.
+    pub fn total_ops(&self) -> u64 {
+        self.requests.iter().map(|r| self.registry.graph(r.model_id).total_ops()).sum()
+    }
+
+    /// Count of requests per model name (reporting).
+    pub fn mix_summary(&self) -> Vec<(String, usize)> {
+        let mut counts = vec![0usize; self.registry.len()];
+        for r in &self.requests {
+            counts[r.model_id as usize] += 1;
+        }
+        counts
+            .into_iter()
+            .enumerate()
+            .filter(|(_, c)| *c > 0)
+            .map(|(i, c)| (self.registry.graph(i as u32).name.clone(), c))
+            .collect()
+    }
+}
+
+/// Workload generation parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkloadSpec {
+    /// Fraction of requests drawn from the CNN family (0.0–1.0).
+    pub cnn_ratio: f64,
+    /// Number of requests in the trace.
+    pub requests: usize,
+    /// PRNG seed (each (ratio, seed) pair is one paper workload).
+    pub seed: u64,
+    /// Mean request inter-arrival time in cycles (Poisson process). The
+    /// default (40 k cycles = 50 µs at 800 MHz) keeps the accelerator
+    /// backlogged, matching the paper's throughput-measurement regime.
+    pub mean_interarrival: f64,
+}
+
+impl WorkloadSpec {
+    pub fn ratio(cnn_ratio: f64, requests: usize, seed: u64) -> WorkloadSpec {
+        WorkloadSpec { cnn_ratio, requests, seed, mean_interarrival: 40_000.0 }
+    }
+
+    /// Generate the request trace.
+    pub fn generate(&self) -> Workload {
+        let registry = ModelRegistry::standard();
+        let cnn = registry.ids_by_family(ModelFamily::Cnn);
+        let tr = registry.ids_by_family(ModelFamily::Transformer);
+        let mut rng = Rng::new(self.seed ^ 0x5f5f_5f5f);
+        let mut t = 0.0f64;
+        let mut requests = Vec::with_capacity(self.requests);
+        for id in 0..self.requests {
+            // Deterministic family mix: exact ratio rather than Bernoulli,
+            // matching the paper's systematic ratio construction.
+            let want_cnn = ((id as f64 + 0.5) * self.cnn_ratio).floor()
+                > ((id as f64 - 0.5) * self.cnn_ratio).floor();
+            let family = if self.cnn_ratio >= 1.0 {
+                &cnn
+            } else if self.cnn_ratio <= 0.0 {
+                &tr
+            } else if want_cnn {
+                &cnn
+            } else {
+                &tr
+            };
+            let model_id = *rng.choose(family);
+            t += rng.exp(1.0 / self.mean_interarrival);
+            requests.push(WorkloadRequest { id: id as u64, model_id, arrival: t as Cycle });
+        }
+        Workload {
+            name: format!("cnn{:.0}%_seed{}", self.cnn_ratio * 100.0, self.seed),
+            cnn_ratio: self.cnn_ratio,
+            seed: self.seed,
+            requests,
+            registry,
+        }
+    }
+}
+
+/// The paper's 11-point ratio sweep (0 %, 10 %, …, 100 %) for one seed.
+pub fn ratio_sweep(requests: usize, seed: u64) -> Vec<Workload> {
+    (0..=10).map(|i| WorkloadSpec::ratio(i as f64 / 10.0, requests, seed).generate()).collect()
+}
+
+/// The paper's 33-workload DSE suite: 3 seeds per ratio.
+pub fn suite_33(requests: usize) -> Vec<Workload> {
+    let mut out = Vec::with_capacity(33);
+    for i in 0..=10 {
+        for seed in [11u64, 22, 33] {
+            out.push(WorkloadSpec::ratio(i as f64 / 10.0, requests, seed).generate());
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ratio_is_exact() {
+        for ratio in [0.0, 0.3, 0.5, 0.8, 1.0] {
+            let wl = WorkloadSpec::ratio(ratio, 40, 1).generate();
+            let cnn = wl
+                .requests
+                .iter()
+                .filter(|r| wl.registry.graph(r.model_id).family == ModelFamily::Cnn)
+                .count();
+            let expect = (40.0 * ratio).round() as usize;
+            assert!(
+                (cnn as i64 - expect as i64).abs() <= 1,
+                "ratio {ratio}: got {cnn} cnn of 40"
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = WorkloadSpec::ratio(0.5, 20, 7).generate();
+        let b = WorkloadSpec::ratio(0.5, 20, 7).generate();
+        assert_eq!(a.requests, b.requests);
+        let c = WorkloadSpec::ratio(0.5, 20, 8).generate();
+        assert_ne!(a.requests, c.requests);
+    }
+
+    #[test]
+    fn arrivals_are_increasing() {
+        let wl = WorkloadSpec::ratio(0.5, 100, 3).generate();
+        for w in wl.requests.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival);
+        }
+    }
+
+    #[test]
+    fn suite_is_33() {
+        let suite = suite_33(4);
+        assert_eq!(suite.len(), 33);
+        // covers all 11 ratios
+        let ratios: std::collections::BTreeSet<i64> =
+            suite.iter().map(|w| (w.cnn_ratio * 10.0).round() as i64).collect();
+        assert_eq!(ratios.len(), 11);
+    }
+
+    #[test]
+    fn registry_lookup() {
+        let reg = ModelRegistry::standard();
+        assert_eq!(reg.len(), 8);
+        assert!(reg.id_of("gpt2").is_some());
+        assert!(reg.id_of("nope").is_none());
+    }
+}

@@ -1,0 +1,240 @@
+//! Integration tests across modules: UMF → balancer → cluster → scheduler →
+//! simulator → report, plus property tests on scheduler invariants and
+//! failure injection on the UMF decoder.
+
+use hsv::balancer::{DispatchPolicy, LoadBalancer};
+use hsv::cluster::SvCluster;
+use hsv::config::{ClusterConfig, HardwareConfig, SimConfig, SystolicConfig, VectorConfig, MB};
+use hsv::coordinator::Coordinator;
+use hsv::model::zoo;
+use hsv::ops::OpClass;
+use hsv::sched::SchedulerKind;
+use hsv::umf;
+use hsv::util::quick;
+use hsv::workload::{ModelRegistry, WorkloadRequest, WorkloadSpec};
+
+/// Full pipeline: UMF-encoded zoo model served through balancer + cluster.
+#[test]
+fn umf_to_schedule_pipeline() {
+    let registry = ModelRegistry::standard();
+    let mut lb = LoadBalancer::new(DispatchPolicy::LeastLoaded);
+    // Load two models via UMF.
+    for (umf_id, name) in [(10u32, "alexnet"), (11, "bert-base")] {
+        let g = zoo::by_name(name).unwrap();
+        let frame = umf::encode_model(&g, 1, 1, umf_id);
+        lb.ingest_umf(&frame.encode(), &registry, 0).unwrap();
+    }
+    // Submit requests via UMF request frames.
+    for i in 0..6u32 {
+        let model = if i % 2 == 0 { 10 } else { 11 };
+        let req = umf::Frame::request(1, i, model, vec![]);
+        lb.ingest_umf(&req.encode(), &registry, (i as u64) * 1000).unwrap();
+    }
+    let hw = HardwareConfig::small();
+    let mut clusters: Vec<SvCluster> = (0..2)
+        .map(|i| SvCluster::new(i, &hw, SchedulerKind::Has, SimConfig::default()))
+        .collect();
+    lb.dispatch(&mut clusters, &registry);
+    let done: usize = clusters
+        .iter_mut()
+        .map(|c| {
+            c.run(&registry);
+            c.completed()
+        })
+        .sum();
+    assert_eq!(done, 6);
+}
+
+/// Scheduler invariants hold over randomized workloads and configs.
+#[test]
+fn property_schedule_invariants() {
+    quick::check(0xFEED, 25, |g| {
+        let sa_dim = *g.pick(&[16u32, 32, 64]);
+        let sa_count = g.usize_in(1, 4) as u32;
+        let vp_lanes = *g.pick(&[16u32, 32, 64]);
+        let vp_count = g.usize_in(1, 4) as u32;
+        let sm = g.u64_in(4, 64) * MB;
+        let hw = HardwareConfig {
+            clusters: 1,
+            cluster: ClusterConfig {
+                systolic: SystolicConfig { dim: sa_dim, count: sa_count },
+                vector: VectorConfig { lanes: vp_lanes, count: vp_count },
+                shared_mem_bytes: sm,
+            },
+            clock_ghz: 0.8,
+            hbm: Default::default(),
+        };
+        let ratio = g.f64_in(0.0, 1.0);
+        let n = g.usize_in(2, 8);
+        let seed = g.rng.next_u64();
+        let sched = if g.bool() { SchedulerKind::Has } else { SchedulerKind::RoundRobin };
+        let wl = hsv::workload::WorkloadSpec {
+            cnn_ratio: ratio,
+            requests: n,
+            seed,
+            mean_interarrival: g.f64_in(1000.0, 100_000.0),
+        }
+        .generate();
+        let mut sim = SimConfig::default().with_timeline();
+        sim.vp_runs_array_ops = g.bool();
+        sim.sublayer_partitioning = g.bool();
+        sim.memory_access_scheduling = g.bool();
+        let rep = Coordinator::new(hw, sched, sim).run(&wl);
+
+        // Invariant 1: every request completes, after its arrival.
+        assert_eq!(rep.completed.len(), n);
+        for c in &rep.completed {
+            assert!(c.end >= c.arrival, "request {} ends before arrival", c.request_id);
+        }
+        // Invariant 2: all useful ops are accounted exactly once.
+        assert_eq!(rep.total_ops, wl.total_ops());
+        // Invariant 3: timeline records never overlap on a processor.
+        let mut by_proc: std::collections::BTreeMap<usize, Vec<(u64, u64)>> = Default::default();
+        for (cl, t) in &rep.timeline {
+            assert_eq!(*cl, 0);
+            by_proc.entry(t.proc).or_default().push((t.start, t.end));
+        }
+        for (_, mut iv) in by_proc {
+            iv.sort();
+            for w in iv.windows(2) {
+                assert!(w[0].1 <= w[1].0, "overlap on processor: {w:?}");
+            }
+        }
+        // Invariant 4: dependencies respected (start >= dep layer end).
+        for (_, t) in &rep.timeline {
+            let graph = wl.registry.graph(
+                wl.requests.iter().find(|r| r.id == t.request_id).unwrap().model_id,
+            );
+            for &d in &graph.layers[t.layer as usize].deps {
+                // dep end is recorded per (request, layer) in layer_end which
+                // isn't exposed; rely on per-layer records: every record of a
+                // dep layer must end before this start.
+                for (_, other) in &rep.timeline {
+                    if other.request_id == t.request_id && other.layer == d {
+                        assert!(
+                            other.end <= t.start,
+                            "layer {} starts at {} before dep {} ends at {}",
+                            t.layer,
+                            t.start,
+                            d,
+                            other.end
+                        );
+                    }
+                }
+            }
+        }
+        // Invariant 5: energy strictly positive, utilization within [0,1].
+        assert!(rep.energy_j > 0.0);
+        assert!(rep.utilization > 0.0 && rep.utilization <= 1.0);
+        true
+    });
+}
+
+/// RR never assigns array work to vector processors; HAS may.
+#[test]
+fn rr_keeps_dedicated_assignment_property() {
+    quick::check(0xBEEF, 10, |g| {
+        let wl = WorkloadSpec::ratio(g.f64_in(0.0, 1.0), g.usize_in(2, 5), g.rng.next_u64())
+            .generate();
+        let rep = Coordinator::new(
+            HardwareConfig::small(),
+            SchedulerKind::RoundRobin,
+            SimConfig::default().with_timeline(),
+        )
+        .run(&wl);
+        for (_, t) in &rep.timeline {
+            if t.op.class() == OpClass::Array {
+                assert_eq!(t.kind, hsv::sim::ProcKind::Systolic);
+            }
+        }
+        true
+    });
+}
+
+/// Fuzz the UMF decoder with structured corruption: never panics, and
+/// decodes-to-equal only for untouched frames.
+#[test]
+fn umf_decoder_failure_injection() {
+    let g = zoo::by_name("mobilenetv2").unwrap();
+    let frame = umf::encode_model(&g, 3, 4, 5);
+    let clean = frame.encode();
+    assert!(umf::Frame::decode(&clean).is_ok());
+    quick::check(0xDEAD, 300, |gen| {
+        let mut bytes = clean.clone();
+        match gen.usize_in(0, 2) {
+            0 => {
+                // random byte flips
+                for _ in 0..gen.usize_in(1, 8) {
+                    let i = gen.usize_in(0, bytes.len() - 1);
+                    bytes[i] ^= gen.rng.next_u64() as u8;
+                }
+            }
+            1 => {
+                // truncation
+                let cut = gen.usize_in(0, bytes.len() - 1);
+                bytes.truncate(cut);
+            }
+            _ => {
+                // garbage append
+                bytes.extend((0..gen.usize_in(1, 64)).map(|_| gen.rng.next_u64() as u8));
+            }
+        }
+        let _ = umf::Frame::decode(&bytes); // must not panic
+        true
+    });
+}
+
+/// Load balancing: LeastLoaded spreads a heavy-tailed workload better than
+/// pinning everything to one cluster.
+#[test]
+fn balancer_spreads_load() {
+    let registry = ModelRegistry::standard();
+    let hw = HardwareConfig::small();
+    let heavy = registry.id_of("vgg16").unwrap();
+    let light = registry.id_of("mobilenetv2").unwrap();
+    let mut lb = LoadBalancer::new(DispatchPolicy::LeastLoaded);
+    for i in 0..8 {
+        let model = if i < 2 { heavy } else { light };
+        lb.submit(WorkloadRequest { id: i, model_id: model, arrival: i * 100 }, 0);
+    }
+    let mut clusters: Vec<SvCluster> =
+        (0..2).map(|i| SvCluster::new(i, &hw, SchedulerKind::Has, SimConfig::default())).collect();
+    lb.dispatch(&mut clusters, &registry);
+    let counts: Vec<usize> = (0..2)
+        .map(|c| lb.request_table.iter().filter(|e| e.cluster == Some(c)).count())
+        .collect();
+    assert!(counts[0] > 0 && counts[1] > 0, "one cluster starved: {counts:?}");
+}
+
+/// Determinism: identical inputs give identical reports.
+#[test]
+fn simulation_is_deterministic() {
+    let wl = WorkloadSpec::ratio(0.5, 8, 99).generate();
+    let run = || {
+        Coordinator::new(HardwareConfig::small(), SchedulerKind::Has, SimConfig::default())
+            .run(&wl)
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.makespan, b.makespan);
+    assert_eq!(a.total_ops, b.total_ops);
+    assert!((a.energy_j - b.energy_j).abs() < 1e-12);
+}
+
+/// The headline ordering holds end-to-end on a reduced workload: HAS ≥ RR
+/// in throughput, and HSV beats the GPU model.
+#[test]
+fn headline_orderings_hold() {
+    let wl = WorkloadSpec::ratio(0.6, 12, 5).generate();
+    let hw = HardwareConfig::gpu_comparable().with_clusters(1);
+    let has = Coordinator::new(hw.clone(), SchedulerKind::Has, SimConfig::default()).run(&wl);
+    let rr = Coordinator::new(hw, SchedulerKind::RoundRobin, SimConfig::default()).run(&wl);
+    assert!(has.tops() > rr.tops());
+    let gpu = hsv::gpu::run_workload(&hsv::gpu::GpuSpec::titan_rtx(), &wl);
+    assert!(
+        has.tops() / 4.0 > gpu.tops() / 4.0,
+        "single-cluster HSV {:.2} should beat proportional GPU share",
+        has.tops()
+    );
+    assert!(has.tops_per_watt() > 5.0 * gpu.tops_per_watt());
+}
