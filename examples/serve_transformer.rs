@@ -164,7 +164,7 @@ fn wl_from(registry: &ModelRegistry) -> hsv::workload::Workload {
         cnn_ratio: 0.0,
         seed: 0,
         requests: (0..REQUESTS as u64)
-            .map(|id| hsv::workload::WorkloadRequest { id, model_id: 0, arrival: id * 10_000 })
+            .map(|id| hsv::workload::WorkloadRequest::new(id, 0, id * 10_000))
             .collect(),
         registry: registry.clone(),
     }

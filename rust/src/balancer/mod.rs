@@ -28,7 +28,28 @@ pub struct RequestEntry {
     pub user_id: u32,
     pub model_id: u32,
     pub arrival: Cycle,
+    /// Dispatch priority (higher wins among same-cycle arrivals).
+    pub priority: u32,
     pub cluster: Option<u32>,
+    /// Cycle at which the controller dispatched the entry (`None` = still
+    /// queued). The serving engine asserts `dispatched_at >= arrival`.
+    pub dispatched_at: Option<Cycle>,
+}
+
+/// One row of the status table the RISC-V controller consults for online
+/// dispatch (paper §IV-B): live per-cluster load, read without mutating the
+/// cluster.
+#[derive(Debug, Clone, Copy)]
+pub struct ClusterStatus {
+    pub cluster: u32,
+    /// Requests assigned but not yet admitted by the cluster scheduler.
+    pub queued_requests: usize,
+    /// Tasks of admitted requests still waiting in the cluster's queues.
+    pub inflight_tasks: usize,
+    /// Estimated outstanding work in cycles (booked + queued + in flight).
+    pub outstanding_cycles: u64,
+    /// Furthest cycle the cluster has booked work to.
+    pub makespan: Cycle,
 }
 
 /// The load balancer: request table + status view + dispatch.
@@ -39,6 +60,9 @@ pub struct LoadBalancer {
     /// model table: user-visible model ids registered via UMF `model-load`.
     pub model_table: HashMap<u32, u32>, // umf model id -> registry model id
     rr_next: usize,
+    /// Scan cursor: every entry before it is dispatched. Keeps per-epoch
+    /// online dispatch O(newly-arrived) instead of O(table).
+    scan_from: usize,
     /// Decoded-packet counter (reporting).
     pub umf_packets_decoded: u64,
 }
@@ -50,6 +74,7 @@ impl LoadBalancer {
             request_table: Vec::new(),
             model_table: HashMap::new(),
             rr_next: 0,
+            scan_from: 0,
             umf_packets_decoded: 0,
         }
     }
@@ -93,7 +118,9 @@ impl LoadBalancer {
                     user_id: frame.header.user_id,
                     model_id: reg_id,
                     arrival,
+                    priority: 0,
                     cluster: None,
+                    dispatched_at: None,
                 });
                 Ok(Some(request_id))
             }
@@ -109,17 +136,45 @@ impl LoadBalancer {
             user_id,
             model_id: req.model_id,
             arrival: req.arrival,
+            priority: req.priority,
             cluster: None,
+            dispatched_at: None,
         });
     }
 
     /// Dispatch every undispatched request-table entry to a cluster
-    /// (processing-flow steps 4–5). Requests are dispatched in arrival order.
+    /// (processing-flow steps 4–5) — the offline, clairvoyant path used by
+    /// [`crate::coordinator::Coordinator::run`]. Requests are dispatched in
+    /// arrival order (priority breaks same-cycle ties).
     pub fn dispatch(&mut self, clusters: &mut [SvCluster], registry: &ModelRegistry) {
-        let mut order: Vec<usize> = (0..self.request_table.len())
-            .filter(|&i| self.request_table[i].cluster.is_none())
+        self.dispatch_ready(clusters, registry, Cycle::MAX);
+    }
+
+    /// Online dispatch: route only the undispatched entries that have
+    /// *arrived* by cycle `now`, consulting the live status table per
+    /// decision. Returns the number of requests dispatched. This is the
+    /// serving engine's step-4/5 path; `dispatch` is the `now = ∞` special
+    /// case.
+    pub fn dispatch_ready(
+        &mut self,
+        clusters: &mut [SvCluster],
+        registry: &ModelRegistry,
+        now: Cycle,
+    ) -> usize {
+        let mut order: Vec<usize> = (self.scan_from..self.request_table.len())
+            .filter(|&i| {
+                let e = &self.request_table[i];
+                e.cluster.is_none() && e.arrival <= now
+            })
             .collect();
-        order.sort_by_key(|&i| self.request_table[i].arrival);
+        // Stable sort: same-arrival ties go to the higher priority, then to
+        // submission order — so all-default-priority traces dispatch exactly
+        // as before the priority field existed.
+        order.sort_by_key(|&i| {
+            let e = &self.request_table[i];
+            (e.arrival, std::cmp::Reverse(e.priority))
+        });
+        let dispatched = order.len();
         for i in order {
             let target = match self.policy {
                 DispatchPolicy::RoundRobin => {
@@ -136,12 +191,46 @@ impl LoadBalancer {
             };
             let e = &mut self.request_table[i];
             e.cluster = Some(target as u32);
-            clusters[target].assign(WorkloadRequest {
-                id: e.request_id,
-                model_id: e.model_id,
-                arrival: e.arrival,
-            });
+            // Offline (clairvoyant) dispatch stamps the arrival itself; the
+            // online engine stamps its current cycle.
+            e.dispatched_at = Some(if now == Cycle::MAX { e.arrival } else { now });
+            clusters[target].assign(
+                WorkloadRequest::new(e.request_id, e.model_id, e.arrival)
+                    .with_priority(e.priority),
+            );
         }
+        // Advance the cursor past the contiguous dispatched prefix (with
+        // arrival-ordered submissions — the serving engine's case — this is
+        // everything dispatched so far).
+        while self.scan_from < self.request_table.len()
+            && self.request_table[self.scan_from].cluster.is_some()
+        {
+            self.scan_from += 1;
+        }
+        dispatched
+    }
+
+    /// Requests submitted but not yet routed to a cluster.
+    pub fn queued(&self) -> usize {
+        self.request_table[self.scan_from..]
+            .iter()
+            .filter(|e| e.cluster.is_none())
+            .count()
+    }
+
+    /// Snapshot the status table (one row per cluster) for online dispatch
+    /// decisions and serving telemetry.
+    pub fn status(clusters: &[SvCluster], registry: &ModelRegistry) -> Vec<ClusterStatus> {
+        clusters
+            .iter()
+            .map(|c| ClusterStatus {
+                cluster: c.id,
+                queued_requests: c.queued_pending(),
+                inflight_tasks: c.inflight_tasks(),
+                outstanding_cycles: c.outstanding(registry),
+                makespan: c.state.makespan,
+            })
+            .collect()
     }
 }
 
@@ -162,7 +251,7 @@ mod tests {
         let mut lb = LoadBalancer::new(DispatchPolicy::RoundRobin);
         let mut cs = clusters(2);
         for i in 0..4 {
-            lb.submit(WorkloadRequest { id: i, model_id: 0, arrival: i * 10 }, 1);
+            lb.submit(WorkloadRequest::new(i, 0, i * 10), 1);
         }
         lb.dispatch(&mut cs, &reg);
         let assigned: Vec<u32> = lb.request_table.iter().map(|e| e.cluster.unwrap()).collect();
@@ -176,8 +265,8 @@ mod tests {
         let mut cs = clusters(2);
         // preload cluster 0 with a heavy model
         let vgg = reg.id_of("vgg16").unwrap();
-        cs[0].assign(WorkloadRequest { id: 99, model_id: vgg, arrival: 0 });
-        lb.submit(WorkloadRequest { id: 1, model_id: 0, arrival: 0 }, 1);
+        cs[0].assign(WorkloadRequest::new(99, vgg, 0));
+        lb.submit(WorkloadRequest::new(1, 0, 0), 1);
         lb.dispatch(&mut cs, &reg);
         assert_eq!(lb.request_table[0].cluster, Some(1));
     }
@@ -187,10 +276,53 @@ mod tests {
         let reg = ModelRegistry::standard();
         let mut lb = LoadBalancer::new(DispatchPolicy::RoundRobin);
         let mut cs = clusters(2);
-        lb.submit(WorkloadRequest { id: 1, model_id: 0, arrival: 0 }, 1);
+        lb.submit(WorkloadRequest::new(1, 0, 0), 1);
         lb.dispatch(&mut cs, &reg);
         lb.dispatch(&mut cs, &reg); // no double assignment
         let assigned = lb.request_table.iter().filter(|e| e.cluster.is_some()).count();
         assert_eq!(assigned, 1);
+    }
+
+    #[test]
+    fn online_dispatch_holds_future_arrivals() {
+        let reg = ModelRegistry::standard();
+        let mut lb = LoadBalancer::new(DispatchPolicy::RoundRobin);
+        let mut cs = clusters(2);
+        lb.submit(WorkloadRequest::new(1, 0, 100), 1);
+        lb.submit(WorkloadRequest::new(2, 0, 5_000), 1);
+        assert_eq!(lb.dispatch_ready(&mut cs, &reg, 100), 1);
+        assert_eq!(lb.queued(), 1, "future arrival dispatched early");
+        assert_eq!(lb.request_table[0].dispatched_at, Some(100));
+        assert_eq!(lb.request_table[1].cluster, None);
+        assert_eq!(lb.dispatch_ready(&mut cs, &reg, 5_000), 1);
+        assert_eq!(lb.queued(), 0);
+        assert_eq!(lb.request_table[1].dispatched_at, Some(5_000));
+    }
+
+    #[test]
+    fn priority_breaks_same_cycle_ties() {
+        let reg = ModelRegistry::standard();
+        let mut lb = LoadBalancer::new(DispatchPolicy::RoundRobin);
+        let mut cs = clusters(2);
+        lb.submit(WorkloadRequest::new(1, 0, 50), 1);
+        lb.submit(WorkloadRequest::new(2, 0, 50).with_priority(9), 1);
+        lb.dispatch(&mut cs, &reg);
+        // Round-robin hands cluster 0 to the first dispatched request: the
+        // high-priority one, despite being submitted second.
+        assert_eq!(lb.request_table[1].cluster, Some(0));
+        assert_eq!(lb.request_table[0].cluster, Some(1));
+    }
+
+    #[test]
+    fn status_table_reflects_load() {
+        let reg = ModelRegistry::standard();
+        let mut cs = clusters(2);
+        let vgg = reg.id_of("vgg16").unwrap();
+        cs[0].assign(WorkloadRequest::new(1, vgg, 0));
+        let status = LoadBalancer::status(&cs, &reg);
+        assert_eq!(status.len(), 2);
+        assert_eq!(status[0].queued_requests, 1);
+        assert_eq!(status[1].queued_requests, 0);
+        assert!(status[0].outstanding_cycles > status[1].outstanding_cycles);
     }
 }

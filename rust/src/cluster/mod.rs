@@ -81,6 +81,18 @@ impl SvCluster {
 
     /// Run the scheduler until all assigned requests are fully booked.
     pub fn run(&mut self, registry: &ModelRegistry) {
+        self.run_until(registry, Cycle::MAX);
+    }
+
+    /// Incremental stepping for the online serving engine: take scheduling
+    /// decisions only while the cluster's decision point (its booking
+    /// frontier) is at or before `horizon`, then return. Individual bookings
+    /// may extend past `horizon` — the booking simulator commits whole tasks
+    /// — but no *decision* is taken after it, so the caller observes the
+    /// cluster exactly as the hardware would at that cycle.
+    ///
+    /// `run_until(registry, Cycle::MAX)` is the offline [`Self::run`].
+    pub fn run_until(&mut self, registry: &ModelRegistry, horizon: Cycle) {
         loop {
             // Admission: the scheduler's "now" is the furthest point work
             // has been booked to (`makespan`) — every request that arrives
@@ -95,12 +107,18 @@ impl SvCluster {
             } else {
                 break;
             };
+            if frontier > horizon {
+                break;
+            }
             self.admit(registry, frontier);
             if !self.state.has_work() {
                 // Nothing admitted yet (frontier behind next arrival): admit
                 // the next arrival directly.
                 if self.next_pending < self.pending.len() {
                     let a = self.pending[self.next_pending].arrival;
+                    if a > horizon {
+                        break;
+                    }
                     self.admit(registry, a);
                 } else {
                     break;
@@ -113,6 +131,34 @@ impl SvCluster {
                 panic!("simulation exceeded max_cycles guard");
             }
         }
+    }
+
+    /// The next cycle at which this cluster can make progress, or `None` when
+    /// every assigned request is fully booked. Drives the serving engine's
+    /// event clock.
+    pub fn next_event(&self) -> Option<Cycle> {
+        if self.state.has_work() {
+            Some(self.state.makespan)
+        } else if self.next_pending < self.pending.len() {
+            Some(self.pending[self.next_pending].arrival)
+        } else {
+            None
+        }
+    }
+
+    /// All assigned work fully booked?
+    pub fn is_drained(&self) -> bool {
+        self.next_pending >= self.pending.len() && !self.state.has_work()
+    }
+
+    /// Requests assigned but not yet admitted by the cluster scheduler.
+    pub fn queued_pending(&self) -> usize {
+        self.pending.len() - self.next_pending
+    }
+
+    /// Tasks of admitted requests still waiting in the cluster's queues.
+    pub fn inflight_tasks(&self) -> usize {
+        self.state.queues.iter().map(|q| q.tasks.len()).sum()
     }
 
     /// Number of requests fully scheduled.
@@ -138,9 +184,9 @@ mod tests {
         let mut c = SvCluster::new(0, &hw, SchedulerKind::Has, SimConfig::default());
         let alex = reg.id_of("alexnet").unwrap();
         let bert = reg.id_of("bert-base").unwrap();
-        c.assign(WorkloadRequest { id: 1, model_id: alex, arrival: 0 });
-        c.assign(WorkloadRequest { id: 2, model_id: bert, arrival: 1000 });
-        c.assign(WorkloadRequest { id: 3, model_id: alex, arrival: 2_000_000_000 });
+        c.assign(WorkloadRequest::new(1, alex, 0));
+        c.assign(WorkloadRequest::new(2, bert, 1000));
+        c.assign(WorkloadRequest::new(3, alex, 2_000_000_000));
         c.run(&reg);
         assert_eq!(c.completed(), 3);
     }
@@ -152,7 +198,7 @@ mod tests {
         let mut c = SvCluster::new(0, &hw, SchedulerKind::RoundRobin, SimConfig::default());
         let alex = reg.id_of("alexnet").unwrap();
         let arrival = 10_000_000;
-        c.assign(WorkloadRequest { id: 1, model_id: alex, arrival });
+        c.assign(WorkloadRequest::new(1, alex, arrival));
         c.run(&reg);
         let done = &c.state.completed[0];
         assert!(done.end > arrival);
@@ -164,12 +210,59 @@ mod tests {
         let hw = HardwareConfig::small();
         let mut c = SvCluster::new(0, &hw, SchedulerKind::Has, SimConfig::default());
         let vgg = reg.id_of("vgg16").unwrap();
-        c.assign(WorkloadRequest { id: 1, model_id: vgg, arrival: 0 });
+        c.assign(WorkloadRequest::new(1, vgg, 0));
         let before = c.outstanding(&reg);
         assert!(before > 0);
         c.run(&reg);
         // only booked-future work remains, measured from the new frontier
         let after = c.outstanding(&reg);
         assert!(after < before);
+    }
+
+    #[test]
+    fn run_until_in_slices_matches_one_shot_run() {
+        let reg = registry();
+        let hw = HardwareConfig::small();
+        let mk = |sched| {
+            let mut c = SvCluster::new(0, &hw, sched, SimConfig::default());
+            for (i, name) in ["alexnet", "bert-base", "mobilenetv2"].iter().enumerate() {
+                let m = reg.id_of(name).unwrap();
+                c.assign(WorkloadRequest::new(i as u64, m, i as u64 * 50_000));
+            }
+            c
+        };
+        for sched in [SchedulerKind::Has, SchedulerKind::RoundRobin] {
+            let mut whole = mk(sched);
+            whole.run(&reg);
+            let mut sliced = mk(sched);
+            // Advance in fixed horizon slices until drained; the decision
+            // sequence (and therefore every booking) must be identical.
+            let mut horizon = 0;
+            while !sliced.is_drained() {
+                sliced.run_until(&reg, horizon);
+                horizon += 25_000;
+            }
+            assert_eq!(whole.state.makespan, sliced.state.makespan, "{sched:?}");
+            assert_eq!(whole.state.decisions, sliced.state.decisions, "{sched:?}");
+            assert_eq!(whole.completed(), sliced.completed());
+        }
+    }
+
+    #[test]
+    fn next_event_and_drained_track_progress() {
+        let reg = registry();
+        let hw = HardwareConfig::small();
+        let mut c = SvCluster::new(0, &hw, SchedulerKind::Has, SimConfig::default());
+        assert!(c.is_drained());
+        assert_eq!(c.next_event(), None);
+        let alex = reg.id_of("alexnet").unwrap();
+        c.assign(WorkloadRequest::new(1, alex, 777));
+        assert!(!c.is_drained());
+        assert_eq!(c.next_event(), Some(777));
+        assert_eq!(c.queued_pending(), 1);
+        c.run(&reg);
+        assert!(c.is_drained());
+        assert_eq!(c.next_event(), None);
+        assert_eq!(c.inflight_tasks(), 0);
     }
 }

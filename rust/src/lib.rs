@@ -17,15 +17,24 @@
 //!   (HAS) algorithm with external-memory-access scheduling (paper §V).
 //! - [`cluster`] / [`balancer`] / [`coordinator`] — the SV cluster, the
 //!   top-level load balancer, and the multi-cluster runtime (paper §IV).
-//! - [`workload`] — the datacenter workload generator (paper §VI-A).
+//! - [`workload`] — the datacenter workload generator (paper §VI-A), including
+//!   the online traffic models (Poisson, diurnal, bursty/flash-crowd MMPP,
+//!   load ramp) used by the serving engine.
+//! - [`serve`] — the online, SLO-aware datacenter serving engine: a
+//!   discrete-event loop that releases requests to the load balancer at their
+//!   arrival cycle, dispatches on live cluster status, and scores every
+//!   request against per-family deadlines (p50/p95/p99/p99.9 latency,
+//!   deadline-miss rate, goodput in a [`serve::ServeReport`]).
 //! - [`gpu`] — the Titan RTX reference model used for Fig 1 and Fig 10.
 //! - [`dse`] — the design-space-exploration driver (paper §VI-C).
-//! - [`runtime`] — the PJRT functional-execution path: loads the AOT-compiled
-//!   JAX/Pallas artifacts and runs real numerics from rust.
+//! - `runtime` (feature `pjrt`) — the PJRT functional-execution path: loads
+//!   the AOT-compiled JAX/Pallas artifacts and runs real numerics from rust.
+//!   Gated because it needs the external `xla` bindings; the default build is
+//!   dependency-free.
 //! - [`report`] — performance analyzer, timeline visualiser, figure emitters.
 //! - [`util`] — in-tree substrates (PRNG, JSON, CLI, stats, thread pool,
-//!   property-testing) — this environment is offline, so everything beyond the
-//!   `xla`/`anyhow`/`thiserror` crates is built here.
+//!   property-testing) — this environment is offline, so everything is built
+//!   here.
 //!
 //! ## Quickstart
 //!
@@ -41,6 +50,27 @@
 //! let report = coord.run(&wl);
 //! println!("throughput = {:.2} TOPS, {:.2} TOPS/W", report.tops(), report.tops_per_watt());
 //! ```
+//!
+//! ## Online serving
+//!
+//! ```no_run
+//! use hsv::config::{HardwareConfig, SimConfig};
+//! use hsv::sched::SchedulerKind;
+//! use hsv::serve::{ServeConfig, ServeEngine};
+//! use hsv::workload::{ArrivalModel, WorkloadSpec};
+//!
+//! // Flash-crowd traffic against the flagship config, scored against SLOs.
+//! let spec = WorkloadSpec::ratio(0.5, 200, 7).with_arrivals(ArrivalModel::bursty(60_000.0, 6_000.0));
+//! let wl = spec.generate();
+//! let mut engine = ServeEngine::new(
+//!     HardwareConfig::gpu_comparable(),
+//!     SchedulerKind::Has,
+//!     SimConfig::default(),
+//!     ServeConfig::default(),
+//! );
+//! let report = engine.run(&wl);
+//! println!("p99 {:.3} ms | miss rate {:.1}%", report.p99_ms(), report.miss_rate() * 100.0);
+//! ```
 
 pub mod util;
 pub mod config;
@@ -53,9 +83,11 @@ pub mod cluster;
 pub mod balancer;
 pub mod coordinator;
 pub mod workload;
+pub mod serve;
 pub mod gpu;
 pub mod dse;
 pub mod report;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 
 /// Crate version string (mirrors Cargo.toml).

@@ -2,12 +2,13 @@
 //!
 //! Subcommands:
 //!   simulate   run one workload on one configuration and print the report
+//!   serve      online SLO-aware serving over a traffic model (ServeReport)
 //!   dse        sweep the single-cluster design space (Fig 9 data)
 //!   gpu        run the Titan RTX reference model (Fig 1 / Fig 10 baseline)
 //!   timeline   render the scheduling timeline (Fig 6)
 //!   convert    encode a zoo model as a UMF binary file
 //!   zoo        list the benchmark models
-//!   serve      functional serving through the PJRT artifacts
+//!   pjrt       functional serving through the PJRT artifacts (feature `pjrt`)
 
 use hsv::balancer::DispatchPolicy;
 use hsv::config::{HardwareConfig, SimConfig};
@@ -16,29 +17,34 @@ use hsv::gpu;
 use hsv::model::zoo;
 use hsv::report::{self, timeline};
 use hsv::sched::SchedulerKind;
+use hsv::serve::{ServeConfig, ServeEngine, SloPolicy};
 use hsv::umf;
 use hsv::util::cli::Args;
-use hsv::workload::{suite_33, WorkloadSpec};
+use hsv::workload::{suite_33, ArrivalModel, WorkloadSpec};
 
-const USAGE: &str = "hsv <simulate|dse|gpu|timeline|convert|zoo|serve> [--options]
+const USAGE: &str = "hsv <simulate|serve|dse|gpu|timeline|convert|zoo|pjrt> [--options]
   simulate --ratio 0.5 --requests 40 --seed 42 --sched has|rr [--clusters N] [--small] [--timeline]
+  serve    --ratio 0.5 --requests 200 --seed 42 --sched has|rr --policy ll|rr
+           --traffic poisson|diurnal|bursty|ramp [--mean-gap 40000] [--slo-slack 4]
+           [--clusters N] [--small] [--out out/serve.json]
   dse      --requests 12 [--threads N] [--out out/dse.csv]
   gpu      --ratio 0.5 --requests 40 --seed 42
   timeline --ratio 0.5 --requests 6 --seed 1 --sched has [--width 100]
   convert  --model resnet50 --out out/resnet50.umf
   zoo
-  serve    --model bert-tiny --requests 4   (needs `make artifacts`)";
+  pjrt     --requests 4   (build with --features pjrt and run `make artifacts`)";
 
 fn main() {
     let args = Args::from_env();
     match args.subcommand() {
         Some("simulate") => simulate(&args),
+        Some("serve") => serve(&args),
         Some("dse") => dse(&args),
         Some("gpu") => gpu_cmd(&args),
         Some("timeline") => timeline_cmd(&args),
         Some("convert") => convert(&args),
         Some("zoo") => zoo_cmd(),
-        Some("serve") => serve(&args),
+        Some("pjrt") => pjrt_cmd(&args),
         _ => {
             eprintln!("{USAGE}");
             std::process::exit(2);
@@ -76,6 +82,67 @@ fn workload_from_args(args: &Args) -> hsv::workload::Workload {
         args.u64("seed", 42),
     )
     .generate()
+}
+
+fn traffic_from_args(args: &Args) -> ArrivalModel {
+    let mean = args.f64("mean-gap", 40_000.0);
+    match args.str("traffic", "poisson").as_str() {
+        "poisson" => ArrivalModel::Poisson,
+        "diurnal" => ArrivalModel::diurnal(args.f64("period", 100.0 * mean)),
+        "bursty" => ArrivalModel::bursty(mean, args.f64("burst-gap", mean / 10.0)),
+        "ramp" => ArrivalModel::ramp(
+            args.f64("ramp-start", 4.0),
+            args.f64("ramp-end", 0.25),
+        ),
+        other => {
+            eprintln!("unknown --traffic '{other}' (poisson|diurnal|bursty|ramp)");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn serve(args: &Args) {
+    let hw = hw_from_args(args);
+    let sched = SchedulerKind::from_name(&args.str("sched", "has")).expect("--sched has|rr");
+    let policy = match args.str("policy", "ll").as_str() {
+        "ll" | "least-loaded" => DispatchPolicy::LeastLoaded,
+        "rr" | "round-robin" => DispatchPolicy::RoundRobin,
+        other => {
+            eprintln!("unknown --policy '{other}' (ll|rr)");
+            std::process::exit(2);
+        }
+    };
+    let wl = WorkloadSpec::ratio(
+        args.f64("ratio", 0.5),
+        args.usize("requests", 200),
+        args.u64("seed", 42),
+    )
+    .with_mean_interarrival(args.f64("mean-gap", 40_000.0))
+    .with_arrivals(traffic_from_args(args))
+    .generate();
+    let sim = sim_from_args(args);
+    // SLO: calibrated against this hardware unless explicit ms are given.
+    let slo = if args.has("slo-cnn-ms") || args.has("slo-transformer-ms") {
+        SloPolicy::from_ms(
+            args.f64("slo-cnn-ms", 10.0),
+            args.f64("slo-transformer-ms", 100.0),
+            hw.clock_ghz,
+        )
+    } else {
+        SloPolicy::calibrated(&wl.registry, &hw, sched, &sim, args.f64("slo-slack", 4.0))
+    };
+    let mut engine = ServeEngine::new(hw, sched, sim, ServeConfig { policy, slo });
+    let r = engine.run(&wl);
+    print!("{}", report::summarize_serve(&r));
+    if let Some(out) = args.str_opt("out") {
+        if let Some(parent) = std::path::Path::new(out).parent() {
+            std::fs::create_dir_all(parent).expect("create output dir");
+        }
+        std::fs::write(out, r.to_json().to_pretty()).expect("write serve report");
+        println!("wrote {out}");
+    } else {
+        println!("{}", r.to_json().to_pretty());
+    }
 }
 
 fn simulate(args: &Args) {
@@ -174,7 +241,8 @@ fn zoo_cmd() {
     }
 }
 
-fn serve(args: &Args) {
+#[cfg(feature = "pjrt")]
+fn pjrt_cmd(args: &Args) {
     let mut rt = hsv::runtime::Runtime::new(hsv::runtime::Runtime::default_dir())
         .expect("pjrt client");
     let names = rt.load_all().expect("load artifacts (run `make artifacts`)");
@@ -196,4 +264,13 @@ fn serve(args: &Args) {
             );
         }
     }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_cmd(_args: &Args) {
+    eprintln!(
+        "the `pjrt` subcommand needs the PJRT runtime: rebuild with \
+         `cargo build --features pjrt` (requires the vendored xla bindings)"
+    );
+    std::process::exit(2);
 }

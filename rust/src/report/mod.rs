@@ -4,7 +4,9 @@
 pub mod timeline;
 
 use crate::coordinator::RunReport;
+use crate::model::ModelFamily;
 use crate::ops::OpClass;
+use crate::serve::ServeReport;
 use crate::util::json::Json;
 use crate::util::stats::Summary;
 
@@ -75,6 +77,57 @@ pub fn summarize(report: &RunReport) -> String {
         report.decisions
     ));
     s
+}
+
+/// Human-readable serving summary (the SLO-side sibling of [`summarize`]).
+pub fn summarize_serve(report: &ServeReport) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "serve: {} | sched={} | policy={} | workload={}\n",
+        report.hw_label, report.scheduler, report.policy, report.workload
+    ));
+    s.push_str(&format!(
+        "  span {:.3} ms | {:.2} TOPS | goodput {:.2} TOPS | util {:.1}% | {} requests\n",
+        report.makespan as f64 / (report.clock_ghz * 1e6),
+        report.tops(),
+        report.goodput_tops(),
+        report.utilization * 100.0,
+        report.served.len()
+    ));
+    if let Some(l) = report.latency_summary() {
+        let to_ms = |c: f64| c / (report.clock_ghz * 1e6);
+        s.push_str(&format!(
+            "  latency ms: mean {:.3} p50 {:.3} p95 {:.3} p99 {:.3} p99.9 {:.3}\n",
+            to_ms(l.mean),
+            to_ms(l.p50),
+            to_ms(l.p95),
+            to_ms(l.p99),
+            to_ms(l.p999)
+        ));
+    }
+    s.push_str(&format!("  deadline miss rate: {:.2}%", report.miss_rate() * 100.0));
+    let fams: Vec<String> = [
+        ("cnn", report.miss_rate_for(ModelFamily::Cnn)),
+        ("transformer", report.miss_rate_for(ModelFamily::Transformer)),
+    ]
+    .iter()
+    .filter_map(|(name, m)| m.map(|m| format!("{name} {:.2}%", m * 100.0)))
+    .collect();
+    if !fams.is_empty() {
+        s.push_str(&format!(" ({})", fams.join(", ")));
+    }
+    s.push('\n');
+    s
+}
+
+/// Write a [`ServeReport`] as a JSON document under `out/`.
+pub fn save_serve_report(name: &str, report: &ServeReport) -> std::io::Result<String> {
+    let path = format!("out/{name}.json");
+    if let Some(parent) = std::path::Path::new(&path).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(&path, report.to_json().to_pretty())?;
+    Ok(path)
 }
 
 /// Machine-readable figure series: a labeled list of (x, y) points.
@@ -156,6 +209,23 @@ mod tests {
         let b = ClassBreakdown::of(&r);
         assert!(b.array_cycles > 0 && b.vector_cycles > 0);
         assert!(b.vector_fraction() > 0.0 && b.vector_fraction() < 1.0);
+    }
+
+    #[test]
+    fn serve_summary_contains_slo_metrics() {
+        use crate::serve::{ServeConfig, ServeEngine};
+        let wl = WorkloadSpec::ratio(0.5, 5, 2).generate();
+        let mut eng = ServeEngine::new(
+            HardwareConfig::small(),
+            SchedulerKind::Has,
+            SimConfig::default(),
+            ServeConfig::default(),
+        );
+        let rep = eng.run(&wl);
+        let s = summarize_serve(&rep);
+        assert!(s.contains("p99.9"));
+        assert!(s.contains("miss rate"));
+        assert!(s.contains("goodput"));
     }
 
     #[test]

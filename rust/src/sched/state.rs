@@ -324,6 +324,19 @@ impl ClusterState {
         self.procs.iter().map(|p| p.idle_cycles).sum()
     }
 
+    /// Busy cycles and processor count over *compute* (non-DMA) processors —
+    /// the numerator and denominator of utilization must filter the same
+    /// set, so both aggregators (offline and serving) share this one source.
+    pub fn compute_busy_and_count(&self) -> (u64, u64) {
+        let mut busy = 0u64;
+        let mut count = 0u64;
+        for p in self.procs.iter().filter(|p| p.kind != ProcKind::Dma) {
+            busy += p.busy_cycles;
+            count += 1;
+        }
+        (busy, count)
+    }
+
     /// Any tasks left in any queue?
     pub fn has_work(&self) -> bool {
         self.queues.iter().any(|q| !q.tasks.is_empty())

@@ -1,0 +1,115 @@
+//! Service-level objectives: per-family latency deadlines.
+//!
+//! Datacenter inference is SLO-bound, not makespan-bound ("No DNN Left
+//! Behind", arXiv:1901.06887): a request that completes after its deadline
+//! is wasted work no matter how high the aggregate TOPS. The serving engine
+//! scores every request against the deadline of its model family — CNNs are
+//! interactive (vision pipelines), transformers tolerate longer budgets
+//! (generative decode) — and reports miss rate and goodput alongside the
+//! latency tail.
+
+use crate::config::{HardwareConfig, SimConfig};
+use crate::coordinator::Coordinator;
+use crate::model::ModelFamily;
+use crate::sched::SchedulerKind;
+use crate::sim::Cycle;
+use crate::workload::{ModelRegistry, Workload, WorkloadRequest};
+
+/// Per-family completion deadlines, in cycles after the request's arrival.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SloPolicy {
+    pub cnn_deadline: Cycle,
+    pub transformer_deadline: Cycle,
+}
+
+impl SloPolicy {
+    pub fn new(cnn_deadline: Cycle, transformer_deadline: Cycle) -> SloPolicy {
+        SloPolicy { cnn_deadline, transformer_deadline }
+    }
+
+    /// Deadlines given in milliseconds at a clock rate.
+    pub fn from_ms(cnn_ms: f64, transformer_ms: f64, clock_ghz: f64) -> SloPolicy {
+        let to_cycles = |ms: f64| (ms * clock_ghz * 1e6) as Cycle;
+        SloPolicy::new(to_cycles(cnn_ms), to_cycles(transformer_ms))
+    }
+
+    /// Calibrate deadlines against the hardware: run every registry model
+    /// once, in isolation, and set each family's deadline to its slowest
+    /// member's latency times `slack`. A slack of ~3–5 gives a serving
+    /// system headroom for queueing; 1.0 is an (unattainable under load)
+    /// zero-queueing SLO. Deterministic: the calibration runs the same
+    /// cycle-accurate simulator the serving engine uses.
+    pub fn calibrated(
+        registry: &ModelRegistry,
+        hw: &HardwareConfig,
+        sched: SchedulerKind,
+        sim: &SimConfig,
+        slack: f64,
+    ) -> SloPolicy {
+        assert!(slack > 0.0, "slack must be positive");
+        let single = hw.clone().with_clusters(1);
+        let mut worst = [0u64; 2];
+        for id in 0..registry.len() as u32 {
+            let wl = Workload {
+                name: format!("calibrate_{id}"),
+                cnn_ratio: 0.0,
+                seed: 0,
+                requests: vec![WorkloadRequest::new(0, id, 0)],
+                registry: registry.clone(),
+            };
+            let rep = Coordinator::new(single.clone(), sched, sim.clone()).run(&wl);
+            let lat = rep.latencies[0];
+            let fam = match registry.graph(id).family {
+                ModelFamily::Cnn => 0,
+                ModelFamily::Transformer => 1,
+            };
+            worst[fam] = worst[fam].max(lat);
+        }
+        SloPolicy::new(
+            (worst[0] as f64 * slack) as Cycle,
+            (worst[1] as f64 * slack) as Cycle,
+        )
+    }
+
+    /// Deadline (cycles after arrival) for a model family.
+    pub fn deadline_for(&self, family: ModelFamily) -> Cycle {
+        match family {
+            ModelFamily::Cnn => self.cnn_deadline,
+            ModelFamily::Transformer => self.transformer_deadline,
+        }
+    }
+}
+
+impl Default for SloPolicy {
+    /// 10 ms for CNNs, 100 ms for transformers at the paper's 800 MHz clock
+    /// — interactive-vision vs generative-decode budgets.
+    fn default() -> SloPolicy {
+        SloPolicy::from_ms(10.0, 100.0, 0.8)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ms_conversion() {
+        let slo = SloPolicy::from_ms(10.0, 100.0, 0.8);
+        assert_eq!(slo.cnn_deadline, 8_000_000);
+        assert_eq!(slo.transformer_deadline, 80_000_000);
+        assert_eq!(slo.deadline_for(ModelFamily::Cnn), 8_000_000);
+        assert_eq!(slo.deadline_for(ModelFamily::Transformer), 80_000_000);
+    }
+
+    #[test]
+    fn calibration_scales_with_slack() {
+        let reg = ModelRegistry::standard();
+        let hw = HardwareConfig::small();
+        let sim = SimConfig::default();
+        let tight = SloPolicy::calibrated(&reg, &hw, SchedulerKind::Has, &sim, 1.0);
+        let loose = SloPolicy::calibrated(&reg, &hw, SchedulerKind::Has, &sim, 4.0);
+        assert!(tight.cnn_deadline > 0 && tight.transformer_deadline > 0);
+        assert_eq!(loose.cnn_deadline, tight.cnn_deadline * 4);
+        assert_eq!(loose.transformer_deadline, tight.transformer_deadline * 4);
+    }
+}

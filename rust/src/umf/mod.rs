@@ -34,17 +34,26 @@ pub use packet::{
 
 /// UMF decode errors. The hardware decoder must reject malformed frames
 /// without faulting, so every decode path returns a structured error.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum UmfError {
-    #[error("truncated frame at byte {0}")]
     Truncated(usize),
-    #[error("bad magic {0:#x}")]
     BadMagic(u32),
-    #[error("unsupported version {0}")]
     BadVersion(u16),
-    #[error("malformed frame: {0}")]
     Malformed(String),
 }
+
+impl std::fmt::Display for UmfError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            UmfError::Truncated(at) => write!(f, "truncated frame at byte {at}"),
+            UmfError::BadMagic(m) => write!(f, "bad magic {m:#x}"),
+            UmfError::BadVersion(v) => write!(f, "unsupported version {v}"),
+            UmfError::Malformed(msg) => write!(f, "malformed frame: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for UmfError {}
 
 #[cfg(test)]
 mod tests {

@@ -12,6 +12,7 @@ pub struct Summary {
     pub p50: f64,
     pub p95: f64,
     pub p99: f64,
+    pub p999: f64,
 }
 
 impl Summary {
@@ -35,6 +36,7 @@ impl Summary {
             p50: percentile_sorted(&sorted, 0.50),
             p95: percentile_sorted(&sorted, 0.95),
             p99: percentile_sorted(&sorted, 0.99),
+            p999: percentile_sorted(&sorted, 0.999),
         }
     }
 }
@@ -86,6 +88,8 @@ mod tests {
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 5.0);
         assert_eq!(s.p50, 3.0);
+        // tail percentiles are ordered and bounded by the max
+        assert!(s.p95 <= s.p99 && s.p99 <= s.p999 && s.p999 <= s.max);
     }
 
     #[test]

@@ -62,6 +62,21 @@ pub struct WorkloadRequest {
     pub id: u64,
     pub model_id: u32,
     pub arrival: Cycle,
+    /// Dispatch priority (higher wins among same-cycle arrivals). 0 for
+    /// ordinary traffic; serve-layer admission policies set it deliberately.
+    pub priority: u32,
+}
+
+impl WorkloadRequest {
+    /// An ordinary (priority-0) request.
+    pub fn new(id: u64, model_id: u32, arrival: Cycle) -> WorkloadRequest {
+        WorkloadRequest { id, model_id, arrival, priority: 0 }
+    }
+
+    pub fn with_priority(mut self, priority: u32) -> WorkloadRequest {
+        self.priority = priority;
+        self
+    }
 }
 
 /// A full workload: a request trace plus the registry it indexes.
@@ -95,6 +110,74 @@ impl Workload {
     }
 }
 
+/// Request-arrival process of a trace. Every model is seeded and
+/// deterministic: the same (spec, seed) pair always produces the identical
+/// trace, so serving experiments are exactly reproducible.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalModel {
+    /// Homogeneous Poisson process with the spec's `mean_interarrival` (the
+    /// paper's backlogged throughput-measurement regime).
+    Poisson,
+    /// Diurnal sinusoid: instantaneous rate
+    /// `λ(t) = (1/mean_interarrival) · (1 + amplitude·sin(2πt/period))`,
+    /// the classic day/night datacenter load curve compressed to
+    /// simulation time.
+    Diurnal {
+        /// Rate swing as a fraction of the base rate (0.0–1.0).
+        amplitude: f64,
+        /// Period of one "day" in cycles.
+        period: f64,
+    },
+    /// Two-state Markov-modulated Poisson process (flash crowd): normal
+    /// traffic at `normal_interarrival`, bursts at `burst_interarrival`,
+    /// switching states after each arrival with the given probabilities.
+    Bursty {
+        normal_interarrival: f64,
+        burst_interarrival: f64,
+        /// P(normal → burst) evaluated per arrival.
+        p_enter: f64,
+        /// P(burst → normal) evaluated per arrival.
+        p_exit: f64,
+    },
+    /// Linear load ramp: the mean inter-arrival gap scales from
+    /// `start_factor·mean_interarrival` down/up to `end_factor·mean_interarrival`
+    /// across the trace (capacity-planning sweeps).
+    Ramp { start_factor: f64, end_factor: f64 },
+}
+
+impl ArrivalModel {
+    /// A canonical diurnal day: ±80 % swing around the base rate.
+    pub fn diurnal(period: f64) -> ArrivalModel {
+        ArrivalModel::Diurnal { amplitude: 0.8, period }
+    }
+
+    /// A canonical flash crowd: bursts arrive `normal/burst`× faster, with a
+    /// 2 % chance of entering and 15 % chance of leaving a burst per arrival.
+    pub fn bursty(normal_interarrival: f64, burst_interarrival: f64) -> ArrivalModel {
+        ArrivalModel::Bursty {
+            normal_interarrival,
+            burst_interarrival,
+            p_enter: 0.02,
+            p_exit: 0.15,
+        }
+    }
+
+    /// A canonical ramp from light (start_factor×) to heavy (end_factor×) load.
+    pub fn ramp(start_factor: f64, end_factor: f64) -> ArrivalModel {
+        ArrivalModel::Ramp { start_factor, end_factor }
+    }
+
+    /// Short label used in workload names and report JSON.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalModel::Poisson => "poisson",
+            ArrivalModel::Diurnal { .. } => "diurnal",
+            ArrivalModel::Bursty { .. } => "bursty",
+            ArrivalModel::Ramp { .. } => "ramp",
+        }
+    }
+}
+
 /// Workload generation parameters.
 #[derive(Debug, Clone, Copy)]
 pub struct WorkloadSpec {
@@ -104,15 +187,36 @@ pub struct WorkloadSpec {
     pub requests: usize,
     /// PRNG seed (each (ratio, seed) pair is one paper workload).
     pub seed: u64,
-    /// Mean request inter-arrival time in cycles (Poisson process). The
-    /// default (40 k cycles = 50 µs at 800 MHz) keeps the accelerator
-    /// backlogged, matching the paper's throughput-measurement regime.
+    /// Mean request inter-arrival time in cycles. The default (40 k cycles =
+    /// 50 µs at 800 MHz) keeps the accelerator backlogged, matching the
+    /// paper's throughput-measurement regime. Base rate for the diurnal and
+    /// ramp models; the bursty model carries its own means.
     pub mean_interarrival: f64,
+    /// Arrival process shaping the trace.
+    pub arrival: ArrivalModel,
 }
 
 impl WorkloadSpec {
     pub fn ratio(cnn_ratio: f64, requests: usize, seed: u64) -> WorkloadSpec {
-        WorkloadSpec { cnn_ratio, requests, seed, mean_interarrival: 40_000.0 }
+        WorkloadSpec {
+            cnn_ratio,
+            requests,
+            seed,
+            mean_interarrival: 40_000.0,
+            arrival: ArrivalModel::Poisson,
+        }
+    }
+
+    /// Replace the arrival process (builder style).
+    pub fn with_arrivals(mut self, arrival: ArrivalModel) -> WorkloadSpec {
+        self.arrival = arrival;
+        self
+    }
+
+    /// Replace the base mean inter-arrival gap (builder style).
+    pub fn with_mean_interarrival(mut self, cycles: f64) -> WorkloadSpec {
+        self.mean_interarrival = cycles;
+        self
     }
 
     /// Generate the request trace.
@@ -122,6 +226,8 @@ impl WorkloadSpec {
         let tr = registry.ids_by_family(ModelFamily::Transformer);
         let mut rng = Rng::new(self.seed ^ 0x5f5f_5f5f);
         let mut t = 0.0f64;
+        // Bursty-model state: false = normal, true = burst.
+        let mut in_burst = false;
         let mut requests = Vec::with_capacity(self.requests);
         for id in 0..self.requests {
             // Deterministic family mix: exact ratio rather than Bernoulli,
@@ -138,15 +244,60 @@ impl WorkloadSpec {
                 &tr
             };
             let model_id = *rng.choose(family);
-            t += rng.exp(1.0 / self.mean_interarrival);
-            requests.push(WorkloadRequest { id: id as u64, model_id, arrival: t as Cycle });
+            t += self.next_gap(&mut rng, t, id, &mut in_burst);
+            requests.push(WorkloadRequest::new(id as u64, model_id, t as Cycle));
         }
+        let name = match self.arrival {
+            ArrivalModel::Poisson => {
+                format!("cnn{:.0}%_seed{}", self.cnn_ratio * 100.0, self.seed)
+            }
+            m => format!("cnn{:.0}%_{}_seed{}", self.cnn_ratio * 100.0, m.name(), self.seed),
+        };
         Workload {
-            name: format!("cnn{:.0}%_seed{}", self.cnn_ratio * 100.0, self.seed),
+            name,
             cnn_ratio: self.cnn_ratio,
             seed: self.seed,
             requests,
             registry,
+        }
+    }
+
+    /// Inter-arrival gap for request `id` arriving after absolute time `t`.
+    ///
+    /// The Poisson arm draws exactly one exponential per request, preserving
+    /// the PRNG stream (and thus the traces) of pre-traffic-model releases.
+    fn next_gap(&self, rng: &mut Rng, t: f64, id: usize, in_burst: &mut bool) -> f64 {
+        match self.arrival {
+            ArrivalModel::Poisson => rng.exp(1.0 / self.mean_interarrival),
+            ArrivalModel::Diurnal { amplitude, period } => {
+                // Piecewise-constant-rate approximation of the inhomogeneous
+                // process: each gap is drawn at the rate in force at `t`.
+                let phase = (2.0 * std::f64::consts::PI * t / period).sin();
+                let rate = (1.0 + amplitude * phase).max(0.05) / self.mean_interarrival;
+                rng.exp(rate)
+            }
+            ArrivalModel::Bursty {
+                normal_interarrival,
+                burst_interarrival,
+                p_enter,
+                p_exit,
+            } => {
+                let mean = if *in_burst { burst_interarrival } else { normal_interarrival };
+                let switch_p = if *in_burst { p_exit } else { p_enter };
+                if rng.chance(switch_p) {
+                    *in_burst = !*in_burst;
+                }
+                rng.exp(1.0 / mean)
+            }
+            ArrivalModel::Ramp { start_factor, end_factor } => {
+                let frac = if self.requests > 1 {
+                    id as f64 / (self.requests - 1) as f64
+                } else {
+                    0.0
+                };
+                let factor = start_factor + (end_factor - start_factor) * frac;
+                rng.exp(1.0 / (self.mean_interarrival * factor.max(1e-6)))
+            }
         }
     }
 }
@@ -221,5 +372,105 @@ mod tests {
         assert_eq!(reg.len(), 8);
         assert!(reg.id_of("gpt2").is_some());
         assert!(reg.id_of("nope").is_none());
+    }
+
+    #[test]
+    fn default_priority_is_zero() {
+        let wl = WorkloadSpec::ratio(0.5, 10, 4).generate();
+        assert!(wl.requests.iter().all(|r| r.priority == 0));
+        assert_eq!(WorkloadRequest::new(1, 0, 0).with_priority(7).priority, 7);
+    }
+
+    #[test]
+    fn traffic_models_are_deterministic_per_seed() {
+        let models = [
+            ArrivalModel::Poisson,
+            ArrivalModel::diurnal(2_000_000.0),
+            ArrivalModel::bursty(60_000.0, 6_000.0),
+            ArrivalModel::ramp(4.0, 0.5),
+        ];
+        for m in models {
+            let spec = WorkloadSpec::ratio(0.5, 60, 17).with_arrivals(m);
+            let a = spec.generate();
+            let b = spec.generate();
+            assert_eq!(a.requests, b.requests, "{} trace not reproducible", m.name());
+            let c = WorkloadSpec::ratio(0.5, 60, 18).with_arrivals(m).generate();
+            assert_ne!(a.requests, c.requests, "{} ignores the seed", m.name());
+        }
+    }
+
+    #[test]
+    fn traffic_arrivals_are_monotone() {
+        for m in [
+            ArrivalModel::diurnal(500_000.0),
+            ArrivalModel::bursty(40_000.0, 4_000.0),
+            ArrivalModel::ramp(3.0, 0.3),
+        ] {
+            let wl = WorkloadSpec::ratio(0.5, 200, 9).with_arrivals(m).generate();
+            for w in wl.requests.windows(2) {
+                assert!(w[0].arrival <= w[1].arrival, "{}", m.name());
+            }
+        }
+    }
+
+    #[test]
+    fn bursty_compresses_the_tail() {
+        // A flash crowd with 10x-faster bursts must produce some gaps far
+        // below the normal mean and an overall mean below the normal mean.
+        // Symmetric switch probabilities put the chain in a burst half the
+        // time, so the compression is far outside sampling noise.
+        let wl = WorkloadSpec::ratio(0.5, 400, 21)
+            .with_arrivals(ArrivalModel::Bursty {
+                normal_interarrival: 80_000.0,
+                burst_interarrival: 8_000.0,
+                p_enter: 0.1,
+                p_exit: 0.1,
+            })
+            .generate();
+        let gaps: Vec<u64> = wl
+            .requests
+            .windows(2)
+            .map(|w| w[1].arrival - w[0].arrival)
+            .collect();
+        let mean = gaps.iter().sum::<u64>() as f64 / gaps.len() as f64;
+        assert!(mean < 80_000.0, "mean gap {mean} not compressed by bursts");
+        assert!(gaps.iter().any(|&g| g < 8_000), "no burst-scale gaps seen");
+    }
+
+    #[test]
+    fn ramp_shrinks_gaps_toward_the_end() {
+        let wl = WorkloadSpec::ratio(0.5, 300, 13)
+            .with_arrivals(ArrivalModel::ramp(5.0, 0.2))
+            .generate();
+        let gaps: Vec<f64> = wl
+            .requests
+            .windows(2)
+            .map(|w| (w[1].arrival - w[0].arrival) as f64)
+            .collect();
+        let head: f64 = gaps[..50].iter().sum::<f64>() / 50.0;
+        let tail: f64 = gaps[gaps.len() - 50..].iter().sum::<f64>() / 50.0;
+        assert!(
+            head > 2.0 * tail,
+            "ramp head mean {head:.0} not >> tail mean {tail:.0}"
+        );
+    }
+
+    #[test]
+    fn poisson_traces_unchanged_by_traffic_model_plumbing() {
+        // The Poisson arm must consume the PRNG exactly as before the
+        // ArrivalModel refactor: one choose + one exp per request.
+        let wl = WorkloadSpec::ratio(0.5, 5, 42).generate();
+        let mut rng = Rng::new(42 ^ 0x5f5f_5f5f);
+        let reg = ModelRegistry::standard();
+        let cnn = reg.ids_by_family(ModelFamily::Cnn);
+        let tr = reg.ids_by_family(ModelFamily::Transformer);
+        let mut t = 0.0f64;
+        for (id, r) in wl.requests.iter().enumerate() {
+            let want_cnn = ((id as f64 + 0.5) * 0.5).floor() > ((id as f64 - 0.5) * 0.5).floor();
+            let fam = if want_cnn { &cnn } else { &tr };
+            assert_eq!(r.model_id, *rng.choose(fam));
+            t += rng.exp(1.0 / 40_000.0);
+            assert_eq!(r.arrival, t as Cycle);
+        }
     }
 }

@@ -73,6 +73,7 @@ fn property_schedule_invariants() {
             requests: n,
             seed,
             mean_interarrival: g.f64_in(1000.0, 100_000.0),
+            arrival: hsv::workload::ArrivalModel::Poisson,
         }
         .generate();
         let mut sim = SimConfig::default().with_timeline();
@@ -195,7 +196,7 @@ fn balancer_spreads_load() {
     let mut lb = LoadBalancer::new(DispatchPolicy::LeastLoaded);
     for i in 0..8 {
         let model = if i < 2 { heavy } else { light };
-        lb.submit(WorkloadRequest { id: i, model_id: model, arrival: i * 100 }, 0);
+        lb.submit(WorkloadRequest::new(i, model, i * 100), 0);
     }
     let mut clusters: Vec<SvCluster> =
         (0..2).map(|i| SvCluster::new(i, &hw, SchedulerKind::Has, SimConfig::default())).collect();
