@@ -21,6 +21,28 @@ pub enum DispatchPolicy {
     LeastLoaded,
 }
 
+/// Typed load-balancer errors. The hardware controller rejects bad traffic
+/// instead of faulting on it, so the front-end paths return structured
+/// errors rather than silently enqueueing garbage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BalancerError {
+    /// A request named a model id that was never registered via
+    /// [`LoadBalancer::register_model`] (i.e. no UMF `model-load` for it).
+    UnknownModel { umf_model_id: u32 },
+}
+
+impl std::fmt::Display for BalancerError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BalancerError::UnknownModel { umf_model_id } => {
+                write!(f, "model {umf_model_id} was never registered (missing model-load)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for BalancerError {}
+
 /// One request-table row.
 #[derive(Debug, Clone)]
 pub struct RequestEntry {
@@ -85,6 +107,15 @@ impl LoadBalancer {
         self.model_table.insert(umf_model_id, registry_model_id);
     }
 
+    /// Register the identity mapping for every model in `registry` — the
+    /// simulation front ends' stand-in for a UMF `model-load` of each zoo
+    /// model before traffic starts.
+    pub fn register_registry(&mut self, registry: &ModelRegistry) {
+        for id in 0..registry.len() as u32 {
+            self.register_model(id, id);
+        }
+    }
+
     /// Ingest a UMF frame (decoder step 2–3 of the processing flow). Returns
     /// the request entry created for `request-return` frames; `model-load`
     /// frames register the model; `check-ack` frames answer liveness.
@@ -129,17 +160,27 @@ impl LoadBalancer {
     }
 
     /// Enqueue a request directly (the simulation front-end path, bypassing
-    /// UMF encode/decode).
-    pub fn submit(&mut self, req: WorkloadRequest, user_id: u32) {
+    /// UMF encode/decode). The request's model id must have been registered
+    /// via [`Self::register_model`] / [`Self::register_registry`] — the
+    /// hardware flow loads a model before any request can name it — else a
+    /// typed error is returned and the request table is left untouched.
+    /// (This used to silently accept unregistered ids and fault later, in
+    /// the cluster, on a registry miss.)
+    pub fn submit(&mut self, req: WorkloadRequest, user_id: u32) -> Result<(), BalancerError> {
+        let model_id = *self
+            .model_table
+            .get(&req.model_id)
+            .ok_or(BalancerError::UnknownModel { umf_model_id: req.model_id })?;
         self.request_table.push(RequestEntry {
             request_id: req.id,
             user_id,
-            model_id: req.model_id,
+            model_id,
             arrival: req.arrival,
             priority: req.priority,
             cluster: None,
             dispatched_at: None,
         });
+        Ok(())
     }
 
     /// Dispatch every undispatched request-table entry to a cluster
@@ -249,9 +290,10 @@ mod tests {
     fn round_robin_spreads_requests() {
         let reg = ModelRegistry::standard();
         let mut lb = LoadBalancer::new(DispatchPolicy::RoundRobin);
+        lb.register_registry(&reg);
         let mut cs = clusters(2);
         for i in 0..4 {
-            lb.submit(WorkloadRequest::new(i, 0, i * 10), 1);
+            lb.submit(WorkloadRequest::new(i, 0, i * 10), 1).unwrap();
         }
         lb.dispatch(&mut cs, &reg);
         let assigned: Vec<u32> = lb.request_table.iter().map(|e| e.cluster.unwrap()).collect();
@@ -262,11 +304,12 @@ mod tests {
     fn least_loaded_prefers_idle_cluster() {
         let reg = ModelRegistry::standard();
         let mut lb = LoadBalancer::new(DispatchPolicy::LeastLoaded);
+        lb.register_registry(&reg);
         let mut cs = clusters(2);
         // preload cluster 0 with a heavy model
         let vgg = reg.id_of("vgg16").unwrap();
         cs[0].assign(WorkloadRequest::new(99, vgg, 0));
-        lb.submit(WorkloadRequest::new(1, 0, 0), 1);
+        lb.submit(WorkloadRequest::new(1, 0, 0), 1).unwrap();
         lb.dispatch(&mut cs, &reg);
         assert_eq!(lb.request_table[0].cluster, Some(1));
     }
@@ -275,8 +318,9 @@ mod tests {
     fn dispatch_is_idempotent() {
         let reg = ModelRegistry::standard();
         let mut lb = LoadBalancer::new(DispatchPolicy::RoundRobin);
+        lb.register_registry(&reg);
         let mut cs = clusters(2);
-        lb.submit(WorkloadRequest::new(1, 0, 0), 1);
+        lb.submit(WorkloadRequest::new(1, 0, 0), 1).unwrap();
         lb.dispatch(&mut cs, &reg);
         lb.dispatch(&mut cs, &reg); // no double assignment
         let assigned = lb.request_table.iter().filter(|e| e.cluster.is_some()).count();
@@ -284,12 +328,27 @@ mod tests {
     }
 
     #[test]
+    fn submit_rejects_unregistered_model() {
+        let mut lb = LoadBalancer::new(DispatchPolicy::RoundRobin);
+        let err = lb.submit(WorkloadRequest::new(1, 42, 0), 1).unwrap_err();
+        assert_eq!(err, BalancerError::UnknownModel { umf_model_id: 42 });
+        assert!(err.to_string().contains("42"));
+        assert!(lb.request_table.is_empty(), "rejected request must not enqueue");
+        // after the model-load, the same request is accepted
+        lb.register_model(42, 0);
+        lb.submit(WorkloadRequest::new(1, 42, 0), 1).unwrap();
+        assert_eq!(lb.request_table.len(), 1);
+        assert_eq!(lb.request_table[0].model_id, 0, "umf id resolves to the registry id");
+    }
+
+    #[test]
     fn online_dispatch_holds_future_arrivals() {
         let reg = ModelRegistry::standard();
         let mut lb = LoadBalancer::new(DispatchPolicy::RoundRobin);
+        lb.register_registry(&reg);
         let mut cs = clusters(2);
-        lb.submit(WorkloadRequest::new(1, 0, 100), 1);
-        lb.submit(WorkloadRequest::new(2, 0, 5_000), 1);
+        lb.submit(WorkloadRequest::new(1, 0, 100), 1).unwrap();
+        lb.submit(WorkloadRequest::new(2, 0, 5_000), 1).unwrap();
         assert_eq!(lb.dispatch_ready(&mut cs, &reg, 100), 1);
         assert_eq!(lb.queued(), 1, "future arrival dispatched early");
         assert_eq!(lb.request_table[0].dispatched_at, Some(100));
@@ -303,9 +362,10 @@ mod tests {
     fn priority_breaks_same_cycle_ties() {
         let reg = ModelRegistry::standard();
         let mut lb = LoadBalancer::new(DispatchPolicy::RoundRobin);
+        lb.register_registry(&reg);
         let mut cs = clusters(2);
-        lb.submit(WorkloadRequest::new(1, 0, 50), 1);
-        lb.submit(WorkloadRequest::new(2, 0, 50).with_priority(9), 1);
+        lb.submit(WorkloadRequest::new(1, 0, 50), 1).unwrap();
+        lb.submit(WorkloadRequest::new(2, 0, 50).with_priority(9), 1).unwrap();
         lb.dispatch(&mut cs, &reg);
         // Round-robin hands cluster 0 to the first dispatched request: the
         // high-priority one, despite being submitted second.

@@ -126,12 +126,16 @@ impl Coordinator {
             .map(|i| SvCluster::new(i, &self.hw, self.sched, self.sim.clone()))
             .collect();
         let mut lb = LoadBalancer::new(self.policy);
+        // "Load" every registry model (identity mapping) before traffic, so
+        // `submit` can type-check each request's model id.
+        lb.register_registry(&wl.registry);
         for r in &wl.requests {
             // User ids cycle over a synthetic 16-tenant pool (request-table
             // telemetry only); dispatch priority is the request's own
             // explicit `WorkloadRequest::priority` field (default 0), set
             // deliberately by admission policies rather than derived here.
-            lb.submit(*r, (r.id % 16) as u32);
+            lb.submit(*r, (r.id % 16) as u32)
+                .expect("workload model ids come from the registry");
         }
         lb.dispatch(&mut clusters, &wl.registry);
 
@@ -291,8 +295,9 @@ mod tests {
         let mut clusters: Vec<SvCluster> =
             vec![SvCluster::new(0, &hw, SchedulerKind::Has, sim)];
         let mut lb = LoadBalancer::new(DispatchPolicy::LeastLoaded);
+        lb.register_registry(&wl.registry);
         for r in &wl.requests {
-            lb.submit(*r, 0);
+            lb.submit(*r, 0).unwrap();
         }
         lb.dispatch(&mut clusters, &wl.registry);
         clusters[0].run(&wl.registry);

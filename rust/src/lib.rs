@@ -24,7 +24,10 @@
 //!   discrete-event loop that releases requests to the load balancer at their
 //!   arrival cycle, dispatches on live cluster status, and scores every
 //!   request against per-family deadlines (p50/p95/p99/p99.9 latency,
-//!   deadline-miss rate, goodput in a [`serve::ServeReport`]).
+//!   deadline-miss rate, goodput in a [`serve::ServeReport`]). Includes
+//!   dynamic same-model batching ([`serve::batch`]): requests coalesce into
+//!   fused multi-batch tasks under size-capped or SLO-aware policies, with
+//!   per-request result fan-out.
 //! - [`gpu`] — the Titan RTX reference model used for Fig 1 and Fig 10.
 //! - [`dse`] — the design-space-exploration driver (paper §VI-C).
 //! - `runtime` (feature `pjrt`) — the PJRT functional-execution path: loads

@@ -17,7 +17,7 @@ use hsv::gpu;
 use hsv::model::zoo;
 use hsv::report::{self, timeline};
 use hsv::sched::SchedulerKind;
-use hsv::serve::{ServeConfig, ServeEngine, SloPolicy};
+use hsv::serve::{BatchPolicy, ServeConfig, ServeEngine, SloPolicy};
 use hsv::umf;
 use hsv::util::cli::Args;
 use hsv::workload::{suite_33, ArrivalModel, WorkloadSpec};
@@ -26,6 +26,7 @@ const USAGE: &str = "hsv <simulate|serve|dse|gpu|timeline|convert|zoo|pjrt> [--o
   simulate --ratio 0.5 --requests 40 --seed 42 --sched has|rr [--clusters N] [--small] [--timeline]
   serve    --ratio 0.5 --requests 200 --seed 42 --sched has|rr --policy ll|rr
            --traffic poisson|diurnal|bursty|ramp [--mean-gap 40000] [--slo-slack 4]
+           [--batch CAP] [--batch-policy slo|size] [--batch-wait CYCLES]
            [--clusters N] [--small] [--out out/serve.json]
   dse      --requests 12 [--threads N] [--out out/dse.csv]
   gpu      --ratio 0.5 --requests 40 --seed 42
@@ -131,7 +132,28 @@ fn serve(args: &Args) {
     } else {
         SloPolicy::calibrated(&wl.registry, &hw, sched, &sim, args.f64("slo-slack", 4.0))
     };
-    let mut engine = ServeEngine::new(hw, sched, sim, ServeConfig { policy, slo });
+    // Dynamic batching: off unless a cap > 1 is given. The SLO-aware policy
+    // derives its wait budget from the per-family deadlines; --batch-policy
+    // size uses an explicit --batch-wait cycle budget instead.
+    let batch = {
+        let cap = args.u64("batch", 1) as u32;
+        if cap <= 1 {
+            BatchPolicy::Off
+        } else {
+            match args.str("batch-policy", "slo").as_str() {
+                "slo" => BatchPolicy::SloAware { max_batch: cap },
+                "size" => BatchPolicy::Sized {
+                    max_batch: cap,
+                    max_wait: args.u64("batch-wait", 100_000),
+                },
+                other => {
+                    eprintln!("unknown --batch-policy '{other}' (slo|size)");
+                    std::process::exit(2);
+                }
+            }
+        }
+    };
+    let mut engine = ServeEngine::new(hw, sched, sim, ServeConfig { policy, slo, batch });
     let r = engine.run(&wl);
     print!("{}", report::summarize_serve(&r));
     if let Some(out) = args.str_opt("out") {

@@ -241,6 +241,49 @@ impl GraphBuilder {
     }
 }
 
+/// Rewrite a graph as a `batch`-way multi-batch variant: every layer's
+/// outermost dimension — the GEMM `M` dim (im2col output rows), the vector
+/// element count, the data-movement byte count — scales by `batch`, and the
+/// activation footprints scale with it, while the parameter tensors stay
+/// untouched: one resident weight serves the whole batch. This is exactly
+/// what makes batching profitable on a weight-stationary systolic array —
+/// the per-pass weight loads and the pipeline fill/drain amortize over
+/// `batch`× the streamed rows (see `sim::systolic::gemm_cycles`) and each
+/// parameter tensor is fetched once instead of `batch` times.
+///
+/// The rewritten graph is a first-class [`ModelGraph`]: it validates, its
+/// UMF encoding round-trips (the info packets carry the scaled GEMM dims
+/// directly), and its `total_ops` is exactly `batch ×` the base graph's.
+pub fn batched(g: &ModelGraph, batch: u32) -> ModelGraph {
+    assert!(batch > 0, "batched() needs a positive batch size");
+    if batch == 1 {
+        return g.clone();
+    }
+    let b = batch as u64;
+    let layers = g
+        .layers
+        .iter()
+        .map(|l| {
+            let shape = match l.shape {
+                TaskShape::Gemm(d) => TaskShape::Gemm(GemmDims::new(d.m * b, d.k, d.n)),
+                TaskShape::Vector { elems, ops_per_elem } => {
+                    TaskShape::Vector { elems: elems * b, ops_per_elem }
+                }
+                TaskShape::Data { bytes } => TaskShape::Data { bytes: bytes * b },
+            };
+            Layer {
+                shape,
+                input_bytes: l.input_bytes * b,
+                output_bytes: l.output_bytes * b,
+                ..l.clone()
+            }
+        })
+        .collect();
+    let g = ModelGraph { name: format!("{}@b{batch}", g.name), family: g.family, layers };
+    g.validate().expect("batch rewrite preserved graph validity");
+    g
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -279,5 +322,31 @@ mod tests {
         b.gemm("stem", 4, 4, 4);
         let (_, oh, ow) = b.pool("p", OpKind::MaxPool, 64, 112, 112, 2, 2);
         assert_eq!((oh, ow), (56, 56));
+    }
+
+    #[test]
+    fn batched_scales_ops_but_not_params() {
+        let g = crate::model::zoo::by_name("alexnet").unwrap();
+        let b4 = batched(&g, 4);
+        b4.validate().unwrap();
+        assert_eq!(b4.layers.len(), g.layers.len());
+        assert_eq!(b4.total_ops(), 4 * g.total_ops());
+        assert_eq!(b4.total_param_bytes(), g.total_param_bytes());
+        assert_eq!(b4.family, g.family);
+        assert_eq!(b4.name, "alexnet@b4");
+        for (a, b) in g.layers.iter().zip(&b4.layers) {
+            assert_eq!(b.input_bytes, 4 * a.input_bytes, "{}", a.name);
+            assert_eq!(b.output_bytes, 4 * a.output_bytes, "{}", a.name);
+            assert_eq!(b.param_bytes, a.param_bytes, "{}", a.name);
+            assert_eq!(b.deps, a.deps);
+        }
+    }
+
+    #[test]
+    fn batched_one_is_identity() {
+        let g = crate::model::zoo::by_name("gpt2").unwrap();
+        let b1 = batched(&g, 1);
+        assert_eq!(b1.name, g.name);
+        assert_eq!(b1.total_ops(), g.total_ops());
     }
 }

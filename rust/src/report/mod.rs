@@ -94,6 +94,14 @@ pub fn summarize_serve(report: &ServeReport) -> String {
         report.utilization * 100.0,
         report.served.len()
     ));
+    if report.batch.enabled() {
+        s.push_str(&format!(
+            "  batching: {} (cap {}) | {} fused batches\n",
+            report.batch.name(),
+            report.batch.cap(),
+            report.fused_batches
+        ));
+    }
     if let Some(l) = report.latency_summary() {
         let to_ms = |c: f64| c / (report.clock_ghz * 1e6);
         s.push_str(&format!(

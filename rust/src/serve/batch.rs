@@ -1,0 +1,423 @@
+//! Dynamic same-model batching between the load balancer and the clusters.
+//!
+//! The paper's load balancer hands whole DNN requests to SV clusters one at
+//! a time, but real datacenter serving gets most of its throughput from
+//! coalescing concurrent same-model requests into larger batches before
+//! they reach the accelerator ("No DNN Left Behind", arXiv:1901.06887; the
+//! GPU-datacenter scheduling survey arXiv:2205.11913 calls batching the
+//! single highest-leverage serving knob). The paper's own task queue is
+//! explicitly *multi-batch*: a fused request amortizes the systolic array's
+//! weight loads and pipeline fill/drain — and the HBM fetch of every
+//! parameter tensor — across all batch members.
+//!
+//! ## The size-vs-wait tradeoff
+//!
+//! A batcher holds work back to make bigger batches, and every held cycle
+//! is latency the member requests never get back. The two knobs:
+//!
+//! - **max batch** (size cap): a queue that reaches the cap flushes
+//!   immediately — bigger caps amortize more fill overhead but need more
+//!   concurrent same-model traffic to fill, and each member waits longer
+//!   for the batch to form.
+//! - **max wait** (deadline): a queue whose *oldest* member has waited this
+//!   many cycles flushes regardless of size, bounding the latency tax. The
+//!   [`BatchPolicy::Sized`] policy takes an explicit cycle budget; the
+//!   [`BatchPolicy::SloAware`] policy derives it from the member family's
+//!   SLO — the queue may spend at most `deadline / SLO_WAIT_DIVISOR` of the
+//!   tightest member's headroom (the oldest member's, since all members of
+//!   a queue share a family) waiting for co-batchable arrivals.
+//!
+//! Under light load the wait deadline dominates (batches stay small, the
+//! latency tax is bounded); under a flash crowd the size cap dominates
+//! (queues fill within a few cycles and throughput rises). With the trace
+//! exhausted, the engine drains all queues — no future same-model arrival
+//! can grow a batch, so further waiting only burns deadline headroom.
+//!
+//! The batcher rewrites the fused request's batch dimension through
+//! [`crate::model::builder::batched`] and registers the fused graph in the
+//! run's [`ModelRegistry`], so the cluster schedulers see one genuine
+//! multi-batch task queue entry (a GEMM with `batch ×` the streamed rows)
+//! rather than a batching fiction bolted onto the report. Completion fans
+//! back out per member in the serving engine's aggregation, keeping
+//! [`crate::serve::ServeReport`] latencies and miss rates per-request.
+
+use crate::model::builder;
+use crate::model::ModelFamily;
+use crate::serve::slo::SloPolicy;
+use crate::sim::Cycle;
+use crate::workload::{ModelRegistry, WorkloadRequest};
+use std::collections::{BTreeMap, HashMap};
+
+/// Request ids at or above this value name fused batch emissions — the
+/// batcher's own id space, disjoint from trace request ids.
+pub const FUSED_ID_BASE: u64 = 1 << 62;
+
+/// An SLO-aware queue may spend at most `deadline / SLO_WAIT_DIVISOR` of
+/// its family's deadline budget waiting for co-batchable arrivals.
+pub const SLO_WAIT_DIVISOR: u64 = 4;
+
+/// Batching policy of the serving engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BatchPolicy {
+    /// No coalescing: every request dispatches alone (the pre-batching
+    /// engine, bit for bit).
+    #[default]
+    Off,
+    /// Coalesce up to `max_batch` same-model requests, holding a queue at
+    /// most `max_wait` cycles past its oldest member's arrival.
+    Sized { max_batch: u32, max_wait: Cycle },
+    /// Size-capped with the wait budget derived from the SLO policy: a
+    /// queue of family `F` flushes after `deadline_for(F) / SLO_WAIT_DIVISOR`
+    /// cycles, so batching never spends more than that fraction of the
+    /// tightest member's deadline headroom.
+    SloAware { max_batch: u32 },
+}
+
+impl BatchPolicy {
+    /// Short label used in reports and CLI output.
+    pub fn name(&self) -> &'static str {
+        match self {
+            BatchPolicy::Off => "off",
+            BatchPolicy::Sized { .. } => "size",
+            BatchPolicy::SloAware { .. } => "slo",
+        }
+    }
+
+    /// Is any coalescing configured? (A size cap of ≤ 1 never coalesces,
+    /// so it reports as disabled too.)
+    pub fn enabled(&self) -> bool {
+        self.cap() > 1
+    }
+
+    /// The batch size cap (1 when off).
+    pub fn cap(&self) -> u32 {
+        match self {
+            BatchPolicy::Off => 1,
+            BatchPolicy::Sized { max_batch, .. } | BatchPolicy::SloAware { max_batch } => {
+                (*max_batch).max(1)
+            }
+        }
+    }
+}
+
+/// Member bookkeeping of one fused emission, kept for result fan-out.
+#[derive(Debug, Clone)]
+pub struct FusedBatch {
+    /// The model every member requested.
+    pub base_model_id: u32,
+    /// The batch-rewritten registry graph the fused request runs.
+    pub fused_model_id: u32,
+    /// Member requests in arrival order.
+    pub members: Vec<WorkloadRequest>,
+}
+
+/// One per-model coalescing queue.
+#[derive(Debug, Clone)]
+struct PendingQueue {
+    family: ModelFamily,
+    /// Cycle the oldest member entered the queue (starts the wait clock).
+    since: Cycle,
+    members: Vec<WorkloadRequest>,
+}
+
+/// The coalescing stage between request release and load-balancer dispatch.
+#[derive(Debug)]
+pub struct DynamicBatcher {
+    policy: BatchPolicy,
+    slo: SloPolicy,
+    /// Coalescing queues keyed by base model id. BTreeMap: wait-deadline
+    /// flushes must scan in a deterministic order.
+    queues: BTreeMap<u32, PendingQueue>,
+    /// Fused registry model id per (base model id, batch size) — each
+    /// distinct batch width needs its own rewritten graph, built once.
+    fused_models: HashMap<(u32, u32), u32>,
+    /// Member lists of every fused emission, by fused request id.
+    batches: HashMap<u64, FusedBatch>,
+    next_fused: u64,
+}
+
+impl DynamicBatcher {
+    pub fn new(policy: BatchPolicy, slo: SloPolicy) -> DynamicBatcher {
+        DynamicBatcher {
+            policy,
+            slo,
+            queues: BTreeMap::new(),
+            fused_models: HashMap::new(),
+            batches: HashMap::new(),
+            next_fused: FUSED_ID_BASE,
+        }
+    }
+
+    /// Cycles a queue of `family` may hold its oldest member.
+    fn wait_budget(&self, family: ModelFamily) -> Cycle {
+        match self.policy {
+            BatchPolicy::Off => 0,
+            BatchPolicy::Sized { max_wait, .. } => max_wait,
+            BatchPolicy::SloAware { .. } => self.slo.deadline_for(family) / SLO_WAIT_DIVISOR,
+        }
+    }
+
+    /// Offer one released request to the coalescing stage. Returns the
+    /// requests to submit to the load balancer now: the request itself when
+    /// batching is off, the fused batch when this member fills its queue to
+    /// the size cap, nothing while the queue keeps waiting.
+    pub fn offer(
+        &mut self,
+        req: WorkloadRequest,
+        now: Cycle,
+        registry: &mut ModelRegistry,
+    ) -> Vec<WorkloadRequest> {
+        debug_assert!(req.arrival <= now, "offered a request from the future");
+        if !self.policy.enabled() {
+            // Pass-through: exactly the unbatched engine, including a size
+            // cap of 1 (a 1-batch is the request itself).
+            return vec![req];
+        }
+        let family = registry.graph(req.model_id).family;
+        let q = self
+            .queues
+            .entry(req.model_id)
+            .or_insert_with(|| PendingQueue { family, since: now, members: Vec::new() });
+        q.members.push(req);
+        if q.members.len() as u32 >= self.policy.cap() {
+            let model_id = req.model_id;
+            vec![self.flush(model_id, now, registry)]
+        } else {
+            Vec::new()
+        }
+    }
+
+    /// Flush every queue whose wait budget has expired by `now`. With
+    /// `drain` set, flush everything regardless (end of trace: no future
+    /// same-model arrival can grow a batch).
+    pub fn poll(
+        &mut self,
+        now: Cycle,
+        drain: bool,
+        registry: &mut ModelRegistry,
+    ) -> Vec<WorkloadRequest> {
+        let due: Vec<u32> = self
+            .queues
+            .iter()
+            .filter(|(_, q)| drain || now >= q.since.saturating_add(self.wait_budget(q.family)))
+            .map(|(&model_id, _)| model_id)
+            .collect();
+        due.into_iter().map(|m| self.flush(m, now, registry)).collect()
+    }
+
+    /// Emit one queue as a single load-balancer submission.
+    fn flush(
+        &mut self,
+        model_id: u32,
+        now: Cycle,
+        registry: &mut ModelRegistry,
+    ) -> WorkloadRequest {
+        let q = self.queues.remove(&model_id).expect("flush of an absent queue");
+        debug_assert!(!q.members.is_empty());
+        if q.members.len() == 1 && q.members[0].arrival == now {
+            // A singleton flushed with zero wait is just the original
+            // request — no fusion, no id rewrite (this is how a size cap of
+            // 1 reproduces the unbatched engine exactly).
+            return q.members[0];
+        }
+        let batch = q.members.len() as u32;
+        let fused_model_id = if batch == 1 {
+            // Held back but never joined: runs the base graph, yet still
+            // needs a fused id so fan-out can restore the member's own
+            // arrival cycle (the emission is stamped with the flush cycle).
+            model_id
+        } else {
+            match self.fused_models.get(&(model_id, batch)) {
+                Some(&id) => id,
+                None => {
+                    let fused = builder::batched(registry.graph(model_id), batch);
+                    let id = registry.add(fused);
+                    self.fused_models.insert((model_id, batch), id);
+                    id
+                }
+            }
+        };
+        let priority = q.members.iter().map(|m| m.priority).max().unwrap_or(0);
+        let id = self.next_fused;
+        self.next_fused += 1;
+        self.batches.insert(
+            id,
+            FusedBatch { base_model_id: model_id, fused_model_id, members: q.members },
+        );
+        WorkloadRequest { id, model_id: fused_model_id, arrival: now, priority }
+    }
+
+    /// Earliest cycle at which a waiting queue must flush — a wake-up point
+    /// for the serving engine's event clock. `None` when nothing is queued.
+    pub fn next_flush(&self) -> Option<Cycle> {
+        self.queues
+            .values()
+            .map(|q| q.since.saturating_add(self.wait_budget(q.family)))
+            .min()
+    }
+
+    /// Requests currently held back for coalescing.
+    pub fn pending(&self) -> usize {
+        self.queues.values().map(|q| q.members.len()).sum()
+    }
+
+    /// The member bookkeeping of a fused emission, if `request_id` is one.
+    pub fn batch_of(&self, request_id: u64) -> Option<&FusedBatch> {
+        self.batches.get(&request_id)
+    }
+
+    /// Number of genuinely fused (≥ 2-member) emissions so far.
+    pub fn fused_count(&self) -> u64 {
+        self.batches.values().filter(|b| b.members.len() > 1).count() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::ModelRegistry;
+
+    fn registry() -> ModelRegistry {
+        ModelRegistry::standard()
+    }
+
+    fn req(id: u64, model: u32, arrival: Cycle) -> WorkloadRequest {
+        WorkloadRequest::new(id, model, arrival)
+    }
+
+    #[test]
+    fn off_passes_through_untouched() {
+        let mut reg = registry();
+        let mut b = DynamicBatcher::new(BatchPolicy::Off, SloPolicy::default());
+        let r = req(7, 2, 100);
+        assert_eq!(b.offer(r, 100, &mut reg), vec![r]);
+        assert_eq!(b.pending(), 0);
+        assert_eq!(b.next_flush(), None);
+        assert_eq!(b.fused_count(), 0);
+    }
+
+    #[test]
+    fn cap_one_is_pass_through() {
+        let mut reg = registry();
+        let mut b = DynamicBatcher::new(
+            BatchPolicy::Sized { max_batch: 1, max_wait: 9_999 },
+            SloPolicy::default(),
+        );
+        let r = req(3, 0, 50);
+        assert_eq!(b.offer(r, 50, &mut reg), vec![r]);
+        assert_eq!(b.fused_count(), 0);
+        assert!(!BatchPolicy::Sized { max_batch: 1, max_wait: 9_999 }.enabled());
+    }
+
+    #[test]
+    fn size_cap_triggers_fusion() {
+        let mut reg = registry();
+        let base_models = reg.len() as u32;
+        let mut b = DynamicBatcher::new(
+            BatchPolicy::Sized { max_batch: 3, max_wait: 1_000_000 },
+            SloPolicy::default(),
+        );
+        assert!(b.offer(req(0, 2, 10), 10, &mut reg).is_empty());
+        assert!(b.offer(req(1, 2, 20), 20, &mut reg).is_empty());
+        let out = b.offer(req(2, 2, 30), 30, &mut reg);
+        assert_eq!(out.len(), 1);
+        let fused = out[0];
+        assert!(fused.id >= FUSED_ID_BASE);
+        assert_eq!(fused.arrival, 30);
+        assert_eq!(fused.model_id, base_models, "fused graph appended to the registry");
+        assert_eq!(reg.graph(fused.model_id).total_ops(), 3 * reg.graph(2).total_ops());
+        let fb = b.batch_of(fused.id).unwrap();
+        assert_eq!(fb.base_model_id, 2);
+        assert_eq!(fb.members.len(), 3);
+        assert_eq!(fb.members.iter().map(|m| m.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(b.pending(), 0);
+        assert_eq!(b.fused_count(), 1);
+    }
+
+    #[test]
+    fn fused_graph_is_built_once_per_width() {
+        let mut reg = registry();
+        let before = reg.len();
+        let mut b = DynamicBatcher::new(
+            BatchPolicy::Sized { max_batch: 2, max_wait: 1_000 },
+            SloPolicy::default(),
+        );
+        for i in 0..6 {
+            b.offer(req(i, 4, i * 10), i * 10, &mut reg);
+        }
+        // three 2-batches of model 4, one rewritten graph
+        assert_eq!(reg.len(), before + 1);
+        assert_eq!(b.fused_count(), 3);
+    }
+
+    #[test]
+    fn wait_deadline_flushes_partial_queue() {
+        let mut reg = registry();
+        let mut b = DynamicBatcher::new(
+            BatchPolicy::Sized { max_batch: 8, max_wait: 500 },
+            SloPolicy::default(),
+        );
+        assert!(b.offer(req(0, 1, 100), 100, &mut reg).is_empty());
+        assert!(b.offer(req(1, 1, 200), 200, &mut reg).is_empty());
+        assert_eq!(b.next_flush(), Some(600), "wait clock starts at the oldest member");
+        assert!(b.poll(599, false, &mut reg).is_empty());
+        let out = b.poll(600, false, &mut reg);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].arrival, 600, "emission is stamped with the flush cycle");
+        assert_eq!(b.batch_of(out[0].id).unwrap().members.len(), 2);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn held_singleton_keeps_base_graph_but_gets_fused_id() {
+        let mut reg = registry();
+        let before = reg.len();
+        let mut b = DynamicBatcher::new(
+            BatchPolicy::Sized { max_batch: 4, max_wait: 100 },
+            SloPolicy::default(),
+        );
+        assert!(b.offer(req(9, 5, 1_000), 1_000, &mut reg).is_empty());
+        let out = b.poll(1_100, false, &mut reg);
+        assert_eq!(out.len(), 1);
+        assert!(out[0].id >= FUSED_ID_BASE, "held singleton needs arrival fan-out");
+        assert_eq!(out[0].model_id, 5, "singleton runs the base graph");
+        assert_eq!(out[0].arrival, 1_100);
+        assert_eq!(reg.len(), before, "no rewritten graph for a 1-batch");
+        assert_eq!(b.fused_count(), 0, "a 1-batch is not a fused batch");
+        assert_eq!(b.batch_of(out[0].id).unwrap().members[0].arrival, 1_000);
+    }
+
+    #[test]
+    fn drain_flushes_everything_immediately() {
+        let mut reg = registry();
+        let mut b =
+            DynamicBatcher::new(BatchPolicy::SloAware { max_batch: 16 }, SloPolicy::default());
+        b.offer(req(0, 0, 10), 10, &mut reg);
+        b.offer(req(1, 3, 10), 10, &mut reg);
+        b.offer(req(2, 0, 12), 12, &mut reg);
+        assert_eq!(b.pending(), 3);
+        let out = b.poll(12, true, &mut reg);
+        // deterministic model-id order: queue 0 (2 members) then queue 3
+        assert_eq!(out.len(), 2);
+        assert_eq!(b.batch_of(out[0].id).unwrap().base_model_id, 0);
+        assert_eq!(b.batch_of(out[0].id).unwrap().members.len(), 2);
+        assert_eq!(out[1].model_id, 3, "same-cycle singleton drains as itself via fan-out id");
+        assert_eq!(b.pending(), 0);
+        assert_eq!(b.next_flush(), None);
+    }
+
+    #[test]
+    fn slo_aware_wait_budget_scales_with_family_deadline() {
+        let mut reg = registry();
+        let slo = SloPolicy::new(8_000, 80_000);
+        let mut b = DynamicBatcher::new(BatchPolicy::SloAware { max_batch: 4 }, slo);
+        // model 0 is a CNN, model 4 a transformer (zoo order: CNNs first)
+        b.offer(req(0, 0, 0), 0, &mut reg);
+        assert_eq!(b.next_flush(), Some(8_000 / SLO_WAIT_DIVISOR));
+        b.offer(req(1, 4, 0), 0, &mut reg);
+        assert_eq!(b.next_flush(), Some(8_000 / SLO_WAIT_DIVISOR), "tightest family wins");
+        let out = b.poll(8_000 / SLO_WAIT_DIVISOR, false, &mut reg);
+        assert_eq!(out.len(), 1, "transformer queue keeps waiting");
+        assert_eq!(b.next_flush(), Some(80_000 / SLO_WAIT_DIVISOR));
+    }
+}

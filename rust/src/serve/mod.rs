@@ -11,17 +11,22 @@
 //! [`ServeEngine`] is a discrete-event loop around the same cycle-accurate
 //! cluster simulator:
 //!
-//! 1. **Release** — requests enter the load balancer at their arrival cycle,
+//! 1. **Release** — requests enter the serving path at their arrival cycle,
 //!    never earlier.
-//! 2. **Dispatch** — the balancer routes released requests on *live*
+//! 2. **Coalesce** — the dynamic batcher ([`batch::DynamicBatcher`]) holds
+//!    same-model requests back up to a size cap / wait deadline and emits
+//!    fused multi-batch requests (a pass-through when
+//!    [`BatchPolicy::Off`]).
+//! 3. **Dispatch** — the balancer routes emitted requests on *live*
 //!    cluster load (estimated outstanding cycles via
 //!    [`crate::cluster::SvCluster::outstanding`] — the same signal
 //!    [`LoadBalancer::status`] exports as the status table), exactly what
 //!    the RISC-V controller can observe at that cycle.
-//! 3. **Advance** — each cluster takes scheduling decisions only up to the
+//! 4. **Advance** — each cluster takes scheduling decisions only up to the
 //!    current event horizon ([`crate::cluster::SvCluster::run_until`]).
-//! 4. **Clock** — time jumps to the next arrival or the earliest cluster
-//!    decision point, whichever comes first.
+//! 5. **Clock** — time jumps to the next arrival, the earliest batch-queue
+//!    flush deadline, or the earliest cluster decision point, whichever
+//!    comes first.
 //!
 //! In the fully backlogged regime (every arrival ≈ 0) the engine reduces
 //! exactly to the offline coordinator — same dispatch order, same scheduler
@@ -31,8 +36,10 @@
 //! [`ServeReport`] scores what a user would feel — p50/p95/p99/p99.9
 //! latency, deadline-miss rate, and goodput — instead of raw makespan.
 
+pub mod batch;
 pub mod slo;
 
+pub use batch::{BatchPolicy, DynamicBatcher, FusedBatch};
 pub use slo::SloPolicy;
 
 use crate::balancer::{DispatchPolicy, LoadBalancer};
@@ -43,7 +50,7 @@ use crate::sched::SchedulerKind;
 use crate::sim::Cycle;
 use crate::util::json::Json;
 use crate::util::stats::Summary;
-use crate::workload::Workload;
+use crate::workload::{ModelRegistry, Workload};
 
 /// Serving-engine policy knobs.
 #[derive(Debug, Clone, Copy)]
@@ -52,11 +59,17 @@ pub struct ServeConfig {
     pub policy: DispatchPolicy,
     /// Per-family completion deadlines.
     pub slo: SloPolicy,
+    /// Same-model dynamic batching between release and dispatch.
+    pub batch: BatchPolicy,
 }
 
 impl Default for ServeConfig {
     fn default() -> ServeConfig {
-        ServeConfig { policy: DispatchPolicy::LeastLoaded, slo: SloPolicy::default() }
+        ServeConfig {
+            policy: DispatchPolicy::LeastLoaded,
+            slo: SloPolicy::default(),
+            batch: BatchPolicy::Off,
+        }
     }
 }
 
@@ -67,6 +80,9 @@ pub struct ServedRequest {
     pub model_id: u32,
     pub family: ModelFamily,
     pub cluster: u32,
+    /// Fused-batch id this request was served in, `None` for a solo
+    /// dispatch. Members of the same batch share a completion cycle.
+    pub batch: Option<u64>,
     pub arrival: Cycle,
     /// Cycle at which the load balancer routed the request (≥ arrival: the
     /// engine never dispatches into the past).
@@ -107,6 +123,10 @@ pub struct ServeReport {
     pub epochs: u64,
     /// The SLO policy the run was scored against.
     pub slo: SloPolicy,
+    /// The batching policy the run used.
+    pub batch: BatchPolicy,
+    /// Fused (≥ 2-member) batches the batcher emitted.
+    pub fused_batches: u64,
     /// Latency summary over `served`, computed once at aggregation (the
     /// percentile accessors all read this cache).
     latency_stats: Option<Summary>,
@@ -207,6 +227,16 @@ impl ServeReport {
             .set("slo_transformer_ms", self.to_ms(self.slo.transformer_deadline as f64))
             .set("epochs", self.epochs)
             .set("decisions", self.decisions);
+        // Batching keys appear only when coalescing is configured, so the
+        // batching-off report stays byte-identical to the pre-batching one.
+        if self.batch.enabled() {
+            j.set("batch_policy", self.batch.name())
+                .set("batch_cap", self.batch.cap())
+                .set("fused_batches", self.fused_batches);
+            if let BatchPolicy::Sized { max_wait, .. } = self.batch {
+                j.set("batch_wait_cycles", max_wait);
+            }
+        }
         if let Some(m) = self.miss_rate_for(ModelFamily::Cnn) {
             j.set("miss_rate_cnn", m);
         }
@@ -214,6 +244,39 @@ impl ServeReport {
             j.set("miss_rate_transformer", m);
         }
         j
+    }
+}
+
+/// Score one served request against the SLO policy — shared by the solo
+/// path and the fused-batch fan-out, whose only difference is where the id,
+/// arrival, and batch tag come from.
+#[allow(clippy::too_many_arguments)]
+fn scored(
+    registry: &ModelRegistry,
+    slo: &SloPolicy,
+    request_id: u64,
+    model_id: u32,
+    cluster: u32,
+    batch: Option<u64>,
+    arrival: Cycle,
+    dispatched_at: Cycle,
+    end: Cycle,
+) -> ServedRequest {
+    let graph = registry.graph(model_id);
+    let deadline = arrival + slo.deadline_for(graph.family);
+    ServedRequest {
+        request_id,
+        model_id,
+        family: graph.family,
+        cluster,
+        batch,
+        arrival,
+        dispatched_at,
+        end,
+        latency: end - arrival,
+        deadline,
+        met: end <= deadline,
+        ops: graph.total_ops(),
     }
 }
 
@@ -240,12 +303,25 @@ impl ServeEngine {
         self
     }
 
+    pub fn with_batch(mut self, batch: BatchPolicy) -> ServeEngine {
+        self.cfg.batch = batch;
+        self
+    }
+
     /// Serve a workload trace online and score it against the SLO policy.
     pub fn run(&mut self, wl: &Workload) -> ServeReport {
         let mut clusters: Vec<SvCluster> = (0..self.hw.clusters)
             .map(|i| SvCluster::new(i, &self.hw, self.sched, self.sim.clone()))
             .collect();
         let mut lb = LoadBalancer::new(self.cfg.policy);
+        // The run's registry starts as the workload's and grows fused
+        // multi-batch graphs as the batcher mints them.
+        let mut registry = wl.registry.clone();
+        // The engine is its own UMF front end: every registry model is
+        // "loaded" up front (identity mapping), so `submit` type-checks each
+        // request's model id (see `BalancerError::UnknownModel`).
+        lb.register_registry(&registry);
+        let mut batcher = DynamicBatcher::new(self.cfg.batch, self.cfg.slo);
 
         // The trace in arrival order (the generator emits it sorted; sort
         // defensively for hand-built traces, stable on same-cycle ids).
@@ -258,29 +334,46 @@ impl ServeEngine {
 
         loop {
             // 1. Release: requests whose arrival cycle has come enter the
-            //    balancer's request table. Never earlier — the engine has no
-            //    knowledge of the future trace.
+            //    batcher's coalescing queues (a pass-through when batching
+            //    is off). Never earlier — the engine has no knowledge of the
+            //    future trace.
+            let mut emitted = Vec::new();
             while next < n && trace[next].arrival <= now {
+                emitted.extend(batcher.offer(trace[next], now, &mut registry));
+                next += 1;
+            }
+            // 1b. Wait-deadline flushes; once the trace is exhausted no
+            //     future same-model arrival can grow a batch, so drain.
+            emitted.extend(batcher.poll(now, next >= n, &mut registry));
+            for e in emitted {
+                // Fused graphs enter the model table as they are minted.
+                if !lb.model_table.contains_key(&e.model_id) {
+                    lb.register_model(e.model_id, e.model_id);
+                }
                 // Same synthetic 16-tenant user pool as the offline
                 // coordinator; dispatch priority travels on the request.
-                lb.submit(trace[next], (trace[next].id % 16) as u32);
-                next += 1;
+                lb.submit(e, (e.id % 16) as u32)
+                    .expect("the engine registers every model id it submits");
             }
 
             // 2. Online dispatch against live cluster status.
-            lb.dispatch_ready(&mut clusters, &wl.registry, now);
+            lb.dispatch_ready(&mut clusters, &registry, now);
 
             // 3. Advance every cluster's scheduler to the horizon.
             for c in clusters.iter_mut() {
-                c.run_until(&wl.registry, now);
+                c.run_until(&registry, now);
             }
             epochs += 1;
 
-            // 4. Jump the clock to the next event: the next trace arrival or
-            //    the earliest cluster decision point. `max(now + 1)` is a
-            //    liveness guard; post-run_until every cluster event is
-            //    strictly in the future.
+            // 4. Jump the clock to the next event: the next trace arrival,
+            //    the earliest batch-queue flush deadline, or the earliest
+            //    cluster decision point. `max(now + 1)` is a liveness guard;
+            //    post-run_until every cluster event is strictly in the
+            //    future, and any due batch queue was flushed this epoch.
             let mut t_next: Option<Cycle> = if next < n { Some(trace[next].arrival) } else { None };
+            if let Some(f) = batcher.next_flush() {
+                t_next = Some(t_next.map_or(f, |t| t.min(f)));
+            }
             for c in &clusters {
                 if let Some(e) = c.next_event() {
                     // run_until only leaves work behind the horizon when the
@@ -300,13 +393,15 @@ impl ServeEngine {
             }
         }
 
-        self.aggregate(wl, &lb, clusters, epochs)
+        self.aggregate(wl, &registry, &lb, &batcher, clusters, epochs)
     }
 
     fn aggregate(
         &self,
         wl: &Workload,
+        registry: &ModelRegistry,
         lb: &LoadBalancer,
+        batcher: &DynamicBatcher,
         clusters: Vec<SvCluster>,
         epochs: u64,
     ) -> ServeReport {
@@ -330,9 +425,6 @@ impl ServeEngine {
             busy += c_busy;
             proc_count += c_count;
             for r in &st.completed {
-                let graph = wl.registry.graph(r.model_id);
-                let ops = graph.total_ops();
-                total_ops += ops;
                 // A completed request was necessarily dispatched: a missing
                 // stamp is an engine bug, not a default-able case.
                 let stamp = dispatch_stamp
@@ -340,20 +432,41 @@ impl ServeEngine {
                     .copied()
                     .expect("completed request missing from the request table")
                     .expect("completed request has no dispatch stamp");
-                let deadline = r.arrival + self.cfg.slo.deadline_for(graph.family);
-                served.push(ServedRequest {
-                    request_id: r.request_id,
-                    model_id: r.model_id,
-                    family: graph.family,
-                    cluster: c.id,
-                    arrival: r.arrival,
-                    dispatched_at: stamp,
-                    end: r.end,
-                    latency: r.end - r.arrival,
-                    deadline,
-                    met: r.end <= deadline,
-                    ops,
-                });
+                if let Some(b) = batcher.batch_of(r.request_id) {
+                    // Fan the fused completion back out to its members: the
+                    // batch completes as a unit, so every member shares the
+                    // fused end cycle but keeps its own arrival for latency
+                    // and deadline accounting.
+                    for m in &b.members {
+                        let s = scored(
+                            registry,
+                            &self.cfg.slo,
+                            m.id,
+                            b.base_model_id,
+                            c.id,
+                            Some(r.request_id),
+                            m.arrival,
+                            stamp,
+                            r.end,
+                        );
+                        total_ops += s.ops;
+                        served.push(s);
+                    }
+                } else {
+                    let s = scored(
+                        registry,
+                        &self.cfg.slo,
+                        r.request_id,
+                        r.model_id,
+                        c.id,
+                        None,
+                        r.arrival,
+                        stamp,
+                        r.end,
+                    );
+                    total_ops += s.ops;
+                    served.push(s);
+                }
             }
         }
         served.sort_by_key(|r| (r.end, r.request_id));
@@ -384,6 +497,8 @@ impl ServeEngine {
             decisions,
             epochs,
             slo: self.cfg.slo,
+            batch: self.cfg.batch,
+            fused_batches: batcher.fused_count(),
             latency_stats,
         }
     }

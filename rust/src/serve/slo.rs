@@ -102,6 +102,19 @@ mod tests {
     }
 
     #[test]
+    fn zero_deadline_is_representable() {
+        // A zero-headroom SLO is a legal (if unattainable) policy point: the
+        // scoring layer must treat it as "every request misses", not fault.
+        let slo = SloPolicy::new(0, 0);
+        assert_eq!(slo.deadline_for(ModelFamily::Cnn), 0);
+        assert_eq!(slo.deadline_for(ModelFamily::Transformer), 0);
+        // sub-cycle millisecond budgets truncate to zero rather than fault
+        let tiny = SloPolicy::from_ms(0.0, 1e-9, 0.8);
+        assert_eq!(tiny.cnn_deadline, 0);
+        assert_eq!(tiny.transformer_deadline, 0);
+    }
+
+    #[test]
     fn calibration_scales_with_slack() {
         let reg = ModelRegistry::standard();
         let hw = HardwareConfig::small();

@@ -30,6 +30,13 @@ impl ModelRegistry {
         ModelRegistry { graphs }
     }
 
+    /// Register an additional graph at runtime (e.g. a fused multi-batch
+    /// variant minted by the serve-layer batcher); returns its model id.
+    pub fn add(&mut self, graph: ModelGraph) -> u32 {
+        self.graphs.push(graph);
+        (self.graphs.len() - 1) as u32
+    }
+
     pub fn graph(&self, id: u32) -> &ModelGraph {
         &self.graphs[id as usize]
     }

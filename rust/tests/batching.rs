@@ -1,0 +1,440 @@
+//! Serve-layer batching test suite.
+//!
+//! Covers the dynamic same-model batcher end to end: batching-off is
+//! byte-identical to the pre-batching engine (and to a size cap of 1), a
+//! fused batch costs strictly fewer cycles than the singles it replaces,
+//! per-request fan-out keeps latencies monotone within a batch, the whole
+//! ArrivalModel × DispatchPolicy × BatchPolicy grid is deterministic, and
+//! golden-seed pins catch PRNG-stream regressions in CI.
+
+use hsv::balancer::DispatchPolicy;
+use hsv::config::{HardwareConfig, SimConfig};
+use hsv::coordinator::Coordinator;
+use hsv::model::{builder, zoo, ModelFamily};
+use hsv::ops::{GemmDims, TaskShape};
+use hsv::sched::SchedulerKind;
+use hsv::serve::{BatchPolicy, ServeConfig, ServeEngine, ServedRequest, SloPolicy};
+use hsv::sim::systolic::gemm_cycles;
+use hsv::umf::{decode_model, encode_model, Frame};
+use hsv::util::json::Json;
+use hsv::workload::{ArrivalModel, ModelRegistry, Workload, WorkloadRequest, WorkloadSpec};
+use std::collections::HashMap;
+
+fn engine_with(batch: BatchPolicy) -> ServeEngine {
+    ServeEngine::new(
+        HardwareConfig::small(),
+        SchedulerKind::Has,
+        SimConfig::default(),
+        ServeConfig { policy: DispatchPolicy::LeastLoaded, slo: SloPolicy::default(), batch },
+    )
+}
+
+fn same_model_trace(model: &str, n: u64, gap: u64) -> Workload {
+    let registry = ModelRegistry::standard();
+    let id = registry.id_of(model).unwrap();
+    let requests = (0..n).map(|i| WorkloadRequest::new(i, id, i * gap)).collect();
+    Workload { name: format!("{model}x{n}"), cnn_ratio: 1.0, seed: 0, requests, registry }
+}
+
+/// Batching off must reproduce the pre-batching engine byte for byte, and a
+/// size cap of 1 (under either capped policy) must be identical to off —
+/// the batcher's pass-through path is exercised but invisible.
+#[test]
+fn batch_off_and_cap_one_reports_are_byte_identical() {
+    let wl = WorkloadSpec::ratio(0.5, 24, 7)
+        .with_arrivals(ArrivalModel::bursty(60_000.0, 6_000.0))
+        .generate();
+    let off = engine_with(BatchPolicy::Off).run(&wl);
+    let sized1 = engine_with(BatchPolicy::Sized { max_batch: 1, max_wait: 0 }).run(&wl);
+    let slo1 = engine_with(BatchPolicy::SloAware { max_batch: 1 }).run(&wl);
+    let off_json = off.to_json().to_pretty();
+    assert_eq!(off_json, sized1.to_json().to_pretty(), "size cap 1 diverged from batching off");
+    assert_eq!(off_json, slo1.to_json().to_pretty(), "slo cap 1 diverged from batching off");
+    assert!(!off_json.contains("batch"), "batch-off report must not mention batching");
+    let records = |r: &hsv::serve::ServeReport| {
+        r.served
+            .iter()
+            .map(|s| (s.request_id, s.cluster, s.dispatched_at, s.end, s.batch))
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(records(&off), records(&sized1));
+    assert!(off.served.iter().all(|s| s.batch.is_none()));
+    assert_eq!(off.fused_batches, 0);
+    assert_eq!(sized1.fused_batches, 0);
+}
+
+/// A fused batch costs strictly fewer cycles than the sum of the singles it
+/// replaced — at the task level (the systolic fill/reload amortizes) and
+/// end to end through the cycle-accurate simulator.
+#[test]
+fn fused_batch_cycles_strictly_less_than_sum_of_singles() {
+    let g = zoo::by_name("alexnet").unwrap();
+    let b = 4u64;
+    for l in &g.layers {
+        if let TaskShape::Gemm(d) = l.shape {
+            let single = gemm_cycles(16, d);
+            let fused = gemm_cycles(16, GemmDims::new(d.m * b, d.k, d.n));
+            assert!(
+                fused < b * single,
+                "{}: fused {fused} cycles !< {b} singles at {single}",
+                l.name
+            );
+        }
+    }
+    let mut reg = ModelRegistry::standard();
+    let alex = reg.id_of("alexnet").unwrap();
+    let fused_graph = builder::batched(reg.graph(alex), 4);
+    assert_eq!(fused_graph.total_ops(), 4 * reg.graph(alex).total_ops());
+    let fused_id = reg.add(fused_graph);
+    let one = |model: u32, name: &str| Workload {
+        name: name.to_string(),
+        cnn_ratio: 1.0,
+        seed: 0,
+        requests: vec![WorkloadRequest::new(0, model, 0)],
+        registry: reg.clone(),
+    };
+    let run = |wl: &Workload| {
+        Coordinator::new(HardwareConfig::small(), SchedulerKind::Has, SimConfig::default())
+            .run(wl)
+            .makespan
+    };
+    let m1 = run(&one(alex, "single"));
+    let m4 = run(&one(fused_id, "fused4"));
+    assert!(m4 < 4 * m1, "fused 4-batch makespan {m4} !< 4 x single makespan {m1}");
+    assert!(m4 > m1, "a 4-batch cannot be cheaper than one inference ({m4} vs {m1})");
+}
+
+/// Online: coalescing a backlogged same-model burst into one fused batch
+/// finishes the whole trace sooner than dispatching the singles.
+#[test]
+fn backlogged_same_model_batching_beats_singles() {
+    let wl = same_model_trace("alexnet", 8, 0);
+    let off = engine_with(BatchPolicy::Off).run(&wl);
+    let batched = engine_with(BatchPolicy::Sized { max_batch: 8, max_wait: 0 }).run(&wl);
+    assert_eq!(off.served.len(), 8);
+    assert_eq!(batched.served.len(), 8);
+    assert_eq!(batched.fused_batches, 1, "eight same-cycle arrivals form one 8-batch");
+    assert_eq!(batched.total_ops, off.total_ops);
+    assert!(
+        batched.makespan < off.makespan,
+        "fused 8-batch makespan {} !< unbatched {}",
+        batched.makespan,
+        off.makespan
+    );
+}
+
+/// Members of one batch complete together, so fan-out latencies must be
+/// monotone non-increasing in arrival order within every batch.
+#[test]
+fn per_request_latencies_monotone_within_batch() {
+    let wl = same_model_trace("alexnet", 8, 1_000);
+    let rep = engine_with(BatchPolicy::Sized { max_batch: 4, max_wait: 100_000 }).run(&wl);
+    assert_eq!(rep.served.len(), 8);
+    assert!(rep.fused_batches >= 2, "spread arrivals should still form two 4-batches");
+    let mut groups: HashMap<u64, Vec<&ServedRequest>> = HashMap::new();
+    for r in &rep.served {
+        if let Some(b) = r.batch {
+            groups.entry(b).or_default().push(r);
+        }
+    }
+    assert!(!groups.is_empty());
+    for (batch, mut members) in groups {
+        members.sort_by_key(|r| (r.arrival, r.request_id));
+        for w in members.windows(2) {
+            assert_eq!(w[0].end, w[1].end, "batch {batch}: members must complete together");
+            assert!(w[0].arrival <= w[1].arrival);
+            assert!(
+                w[0].latency >= w[1].latency,
+                "batch {batch}: latency not monotone in arrival order \
+                 ({} at {} vs {} at {})",
+                w[0].latency,
+                w[0].arrival,
+                w[1].latency,
+                w[1].arrival
+            );
+        }
+    }
+}
+
+/// Fan-out bookkeeping: with batching on, every trace request is served
+/// exactly once, ops are conserved, and the report carries the batch keys.
+#[test]
+fn batching_serves_every_request_exactly_once() {
+    let wl = WorkloadSpec::ratio(0.5, 30, 9)
+        .with_arrivals(ArrivalModel::bursty(40_000.0, 4_000.0))
+        .generate();
+    let rep = engine_with(BatchPolicy::SloAware { max_batch: 8 }).run(&wl);
+    assert_eq!(rep.served.len(), 30);
+    let mut ids: Vec<u64> = rep.served.iter().map(|r| r.request_id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..30).collect::<Vec<u64>>());
+    assert_eq!(rep.total_ops, wl.total_ops());
+    assert!(rep.fused_batches > 0, "bursty same-model traffic must actually coalesce");
+    for r in &rep.served {
+        assert!(r.dispatched_at >= r.arrival, "request {} dispatched early", r.request_id);
+        assert!(r.end > r.arrival);
+        assert_eq!(r.latency, r.end - r.arrival);
+    }
+    let j = rep.to_json();
+    assert_eq!(j.get("batch_policy").unwrap().as_str(), Some("slo"));
+    assert_eq!(j.get("batch_cap").unwrap().as_f64(), Some(8.0));
+    assert!(j.get("fused_batches").unwrap().as_f64().unwrap() >= 1.0);
+}
+
+/// Two runs with the same seed must agree bit for bit across the whole
+/// ArrivalModel × DispatchPolicy × BatchPolicy grid.
+#[test]
+fn serve_grid_is_deterministic() {
+    let models = [
+        ArrivalModel::Poisson,
+        ArrivalModel::diurnal(2_000_000.0),
+        ArrivalModel::bursty(60_000.0, 6_000.0),
+        ArrivalModel::ramp(4.0, 0.5),
+    ];
+    let batches = [
+        BatchPolicy::Off,
+        BatchPolicy::Sized { max_batch: 3, max_wait: 30_000 },
+        BatchPolicy::SloAware { max_batch: 4 },
+    ];
+    for model in models {
+        let wl = WorkloadSpec::ratio(0.5, 15, 31).with_arrivals(model).generate();
+        for policy in [DispatchPolicy::LeastLoaded, DispatchPolicy::RoundRobin] {
+            for batch in batches {
+                let run = || {
+                    ServeEngine::new(
+                        HardwareConfig::small(),
+                        SchedulerKind::Has,
+                        SimConfig::default(),
+                        ServeConfig { policy, slo: SloPolicy::default(), batch },
+                    )
+                    .run(&wl)
+                };
+                let a = run();
+                let b = run();
+                let ctx = format!("{} / {policy:?} / {batch:?}", model.name());
+                assert_eq!(a.served.len(), 15, "{ctx}");
+                assert_eq!(a.to_json().to_pretty(), b.to_json().to_pretty(), "{ctx}");
+                assert_eq!(
+                    a.served
+                        .iter()
+                        .map(|r| (r.request_id, r.end, r.batch))
+                        .collect::<Vec<_>>(),
+                    b.served
+                        .iter()
+                        .map(|r| (r.request_id, r.end, r.batch))
+                        .collect::<Vec<_>>(),
+                    "{ctx}"
+                );
+            }
+        }
+    }
+}
+
+/// Golden-seed trace pins, computed independently of the Rust PRNG (a
+/// bit-faithful replica of xoshiro256++ + the generator): any change to the
+/// PRNG stream or to how the traffic models consume it trips this test.
+/// Model choices are pinned exactly (pure integer path); arrivals allow a
+/// ±1-cycle slack so a last-ulp libm difference cannot flake CI while a
+/// genuine stream regression (which shifts arrivals wholesale) still fails.
+#[test]
+fn golden_seed_traces_pin_the_prng_stream() {
+    #[allow(clippy::type_complexity)]
+    let combos: [(&str, ArrivalModel, [u32; 12], [u64; 12]); 4] = [
+        (
+            "poisson",
+            ArrivalModel::Poisson,
+            [0, 6, 2, 5, 2, 5, 0, 4, 2, 4, 0, 7],
+            [
+                32502, 41584, 52200, 64020, 90117, 134091, 146120, 154788, 196828, 206065,
+                231802, 274394,
+            ],
+        ),
+        (
+            "diurnal",
+            ArrivalModel::diurnal(2_000_000.0),
+            [0, 6, 2, 5, 2, 5, 0, 4, 2, 4, 0, 7],
+            [
+                32502, 40899, 50528, 61021, 83667, 120073, 129364, 135950, 167526, 174115,
+                192289, 221574,
+            ],
+        ),
+        (
+            "bursty",
+            ArrivalModel::bursty(60_000.0, 6_000.0),
+            [0, 4, 1, 5, 0, 4, 0, 5, 0, 5, 1, 6],
+            [
+                43382, 59305, 109237, 175197, 188473, 251534, 266013, 329900, 445543, 542301,
+                602006, 641953,
+            ],
+        ),
+        (
+            "ramp",
+            ArrivalModel::ramp(4.0, 0.5),
+            [0, 6, 2, 5, 2, 5, 0, 4, 2, 4, 0, 7],
+            [
+                130009, 163449, 199155, 235153, 306328, 412265, 437416, 452783, 513932, 524428,
+                545486, 566782,
+            ],
+        ),
+    ];
+    for (name, model, models, arrivals) in combos {
+        let wl = WorkloadSpec::ratio(0.5, 12, 2024).with_arrivals(model).generate();
+        let got: Vec<u32> = wl.requests.iter().map(|r| r.model_id).collect();
+        assert_eq!(got, models.to_vec(), "{name}: the model-choice stream regressed");
+        for (i, (r, &want)) in wl.requests.iter().zip(arrivals.iter()).enumerate() {
+            let diff = (r.arrival as i64 - want as i64).abs();
+            assert!(
+                diff <= 1,
+                "{name}[{i}]: arrival {} vs golden {want} — the arrival stream regressed",
+                r.arrival
+            );
+        }
+    }
+}
+
+fn golden_metric_reports() -> Vec<(String, hsv::serve::ServeReport)> {
+    let mut out = Vec::new();
+    for (tname, model) in [
+        ("poisson", ArrivalModel::Poisson),
+        ("diurnal", ArrivalModel::diurnal(2_000_000.0)),
+        ("bursty", ArrivalModel::bursty(60_000.0, 6_000.0)),
+        ("ramp", ArrivalModel::ramp(4.0, 0.5)),
+    ] {
+        let wl = WorkloadSpec::ratio(0.5, 24, 2024).with_arrivals(model).generate();
+        for (bname, batch) in
+            [("off", BatchPolicy::Off), ("slo4", BatchPolicy::SloAware { max_batch: 4 })]
+        {
+            let rep = engine_with(batch).run(&wl);
+            assert_eq!(rep.served.len(), 24, "{tname}/{bname}");
+            out.push((format!("{tname}/{bname}"), rep));
+        }
+    }
+    out
+}
+
+/// Golden-seed p50/p99/miss-rate snapshot. The expected values live in
+/// `rust/tests/golden/serve_metrics.json`. Blessing is an *explicit* act —
+/// `HSV_BLESS_GOLDEN=1 cargo test --test batching` (or deleting the file
+/// first), then committing the result — so an ordinary CI run can never
+/// silently bless a regressed stream. While the committed file is still
+/// unblessed the test reports the measured values and passes; once blessed,
+/// any divergence — a PRNG regression, a scheduler tie-break change, a
+/// batching semantics drift — fails here.
+#[test]
+fn golden_seed_metrics_snapshot() {
+    let path = std::path::Path::new("rust/tests/golden/serve_metrics.json");
+    let on_disk = std::fs::read_to_string(path).ok().and_then(|t| Json::parse(&t).ok());
+    let is_blessed = on_disk
+        .as_ref()
+        .and_then(|j| j.get("blessed"))
+        .and_then(Json::as_bool)
+        == Some(true);
+    let bless_requested =
+        std::env::var("HSV_BLESS_GOLDEN").map(|v| v == "1").unwrap_or(false);
+
+    let mut metrics = Json::obj();
+    for (key, rep) in golden_metric_reports() {
+        let mut m = Json::obj();
+        m.set("p50_ms", rep.p50_ms())
+            .set("p99_ms", rep.p99_ms())
+            .set("miss_rate", rep.miss_rate());
+        metrics.set(&key, m);
+    }
+
+    if bless_requested || on_disk.is_none() {
+        let mut doc = Json::obj();
+        doc.set("blessed", true);
+        doc.set(
+            "note",
+            "golden-seed serve metrics (seed 2024, 24 requests, small hw, HAS, \
+             least-loaded). Re-bless deliberately at a known-good commit with \
+             HSV_BLESS_GOLDEN=1 cargo test --test batching, then commit.",
+        );
+        doc.set("metrics", metrics);
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent).ok();
+        }
+        std::fs::write(path, doc.to_pretty()).expect("write blessed golden snapshot");
+        println!("blessed golden snapshot at {path:?}; commit it to pin the stream");
+    } else if is_blessed {
+        let gold = on_disk.unwrap();
+        assert_eq!(
+            gold.get("metrics").map(|m| m.to_string()),
+            Some(metrics.to_string()),
+            "serve metrics diverged from the blessed golden snapshot at {path:?}"
+        );
+    } else {
+        // Committed but not yet blessed (this PR was authored in a container
+        // without a Rust toolchain): report the measured values and pass.
+        // Blessing requires explicit intent, so a regression merged before
+        // the first bless cannot canonize itself.
+        println!(
+            "golden snapshot at {path:?} not yet blessed; measured metrics:\n{}",
+            metrics.to_pretty()
+        );
+    }
+}
+
+/// SLO edge case: zero deadline headroom is a legal policy — every request
+/// misses and goodput collapses to zero, with no faults along the way.
+#[test]
+fn zero_deadline_headroom_misses_everything() {
+    let wl = WorkloadSpec::ratio(0.5, 8, 3).generate();
+    let mut eng = engine_with(BatchPolicy::Off);
+    eng.cfg.slo = SloPolicy::new(0, 0);
+    let rep = eng.run(&wl);
+    assert_eq!(rep.served.len(), 8);
+    for r in &rep.served {
+        assert_eq!(r.deadline, r.arrival, "zero headroom: deadline is the arrival itself");
+        assert!(!r.met);
+    }
+    assert_eq!(rep.miss_rate(), 1.0);
+    assert_eq!(rep.goodput_tops(), 0.0);
+    assert!(rep.tops() > 0.0, "throughput still counts the (late) work");
+}
+
+/// SLO edge case: a family absent from the trace has no miss rate — the
+/// accessor returns `None` and the JSON omits the key, rather than faking
+/// a 0% (or 100%) figure for traffic that never existed.
+#[test]
+fn family_absent_from_trace_has_no_miss_rate() {
+    let wl = WorkloadSpec::ratio(1.0, 6, 5).generate(); // CNNs only
+    let rep = engine_with(BatchPolicy::Off).run(&wl);
+    assert_eq!(rep.miss_rate_for(ModelFamily::Transformer), None);
+    assert!(rep.miss_rate_for(ModelFamily::Cnn).is_some());
+    let j = rep.to_json();
+    assert!(j.get("miss_rate_transformer").is_none());
+    assert!(j.get("miss_rate_cnn").is_some());
+}
+
+/// SLO edge case: `miss_rate_for` on an empty report is `None` for every
+/// family, and the aggregate miss rate is zero, not NaN.
+#[test]
+fn empty_report_has_no_family_miss_rates() {
+    let mut wl = WorkloadSpec::ratio(0.5, 1, 1).generate();
+    wl.requests.clear();
+    let rep = engine_with(BatchPolicy::SloAware { max_batch: 4 }).run(&wl);
+    assert_eq!(rep.served.len(), 0);
+    assert_eq!(rep.miss_rate(), 0.0);
+    assert_eq!(rep.miss_rate_for(ModelFamily::Cnn), None);
+    assert_eq!(rep.miss_rate_for(ModelFamily::Transformer), None);
+}
+
+/// The batch-rewritten graph is a first-class UMF citizen: it encodes and
+/// decodes with its multiplied batch dimension intact.
+#[test]
+fn batched_graph_roundtrips_through_umf() {
+    for name in ["bert-base", "resnet50"] {
+        let g = zoo::by_name(name).unwrap();
+        let b4 = builder::batched(&g, 4);
+        let bytes = encode_model(&b4, 1, 2, 3).encode();
+        let back = decode_model(&Frame::decode(&bytes).unwrap()).unwrap();
+        assert_eq!(back.layers.len(), b4.layers.len(), "{name}");
+        assert_eq!(back.total_ops(), 4 * g.total_ops(), "{name}");
+        assert_eq!(back.name, format!("{name}@b4"));
+        for (a, b) in b4.layers.iter().zip(&back.layers) {
+            assert_eq!(a.shape, b.shape, "{name}/{}", a.name);
+            assert_eq!(a.param_bytes, b.param_bytes, "{name}/{}", a.name);
+        }
+    }
+}

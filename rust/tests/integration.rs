@@ -194,9 +194,10 @@ fn balancer_spreads_load() {
     let heavy = registry.id_of("vgg16").unwrap();
     let light = registry.id_of("mobilenetv2").unwrap();
     let mut lb = LoadBalancer::new(DispatchPolicy::LeastLoaded);
+    lb.register_registry(&registry);
     for i in 0..8 {
         let model = if i < 2 { heavy } else { light };
-        lb.submit(WorkloadRequest::new(i, model, i * 100), 0);
+        lb.submit(WorkloadRequest::new(i, model, i * 100), 0).unwrap();
     }
     let mut clusters: Vec<SvCluster> =
         (0..2).map(|i| SvCluster::new(i, &hw, SchedulerKind::Has, SimConfig::default())).collect();
