@@ -18,7 +18,7 @@ use hsv::config::{HardwareConfig, SimConfig};
 use hsv::model::ModelFamily;
 use hsv::report;
 use hsv::sched::SchedulerKind;
-use hsv::serve::{BatchPolicy, ServeConfig, ServeEngine, SloPolicy};
+use hsv::serve::{AdmissionPolicy, BatchPolicy, ServeConfig, ServeEngine, SloPolicy};
 use hsv::workload::{ArrivalModel, WorkloadSpec};
 
 fn main() {
@@ -61,8 +61,12 @@ fn main() {
     // ------------------------------------------------------------------
     let mut reports = Vec::new();
     for sched in [SchedulerKind::Has, SchedulerKind::RoundRobin] {
-        let cfg =
-            ServeConfig { policy: DispatchPolicy::LeastLoaded, slo, batch: BatchPolicy::Off };
+        let cfg = ServeConfig {
+            policy: DispatchPolicy::LeastLoaded,
+            slo,
+            batch: BatchPolicy::Off,
+            admission: AdmissionPolicy::Open,
+        };
         let mut engine = ServeEngine::new(hw.clone(), sched, sim.clone(), cfg);
         let rep = engine.run(&wl);
         print!("{}", report::summarize_serve(&rep));
@@ -121,13 +125,14 @@ fn main() {
     // exactly where the flash crowd needs it.
     // ------------------------------------------------------------------
     let mut batched_engine = ServeEngine::new(
-        hw,
+        hw.clone(),
         SchedulerKind::Has,
-        sim,
+        sim.clone(),
         ServeConfig {
             policy: DispatchPolicy::LeastLoaded,
             slo,
             batch: BatchPolicy::SloAware { max_batch: 8 },
+            admission: AdmissionPolicy::Open,
         },
     );
     let batched = batched_engine.run(&wl);
@@ -151,9 +156,67 @@ fn main() {
         batched.fused_batches
     );
 
+    // ------------------------------------------------------------------
+    // 6. Shed load under a heavier flash crowd.
+    //
+    // Crank the crowd to a sustained overload (4x denser normal gaps, 10x
+    // bursts) and the fleet cannot serve everyone in time no matter how it
+    // schedules: Open admission serves doomed requests late, burning cycles
+    // that feasible requests needed. Deadline-feasible admission estimates
+    // each request's service-time floor from its task graph plus the live
+    // backlog, sheds requests whose deadline is already unreachable, and
+    // defers borderline ones until headroom recovers — goodput rises and
+    // the users the fleet *chose* to serve see far fewer misses.
+    // ------------------------------------------------------------------
+    let crowd = WorkloadSpec::ratio(0.5, 120, 42)
+        .with_mean_interarrival(100_000.0)
+        .with_arrivals(ArrivalModel::bursty(100_000.0, 10_000.0))
+        .generate();
+    let mut shed_reports = Vec::new();
+    for admission in [AdmissionPolicy::Open, AdmissionPolicy::DeadlineFeasible] {
+        let mut engine = ServeEngine::new(
+            hw.clone(),
+            SchedulerKind::Has,
+            sim.clone(),
+            ServeConfig {
+                policy: DispatchPolicy::LeastLoaded,
+                slo,
+                batch: BatchPolicy::Off,
+                admission,
+            },
+        );
+        shed_reports.push(engine.run(&crowd));
+    }
+    let (open, shedding) = (&shed_reports[0], &shed_reports[1]);
+    println!("\nOpen vs deadline-feasible admission under a 4x flash crowd:");
+    println!(
+        "  goodput        {:>8.3} TOPS vs {:>8.3} TOPS",
+        open.goodput_tops(),
+        shedding.goodput_tops()
+    );
+    println!(
+        "  admitted miss  {:>8.2} %  vs {:>8.2} %",
+        open.admitted_miss_rate() * 100.0,
+        shedding.admitted_miss_rate() * 100.0
+    );
+    println!(
+        "  all-requests miss {:>5.2} %  vs {:>8.2} %  (shed count as misses)",
+        open.miss_rate() * 100.0,
+        shedding.miss_rate() * 100.0
+    );
+    println!(
+        "  shed {:>4} of {} ({:.1}%) | deferred {} times",
+        shedding.shed.len(),
+        crowd.requests.len(),
+        shedding.shed_rate() * 100.0,
+        shedding.deferred
+    );
+
     // Machine-readable copy for dashboards / regression tracking.
     let path = report::save_serve_report("serve_datacenter_has", has).expect("write report");
     let path_b = report::save_serve_report("serve_datacenter_has_batched", &batched)
         .expect("write batched report");
-    println!("\nwrote {path}\nwrote {path_b}");
+    let path_a = report::save_serve_report("serve_datacenter_has_admission", shedding)
+        .expect("write admission report");
+    println!("\nwrote {path}\nwrote {path_b}\nwrote {path_a}");
 }

@@ -74,6 +74,49 @@ pub struct ClusterStatus {
     pub makespan: Cycle,
 }
 
+/// Aggregate backlog estimate across the whole fleet — the status table
+/// ([`LoadBalancer::status`]) folded down to the congestion signals the
+/// serve-layer admission stage consumes. All figures are *estimates* read
+/// without mutating the clusters, exactly what the RISC-V controller can
+/// observe at that cycle.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Backlog {
+    /// Requests assigned to clusters but not yet admitted by their
+    /// schedulers, summed across the fleet.
+    pub queued_requests: usize,
+    /// Tasks of admitted requests still waiting in cluster queues, summed
+    /// across the fleet.
+    pub inflight_tasks: usize,
+    /// Estimated outstanding work in cycles, summed across the fleet.
+    pub total_outstanding: u64,
+    /// Outstanding estimate of the least-loaded cluster — the queueing a
+    /// new request would see under least-loaded dispatch.
+    pub min_outstanding: u64,
+}
+
+impl Backlog {
+    /// An idle fleet (the admission stage's zero point).
+    pub fn idle() -> Backlog {
+        Backlog::default()
+    }
+
+    /// Aggregate queue depth in work items: queued requests plus in-flight
+    /// tasks. The PriorityThreshold admission knob compares against this.
+    pub fn queue_depth(&self) -> usize {
+        self.queued_requests + self.inflight_tasks
+    }
+
+    /// Account for a request admitted *this epoch* but not yet visible in
+    /// the status table (it reaches a cluster at the next dispatch step), so
+    /// same-cycle admission decisions see the load their predecessors just
+    /// added rather than a stale snapshot.
+    pub fn note_admitted(&mut self, outstanding_cycles: u64) {
+        self.queued_requests += 1;
+        self.total_outstanding = self.total_outstanding.saturating_add(outstanding_cycles);
+        self.min_outstanding = self.min_outstanding.saturating_add(outstanding_cycles);
+    }
+}
+
 /// The load balancer: request table + status view + dispatch.
 #[derive(Debug)]
 pub struct LoadBalancer {
@@ -259,6 +302,18 @@ impl LoadBalancer {
             .count()
     }
 
+    /// Fold the status table into one aggregate [`Backlog`] estimate — the
+    /// congestion signal the serve-layer admission stage decides on.
+    pub fn backlog(clusters: &[SvCluster], registry: &ModelRegistry) -> Backlog {
+        let rows = Self::status(clusters, registry);
+        Backlog {
+            queued_requests: rows.iter().map(|r| r.queued_requests).sum(),
+            inflight_tasks: rows.iter().map(|r| r.inflight_tasks).sum(),
+            total_outstanding: rows.iter().map(|r| r.outstanding_cycles).sum(),
+            min_outstanding: rows.iter().map(|r| r.outstanding_cycles).min().unwrap_or(0),
+        }
+    }
+
     /// Snapshot the status table (one row per cluster) for online dispatch
     /// decisions and serving telemetry.
     pub fn status(clusters: &[SvCluster], registry: &ModelRegistry) -> Vec<ClusterStatus> {
@@ -371,6 +426,27 @@ mod tests {
         // high-priority one, despite being submitted second.
         assert_eq!(lb.request_table[1].cluster, Some(0));
         assert_eq!(lb.request_table[0].cluster, Some(1));
+    }
+
+    #[test]
+    fn backlog_aggregates_status_and_tracks_epoch_admissions() {
+        let reg = ModelRegistry::standard();
+        let mut cs = clusters(2);
+        assert_eq!(LoadBalancer::backlog(&cs, &reg), Backlog::idle());
+        let vgg = reg.id_of("vgg16").unwrap();
+        cs[0].assign(WorkloadRequest::new(1, vgg, 0));
+        let b = LoadBalancer::backlog(&cs, &reg);
+        assert_eq!(b.queued_requests, 1);
+        assert_eq!(b.queue_depth(), 1);
+        assert!(b.total_outstanding > 0, "queued work must show up in the estimate");
+        assert_eq!(b.min_outstanding, 0, "cluster 1 is idle");
+        // Same-epoch admissions are folded in before the status table can
+        // see them.
+        let mut b2 = b;
+        b2.note_admitted(500);
+        assert_eq!(b2.queue_depth(), 2);
+        assert_eq!(b2.min_outstanding, 500);
+        assert_eq!(b2.total_outstanding, b.total_outstanding + 500);
     }
 
     #[test]

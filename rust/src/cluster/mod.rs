@@ -35,12 +35,17 @@ impl SvCluster {
 
     /// Assign a request to this cluster (load-balancer step 5).
     pub fn assign(&mut self, req: WorkloadRequest) {
-        // Keep sorted by arrival (assignments come in arrival order anyway).
-        debug_assert!(
-            self.pending.last().map(|r| r.arrival <= req.arrival).unwrap_or(true),
-            "assignments must arrive in order"
-        );
-        self.pending.push(req);
+        // Keep the un-admitted tail sorted by arrival. Assignments normally
+        // come in arrival order (a plain push); the serve layer's admission
+        // stage can re-release a *deferred* request after younger traffic
+        // was already assigned, in which case it slots back in by arrival —
+        // never before the admission cursor (those entries are already in
+        // the scheduler). Equal arrivals keep assignment order.
+        let mut i = self.pending.len();
+        while i > self.next_pending && self.pending[i - 1].arrival > req.arrival {
+            i -= 1;
+        }
+        self.pending.insert(i, req);
     }
 
     /// Estimated outstanding work in cycles (for least-loaded balancing):
@@ -202,6 +207,24 @@ mod tests {
         c.run(&reg);
         let done = &c.state.completed[0];
         assert!(done.end > arrival);
+    }
+
+    #[test]
+    fn out_of_order_assignment_slots_back_in_by_arrival() {
+        // The admission stage can re-release a deferred request after
+        // younger traffic was assigned; the cluster must still admit by
+        // arrival and complete everything.
+        let reg = registry();
+        let hw = HardwareConfig::small();
+        let mut c = SvCluster::new(0, &hw, SchedulerKind::Has, SimConfig::default());
+        let alex = reg.id_of("alexnet").unwrap();
+        c.assign(WorkloadRequest::new(1, alex, 5_000));
+        c.assign(WorkloadRequest::new(2, alex, 100)); // deferred, older arrival
+        c.assign(WorkloadRequest::new(3, alex, 5_000)); // equal arrivals keep order
+        assert_eq!(c.queued_pending(), 3);
+        assert_eq!(c.next_event(), Some(100), "oldest arrival drives the next event");
+        c.run(&reg);
+        assert_eq!(c.completed(), 3);
     }
 
     #[test]

@@ -27,7 +27,10 @@
 //!   deadline-miss rate, goodput in a [`serve::ServeReport`]). Includes
 //!   dynamic same-model batching ([`serve::batch`]): requests coalesce into
 //!   fused multi-batch tasks under size-capped or SLO-aware policies, with
-//!   per-request result fan-out.
+//!   per-request result fan-out — and admission control / load shedding
+//!   ([`serve::admission`]): priority-threshold and deadline-feasibility
+//!   policies shed or defer over-SLO work under flash crowds instead of
+//!   serving it late.
 //! - [`gpu`] — the Titan RTX reference model used for Fig 1 and Fig 10.
 //! - [`dse`] — the design-space-exploration driver (paper §VI-C).
 //! - `runtime` (feature `pjrt`) — the PJRT functional-execution path: loads

@@ -17,7 +17,7 @@ use hsv::gpu;
 use hsv::model::zoo;
 use hsv::report::{self, timeline};
 use hsv::sched::SchedulerKind;
-use hsv::serve::{BatchPolicy, ServeConfig, ServeEngine, SloPolicy};
+use hsv::serve::{AdmissionPolicy, BatchPolicy, ServeConfig, ServeEngine, SloPolicy};
 use hsv::umf;
 use hsv::util::cli::Args;
 use hsv::workload::{suite_33, ArrivalModel, WorkloadSpec};
@@ -27,7 +27,8 @@ const USAGE: &str = "hsv <simulate|serve|dse|gpu|timeline|convert|zoo|pjrt> [--o
   serve    --ratio 0.5 --requests 200 --seed 42 --sched has|rr --policy ll|rr
            --traffic poisson|diurnal|bursty|ramp [--mean-gap 40000] [--slo-slack 4]
            [--batch CAP] [--batch-policy slo|size] [--batch-wait CYCLES]
-           [--clusters N] [--small] [--out out/serve.json]
+           [--admission open|priority|deadline] [--admission-threshold DEPTH]
+           [--admission-floor PRIO] [--clusters N] [--small] [--out out/serve.json]
   dse      --requests 12 [--threads N] [--out out/dse.csv]
   gpu      --ratio 0.5 --requests 40 --seed 42
   timeline --ratio 0.5 --requests 6 --seed 1 --sched has [--width 100]
@@ -153,7 +154,27 @@ fn serve(args: &Args) {
             }
         }
     };
-    let mut engine = ServeEngine::new(hw, sched, sim, ServeConfig { policy, slo, batch });
+    // Admission control: open (dispatch everything) unless a policy is
+    // named. The priority policy sheds below --admission-floor while the
+    // fleet's queue depth exceeds --admission-threshold; the deadline policy
+    // sheds/defers requests whose deadline is already infeasible.
+    let admission = match args.str("admission", "open").as_str() {
+        "open" => AdmissionPolicy::Open,
+        "priority" => AdmissionPolicy::PriorityThreshold {
+            floor: u32::try_from(args.u64("admission-floor", 1)).unwrap_or_else(|_| {
+                eprintln!("--admission-floor must fit in a u32");
+                std::process::exit(2);
+            }),
+            max_depth: args.usize("admission-threshold", 8),
+        },
+        "deadline" => AdmissionPolicy::DeadlineFeasible,
+        other => {
+            eprintln!("unknown --admission '{other}' (open|priority|deadline)");
+            std::process::exit(2);
+        }
+    };
+    let mut engine =
+        ServeEngine::new(hw, sched, sim, ServeConfig { policy, slo, batch, admission });
     let r = engine.run(&wl);
     print!("{}", report::summarize_serve(&r));
     if let Some(out) = args.str_opt("out") {

@@ -102,6 +102,16 @@ pub fn summarize_serve(report: &ServeReport) -> String {
             report.fused_batches
         ));
     }
+    if report.admission.enabled() {
+        s.push_str(&format!(
+            "  admission: {} | shed {} ({:.1}%) | deferred {} | admitted miss {:.2}%\n",
+            report.admission.name(),
+            report.shed.len(),
+            report.shed_rate() * 100.0,
+            report.deferred,
+            report.admitted_miss_rate() * 100.0
+        ));
+    }
     if let Some(l) = report.latency_summary() {
         let to_ms = |c: f64| c / (report.clock_ghz * 1e6);
         s.push_str(&format!(

@@ -6,6 +6,8 @@
 //! against RTL.
 
 use super::state::{ProcState, QueuedTask};
+use crate::config::ClusterConfig;
+use crate::model::ModelGraph;
 use crate::ops::{OpClass, TaskShape};
 use crate::sim::{systolic, vector, Cycle, ProcKind};
 
@@ -43,6 +45,54 @@ pub fn task_ops(task: &QueuedTask) -> u64 {
 /// (64 B/cycle crossbar port).
 pub fn dma_cycles(bytes: u64) -> Cycle {
     8 + bytes.div_ceil(64)
+}
+
+/// Roofline-style *lower bound* on one model's isolated service time on a
+/// single cluster, in cycles — the serve-layer admission stage's
+/// `calcCompTime` analogue for whole requests.
+///
+/// Each layer is charged `ops / peak_class_ops_per_cycle` (the cluster's
+/// aggregate throughput for that op class), and layers compose along the
+/// dependency critical path. Both choices are deliberately *optimistic*:
+///
+/// - a layer can never run faster than the class peak, even under HAS
+///   sub-layer partitioning across every capable processor;
+/// - a layer can never start before its dependencies complete;
+/// - DMA, scheduling overhead, queueing, fill/drain and SFU costs are all
+///   ignored (they only add cycles).
+///
+/// The bound therefore never exceeds the simulated isolated latency, so an
+/// admission policy that sheds a request because `floor > deadline headroom`
+/// never sheds work the cluster could actually have finished in time — the
+/// no-false-positive property `rust/tests/admission.rs` asserts.
+pub fn service_floor_cycles(
+    graph: &ModelGraph,
+    cluster: &ClusterConfig,
+    vp_runs_array_ops: bool,
+) -> Cycle {
+    // Peak ops/cycle per class (1 MAC = 2 ops, the Table I convention).
+    let sa = &cluster.systolic;
+    let vp = &cluster.vector;
+    let vector_peak = 2 * vp.lanes as u64 * vp.count as u64;
+    let mut array_peak = 2 * (sa.dim as u64).pow(2) * sa.count as u64;
+    if vp_runs_array_ops {
+        array_peak += vector_peak;
+    }
+    let mut end = vec![0u64; graph.layers.len()];
+    let mut floor = 0u64;
+    for (i, l) in graph.layers.iter().enumerate() {
+        let start = l.deps.iter().map(|&d| end[d as usize]).max().unwrap_or(0);
+        let dur = match l.class() {
+            OpClass::Array => l.ops() / array_peak.max(1),
+            OpClass::Vector => l.ops() / vector_peak.max(1),
+            // Data movement may be skipped entirely when the tensor is
+            // already resident, so it contributes nothing to the bound.
+            OpClass::Data => 0,
+        };
+        end[i] = start + dur;
+        floor = floor.max(end[i]);
+    }
+    floor
 }
 
 #[cfg(test)]
@@ -121,5 +171,63 @@ mod tests {
     fn dma_linear_in_bytes() {
         assert_eq!(dma_cycles(0), 8);
         assert_eq!(dma_cycles(6400), 8 + 100);
+    }
+
+    /// The admission floor must be a genuine lower bound: for every zoo
+    /// model, on every scheduler, the simulated isolated latency is at least
+    /// the floor. (This is the property the DeadlineFeasible admission
+    /// policy's no-false-positive guarantee rests on.)
+    #[test]
+    fn service_floor_never_exceeds_simulated_isolated_latency() {
+        use crate::config::{HardwareConfig, SimConfig};
+        use crate::coordinator::Coordinator;
+        use crate::sched::SchedulerKind;
+        use crate::workload::{ModelRegistry, Workload, WorkloadRequest};
+        let registry = ModelRegistry::standard();
+        let hw = HardwareConfig::small();
+        let sim = SimConfig::default();
+        for sched in [SchedulerKind::Has, SchedulerKind::RoundRobin] {
+            for id in 0..registry.len() as u32 {
+                let g = registry.graph(id);
+                let floor = service_floor_cycles(g, &hw.cluster, sim.vp_runs_array_ops);
+                assert!(floor > 0, "{}: zero floor for a real model", g.name);
+                let wl = Workload {
+                    name: format!("floor_{id}"),
+                    cnn_ratio: 0.0,
+                    seed: 0,
+                    requests: vec![WorkloadRequest::new(0, id, 0)],
+                    registry: registry.clone(),
+                };
+                let rep = Coordinator::new(hw.clone(), sched, sim.clone()).run(&wl);
+                assert!(
+                    floor <= rep.latencies[0],
+                    "{} ({sched:?}): floor {floor} exceeds simulated latency {}",
+                    g.name,
+                    rep.latencies[0]
+                );
+            }
+        }
+    }
+
+    /// An empty task graph has a zero floor (nothing to compute), and the
+    /// bound is monotone in the hardware: a bigger cluster never raises it.
+    #[test]
+    fn service_floor_edge_cases() {
+        use crate::config::HardwareConfig;
+        use crate::model::{zoo, ModelFamily, ModelGraph};
+        let empty =
+            ModelGraph { name: "empty".into(), family: ModelFamily::Cnn, layers: Vec::new() };
+        let small = HardwareConfig::small();
+        let big = HardwareConfig::gpu_comparable();
+        assert_eq!(service_floor_cycles(&empty, &small.cluster, true), 0);
+        for g in zoo::all_models() {
+            let s = service_floor_cycles(&g, &small.cluster, true);
+            let b = service_floor_cycles(&g, &big.cluster, true);
+            assert!(b <= s, "{}: bigger cluster raised the floor ({b} > {s})", g.name);
+            // Turning the VP-runs-array-ops flexibility off only removes
+            // array-class throughput, so the floor can only grow.
+            let rigid = service_floor_cycles(&g, &small.cluster, false);
+            assert!(rigid >= s, "{}: vp flexibility off lowered the floor", g.name);
+        }
     }
 }

@@ -1,0 +1,569 @@
+//! Admission control and load shedding between request release and dispatch.
+//!
+//! The paper's load balancer dispatches every arriving request, which is the
+//! right call in the backlogged throughput-measurement regime but exactly
+//! wrong under the flash crowds the bursty MMPP traffic model generates:
+//! once the fleet is oversubscribed, serving a request that is already
+//! doomed to miss its deadline burns systolic-array cycles that a feasible
+//! request needed. "No DNN Left Behind" (arXiv:1901.06887) attacks this with
+//! deadline-aware admission; the GPU-datacenter survey (arXiv:2205.11913)
+//! names admission/load shedding a core scheduling gap. This module is the
+//! serve-layer stage that closes it.
+//!
+//! ## Shed vs defer
+//!
+//! The stage has exactly three verdicts for a released request:
+//!
+//! - **Admit** — forward to the batcher/dispatch path unchanged.
+//! - **Shed** — drop the request permanently. From the user's view a shed
+//!   request is a deadline miss that cost zero accelerator cycles; the
+//!   [`crate::serve::ServeReport`] counts it against the all-requests miss
+//!   rate but excludes it from admitted-only latency percentiles.
+//! - **Defer** — re-enqueue with a *delayed release*: the request re-enters
+//!   admission at a future cycle, when backlog may have drained. Deferring
+//!   is only chosen while the deadline is still reachable from the deferred
+//!   release cycle; a request deferred past its last feasible start — e.g.
+//!   one parked beyond the end of the trace while the backlog never drains —
+//!   is shed with [`ShedReason::HeadroomExhausted`] at its next release.
+//!   An admitted deferral dispatches under its *re-release* cycle (the
+//!   cluster must never book work before the stage released it); latency
+//!   and deadline are still scored from the true trace arrival, so the
+//!   defer wait counts against the user-visible latency.
+//!
+//! ## Policies
+//!
+//! - [`AdmissionPolicy::Open`]: today's behavior, bit for bit. The serving
+//!   engine skips the stage entirely, so report JSON stays byte-identical
+//!   to the pre-admission engine.
+//! - [`AdmissionPolicy::PriorityThreshold`]: shed requests whose
+//!   [`crate::workload::WorkloadRequest::priority`] is *below* `floor`
+//!   whenever the fleet's aggregate queue depth
+//!   ([`crate::balancer::Backlog::queue_depth`]) *exceeds* `max_depth`.
+//!   Boundary semantics are deliberately exact: `priority == floor` and
+//!   `depth == max_depth` both still admit.
+//! - [`AdmissionPolicy::DeadlineFeasible`]: estimate the request's remaining
+//!   service time from its task graph via
+//!   [`crate::sched::estimate::service_floor_cycles`] (a roofline critical-
+//!   path *lower bound* — deliberately optimistic, so infeasibility verdicts
+//!   are never false positives) and compare arrival-relative deadline
+//!   headroom against that floor plus the current backlog drain estimate.
+//!
+//! ## The estimator's backlog assumption
+//!
+//! The feasibility test charges a queueing delay of
+//! `min_outstanding / compute_procs`: the least-loaded cluster's estimated
+//! outstanding proc-cycles ([`crate::balancer::Backlog::min_outstanding`])
+//! spread over that cluster's compute processors. This assumes (a) the new
+//! request lands on the least-loaded cluster — true under least-loaded
+//! dispatch, pessimistic under round-robin — and (b) outstanding work drains
+//! at full parallel efficiency, which is optimistic. The two biases pull in
+//! opposite directions; what matters for the admission contract is that the
+//! *service floor* term alone is a strict lower bound, so a
+//! [`ShedReason::DeadlineInfeasible`] verdict (which ignores backlog) is
+//! always safe, while backlog-driven verdicts defer first and only shed once
+//! the last feasible start has passed.
+
+use crate::balancer::Backlog;
+use crate::config::{ClusterConfig, HardwareConfig, SimConfig};
+use crate::model::ModelFamily;
+use crate::sched::estimate::service_floor_cycles;
+use crate::serve::slo::SloPolicy;
+use crate::sim::Cycle;
+use crate::workload::{ModelRegistry, WorkloadRequest};
+use std::collections::{BTreeMap, HashMap};
+
+/// A deferred request may be postponed at most this many times before the
+/// stage sheds it. The absolute last-feasible-start bound already guarantees
+/// termination; this cap just keeps pathological SLO configurations from
+/// churning the event clock.
+pub const MAX_DEFERRALS: u32 = 16;
+
+/// A deferral postpones the release by `deadline_for(family) / DIVISOR`
+/// cycles (clamped so the deferred release never passes the last feasible
+/// start): long enough for real backlog to drain, short enough to retry
+/// several times within one deadline budget.
+pub const DEFER_QUANTUM_DIVISOR: u64 = 8;
+
+/// Admission policy of the serving engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AdmissionPolicy {
+    /// Every request is dispatched (the pre-admission engine, bit for bit).
+    #[default]
+    Open,
+    /// Shed requests with `priority < floor` while the aggregate queue depth
+    /// exceeds `max_depth` work items. Requests at the floor always admit.
+    PriorityThreshold { floor: u32, max_depth: usize },
+    /// Shed requests whose deadline is unreachable even on an idle cluster;
+    /// defer (delayed re-release) those that are only infeasible because of
+    /// current backlog, shedding once the last feasible start passes.
+    DeadlineFeasible,
+}
+
+impl AdmissionPolicy {
+    /// Short label used in reports and CLI output.
+    pub fn name(&self) -> &'static str {
+        match self {
+            AdmissionPolicy::Open => "open",
+            AdmissionPolicy::PriorityThreshold { .. } => "priority",
+            AdmissionPolicy::DeadlineFeasible => "deadline",
+        }
+    }
+
+    /// Is any admission filtering configured?
+    pub fn enabled(&self) -> bool {
+        !matches!(self, AdmissionPolicy::Open)
+    }
+}
+
+/// Why a request was shed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedReason {
+    /// PriorityThreshold: priority below the floor while the fleet was over
+    /// the queue-depth knob.
+    BelowPriorityFloor,
+    /// DeadlineFeasible: the deadline is unreachable even on an idle
+    /// cluster (service floor alone exceeds the remaining headroom).
+    DeadlineInfeasible,
+    /// DeadlineFeasible: the deadline was reachable in isolation, but the
+    /// backlog never drained before the last feasible start passed (always
+    /// preceded by at least one deferral unless the headroom was already
+    /// gone at first sight).
+    HeadroomExhausted,
+}
+
+/// How a *served* request traveled through the admission stage. Shed
+/// requests never complete, so they are recorded as [`ShedRequest`]s
+/// instead.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Disposition {
+    /// Admitted on first sight.
+    #[default]
+    Admitted,
+    /// Deferred at least once before being admitted.
+    Deferred,
+}
+
+/// One shed request — the load the stage refused, kept for reporting.
+#[derive(Debug, Clone, Copy)]
+pub struct ShedRequest {
+    pub request_id: u64,
+    pub model_id: u32,
+    pub family: ModelFamily,
+    pub arrival: Cycle,
+    pub priority: u32,
+    /// Cycle at which the stage took the shed decision.
+    pub decided_at: Cycle,
+    /// Absolute completion deadline the request could no longer meet.
+    pub deadline: Cycle,
+    /// Times the request was deferred before being shed.
+    pub deferrals: u32,
+    pub reason: ShedReason,
+}
+
+/// One admission verdict. [`AdmissionController::decide`] exposes the raw
+/// decision function so policy boundaries are unit-testable without driving
+/// the whole serving engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Decision {
+    Admit,
+    /// Re-enter admission at cycle `until` (strictly in the future).
+    Defer { until: Cycle },
+    Shed(ShedReason),
+}
+
+/// The admission stage between request release and the batcher/dispatch
+/// path. Owns the deferred-release queue and the shed ledger.
+#[derive(Debug)]
+pub struct AdmissionController {
+    policy: AdmissionPolicy,
+    slo: SloPolicy,
+    cluster: ClusterConfig,
+    vp_runs_array_ops: bool,
+    /// Compute processors per cluster — spreads the backlog estimate into a
+    /// wall-clock drain time.
+    compute_procs: u64,
+    /// Service-floor cache per base model id (admission runs before
+    /// batching, so only base ids pass through).
+    floors: HashMap<u32, Cycle>,
+    /// Deferred requests keyed by (release cycle, request id) — BTreeMap so
+    /// re-releases happen in a deterministic order.
+    deferred: BTreeMap<(Cycle, u64), WorkloadRequest>,
+    /// Deferral count per request id (also consulted for the served-request
+    /// disposition tag).
+    deferral_counts: HashMap<u64, u32>,
+    /// True trace arrival of every deferred request: an admitted deferral is
+    /// re-stamped to its re-release cycle before it reaches the cluster (the
+    /// simulator must not book work before the stage released it), so the
+    /// original arrival is kept here for latency/deadline accounting.
+    original_arrivals: HashMap<u64, Cycle>,
+    shed: Vec<ShedRequest>,
+    defer_events: u64,
+}
+
+impl AdmissionController {
+    pub fn new(
+        policy: AdmissionPolicy,
+        slo: SloPolicy,
+        hw: &HardwareConfig,
+        sim: &SimConfig,
+    ) -> AdmissionController {
+        let cluster = hw.cluster;
+        AdmissionController {
+            policy,
+            slo,
+            cluster,
+            vp_runs_array_ops: sim.vp_runs_array_ops,
+            compute_procs: (cluster.systolic.count + cluster.vector.count) as u64,
+            floors: HashMap::new(),
+            deferred: BTreeMap::new(),
+            deferral_counts: HashMap::new(),
+            original_arrivals: HashMap::new(),
+            shed: Vec::new(),
+            defer_events: 0,
+        }
+    }
+
+    /// Is any admission filtering configured? (The serving engine skips the
+    /// stage entirely when not, preserving pre-admission behavior exactly.)
+    pub fn enabled(&self) -> bool {
+        self.policy.enabled()
+    }
+
+    /// Cached roofline service floor for a base model.
+    fn floor(&mut self, model_id: u32, registry: &ModelRegistry) -> Cycle {
+        let cluster = self.cluster;
+        let vp = self.vp_runs_array_ops;
+        *self
+            .floors
+            .entry(model_id)
+            .or_insert_with(|| service_floor_cycles(registry.graph(model_id), &cluster, vp))
+    }
+
+    /// The raw admission decision for `req` at cycle `now`, given it has
+    /// already been deferred `deferrals` times. Pure in everything but the
+    /// floor cache; exposed for boundary tests.
+    pub fn decide(
+        &mut self,
+        req: &WorkloadRequest,
+        now: Cycle,
+        deferrals: u32,
+        backlog: &Backlog,
+        registry: &ModelRegistry,
+    ) -> Decision {
+        match self.policy {
+            AdmissionPolicy::Open => Decision::Admit,
+            AdmissionPolicy::PriorityThreshold { floor, max_depth } => {
+                if req.priority < floor && backlog.queue_depth() > max_depth {
+                    Decision::Shed(ShedReason::BelowPriorityFloor)
+                } else {
+                    Decision::Admit
+                }
+            }
+            AdmissionPolicy::DeadlineFeasible => {
+                let family = registry.graph(req.model_id).family;
+                let floor = self.floor(req.model_id, registry);
+                let deadline = req.arrival.saturating_add(self.slo.deadline_for(family));
+                if now.saturating_add(floor) > deadline {
+                    // Even an idle cluster cannot finish in time; since the
+                    // floor is a lower bound, this is never a false positive.
+                    return Decision::Shed(ShedReason::DeadlineInfeasible);
+                }
+                let wait = backlog.min_outstanding / self.compute_procs.max(1);
+                if now.saturating_add(wait).saturating_add(floor) <= deadline {
+                    return Decision::Admit;
+                }
+                // Feasible in isolation but not behind the current backlog:
+                // defer while a start before `latest_start` is still ahead.
+                let latest_start = deadline - floor;
+                if latest_start <= now || deferrals >= MAX_DEFERRALS {
+                    return Decision::Shed(ShedReason::HeadroomExhausted);
+                }
+                let quantum = (self.slo.deadline_for(family) / DEFER_QUANTUM_DIVISOR).max(1);
+                Decision::Defer { until: now.saturating_add(quantum).min(latest_start) }
+            }
+        }
+    }
+
+    /// Offer one released (or re-released) request. Returns the request when
+    /// admitted; records a shed or a deferral otherwise. Admissions are
+    /// folded into `backlog` so later same-epoch decisions see them.
+    pub fn offer(
+        &mut self,
+        req: WorkloadRequest,
+        now: Cycle,
+        backlog: &mut Backlog,
+        registry: &ModelRegistry,
+    ) -> Option<WorkloadRequest> {
+        let deferrals = self.deferral_counts.get(&req.id).copied().unwrap_or(0);
+        match self.decide(&req, now, deferrals, backlog, registry) {
+            Decision::Admit => {
+                let cost = match self.policy {
+                    AdmissionPolicy::DeadlineFeasible => {
+                        // Outstanding estimates are in proc-cycles; the wall-
+                        // clock floor spread back over the cluster's procs.
+                        self.floor(req.model_id, registry).saturating_mul(self.compute_procs)
+                    }
+                    _ => 0,
+                };
+                backlog.note_admitted(cost);
+                let mut out = req;
+                if deferrals > 0 {
+                    // The stage parked this request, so the cluster must not
+                    // book it before the re-release cycle: re-stamp the
+                    // arrival it dispatches under. The trace arrival stays
+                    // available via [`Self::original_arrival`] for latency
+                    // and deadline accounting.
+                    out.arrival = now;
+                }
+                Some(out)
+            }
+            Decision::Defer { until } => {
+                debug_assert!(until > now, "deferred release must be in the future");
+                self.defer_events += 1;
+                *self.deferral_counts.entry(req.id).or_insert(0) += 1;
+                self.original_arrivals.entry(req.id).or_insert(req.arrival);
+                self.deferred.insert((until, req.id), req);
+                None
+            }
+            Decision::Shed(reason) => {
+                let family = registry.graph(req.model_id).family;
+                self.shed.push(ShedRequest {
+                    request_id: req.id,
+                    model_id: req.model_id,
+                    family,
+                    arrival: req.arrival,
+                    priority: req.priority,
+                    decided_at: now,
+                    deadline: req.arrival.saturating_add(self.slo.deadline_for(family)),
+                    deferrals,
+                    reason,
+                });
+                None
+            }
+        }
+    }
+
+    /// Re-offer every deferred request whose release cycle has come.
+    /// Returns the ones admitted this time; the rest re-defer or shed.
+    pub fn poll(
+        &mut self,
+        now: Cycle,
+        backlog: &mut Backlog,
+        registry: &ModelRegistry,
+    ) -> Vec<WorkloadRequest> {
+        let due: Vec<(Cycle, u64)> = self
+            .deferred
+            .range(..=(now, u64::MAX))
+            .map(|(&key, _)| key)
+            .collect();
+        due.into_iter()
+            .filter_map(|key| {
+                let req = self.deferred.remove(&key).expect("due key vanished");
+                self.offer(req, now, backlog, registry)
+            })
+            .collect()
+    }
+
+    /// Earliest deferred release — a wake-up point for the serving engine's
+    /// event clock. `None` when nothing is deferred.
+    pub fn next_release(&self) -> Option<Cycle> {
+        self.deferred.keys().next().map(|&(release, _)| release)
+    }
+
+    /// Requests currently parked on a deferred release.
+    pub fn pending(&self) -> usize {
+        self.deferred.len()
+    }
+
+    /// The shed ledger, in decision order.
+    pub fn shed(&self) -> &[ShedRequest] {
+        &self.shed
+    }
+
+    /// Times `request_id` was deferred (0 = admitted on first sight).
+    pub fn deferrals_of(&self, request_id: u64) -> u32 {
+        self.deferral_counts.get(&request_id).copied().unwrap_or(0)
+    }
+
+    /// The true trace arrival of a request the stage deferred (an admitted
+    /// deferral dispatches under its re-release cycle), `None` if it was
+    /// never deferred.
+    pub fn original_arrival(&self, request_id: u64) -> Option<Cycle> {
+        self.original_arrivals.get(&request_id).copied()
+    }
+
+    /// Disposition tag for a served request.
+    pub fn disposition_of(&self, request_id: u64) -> Disposition {
+        if self.deferrals_of(request_id) > 0 {
+            Disposition::Deferred
+        } else {
+            Disposition::Admitted
+        }
+    }
+
+    /// Total defer decisions taken (one request can contribute several).
+    pub fn defer_events(&self) -> u64 {
+        self.defer_events
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn controller(policy: AdmissionPolicy, slo: SloPolicy) -> AdmissionController {
+        AdmissionController::new(policy, slo, &HardwareConfig::small(), &SimConfig::default())
+    }
+
+    fn req(id: u64, model: u32, arrival: Cycle) -> WorkloadRequest {
+        WorkloadRequest::new(id, model, arrival)
+    }
+
+    #[test]
+    fn open_admits_everything_statelessly() {
+        let reg = ModelRegistry::standard();
+        let mut c = controller(AdmissionPolicy::Open, SloPolicy::default());
+        assert!(!c.enabled());
+        let mut b = Backlog::idle();
+        for i in 0..5 {
+            assert_eq!(c.offer(req(i, 0, 0), 0, &mut b, &reg), Some(req(i, 0, 0)));
+        }
+        assert!(c.shed().is_empty());
+        assert_eq!(c.pending(), 0);
+        assert_eq!(c.defer_events(), 0);
+        assert_eq!(c.next_release(), None);
+    }
+
+    /// Boundary semantics of the priority policy: `depth == max_depth` and
+    /// `priority == floor` both still admit; only strict violations shed.
+    #[test]
+    fn priority_threshold_boundaries_are_exact() {
+        let reg = ModelRegistry::standard();
+        let policy = AdmissionPolicy::PriorityThreshold { floor: 2, max_depth: 4 };
+        let mut c = controller(policy, SloPolicy::default());
+        let at_depth = Backlog { queued_requests: 4, ..Backlog::idle() };
+        let over_depth = Backlog { queued_requests: 5, ..Backlog::idle() };
+        let low = req(0, 0, 0).with_priority(1);
+        let at_floor = req(1, 0, 0).with_priority(2);
+        // depth at the knob: everyone admits
+        assert_eq!(c.decide(&low, 0, 0, &at_depth, &reg), Decision::Admit);
+        // depth over the knob: below-floor sheds, at-floor admits
+        assert_eq!(
+            c.decide(&low, 0, 0, &over_depth, &reg),
+            Decision::Shed(ShedReason::BelowPriorityFloor)
+        );
+        assert_eq!(c.decide(&at_floor, 0, 0, &over_depth, &reg), Decision::Admit);
+    }
+
+    /// Same-epoch admissions raise the depth other same-epoch decisions
+    /// see, so a cycle-0 burst cannot slip under the knob wholesale.
+    #[test]
+    fn same_epoch_admissions_count_toward_the_depth() {
+        let reg = ModelRegistry::standard();
+        let policy = AdmissionPolicy::PriorityThreshold { floor: 1, max_depth: 2 };
+        let mut c = controller(policy, SloPolicy::default());
+        let mut b = Backlog::idle();
+        let mut admitted = Vec::new();
+        for i in 0..6 {
+            let r = req(i, 0, 0).with_priority((i % 2) as u32);
+            if c.offer(r, 0, &mut b, &reg).is_some() {
+                admitted.push(i);
+            }
+        }
+        // depth grows 0,1,2 with the first three admissions; from depth 3 on
+        // only priority-1 requests pass.
+        assert_eq!(admitted, vec![0, 1, 2, 3, 5]);
+        assert_eq!(c.shed().len(), 1);
+        assert_eq!(c.shed()[0].request_id, 4);
+        assert_eq!(c.shed()[0].reason, ShedReason::BelowPriorityFloor);
+    }
+
+    #[test]
+    fn zero_headroom_sheds_as_infeasible() {
+        let reg = ModelRegistry::standard();
+        let mut c = controller(AdmissionPolicy::DeadlineFeasible, SloPolicy::new(0, 0));
+        let d = c.decide(&req(0, 0, 100), 100, 0, &Backlog::idle(), &reg);
+        assert_eq!(d, Decision::Shed(ShedReason::DeadlineInfeasible));
+    }
+
+    #[test]
+    fn idle_fleet_admits_feasible_requests() {
+        let reg = ModelRegistry::standard();
+        let mut c = controller(AdmissionPolicy::DeadlineFeasible, SloPolicy::default());
+        let mut b = Backlog::idle();
+        let r = req(3, 2, 50);
+        assert_eq!(c.offer(r, 50, &mut b, &reg), Some(r));
+        // The admission was folded into the backlog snapshot.
+        assert_eq!(b.queued_requests, 1);
+        assert!(b.min_outstanding > 0);
+    }
+
+    /// A request that is feasible in isolation but parked behind a backlog
+    /// that never drains defers (with a future release) and is eventually
+    /// shed once its last feasible start passes — including when that
+    /// release lands past the end of the trace.
+    #[test]
+    fn defer_then_shed_when_backlog_never_drains() {
+        let reg = ModelRegistry::standard();
+        let mut c = controller(AdmissionPolicy::DeadlineFeasible, SloPolicy::default());
+        // A backlog far larger than any deadline budget. Model 3 (alexnet)
+        // is comfortably feasible in isolation under the default SLO.
+        let mut swamped = Backlog {
+            min_outstanding: u64::MAX / 4,
+            total_outstanding: u64::MAX / 4,
+            ..Backlog::idle()
+        };
+        let r = req(9, 3, 1_000);
+        assert!(c.offer(r, 1_000, &mut swamped, &reg).is_none());
+        assert_eq!(c.pending(), 1, "feasible-in-isolation request must defer, not shed");
+        assert_eq!(c.defer_events(), 1);
+        let mut releases = 0;
+        while c.pending() > 0 {
+            let release = c.next_release().expect("pending request has a release");
+            assert!(releases < 64, "defer loop failed to terminate");
+            releases += 1;
+            let out = c.poll(release, &mut swamped, &reg);
+            assert!(out.is_empty(), "swamped fleet must never admit");
+        }
+        assert_eq!(c.shed().len(), 1);
+        let shed = c.shed()[0];
+        assert_eq!(shed.request_id, 9);
+        assert_eq!(shed.reason, ShedReason::HeadroomExhausted);
+        assert!(shed.deferrals >= 1, "shed must come after at least one deferral");
+        assert!(
+            shed.decided_at <= shed.deadline,
+            "the stage decides before the deadline passes, not after"
+        );
+        assert_eq!(c.disposition_of(9), Disposition::Deferred);
+    }
+
+    /// Deferred releases re-enter in deterministic (release, id) order and
+    /// admit once the backlog drains.
+    #[test]
+    fn deferred_requests_admit_after_backlog_drains() {
+        let reg = ModelRegistry::standard();
+        let mut c = controller(AdmissionPolicy::DeadlineFeasible, SloPolicy::default());
+        let mut swamped = Backlog {
+            min_outstanding: u64::MAX / 4,
+            total_outstanding: u64::MAX / 4,
+            ..Backlog::idle()
+        };
+        assert!(c.offer(req(1, 3, 0), 0, &mut swamped, &reg).is_none());
+        assert!(c.offer(req(2, 3, 0), 0, &mut swamped, &reg).is_none());
+        assert_eq!(c.pending(), 2);
+        let release = c.next_release().unwrap();
+        assert!(release > 0);
+        let mut drained = Backlog::idle();
+        let out = c.poll(release, &mut drained, &reg);
+        assert_eq!(out.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2]);
+        // An admitted deferral dispatches under its re-release cycle — the
+        // cluster must never book work before the stage released it — while
+        // the true trace arrival stays available for scoring.
+        assert!(out.iter().all(|r| r.arrival == release));
+        assert_eq!(c.original_arrival(1), Some(0));
+        assert_eq!(c.original_arrival(7), None, "never-deferred ids have no override");
+        assert_eq!(c.pending(), 0);
+        assert_eq!(c.disposition_of(1), Disposition::Deferred);
+        assert_eq!(c.disposition_of(7), Disposition::Admitted, "unseen ids default to admitted");
+    }
+}

@@ -13,6 +13,10 @@
 //!
 //! 1. **Release** — requests enter the serving path at their arrival cycle,
 //!    never earlier.
+//! 1b. **Admit** — the admission stage ([`admission::AdmissionController`])
+//!    sheds or defers requests the fleet cannot serve in time (skipped
+//!    entirely — bit for bit — when [`AdmissionPolicy::Open`]): shed work
+//!    never costs a cycle, deferred work re-enters release later.
 //! 2. **Coalesce** — the dynamic batcher ([`batch::DynamicBatcher`]) holds
 //!    same-model requests back up to a size cap / wait deadline and emits
 //!    fused multi-batch requests (a pass-through when
@@ -24,9 +28,9 @@
 //!    the RISC-V controller can observe at that cycle.
 //! 4. **Advance** — each cluster takes scheduling decisions only up to the
 //!    current event horizon ([`crate::cluster::SvCluster::run_until`]).
-//! 5. **Clock** — time jumps to the next arrival, the earliest batch-queue
-//!    flush deadline, or the earliest cluster decision point, whichever
-//!    comes first.
+//! 5. **Clock** — time jumps to the next arrival, the earliest deferred
+//!    re-release, the earliest batch-queue flush deadline, or the earliest
+//!    cluster decision point, whichever comes first.
 //!
 //! In the fully backlogged regime (every arrival ≈ 0) the engine reduces
 //! exactly to the offline coordinator — same dispatch order, same scheduler
@@ -36,9 +40,13 @@
 //! [`ServeReport`] scores what a user would feel — p50/p95/p99/p99.9
 //! latency, deadline-miss rate, and goodput — instead of raw makespan.
 
+pub mod admission;
 pub mod batch;
 pub mod slo;
 
+pub use admission::{
+    AdmissionController, AdmissionPolicy, Decision, Disposition, ShedReason, ShedRequest,
+};
 pub use batch::{BatchPolicy, DynamicBatcher, FusedBatch};
 pub use slo::SloPolicy;
 
@@ -61,6 +69,8 @@ pub struct ServeConfig {
     pub slo: SloPolicy,
     /// Same-model dynamic batching between release and dispatch.
     pub batch: BatchPolicy,
+    /// Admission control / load shedding between release and the batcher.
+    pub admission: AdmissionPolicy,
 }
 
 impl Default for ServeConfig {
@@ -69,6 +79,7 @@ impl Default for ServeConfig {
             policy: DispatchPolicy::LeastLoaded,
             slo: SloPolicy::default(),
             batch: BatchPolicy::Off,
+            admission: AdmissionPolicy::Open,
         }
     }
 }
@@ -96,6 +107,11 @@ pub struct ServedRequest {
     pub met: bool,
     /// Useful operations of the request.
     pub ops: u64,
+    /// How the request traveled through the admission stage (always
+    /// [`Disposition::Admitted`] when admission is [`AdmissionPolicy::Open`];
+    /// shed requests never complete, so they appear in
+    /// [`ServeReport::shed`] instead of here).
+    pub disposition: Disposition,
 }
 
 /// Aggregated result of one online serving run.
@@ -127,6 +143,14 @@ pub struct ServeReport {
     pub batch: BatchPolicy,
     /// Fused (≥ 2-member) batches the batcher emitted.
     pub fused_batches: u64,
+    /// The admission policy the run used.
+    pub admission: AdmissionPolicy,
+    /// Requests the admission stage shed (empty when admission is `Open`).
+    pub shed: Vec<ShedRequest>,
+    /// Defer decisions the admission stage took (one request can contribute
+    /// several; deferred-then-served requests carry
+    /// [`Disposition::Deferred`]).
+    pub deferred: u64,
     /// Latency summary over `served`, computed once at aggregation (the
     /// percentile accessors all read this cache).
     latency_stats: Option<Summary>,
@@ -162,23 +186,59 @@ impl ServeReport {
         self.latency_summary().map(|s| self.to_ms(s.mean)).unwrap_or(0.0)
     }
 
-    /// Fraction of requests that missed their deadline.
+    /// Fraction of *offered* requests that missed their deadline — the
+    /// all-requests SLO view. A shed request never completed, so it counts
+    /// as a miss here; identical to [`Self::admitted_miss_rate`] when
+    /// nothing was shed (in particular under [`AdmissionPolicy::Open`]).
     pub fn miss_rate(&self) -> f64 {
+        let offered = self.served.len() + self.shed.len();
+        if offered == 0 {
+            return 0.0;
+        }
+        let missed = self.served.iter().filter(|r| !r.met).count() + self.shed.len();
+        missed as f64 / offered as f64
+    }
+
+    /// Miss rate over admitted (served) requests only — what the users the
+    /// fleet chose to serve experienced. The latency percentiles above are
+    /// the matching admitted-only view.
+    pub fn admitted_miss_rate(&self) -> f64 {
         if self.served.is_empty() {
             return 0.0;
         }
         self.served.iter().filter(|r| !r.met).count() as f64 / self.served.len() as f64
     }
 
-    /// Miss rate restricted to one model family, `None` if the family is
-    /// absent from the trace.
+    /// All-requests miss rate restricted to one model family (shed requests
+    /// count as misses), `None` if the family was never offered.
     pub fn miss_rate_for(&self, family: ModelFamily) -> Option<f64> {
-        let fam: Vec<&ServedRequest> =
-            self.served.iter().filter(|r| r.family == family).collect();
-        if fam.is_empty() {
+        let served = self.served.iter().filter(|r| r.family == family).count();
+        let missed = self.served.iter().filter(|r| r.family == family && !r.met).count();
+        let shed = self.shed.iter().filter(|r| r.family == family).count();
+        if served + shed == 0 {
             return None;
         }
-        Some(fam.iter().filter(|r| !r.met).count() as f64 / fam.len() as f64)
+        Some((missed + shed) as f64 / (served + shed) as f64)
+    }
+
+    /// Fraction of offered requests the admission stage shed.
+    pub fn shed_rate(&self) -> f64 {
+        let offered = self.served.len() + self.shed.len();
+        if offered == 0 {
+            return 0.0;
+        }
+        self.shed.len() as f64 / offered as f64
+    }
+
+    /// Shed rate restricted to one model family, `None` if the family was
+    /// never offered.
+    pub fn shed_rate_for(&self, family: ModelFamily) -> Option<f64> {
+        let served = self.served.iter().filter(|r| r.family == family).count();
+        let shed = self.shed.iter().filter(|r| r.family == family).count();
+        if served + shed == 0 {
+            return None;
+        }
+        Some(shed as f64 / (served + shed) as f64)
     }
 
     /// Sustained throughput in TOPS over the whole run (all work).
@@ -212,7 +272,9 @@ impl ServeReport {
             .set("scheduler", self.scheduler)
             .set("policy", self.policy)
             .set("workload", self.workload.as_str())
-            .set("requests", self.served.len())
+            // Offered requests (served + shed): the trace size, not the
+            // admitted count — identical to served.len() under `Open`.
+            .set("requests", self.served.len() + self.shed.len())
             .set("makespan_cycles", self.makespan)
             .set("tops", self.tops())
             .set("goodput_tops", self.goodput_tops())
@@ -235,6 +297,29 @@ impl ServeReport {
                 .set("fused_batches", self.fused_batches);
             if let BatchPolicy::Sized { max_wait, .. } = self.batch {
                 j.set("batch_wait_cycles", max_wait);
+            }
+        }
+        // Admission keys appear only when filtering is configured, so the
+        // admission-off report stays byte-identical to the pre-admission one
+        // (the same discipline as the batching keys above). The latency
+        // percentile keys above are admitted-only by construction; the
+        // miss-rate keys here split the all-requests and admitted-only
+        // views explicitly.
+        if self.admission.enabled() {
+            j.set("admission_policy", self.admission.name())
+                .set("admitted_requests", self.served.len())
+                .set("admitted_miss_rate", self.admitted_miss_rate())
+                .set("shed", self.shed.len())
+                .set("shed_rate", self.shed_rate())
+                .set("deferred", self.deferred);
+            if let AdmissionPolicy::PriorityThreshold { floor, max_depth } = self.admission {
+                j.set("admission_floor", floor).set("admission_max_depth", max_depth);
+            }
+            if let Some(s) = self.shed_rate_for(ModelFamily::Cnn) {
+                j.set("shed_rate_cnn", s);
+            }
+            if let Some(s) = self.shed_rate_for(ModelFamily::Transformer) {
+                j.set("shed_rate_transformer", s);
             }
         }
         if let Some(m) = self.miss_rate_for(ModelFamily::Cnn) {
@@ -261,6 +346,7 @@ fn scored(
     arrival: Cycle,
     dispatched_at: Cycle,
     end: Cycle,
+    disposition: Disposition,
 ) -> ServedRequest {
     let graph = registry.graph(model_id);
     let deadline = arrival + slo.deadline_for(graph.family);
@@ -277,6 +363,7 @@ fn scored(
         deadline,
         met: end <= deadline,
         ops: graph.total_ops(),
+        disposition,
     }
 }
 
@@ -308,6 +395,11 @@ impl ServeEngine {
         self
     }
 
+    pub fn with_admission(mut self, admission: AdmissionPolicy) -> ServeEngine {
+        self.cfg.admission = admission;
+        self
+    }
+
     /// Serve a workload trace online and score it against the SLO policy.
     pub fn run(&mut self, wl: &Workload) -> ServeReport {
         let mut clusters: Vec<SvCluster> = (0..self.hw.clusters)
@@ -322,6 +414,8 @@ impl ServeEngine {
         // request's model id (see `BalancerError::UnknownModel`).
         lb.register_registry(&registry);
         let mut batcher = DynamicBatcher::new(self.cfg.batch, self.cfg.slo);
+        let mut admission =
+            AdmissionController::new(self.cfg.admission, self.cfg.slo, &self.hw, &self.sim);
 
         // The trace in arrival order (the generator emits it sorted; sort
         // defensively for hand-built traces, stable on same-cycle ids).
@@ -334,17 +428,39 @@ impl ServeEngine {
 
         loop {
             // 1. Release: requests whose arrival cycle has come enter the
-            //    batcher's coalescing queues (a pass-through when batching
-            //    is off). Never earlier — the engine has no knowledge of the
+            //    admission stage and then the batcher's coalescing queues
+            //    (both pass-throughs when admission is `Open` / batching is
+            //    off). Never earlier — the engine has no knowledge of the
             //    future trace.
             let mut emitted = Vec::new();
-            while next < n && trace[next].arrival <= now {
-                emitted.extend(batcher.offer(trace[next], now, &mut registry));
-                next += 1;
+            if admission.enabled() {
+                // Deferred re-releases first (they arrived earlier), then
+                // fresh arrivals; every same-epoch admission is folded into
+                // the backlog snapshot so the stage sees its own decisions.
+                // Requests admitted in earlier epochs but still coalescing
+                // in the batcher are invisible to the cluster status table,
+                // so count them toward the queue depth here.
+                let mut backlog = LoadBalancer::backlog(&clusters, &registry);
+                backlog.queued_requests += batcher.pending();
+                let mut admitted = admission.poll(now, &mut backlog, &registry);
+                while next < n && trace[next].arrival <= now {
+                    admitted.extend(admission.offer(trace[next], now, &mut backlog, &registry));
+                    next += 1;
+                }
+                for r in admitted {
+                    emitted.extend(batcher.offer(r, now, &mut registry));
+                }
+            } else {
+                while next < n && trace[next].arrival <= now {
+                    emitted.extend(batcher.offer(trace[next], now, &mut registry));
+                    next += 1;
+                }
             }
-            // 1b. Wait-deadline flushes; once the trace is exhausted no
-            //     future same-model arrival can grow a batch, so drain.
-            emitted.extend(batcher.poll(now, next >= n, &mut registry));
+            // 1b. Wait-deadline flushes; once the trace is exhausted and no
+            //     deferred request can still be admitted, no future
+            //     same-model arrival can grow a batch, so drain.
+            let trace_done = next >= n && admission.pending() == 0;
+            emitted.extend(batcher.poll(now, trace_done, &mut registry));
             for e in emitted {
                 // Fused graphs enter the model table as they are minted.
                 if !lb.model_table.contains_key(&e.model_id) {
@@ -366,11 +482,16 @@ impl ServeEngine {
             epochs += 1;
 
             // 4. Jump the clock to the next event: the next trace arrival,
-            //    the earliest batch-queue flush deadline, or the earliest
-            //    cluster decision point. `max(now + 1)` is a liveness guard;
-            //    post-run_until every cluster event is strictly in the
-            //    future, and any due batch queue was flushed this epoch.
+            //    the earliest deferred re-release, the earliest batch-queue
+            //    flush deadline, or the earliest cluster decision point.
+            //    `max(now + 1)` is a liveness guard; post-run_until every
+            //    cluster event is strictly in the future, any due batch
+            //    queue was flushed this epoch, and any due deferred request
+            //    was re-offered this epoch.
             let mut t_next: Option<Cycle> = if next < n { Some(trace[next].arrival) } else { None };
+            if let Some(r) = admission.next_release() {
+                t_next = Some(t_next.map_or(r, |t| t.min(r)));
+            }
             if let Some(f) = batcher.next_flush() {
                 t_next = Some(t_next.map_or(f, |t| t.min(f)));
             }
@@ -393,15 +514,17 @@ impl ServeEngine {
             }
         }
 
-        self.aggregate(wl, &registry, &lb, &batcher, clusters, epochs)
+        self.aggregate(wl, &registry, &lb, &batcher, &admission, clusters, epochs)
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn aggregate(
         &self,
         wl: &Workload,
         registry: &ModelRegistry,
         lb: &LoadBalancer,
         batcher: &DynamicBatcher,
+        admission: &AdmissionController,
         clusters: Vec<SvCluster>,
         epochs: u64,
     ) -> ServeReport {
@@ -438,6 +561,9 @@ impl ServeEngine {
                     // fused end cycle but keeps its own arrival for latency
                     // and deadline accounting.
                     for m in &b.members {
+                        // A deferred member dispatched under its re-release
+                        // cycle; score it from the true trace arrival.
+                        let arrival = admission.original_arrival(m.id).unwrap_or(m.arrival);
                         let s = scored(
                             registry,
                             &self.cfg.slo,
@@ -445,14 +571,17 @@ impl ServeEngine {
                             b.base_model_id,
                             c.id,
                             Some(r.request_id),
-                            m.arrival,
+                            arrival,
                             stamp,
                             r.end,
+                            admission.disposition_of(m.id),
                         );
                         total_ops += s.ops;
                         served.push(s);
                     }
                 } else {
+                    let arrival =
+                        admission.original_arrival(r.request_id).unwrap_or(r.arrival);
                     let s = scored(
                         registry,
                         &self.cfg.slo,
@@ -460,9 +589,10 @@ impl ServeEngine {
                         r.model_id,
                         c.id,
                         None,
-                        r.arrival,
+                        arrival,
                         stamp,
                         r.end,
+                        admission.disposition_of(r.request_id),
                     );
                     total_ops += s.ops;
                     served.push(s);
@@ -499,6 +629,9 @@ impl ServeEngine {
             slo: self.cfg.slo,
             batch: self.cfg.batch,
             fused_batches: batcher.fused_count(),
+            admission: self.cfg.admission,
+            shed: admission.shed().to_vec(),
+            deferred: admission.defer_events(),
             latency_stats,
         }
     }

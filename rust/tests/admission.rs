@@ -1,0 +1,368 @@
+//! Serve-layer admission-control test suite.
+//!
+//! Adversarial coverage for the admission stage: `Open` must keep the
+//! pre-admission report shape bit for bit, the whole ArrivalModel ×
+//! BatchPolicy × AdmissionPolicy grid must be deterministic, the
+//! deadline-feasible policy must never shed a request the open policy would
+//! have completed on time (no false positives — the service-floor estimator
+//! is a lower bound by construction), shedding must improve the
+//! admitted-only miss rate under flash crowds, and every request offered to
+//! the engine must be accounted for exactly once (served or shed).
+
+use hsv::balancer::DispatchPolicy;
+use hsv::config::{HardwareConfig, SimConfig};
+use hsv::sched::SchedulerKind;
+use hsv::serve::{
+    AdmissionPolicy, BatchPolicy, Disposition, ServeConfig, ServeEngine, ShedReason, SloPolicy,
+};
+use hsv::util::json::Json;
+use hsv::util::quick;
+use hsv::workload::{ArrivalModel, ModelRegistry, Workload, WorkloadRequest, WorkloadSpec};
+use std::collections::HashSet;
+
+fn engine(admission: AdmissionPolicy, slo: SloPolicy) -> ServeEngine {
+    ServeEngine::new(
+        HardwareConfig::small(),
+        SchedulerKind::Has,
+        SimConfig::default(),
+        ServeConfig {
+            policy: DispatchPolicy::LeastLoaded,
+            slo,
+            batch: BatchPolicy::Off,
+            admission,
+        },
+    )
+}
+
+/// A same-model burst at cycle 0 with alternating priorities (the
+/// priority-threshold policy's separable classes).
+fn priority_burst(model: &str, n: u64) -> Workload {
+    let registry = ModelRegistry::standard();
+    let id = registry.id_of(model).unwrap();
+    let requests = (0..n)
+        .map(|i| WorkloadRequest::new(i, id, 0).with_priority((i % 2) as u32))
+        .collect();
+    Workload {
+        name: format!("{model}_burst{n}"),
+        cnn_ratio: 1.0,
+        seed: 0,
+        requests,
+        registry,
+    }
+}
+
+fn json_keys(j: &Json) -> Vec<String> {
+    match j {
+        Json::Obj(m) => m.keys().cloned().collect(),
+        _ => panic!("report JSON must be an object"),
+    }
+}
+
+/// `Open` admission must reproduce the pre-admission (PR 2) report exactly:
+/// the JSON carries precisely the pre-admission key set — no admission keys,
+/// no shed/deferred counters — and every served request is tagged
+/// `Admitted`. (The golden metrics snapshot in `tests/batching.rs` pins the
+/// values once blessed; this pins the byte-level shape.)
+#[test]
+fn open_admission_keeps_the_pre_admission_report_shape() {
+    let wl = WorkloadSpec::ratio(0.5, 24, 7)
+        .with_arrivals(ArrivalModel::bursty(60_000.0, 6_000.0))
+        .generate();
+    let rep = engine(AdmissionPolicy::Open, SloPolicy::default()).run(&wl);
+    let mut keys = json_keys(&rep.to_json());
+    keys.sort();
+    let mut expected: Vec<String> = [
+        "hw",
+        "scheduler",
+        "policy",
+        "workload",
+        "requests",
+        "makespan_cycles",
+        "tops",
+        "goodput_tops",
+        "utilization",
+        "mean_latency_ms",
+        "p50_ms",
+        "p95_ms",
+        "p99_ms",
+        "p999_ms",
+        "deadline_miss_rate",
+        "slo_cnn_ms",
+        "slo_transformer_ms",
+        "epochs",
+        "decisions",
+        "miss_rate_cnn",
+        "miss_rate_transformer",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    expected.sort();
+    assert_eq!(keys, expected, "Open report JSON grew or lost keys vs the pre-admission engine");
+    assert!(rep.shed.is_empty());
+    assert_eq!(rep.deferred, 0);
+    assert!(rep.served.iter().all(|s| s.disposition == Disposition::Admitted));
+    assert_eq!(rep.miss_rate(), rep.admitted_miss_rate(), "the two views coincide under Open");
+    assert_eq!(rep.shed_rate(), 0.0);
+}
+
+/// Two runs with the same seed must agree bit for bit across the whole
+/// ArrivalModel × BatchPolicy × AdmissionPolicy grid, and every offered
+/// request must be accounted for exactly once (served or shed).
+#[test]
+fn admission_grid_is_deterministic_and_conserves_requests() {
+    let arrivals = [
+        ArrivalModel::Poisson,
+        ArrivalModel::diurnal(2_000_000.0),
+        ArrivalModel::bursty(60_000.0, 6_000.0),
+        ArrivalModel::ramp(4.0, 0.5),
+    ];
+    let batches = [
+        BatchPolicy::Off,
+        BatchPolicy::Sized { max_batch: 3, max_wait: 30_000 },
+        BatchPolicy::SloAware { max_batch: 4 },
+    ];
+    let admissions = [
+        AdmissionPolicy::Open,
+        AdmissionPolicy::PriorityThreshold { floor: 1, max_depth: 2 },
+        AdmissionPolicy::DeadlineFeasible,
+    ];
+    for model in arrivals {
+        let wl = WorkloadSpec::ratio(0.5, 15, 31).with_arrivals(model).generate();
+        for batch in batches {
+            for admission in admissions {
+                let run = || {
+                    ServeEngine::new(
+                        HardwareConfig::small(),
+                        SchedulerKind::Has,
+                        SimConfig::default(),
+                        ServeConfig {
+                            policy: DispatchPolicy::LeastLoaded,
+                            slo: SloPolicy::default(),
+                            batch,
+                            admission,
+                        },
+                    )
+                    .run(&wl)
+                };
+                let a = run();
+                let b = run();
+                let ctx = format!("{} / {batch:?} / {admission:?}", model.name());
+                assert_eq!(a.served.len() + a.shed.len(), 15, "{ctx}: request lost or duplicated");
+                let mut ids: Vec<u64> = a
+                    .served
+                    .iter()
+                    .map(|r| r.request_id)
+                    .chain(a.shed.iter().map(|r| r.request_id))
+                    .collect();
+                ids.sort_unstable();
+                assert_eq!(ids, (0..15).collect::<Vec<u64>>(), "{ctx}");
+                assert_eq!(a.to_json().to_pretty(), b.to_json().to_pretty(), "{ctx}");
+                assert_eq!(
+                    a.served
+                        .iter()
+                        .map(|r| (r.request_id, r.end, r.disposition))
+                        .collect::<Vec<_>>(),
+                    b.served
+                        .iter()
+                        .map(|r| (r.request_id, r.end, r.disposition))
+                        .collect::<Vec<_>>(),
+                    "{ctx}"
+                );
+                assert_eq!(
+                    a.shed
+                        .iter()
+                        .map(|r| (r.request_id, r.decided_at, r.reason))
+                        .collect::<Vec<_>>(),
+                    b.shed
+                        .iter()
+                        .map(|r| (r.request_id, r.decided_at, r.reason))
+                        .collect::<Vec<_>>(),
+                    "{ctx}"
+                );
+                if !admission.enabled() {
+                    assert!(a.shed.is_empty(), "{ctx}: Open must never shed");
+                    assert!(
+                        !a.to_json().to_pretty().contains("admission"),
+                        "{ctx}: Open report must not mention admission"
+                    );
+                }
+                if a.served.iter().any(|s| s.disposition == Disposition::Deferred) {
+                    assert!(a.deferred > 0, "{ctx}: deferred disposition without defer events");
+                }
+            }
+        }
+    }
+}
+
+/// No false positives: at light load, the deadline-feasible policy must
+/// never shed a request the open policy completed on time at the same seed.
+/// The service-floor estimator is a strict lower bound on isolated latency,
+/// so an infeasibility shed implies the open engine missed that request too.
+#[test]
+fn deadline_feasible_never_sheds_what_open_meets() {
+    let registry = ModelRegistry::standard();
+    let hw = HardwareConfig::small();
+    let sim = SimConfig::default();
+    // Generous calibrated SLOs (4x the slowest family member) so feasibility
+    // margins dwarf the light-load queueing noise.
+    let slo = SloPolicy::calibrated(&registry, &hw, SchedulerKind::Has, &sim, 4.0);
+    quick::check(11, 5, |g| {
+        let seed = g.u64_in(0, 1 << 20);
+        let wl = WorkloadSpec::ratio(0.5, 10, seed)
+            .with_mean_interarrival(50_000_000.0)
+            .generate();
+        let open = engine(AdmissionPolicy::Open, slo).run(&wl);
+        let df = engine(AdmissionPolicy::DeadlineFeasible, slo).run(&wl);
+        let met: HashSet<u64> =
+            open.served.iter().filter(|r| r.met).map(|r| r.request_id).collect();
+        for s in &df.shed {
+            assert!(
+                !met.contains(&s.request_id),
+                "seed {seed}: shed request {} ({:?}) though Open met its deadline",
+                s.request_id,
+                s.reason
+            );
+        }
+        assert_eq!(df.served.len() + df.shed.len(), 10, "seed {seed}: conservation");
+        true
+    });
+}
+
+/// Under a flash crowd, shedding doomed work must not make the surviving
+/// users worse off: the deadline-feasible admitted-only miss rate is bounded
+/// by the open-policy miss rate at the same seed.
+#[test]
+fn admitted_miss_rate_bounded_by_open_under_flash_crowd() {
+    let registry = ModelRegistry::standard();
+    let hw = HardwareConfig::small();
+    let sim = SimConfig::default();
+    // Tight slack + a crowd far beyond sustainable load: the open policy
+    // drowns (most requests miss), which is exactly the regime where
+    // shedding the doomed tail must pay off.
+    let slo = SloPolicy::calibrated(&registry, &hw, SchedulerKind::Has, &sim, 2.0);
+    quick::check(13, 4, |g| {
+        let seed = g.u64_in(0, 1 << 20);
+        let wl = WorkloadSpec::ratio(0.5, 24, seed)
+            .with_mean_interarrival(10_000.0)
+            .with_arrivals(ArrivalModel::bursty(10_000.0, 1_000.0))
+            .generate();
+        let open = engine(AdmissionPolicy::Open, slo).run(&wl);
+        let df = engine(AdmissionPolicy::DeadlineFeasible, slo).run(&wl);
+        assert!(
+            df.admitted_miss_rate() <= open.miss_rate() + 1e-9,
+            "seed {seed}: admitted miss {:.3} exceeds open miss {:.3}",
+            df.admitted_miss_rate(),
+            open.miss_rate()
+        );
+        assert_eq!(df.served.len() + df.shed.len(), 24, "seed {seed}: conservation");
+        for s in &df.served {
+            if s.disposition == Disposition::Deferred {
+                assert!(df.deferred > 0);
+                assert!(
+                    s.dispatched_at > s.arrival,
+                    "a deferred request cannot dispatch at its arrival"
+                );
+            }
+        }
+        true
+    });
+}
+
+/// The priority-threshold policy sheds exactly the below-floor requests that
+/// arrive while the fleet is over the depth knob — a fully deterministic
+/// hand-built burst: depth grows with each same-cycle admission, so the
+/// fourth and later priority-0 offers shed while priority-1 traffic rides
+/// through.
+#[test]
+fn priority_threshold_sheds_low_priority_under_pressure() {
+    let wl = priority_burst("alexnet", 10);
+    let rep = engine(
+        AdmissionPolicy::PriorityThreshold { floor: 1, max_depth: 2 },
+        SloPolicy::default(),
+    )
+    .run(&wl);
+    let shed_ids: Vec<u64> = rep.shed.iter().map(|r| r.request_id).collect();
+    assert_eq!(shed_ids, vec![4, 6, 8], "exactly the over-knob priority-0 arrivals shed");
+    assert!(rep.shed.iter().all(|r| r.reason == ShedReason::BelowPriorityFloor));
+    assert!(rep.shed.iter().all(|r| r.priority == 0));
+    let mut served_ids: Vec<u64> = rep.served.iter().map(|r| r.request_id).collect();
+    served_ids.sort_unstable();
+    assert_eq!(served_ids, vec![0, 1, 2, 3, 5, 7, 9]);
+    assert!((rep.shed_rate() - 0.3).abs() < 1e-12);
+    assert_eq!(rep.shed_rate_for(hsv::model::ModelFamily::Cnn), Some(0.3));
+    assert_eq!(rep.shed_rate_for(hsv::model::ModelFamily::Transformer), None);
+    // All-requests miss rate counts the shed as misses; the admitted view
+    // does not.
+    assert!(rep.miss_rate() >= 0.3);
+    assert!(rep.admitted_miss_rate() <= rep.miss_rate());
+    let j = rep.to_json();
+    assert_eq!(j.get("admission_policy").unwrap().as_str(), Some("priority"));
+    assert_eq!(j.get("admission_floor").unwrap().as_f64(), Some(1.0));
+    assert_eq!(j.get("admission_max_depth").unwrap().as_f64(), Some(2.0));
+    assert_eq!(j.get("shed").unwrap().as_f64(), Some(3.0));
+    assert_eq!(j.get("shed_rate_cnn").unwrap().as_f64(), Some(0.3));
+    assert!(j.get("shed_rate_transformer").is_none());
+    assert!(j.get("admitted_miss_rate").is_some());
+}
+
+/// Zero deadline headroom under deadline-feasible admission: every request
+/// is infeasible on sight, the whole trace sheds, nothing reaches a
+/// cluster, and the report's metrics stay well-defined.
+#[test]
+fn zero_headroom_sheds_the_entire_trace() {
+    let wl = WorkloadSpec::ratio(0.5, 8, 3).generate();
+    let rep = engine(AdmissionPolicy::DeadlineFeasible, SloPolicy::new(0, 0)).run(&wl);
+    assert_eq!(rep.served.len(), 0);
+    assert_eq!(rep.shed.len(), 8);
+    assert!(rep.shed.iter().all(|r| r.reason == ShedReason::DeadlineInfeasible));
+    assert!(rep.shed.iter().all(|r| r.decided_at == r.arrival), "infeasible on sight");
+    assert!(rep.shed.iter().all(|r| r.deadline == r.arrival), "zero headroom deadline");
+    assert_eq!(rep.deferred, 0, "zero headroom leaves nothing worth deferring");
+    assert_eq!(rep.makespan, 0, "shed work must never reach a cluster");
+    assert_eq!(rep.miss_rate(), 1.0);
+    assert_eq!(rep.admitted_miss_rate(), 0.0, "nobody was admitted");
+    assert_eq!(rep.shed_rate(), 1.0);
+    assert_eq!(rep.goodput_tops(), 0.0);
+    assert_eq!(rep.tops(), 0.0);
+    assert_eq!(rep.p50_ms(), 0.0, "no admitted latency distribution");
+    let j = rep.to_json();
+    assert_eq!(j.get("shed").unwrap().as_f64(), Some(8.0));
+    assert_eq!(j.get("deadline_miss_rate").unwrap().as_f64(), Some(1.0));
+    assert_eq!(j.get("admitted_miss_rate").unwrap().as_f64(), Some(0.0));
+}
+
+/// Admission composes with dynamic batching: deferred-then-admitted
+/// requests may join later coalescing queues, and the fan-out still
+/// accounts for every offered request exactly once.
+#[test]
+fn admission_composes_with_batching() {
+    let wl = WorkloadSpec::ratio(0.5, 30, 9)
+        .with_arrivals(ArrivalModel::bursty(40_000.0, 4_000.0))
+        .generate();
+    let mut eng = engine(AdmissionPolicy::DeadlineFeasible, SloPolicy::default());
+    eng.cfg.batch = BatchPolicy::SloAware { max_batch: 8 };
+    let rep = eng.run(&wl);
+    assert_eq!(rep.served.len() + rep.shed.len(), 30);
+    let mut ids: Vec<u64> = rep
+        .served
+        .iter()
+        .map(|r| r.request_id)
+        .chain(rep.shed.iter().map(|r| r.request_id))
+        .collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..30).collect::<Vec<u64>>());
+    for r in &rep.served {
+        assert!(r.dispatched_at >= r.arrival);
+        assert!(r.end > r.arrival);
+        assert_eq!(r.latency, r.end - r.arrival);
+    }
+    // Shed work never executes: total ops count served requests only.
+    assert_eq!(
+        rep.total_ops,
+        rep.served
+            .iter()
+            .map(|r| wl.registry.graph(r.model_id).total_ops())
+            .sum::<u64>()
+    );
+}

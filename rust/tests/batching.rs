@@ -13,7 +13,9 @@ use hsv::coordinator::Coordinator;
 use hsv::model::{builder, zoo, ModelFamily};
 use hsv::ops::{GemmDims, TaskShape};
 use hsv::sched::SchedulerKind;
-use hsv::serve::{BatchPolicy, ServeConfig, ServeEngine, ServedRequest, SloPolicy};
+use hsv::serve::{
+    AdmissionPolicy, BatchPolicy, ServeConfig, ServeEngine, ServedRequest, SloPolicy,
+};
 use hsv::sim::systolic::gemm_cycles;
 use hsv::umf::{decode_model, encode_model, Frame};
 use hsv::util::json::Json;
@@ -25,7 +27,12 @@ fn engine_with(batch: BatchPolicy) -> ServeEngine {
         HardwareConfig::small(),
         SchedulerKind::Has,
         SimConfig::default(),
-        ServeConfig { policy: DispatchPolicy::LeastLoaded, slo: SloPolicy::default(), batch },
+        ServeConfig {
+            policy: DispatchPolicy::LeastLoaded,
+            slo: SloPolicy::default(),
+            batch,
+            admission: AdmissionPolicy::Open,
+        },
     )
 }
 
@@ -205,7 +212,12 @@ fn serve_grid_is_deterministic() {
                         HardwareConfig::small(),
                         SchedulerKind::Has,
                         SimConfig::default(),
-                        ServeConfig { policy, slo: SloPolicy::default(), batch },
+                        ServeConfig {
+                            policy,
+                            slo: SloPolicy::default(),
+                            batch,
+                            admission: AdmissionPolicy::Open,
+                        },
                     )
                     .run(&wl)
                 };
@@ -308,6 +320,13 @@ fn golden_metric_reports() -> Vec<(String, hsv::serve::ServeReport)> {
             assert_eq!(rep.served.len(), 24, "{tname}/{bname}");
             out.push((format!("{tname}/{bname}"), rep));
         }
+        // Admission-on variant over the same trace (batching off): pins the
+        // deadline-feasible shed/defer stream alongside the latency stream.
+        let mut eng = engine_with(BatchPolicy::Off);
+        eng.cfg.admission = AdmissionPolicy::DeadlineFeasible;
+        let rep = eng.run(&wl);
+        assert_eq!(rep.served.len() + rep.shed.len(), 24, "{tname}/admit-deadline");
+        out.push((format!("{tname}/admit-deadline"), rep));
     }
     out
 }
@@ -338,6 +357,11 @@ fn golden_seed_metrics_snapshot() {
         m.set("p50_ms", rep.p50_ms())
             .set("p99_ms", rep.p99_ms())
             .set("miss_rate", rep.miss_rate());
+        if rep.admission.enabled() {
+            m.set("shed", rep.shed.len())
+                .set("deferred", rep.deferred)
+                .set("admitted_miss_rate", rep.admitted_miss_rate());
+        }
         metrics.set(&key, m);
     }
 

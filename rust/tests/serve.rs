@@ -6,7 +6,7 @@ use hsv::balancer::DispatchPolicy;
 use hsv::config::{HardwareConfig, SimConfig};
 use hsv::coordinator::Coordinator;
 use hsv::sched::SchedulerKind;
-use hsv::serve::{BatchPolicy, ServeConfig, ServeEngine, SloPolicy};
+use hsv::serve::{AdmissionPolicy, BatchPolicy, ServeConfig, ServeEngine, SloPolicy};
 use hsv::workload::{ArrivalModel, Workload, WorkloadSpec};
 
 /// Zero every arrival: the fully backlogged regime where an online engine
@@ -23,7 +23,12 @@ fn engine(hw: HardwareConfig, sched: SchedulerKind, policy: DispatchPolicy) -> S
         hw,
         sched,
         SimConfig::default(),
-        ServeConfig { policy, slo: SloPolicy::default(), batch: BatchPolicy::Off },
+        ServeConfig {
+            policy,
+            slo: SloPolicy::default(),
+            batch: BatchPolicy::Off,
+            admission: AdmissionPolicy::Open,
+        },
     )
 }
 
