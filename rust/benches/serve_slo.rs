@@ -14,7 +14,9 @@ mod common;
 use hsv::balancer::DispatchPolicy;
 use hsv::config::{HardwareConfig, SimConfig};
 use hsv::sched::SchedulerKind;
-use hsv::serve::{AdmissionPolicy, BatchPolicy, ServeConfig, ServeEngine, SloPolicy};
+use hsv::serve::{
+    AdmissionPolicy, AutoscalePolicy, BatchPolicy, ServeConfig, ServeEngine, SloPolicy,
+};
 use hsv::util::json::Json;
 use hsv::util::stats::{geomean, mean};
 use hsv::workload::{ArrivalModel, WorkloadSpec};
@@ -64,6 +66,7 @@ fn main() {
                         slo,
                         batch: BatchPolicy::Off,
                         admission: AdmissionPolicy::Open,
+                        autoscale: AutoscalePolicy::Off,
                     },
                 )
                 .run(&wl)
@@ -143,6 +146,7 @@ fn main() {
                         slo,
                         batch,
                         admission: AdmissionPolicy::Open,
+                        autoscale: AutoscalePolicy::Off,
                     },
                 )
                 .run(&wl);
@@ -238,6 +242,7 @@ fn main() {
                         slo,
                         batch: BatchPolicy::Off,
                         admission,
+                        autoscale: AutoscalePolicy::Off,
                     },
                 )
                 .run(&wl);
@@ -289,6 +294,110 @@ fn main() {
         mean(&adm_miss_open) - mean(&adm_miss_deadline),
         0.0,
         1.0,
+    );
+
+    // --- autoscaling: static energy vs SLO across a threshold grid ---------
+    //
+    // Diurnal and ramp traffic on a 4-cluster fleet, HAS + least-loaded,
+    // batching and admission off; the only knob is the autoscale threshold
+    // pair (scale up over `up` queued work items, drain below `down`). The
+    // fixed fleet (autoscale off) is the energy baseline and the SLO
+    // anchor: troughs in both traffic shapes leave most clusters idle, so
+    // the controller should cut static energy (powered cluster-cycles)
+    // while drain/warm-up lag costs at most a bounded admitted-miss delta.
+    println!();
+    println!(
+        "{:<9} {:>6} {:>8} {:>10} {:>9} {:>10} {:>10} {:>5} {:>5}",
+        "traffic", "seed", "up/down", "occupancy", "saved", "miss", "miss off", "ups", "downs"
+    );
+    let fleet = hw.clone().with_clusters(4);
+    let mut saved_fracs = Vec::new();
+    let mut miss_deltas = Vec::new();
+    let trough_suite = [
+        ("diurnal", ArrivalModel::diurnal(mean_gap * 100.0)),
+        ("ramp", ArrivalModel::ramp(4.0, 0.25)),
+    ];
+    for (name, model) in trough_suite {
+        for &seed in common::sweep_seeds() {
+            let wl = WorkloadSpec::ratio(0.5, n, seed)
+                .with_mean_interarrival(mean_gap)
+                .with_arrivals(model)
+                .generate();
+            let run = |autoscale| {
+                ServeEngine::new(
+                    fleet.clone(),
+                    SchedulerKind::Has,
+                    sim.clone(),
+                    ServeConfig {
+                        policy: DispatchPolicy::LeastLoaded,
+                        slo,
+                        batch: BatchPolicy::Off,
+                        admission: AdmissionPolicy::Open,
+                        autoscale,
+                    },
+                )
+                .run(&wl)
+            };
+            let fixed = run(AutoscalePolicy::Off);
+            for (up, down) in [(2usize, 1usize), (8, 2), (16, 4)] {
+                let rep = run(AutoscalePolicy::Threshold {
+                    up,
+                    down,
+                    min_active: 1,
+                    dwell: mean_gap as u64,
+                    warmup: mean_gap as u64 / 4,
+                });
+                let occupancy = rep.active_cluster_cycles() as f64
+                    / (4.0 * rep.makespan.max(1) as f64);
+                let miss_delta = rep.admitted_miss_rate() - fixed.admitted_miss_rate();
+                println!(
+                    "{:<9} {:>6} {:>8} {:>9.1}% {:>8.1}% {:>9.1}% {:>9.1}% {:>5} {:>5}",
+                    name,
+                    seed,
+                    format!("{up}/{down}"),
+                    occupancy * 100.0,
+                    rep.static_energy_saved_frac() * 100.0,
+                    rep.admitted_miss_rate() * 100.0,
+                    fixed.admitted_miss_rate() * 100.0,
+                    rep.scale_ups,
+                    rep.scale_downs
+                );
+                saved_fracs.push(rep.static_energy_saved_frac());
+                miss_deltas.push(miss_delta);
+                let mut row = Json::obj();
+                row.set("traffic", name)
+                    .set("seed", seed)
+                    .set("requests", n)
+                    .set("autoscale_up", up)
+                    .set("autoscale_down", down)
+                    .set("occupancy", occupancy)
+                    .set("active_cluster_cycles", rep.active_cluster_cycles())
+                    .set("static_energy_j", rep.static_energy_j)
+                    .set("fixed_fleet_static_energy_j", rep.fixed_fleet_static_energy_j)
+                    .set("static_energy_saved_frac", rep.static_energy_saved_frac())
+                    .set("admitted_miss_rate", rep.admitted_miss_rate())
+                    .set("admitted_miss_rate_fixed", fixed.admitted_miss_rate())
+                    .set("miss_delta", miss_delta)
+                    .set("scale_ups", rep.scale_ups)
+                    .set("scale_downs", rep.scale_downs)
+                    .set("p99_ms", rep.p99_ms());
+                b.row(row);
+            }
+        }
+    }
+    println!();
+    common::check_band(
+        "autoscaling saves static energy on diurnal/ramp troughs",
+        mean(&saved_fracs),
+        1e-6,
+        1.0,
+    );
+    let worst_delta = miss_deltas.iter().cloned().fold(f64::MIN, f64::max);
+    common::check_band(
+        "autoscaling admitted miss-rate cost stays bounded",
+        worst_delta,
+        -1.0,
+        0.5,
     );
     b.finish();
 }

@@ -245,6 +245,27 @@ impl LoadBalancer {
         registry: &ModelRegistry,
         now: Cycle,
     ) -> usize {
+        self.dispatch_ready_eligible(clusters, registry, now, None)
+    }
+
+    /// [`Self::dispatch_ready`] restricted to an eligibility mask: only
+    /// clusters with `eligible[i] == true` may receive work this epoch (the
+    /// serve-layer autoscaler powers clusters down and up online; a
+    /// draining or cold cluster must stop receiving assignments). `None`
+    /// means every cluster accepts work — exactly `dispatch_ready`. With no
+    /// eligible cluster at all, nothing dispatches and the entries stay
+    /// queued for a later epoch.
+    pub fn dispatch_ready_eligible(
+        &mut self,
+        clusters: &mut [SvCluster],
+        registry: &ModelRegistry,
+        now: Cycle,
+        eligible: Option<&[bool]>,
+    ) -> usize {
+        let can = |i: usize| eligible.map_or(true, |m| m[i]);
+        if !(0..clusters.len()).any(can) {
+            return 0;
+        }
         let mut order: Vec<usize> = (self.scan_from..self.request_table.len())
             .filter(|&i| {
                 let e = &self.request_table[i];
@@ -261,14 +282,17 @@ impl LoadBalancer {
         let dispatched = order.len();
         for i in order {
             let target = match self.policy {
-                DispatchPolicy::RoundRobin => {
+                DispatchPolicy::RoundRobin => loop {
                     let t = self.rr_next % clusters.len();
                     self.rr_next += 1;
-                    t
-                }
+                    if can(t) {
+                        break t;
+                    }
+                },
                 DispatchPolicy::LeastLoaded => clusters
                     .iter()
                     .enumerate()
+                    .filter(|(i, _)| can(*i))
                     .min_by_key(|(_, c)| c.outstanding(registry))
                     .map(|(i, _)| i)
                     .unwrap(),
@@ -278,8 +302,18 @@ impl LoadBalancer {
             // Offline (clairvoyant) dispatch stamps the arrival itself; the
             // online engine stamps its current cycle.
             e.dispatched_at = Some(if now == Cycle::MAX { e.arrival } else { now });
+            // The cluster must never book work before the controller routed
+            // it: a request held back by the eligibility mask (autoscaler
+            // scaled the fleet to zero dispatchable clusters for a stretch)
+            // dispatches under the current cycle, not its stale arrival.
+            // In the ordinary online path dispatch happens in the release
+            // epoch (arrival == now), and offline `now` is ∞ — both keep
+            // the plain arrival, bit for bit. The request table above keeps
+            // the true submission arrival for latency/SLO scoring.
+            let visible_arrival =
+                if now == Cycle::MAX { e.arrival } else { e.arrival.max(now) };
             clusters[target].assign(
-                WorkloadRequest::new(e.request_id, e.model_id, e.arrival)
+                WorkloadRequest::new(e.request_id, e.model_id, visible_arrival)
                     .with_priority(e.priority),
             );
         }
@@ -447,6 +481,44 @@ mod tests {
         assert_eq!(b2.queue_depth(), 2);
         assert_eq!(b2.min_outstanding, 500);
         assert_eq!(b2.total_outstanding, b.total_outstanding + 500);
+    }
+
+    #[test]
+    fn eligibility_mask_steers_and_holds_dispatch() {
+        let reg = ModelRegistry::standard();
+        let mut lb = LoadBalancer::new(DispatchPolicy::LeastLoaded);
+        lb.register_registry(&reg);
+        let mut cs = clusters(2);
+        // Cluster 1 is idle (least loaded) but ineligible: dispatch must
+        // fall back to the eligible, busier cluster 0.
+        let vgg = reg.id_of("vgg16").unwrap();
+        cs[0].assign(WorkloadRequest::new(99, vgg, 0));
+        lb.submit(WorkloadRequest::new(1, 0, 0), 1).unwrap();
+        assert_eq!(lb.dispatch_ready_eligible(&mut cs, &reg, 0, Some(&[true, false])), 1);
+        assert_eq!(lb.request_table[0].cluster, Some(0));
+        // With no eligible cluster, entries stay queued for a later epoch.
+        lb.submit(WorkloadRequest::new(2, 0, 0), 1).unwrap();
+        assert_eq!(lb.dispatch_ready_eligible(&mut cs, &reg, 0, Some(&[false, false])), 0);
+        assert_eq!(lb.queued(), 1);
+        assert_eq!(lb.request_table[1].cluster, None);
+        // Lifting the mask dispatches the held entry (to the idle cluster).
+        assert_eq!(lb.dispatch_ready_eligible(&mut cs, &reg, 0, Some(&[true, true])), 1);
+        assert_eq!(lb.request_table[1].cluster, Some(1));
+        assert_eq!(lb.queued(), 0);
+    }
+
+    #[test]
+    fn round_robin_skips_ineligible_clusters() {
+        let reg = ModelRegistry::standard();
+        let mut lb = LoadBalancer::new(DispatchPolicy::RoundRobin);
+        lb.register_registry(&reg);
+        let mut cs = clusters(3);
+        for i in 0..4 {
+            lb.submit(WorkloadRequest::new(i, 0, 0), 1).unwrap();
+        }
+        lb.dispatch_ready_eligible(&mut cs, &reg, 0, Some(&[true, false, true]));
+        let assigned: Vec<u32> = lb.request_table.iter().map(|e| e.cluster.unwrap()).collect();
+        assert_eq!(assigned, vec![0, 2, 0, 2], "cluster 1 must receive nothing");
     }
 
     #[test]

@@ -156,6 +156,15 @@ impl SvCluster {
         self.next_pending >= self.pending.len() && !self.state.has_work()
     }
 
+    /// Furthest cycle this cluster has booked work to — the cycle its last
+    /// admitted task completes (0 if it never ran anything). The serve-layer
+    /// autoscaler uses this as the floor of a powered-down cluster's energy
+    /// interval: a draining cluster stays powered at least until its booked
+    /// work finishes, even when the power-down epoch lands earlier.
+    pub fn booked_through(&self) -> Cycle {
+        self.state.makespan
+    }
+
     /// Requests assigned but not yet admitted by the cluster scheduler.
     pub fn queued_pending(&self) -> usize {
         self.pending.len() - self.next_pending
@@ -278,6 +287,7 @@ mod tests {
         let mut c = SvCluster::new(0, &hw, SchedulerKind::Has, SimConfig::default());
         assert!(c.is_drained());
         assert_eq!(c.next_event(), None);
+        assert_eq!(c.booked_through(), 0, "an idle cluster has booked nothing");
         let alex = reg.id_of("alexnet").unwrap();
         c.assign(WorkloadRequest::new(1, alex, 777));
         assert!(!c.is_drained());
@@ -287,5 +297,6 @@ mod tests {
         assert!(c.is_drained());
         assert_eq!(c.next_event(), None);
         assert_eq!(c.inflight_tasks(), 0);
+        assert!(c.booked_through() > 777, "booked work ends after the arrival");
     }
 }

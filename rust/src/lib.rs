@@ -27,10 +27,14 @@
 //!   deadline-miss rate, goodput in a [`serve::ServeReport`]). Includes
 //!   dynamic same-model batching ([`serve::batch`]): requests coalesce into
 //!   fused multi-batch tasks under size-capped or SLO-aware policies, with
-//!   per-request result fan-out — and admission control / load shedding
+//!   per-request result fan-out — admission control / load shedding
 //!   ([`serve::admission`]): priority-threshold and deadline-feasibility
 //!   policies shed or defer over-SLO work under flash crowds instead of
-//!   serving it late.
+//!   serving it late — and backlog-driven cluster autoscaling
+//!   ([`serve::autoscale`]): a threshold controller drains idle clusters
+//!   cold and wakes them (through a warm-up latency) as the aggregate
+//!   queue depth moves, charging static energy only for powered cycles
+//!   against the fixed-fleet baseline.
 //! - [`gpu`] — the Titan RTX reference model used for Fig 1 and Fig 10.
 //! - [`dse`] — the design-space-exploration driver (paper §VI-C).
 //! - `runtime` (feature `pjrt`) — the PJRT functional-execution path: loads

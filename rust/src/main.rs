@@ -17,7 +17,9 @@ use hsv::gpu;
 use hsv::model::zoo;
 use hsv::report::{self, timeline};
 use hsv::sched::SchedulerKind;
-use hsv::serve::{AdmissionPolicy, BatchPolicy, ServeConfig, ServeEngine, SloPolicy};
+use hsv::serve::{
+    AdmissionPolicy, AutoscalePolicy, BatchPolicy, ServeConfig, ServeEngine, SloPolicy,
+};
 use hsv::umf;
 use hsv::util::cli::Args;
 use hsv::workload::{suite_33, ArrivalModel, WorkloadSpec};
@@ -28,7 +30,10 @@ const USAGE: &str = "hsv <simulate|serve|dse|gpu|timeline|convert|zoo|pjrt> [--o
            --traffic poisson|diurnal|bursty|ramp [--mean-gap 40000] [--slo-slack 4]
            [--batch CAP] [--batch-policy slo|size] [--batch-wait CYCLES]
            [--admission open|priority|deadline] [--admission-threshold DEPTH]
-           [--admission-floor PRIO] [--clusters N] [--small] [--out out/serve.json]
+           [--admission-floor PRIO]
+           [--autoscale off|threshold] [--autoscale-up DEPTH] [--autoscale-down DEPTH]
+           [--autoscale-min N] [--autoscale-dwell CYCLES] [--autoscale-warmup CYCLES]
+           [--clusters N] [--small] [--out out/serve.json]
   dse      --requests 12 [--threads N] [--out out/dse.csv]
   gpu      --ratio 0.5 --requests 40 --seed 42
   timeline --ratio 0.5 --requests 6 --seed 1 --sched has [--width 100]
@@ -173,8 +178,37 @@ fn serve(args: &Args) {
             std::process::exit(2);
         }
     };
-    let mut engine =
-        ServeEngine::new(hw, sched, sim, ServeConfig { policy, slo, batch, admission });
+    // Autoscaling: fixed fleet (every cluster powered all run) unless the
+    // threshold policy is named. The controller scales up while the fleet's
+    // aggregate queue depth exceeds --autoscale-up work items and drains a
+    // cluster while it is below --autoscale-down, never dropping under
+    // --autoscale-min active clusters, with --autoscale-dwell cycles of
+    // hysteresis before reversing and an --autoscale-warmup cold-start
+    // latency before a woken cluster accepts work. The report then carries
+    // active-cluster-cycles and static energy vs the fixed-fleet baseline.
+    let autoscale = match args.str("autoscale", "off").as_str() {
+        "off" => AutoscalePolicy::Off,
+        "threshold" => AutoscalePolicy::Threshold {
+            up: args.usize("autoscale-up", 8),
+            down: args.usize("autoscale-down", 1),
+            min_active: u32::try_from(args.u64("autoscale-min", 1)).unwrap_or_else(|_| {
+                eprintln!("--autoscale-min must fit in a u32");
+                std::process::exit(2);
+            }),
+            dwell: args.u64("autoscale-dwell", 200_000),
+            warmup: args.u64("autoscale-warmup", 50_000),
+        },
+        other => {
+            eprintln!("unknown --autoscale '{other}' (off|threshold)");
+            std::process::exit(2);
+        }
+    };
+    let mut engine = ServeEngine::new(
+        hw,
+        sched,
+        sim,
+        ServeConfig { policy, slo, batch, admission, autoscale },
+    );
     let r = engine.run(&wl);
     print!("{}", report::summarize_serve(&r));
     if let Some(out) = args.str_opt("out") {

@@ -112,6 +112,26 @@ pub fn summarize_serve(report: &ServeReport) -> String {
             report.admitted_miss_rate() * 100.0
         ));
     }
+    if report.autoscale.enabled() {
+        let fleet_cycles = report.makespan.saturating_mul(report.powered_cycles.len() as u64);
+        let occupancy = if fleet_cycles > 0 {
+            report.active_cluster_cycles() as f64 / fleet_cycles as f64
+        } else {
+            0.0
+        };
+        s.push_str(&format!(
+            "  autoscale: {} | occupancy {:.1}% of {} cluster-cycles | ups {} downs {} | \
+             static {:.3} J vs {:.3} J fixed (saved {:.1}%)\n",
+            report.autoscale.name(),
+            occupancy * 100.0,
+            fleet_cycles,
+            report.scale_ups,
+            report.scale_downs,
+            report.static_energy_j,
+            report.fixed_fleet_static_energy_j,
+            report.static_energy_saved_frac() * 100.0
+        ));
+    }
     if let Some(l) = report.latency_summary() {
         let to_ms = |c: f64| c / (report.clock_ghz * 1e6);
         s.push_str(&format!(

@@ -1,0 +1,528 @@
+//! Backlog-driven cluster autoscaling with energy accounting.
+//!
+//! The paper's headline energy claim (30.17x the GPU's efficiency) assumes
+//! the systolic-vector fleet is right-sized for its load, but the serving
+//! engine used to keep every cluster powered for the whole trace even when
+//! the diurnal and ramp traffic models leave most of them idle for long
+//! stretches. Elastic capacity against queue-depth signals is exactly the
+//! lever the MIG-repartitioning line of work pulls for GPU fleets
+//! (arXiv:2606.25082), and the GPU-datacenter scheduling survey
+//! (arXiv:2205.11913) names it the core open problem for inference serving.
+//! This module is the serve-layer stage that closes it: an [`Autoscaler`]
+//! varies the *active* cluster count online, driven by the same aggregate
+//! [`Backlog`] estimate ([`crate::balancer::LoadBalancer::backlog`]) the
+//! admission stage decides on.
+//!
+//! ## Power states and the drain protocol
+//!
+//! Every cluster is in one of four states:
+//!
+//! - **Active** — accepts dispatch, burns static power.
+//! - **Draining** — a scale-down decision landed here: the cluster stops
+//!   receiving [`crate::balancer::LoadBalancer::dispatch_ready`]
+//!   assignments but keeps stepping
+//!   ([`crate::cluster::SvCluster::run_until`]) until every outstanding
+//!   request is fully booked; no request is ever lost to a power-down. It
+//!   stays powered until the controller observes the drain finished (and
+//!   at least until its last booked task completes), then goes cold. A
+//!   backlog spike before the drain finishes *cancels* the drain — the
+//!   cluster is still powered, so reactivation is free.
+//! - **Cold** — powered off: no dispatch, no static energy.
+//! - **Warming** — a scale-up decision woke a cold cluster: it pays static
+//!   power immediately (the silicon is on) but accepts no work until the
+//!   configured warm-up latency has elapsed — PLL relock, SRAM
+//!   re-initialization, and the model-table reload are not free.
+//!
+//! ## Hysteresis
+//!
+//! Threshold controllers flap: one burst scales up, the following lull
+//! scales down, and the fleet pays a warm-up penalty on every cycle of the
+//! oscillation. The policy therefore enforces a *minimum dwell*: after a
+//! scale decision, the opposite decision is blocked until `dwell` cycles
+//! have passed. Same-direction decisions are not dwell-gated — a deepening
+//! backlog may wake several clusters in quick succession.
+//!
+//! ## Energy accounting
+//!
+//! The scaler keeps per-cluster powered-interval ledgers. An interval
+//! closes when the controller observes the drain finished — at the later
+//! of that epoch and the drained cluster's last booked completion — so
+//! idle-but-powered time (an Active cluster waiting for the scale-down
+//! decision, a drained cluster waiting for the event clock) is charged
+//! honestly, never erased. Intervals never overlap, and aggregation clamps
+//! them to the run span, so per-cluster powered cycles can never exceed
+//! the fixed-fleet baseline. The serving engine folds the ledgers into the
+//! [`crate::serve::ServeReport`]: static energy is charged via
+//! [`crate::sim::power::EnergyMeter`] only for powered cycles, and the
+//! report carries the fixed-fleet baseline (every cluster powered for the
+//! whole span) so the saving — and the SLO cost of chasing it — is
+//! visible per run.
+
+use crate::balancer::Backlog;
+use crate::cluster::SvCluster;
+use crate::sim::Cycle;
+use crate::workload::ModelRegistry;
+
+/// Autoscaling policy of the serving engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AutoscalePolicy {
+    /// Fixed fleet: every cluster stays powered and dispatchable for the
+    /// whole run (the pre-autoscaling engine, bit for bit).
+    #[default]
+    Off,
+    /// Threshold controller over the aggregate queue depth
+    /// ([`Backlog::queue_depth`]): scale up (wake one cluster) while the
+    /// depth exceeds `up`, scale down (drain one cluster) while it is below
+    /// `down`, never dropping the active-or-warming count under
+    /// `min_active`, with `dwell` cycles of hysteresis before a decision
+    /// may reverse and a `warmup` latency before a woken cluster accepts
+    /// work.
+    Threshold {
+        /// Scale up while `queue_depth() > up`.
+        up: usize,
+        /// Scale down while `queue_depth() < down`.
+        down: usize,
+        /// Floor on the active-or-warming cluster count (clamped to at
+        /// least 1 — the fleet must always be able to make progress).
+        min_active: u32,
+        /// Minimum cycles between a scale decision and its reversal.
+        dwell: Cycle,
+        /// Cycles a woken cluster spends warming before accepting work.
+        warmup: Cycle,
+    },
+}
+
+impl AutoscalePolicy {
+    /// Short label used in reports and CLI output.
+    pub fn name(&self) -> &'static str {
+        match self {
+            AutoscalePolicy::Off => "off",
+            AutoscalePolicy::Threshold { .. } => "threshold",
+        }
+    }
+
+    /// Is any capacity scaling configured? (The serving engine skips the
+    /// stage entirely when not, preserving fixed-fleet behavior exactly.)
+    pub fn enabled(&self) -> bool {
+        !matches!(self, AutoscalePolicy::Off)
+    }
+}
+
+/// Power state of one cluster, as the autoscaler sees it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PowerState {
+    /// Powered and accepting dispatch.
+    Active,
+    /// Powering down: no new dispatch, finishes outstanding work, goes
+    /// cold once fully drained.
+    Draining,
+    /// Powered off.
+    Cold,
+    /// Powering up: pays static power, accepts work from `ready_at`.
+    Warming { ready_at: Cycle },
+}
+
+/// Direction of one scale decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleDirection {
+    Up,
+    Down,
+}
+
+/// One scale decision, kept for telemetry and the hysteresis tests.
+#[derive(Debug, Clone, Copy)]
+pub struct ScaleEvent {
+    pub cycle: Cycle,
+    pub cluster: u32,
+    pub direction: ScaleDirection,
+    /// Queue depth that triggered the decision.
+    pub queue_depth: usize,
+}
+
+/// The capacity-scaling stage of the serving engine. Owns per-cluster
+/// power states and the powered-cycle ledgers the energy accounting reads.
+#[derive(Debug)]
+pub struct Autoscaler {
+    policy: AutoscalePolicy,
+    states: Vec<PowerState>,
+    /// Dispatch eligibility, recomputed after every [`Self::observe`]:
+    /// exactly the `Active` clusters.
+    mask: Vec<bool>,
+    /// Closed powered intervals per cluster, `(on, off)` in cycles —
+    /// non-overlapping, clamped to the run span at aggregation.
+    intervals: Vec<Vec<(Cycle, Cycle)>>,
+    /// Start of the currently-open powered interval (`None` = cold).
+    on_since: Vec<Option<Cycle>>,
+    /// End of the last closed interval — power-ons clamp here so intervals
+    /// never overlap (a re-woken cluster may still be finishing work booked
+    /// before it went cold; it was charged through that work already).
+    last_off: Vec<Cycle>,
+    last_change: Option<(ScaleDirection, Cycle)>,
+    log: Vec<ScaleEvent>,
+}
+
+impl Autoscaler {
+    pub fn new(policy: AutoscalePolicy, clusters: u32) -> Autoscaler {
+        let n = clusters as usize;
+        Autoscaler {
+            policy,
+            states: vec![PowerState::Active; n],
+            mask: vec![true; n],
+            intervals: vec![Vec::new(); n],
+            on_since: vec![Some(0); n],
+            last_off: vec![0; n],
+            last_change: None,
+            log: Vec::new(),
+        }
+    }
+
+    /// Is any capacity scaling configured?
+    pub fn enabled(&self) -> bool {
+        self.policy.enabled()
+    }
+
+    /// Per-cluster power states (telemetry / tests).
+    pub fn states(&self) -> &[PowerState] {
+        &self.states
+    }
+
+    /// Dispatch eligibility per cluster — exactly the `Active` set, as of
+    /// the last [`Self::observe`].
+    pub fn dispatch_mask(&self) -> &[bool] {
+        &self.mask
+    }
+
+    /// The scale-decision log, in decision order.
+    pub fn log(&self) -> &[ScaleEvent] {
+        &self.log
+    }
+
+    /// Scale decisions taken in `direction`.
+    pub fn count(&self, direction: ScaleDirection) -> u64 {
+        self.log.iter().filter(|e| e.direction == direction).count() as u64
+    }
+
+    /// Clusters that currently count as serving capacity: active plus
+    /// warming (a warming cluster is committed capacity that merely has
+    /// not finished its power-up yet). Draining clusters are on their way
+    /// out and do not count.
+    pub fn capacity(&self) -> usize {
+        self.states
+            .iter()
+            .filter(|s| matches!(s, PowerState::Active | PowerState::Warming { .. }))
+            .count()
+    }
+
+    /// Earliest warm-up completion — a wake-up point for the serving
+    /// engine's event clock. `None` when nothing is warming.
+    pub fn next_event(&self) -> Option<Cycle> {
+        self.states
+            .iter()
+            .filter_map(|s| match s {
+                PowerState::Warming { ready_at } => Some(*ready_at),
+                _ => None,
+            })
+            .min()
+    }
+
+    /// One control epoch at cycle `now`: finish due warm-ups, power down
+    /// fully-drained clusters, then take at most one scale decision against
+    /// the backlog snapshot. Called by the engine once per event-loop epoch,
+    /// before dispatch, so a decision takes effect in the same epoch.
+    pub fn observe(
+        &mut self,
+        now: Cycle,
+        backlog: &Backlog,
+        clusters: &[SvCluster],
+        registry: &ModelRegistry,
+    ) {
+        let AutoscalePolicy::Threshold { up, down, min_active, dwell, warmup } = self.policy
+        else {
+            return;
+        };
+        let min_active = (min_active.max(1) as usize).min(self.states.len());
+
+        // 1. Warm-ups whose latency has elapsed come online.
+        for s in self.states.iter_mut() {
+            if matches!(s, PowerState::Warming { ready_at } if *ready_at <= now) {
+                *s = PowerState::Active;
+            }
+        }
+        // 2. Draining clusters with every assigned request fully booked go
+        //    cold. The powered interval closes at the later of this epoch
+        //    and the cluster's last booked completion: the silicon is
+        //    physically on until the controller cuts power here, and a
+        //    last task booked past the horizon keeps it on through
+        //    `booked_through`. Closing any earlier (e.g. backdating to the
+        //    local makespan) would erase idle-but-powered cycles and
+        //    overstate the saving.
+        for (i, s) in self.states.iter_mut().enumerate() {
+            if *s == PowerState::Draining && clusters[i].is_drained() {
+                *s = PowerState::Cold;
+                if let Some(on) = self.on_since[i].take() {
+                    let off = now.max(clusters[i].booked_through()).max(on);
+                    self.intervals[i].push((on, off));
+                    self.last_off[i] = off;
+                }
+            }
+        }
+
+        // 3. At most one scale decision per epoch, dwell-gated on reversal.
+        let depth = backlog.queue_depth();
+        let capacity = self.capacity();
+        let allowed = |dir: ScaleDirection, last: Option<(ScaleDirection, Cycle)>| match last {
+            None => true,
+            Some((d, t)) => d == dir || now >= t.saturating_add(dwell),
+        };
+        if depth > up
+            && capacity < self.states.len()
+            && allowed(ScaleDirection::Up, self.last_change)
+        {
+            // Cheapest capacity first: cancel a drain (the cluster is
+            // still powered), else wake the lowest-id cold cluster.
+            let target = self
+                .states
+                .iter()
+                .position(|s| *s == PowerState::Draining)
+                .or_else(|| self.states.iter().position(|s| *s == PowerState::Cold));
+            if let Some(i) = target {
+                if self.states[i] == PowerState::Cold {
+                    // Power on now; never overlap the previous interval
+                    // (its booked work was charged through last_off).
+                    self.on_since[i] = Some(now.max(self.last_off[i]));
+                    self.states[i] = if warmup == 0 {
+                        PowerState::Active
+                    } else {
+                        PowerState::Warming { ready_at: now + warmup }
+                    };
+                } else {
+                    self.states[i] = PowerState::Active;
+                }
+                self.last_change = Some((ScaleDirection::Up, now));
+                self.log.push(ScaleEvent {
+                    cycle: now,
+                    cluster: i as u32,
+                    direction: ScaleDirection::Up,
+                    queue_depth: depth,
+                });
+            }
+        } else if depth < down
+            && capacity > min_active
+            && allowed(ScaleDirection::Down, self.last_change)
+        {
+            // Drain the active cluster with the least outstanding work (it
+            // finishes — and stops burning leakage — soonest); ties go to
+            // the higher id so cluster 0 is retired last.
+            let target = self
+                .states
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| **s == PowerState::Active)
+                .min_by_key(|&(i, _)| {
+                    (clusters[i].outstanding(registry), std::cmp::Reverse(i))
+                })
+                .map(|(i, _)| i);
+            if let Some(i) = target {
+                self.states[i] = PowerState::Draining;
+                self.last_change = Some((ScaleDirection::Down, now));
+                self.log.push(ScaleEvent {
+                    cycle: now,
+                    cluster: i as u32,
+                    direction: ScaleDirection::Down,
+                    queue_depth: depth,
+                });
+            }
+        }
+
+        for (i, s) in self.states.iter().enumerate() {
+            self.mask[i] = *s == PowerState::Active;
+        }
+    }
+
+    /// Close the ledgers at end of run and return powered cycles per
+    /// cluster. Every interval is clamped to the run span `[0, makespan]`
+    /// (energy integration stops where the fixed-fleet baseline's does),
+    /// and a still-open interval — a cluster active, warming, or draining
+    /// at end of trace — is charged through `makespan`. With intervals
+    /// non-overlapping and clamped, per-cluster powered cycles can never
+    /// exceed `makespan`, so autoscaled static energy is bounded by the
+    /// fixed-fleet baseline by construction.
+    pub fn powered_cycles(&self, makespan: Cycle) -> Vec<u64> {
+        self.intervals
+            .iter()
+            .zip(&self.on_since)
+            .map(|(closed, open)| {
+                let mut p: u64 = closed
+                    .iter()
+                    .map(|&(on, off)| off.min(makespan).saturating_sub(on.min(makespan)))
+                    .sum();
+                if let Some(on) = *open {
+                    p += makespan.saturating_sub(on.min(makespan));
+                }
+                p
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{HardwareConfig, SimConfig};
+    use crate::sched::SchedulerKind;
+    use crate::workload::WorkloadRequest;
+
+    fn clusters(n: u32) -> Vec<SvCluster> {
+        let hw = HardwareConfig::small();
+        (0..n)
+            .map(|i| SvCluster::new(i, &hw, SchedulerKind::Has, SimConfig::default()))
+            .collect()
+    }
+
+    fn threshold(up: usize, down: usize, min_active: u32, dwell: Cycle) -> AutoscalePolicy {
+        AutoscalePolicy::Threshold { up, down, min_active, dwell, warmup: 1_000 }
+    }
+
+    fn depth(d: usize) -> Backlog {
+        Backlog { queued_requests: d, ..Backlog::idle() }
+    }
+
+    #[test]
+    fn off_is_disabled_and_never_scales() {
+        let reg = ModelRegistry::standard();
+        let cs = clusters(3);
+        let mut a = Autoscaler::new(AutoscalePolicy::Off, 3);
+        assert!(!a.enabled());
+        a.observe(0, &depth(10_000), &cs, &reg);
+        a.observe(9_999, &depth(0), &cs, &reg);
+        assert!(a.log().is_empty());
+        assert_eq!(a.dispatch_mask(), &[true, true, true]);
+        assert_eq!(a.capacity(), 3);
+        // Never-scaled fleet: every cluster charged the whole span.
+        assert_eq!(a.powered_cycles(500), vec![500, 500, 500]);
+    }
+
+    #[test]
+    fn scale_down_drains_and_powers_off_idle_cluster() {
+        let reg = ModelRegistry::standard();
+        let cs = clusters(2);
+        let mut a = Autoscaler::new(threshold(8, 2, 1, 100), 2);
+        a.observe(10, &depth(0), &cs, &reg);
+        // Ties on zero outstanding go to the higher id.
+        assert_eq!(a.states()[1], PowerState::Draining);
+        assert_eq!(a.dispatch_mask(), &[true, false]);
+        assert_eq!(a.capacity(), 1);
+        // The idle drain completes at the next control epoch (cycle 500):
+        // the cluster is charged through that epoch — it was physically
+        // powered while the event clock idled — and nothing after.
+        a.observe(500, &depth(0), &cs, &reg);
+        assert_eq!(a.states()[1], PowerState::Cold);
+        assert_eq!(a.powered_cycles(10_000), vec![10_000, 500]);
+        assert_eq!(a.count(ScaleDirection::Down), 1);
+    }
+
+    #[test]
+    fn min_active_floor_holds_even_when_zero() {
+        let reg = ModelRegistry::standard();
+        let cs = clusters(2);
+        // min_active 0 clamps to 1: the fleet must always make progress.
+        let mut a = Autoscaler::new(threshold(8, 2, 0, 0), 2);
+        a.observe(0, &depth(0), &cs, &reg);
+        a.observe(1, &depth(0), &cs, &reg);
+        a.observe(2, &depth(0), &cs, &reg);
+        assert_eq!(a.capacity(), 1, "clamped floor must hold");
+        assert_eq!(a.count(ScaleDirection::Down), 1);
+    }
+
+    #[test]
+    fn scale_up_wakes_cold_cluster_with_warmup() {
+        let reg = ModelRegistry::standard();
+        let cs = clusters(2);
+        let mut a = Autoscaler::new(threshold(4, 1, 1, 0), 2);
+        a.observe(0, &depth(0), &cs, &reg); // drain 1
+        a.observe(10, &depth(0), &cs, &reg); // 1 cold
+        assert_eq!(a.states()[1], PowerState::Cold);
+        a.observe(2_000, &depth(5), &cs, &reg);
+        assert_eq!(a.states()[1], PowerState::Warming { ready_at: 3_000 });
+        assert_eq!(a.next_event(), Some(3_000));
+        assert!(!a.dispatch_mask()[1], "warming cluster must not accept work");
+        assert_eq!(a.capacity(), 2, "warming counts as committed capacity");
+        a.observe(3_000, &depth(5), &cs, &reg);
+        assert_eq!(a.states()[1], PowerState::Active);
+        assert!(a.dispatch_mask()[1]);
+        assert_eq!(a.next_event(), None);
+        // Cluster 1 was powered 0..=10 (until the drain was observed cold)
+        // and again from the wake cycle 2000 through warm-up to end of span.
+        assert_eq!(a.powered_cycles(5_000), vec![5_000, 10 + 3_000]);
+    }
+
+    #[test]
+    fn backlog_spike_cancels_a_drain_for_free() {
+        let reg = ModelRegistry::standard();
+        let mut cs = clusters(2);
+        // Both clusters are busy (a drain takes time); cluster 0 has less
+        // outstanding work, so the scale-down retires it first.
+        let alex = reg.id_of("alexnet").unwrap();
+        let vgg = reg.id_of("vgg16").unwrap();
+        cs[0].assign(WorkloadRequest::new(0, alex, 0));
+        cs[1].assign(WorkloadRequest::new(1, vgg, 0));
+        let mut a = Autoscaler::new(threshold(4, 1, 1, 10), 2);
+        a.observe(0, &depth(0), &cs, &reg);
+        assert_eq!(a.states()[0], PowerState::Draining, "least-outstanding cluster drains");
+        // A backlog spike before the drain completes reactivates the still-
+        // powered cluster instead of paying a cold-start warm-up elsewhere.
+        a.observe(100, &depth(9), &cs, &reg);
+        assert_eq!(a.states()[0], PowerState::Active, "spike cancels the drain");
+        assert_eq!(a.count(ScaleDirection::Up), 1);
+        // Never went cold: charged for the whole span.
+        assert_eq!(a.powered_cycles(1_000)[0], 1_000);
+    }
+
+    #[test]
+    fn dwell_blocks_reversal_but_not_same_direction() {
+        let reg = ModelRegistry::standard();
+        let cs = clusters(4);
+        let mut a = Autoscaler::new(threshold(4, 2, 1, 1_000), 4);
+        a.observe(0, &depth(0), &cs, &reg);
+        assert_eq!(a.count(ScaleDirection::Down), 1);
+        // Same direction inside the dwell window: allowed.
+        a.observe(10, &depth(0), &cs, &reg);
+        assert_eq!(a.count(ScaleDirection::Down), 2);
+        // Reversal inside the window: blocked.
+        a.observe(20, &depth(100), &cs, &reg);
+        assert_eq!(a.count(ScaleDirection::Up), 0);
+        // Reversal after the window: allowed.
+        a.observe(1_010, &depth(100), &cs, &reg);
+        assert_eq!(a.count(ScaleDirection::Up), 1);
+        for w in a.log().windows(2) {
+            if w[0].direction != w[1].direction {
+                assert!(w[1].cycle >= w[0].cycle + 1_000, "flap within dwell");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_warmup_wakes_instantly() {
+        let reg = ModelRegistry::standard();
+        let cs = clusters(2);
+        let mut a = Autoscaler::new(
+            AutoscalePolicy::Threshold { up: 4, down: 1, min_active: 1, dwell: 0, warmup: 0 },
+            2,
+        );
+        a.observe(0, &depth(0), &cs, &reg);
+        a.observe(10, &depth(0), &cs, &reg);
+        assert_eq!(a.states()[1], PowerState::Cold);
+        a.observe(20, &depth(5), &cs, &reg);
+        assert_eq!(a.states()[1], PowerState::Active, "zero warm-up is immediate");
+        assert!(a.dispatch_mask()[1]);
+    }
+
+    #[test]
+    fn policy_labels() {
+        assert_eq!(AutoscalePolicy::Off.name(), "off");
+        assert!(!AutoscalePolicy::Off.enabled());
+        let t = AutoscalePolicy::Threshold { up: 8, down: 1, min_active: 1, dwell: 0, warmup: 0 };
+        assert_eq!(t.name(), "threshold");
+        assert!(t.enabled());
+    }
+}

@@ -21,16 +21,26 @@
 //!    same-model requests back up to a size cap / wait deadline and emits
 //!    fused multi-batch requests (a pass-through when
 //!    [`BatchPolicy::Off`]).
+//! 2b. **Scale** — the autoscaler ([`autoscale::Autoscaler`]) takes one
+//!    control epoch against the fleet's aggregate backlog
+//!    ([`LoadBalancer::backlog`]): it powers idle clusters down (after a
+//!    drain) and wakes them back up (after a warm-up), charging static
+//!    energy only for powered cycles (skipped entirely when
+//!    [`AutoscalePolicy::Off`]).
 //! 3. **Dispatch** — the balancer routes emitted requests on *live*
 //!    cluster load (estimated outstanding cycles via
 //!    [`crate::cluster::SvCluster::outstanding`] — the same signal
 //!    [`LoadBalancer::status`] exports as the status table), exactly what
-//!    the RISC-V controller can observe at that cycle.
+//!    the RISC-V controller can observe at that cycle; a draining, cold,
+//!    or warming cluster receives nothing.
 //! 4. **Advance** — each cluster takes scheduling decisions only up to the
-//!    current event horizon ([`crate::cluster::SvCluster::run_until`]).
+//!    current event horizon ([`crate::cluster::SvCluster::run_until`]) —
+//!    including draining clusters, which finish their outstanding work
+//!    before going cold.
 //! 5. **Clock** — time jumps to the next arrival, the earliest deferred
-//!    re-release, the earliest batch-queue flush deadline, or the earliest
-//!    cluster decision point, whichever comes first.
+//!    re-release, the earliest batch-queue flush deadline, the earliest
+//!    warm-up completion, or the earliest cluster decision point,
+//!    whichever comes first.
 //!
 //! In the fully backlogged regime (every arrival ≈ 0) the engine reduces
 //! exactly to the offline coordinator — same dispatch order, same scheduler
@@ -41,12 +51,14 @@
 //! latency, deadline-miss rate, and goodput — instead of raw makespan.
 
 pub mod admission;
+pub mod autoscale;
 pub mod batch;
 pub mod slo;
 
 pub use admission::{
     AdmissionController, AdmissionPolicy, Decision, Disposition, ShedReason, ShedRequest,
 };
+pub use autoscale::{Autoscaler, AutoscalePolicy, PowerState, ScaleDirection, ScaleEvent};
 pub use batch::{BatchPolicy, DynamicBatcher, FusedBatch};
 pub use slo::SloPolicy;
 
@@ -55,6 +67,7 @@ use crate::cluster::SvCluster;
 use crate::config::{HardwareConfig, SimConfig};
 use crate::model::ModelFamily;
 use crate::sched::SchedulerKind;
+use crate::sim::power::EnergyMeter;
 use crate::sim::Cycle;
 use crate::util::json::Json;
 use crate::util::stats::Summary;
@@ -71,6 +84,8 @@ pub struct ServeConfig {
     pub batch: BatchPolicy,
     /// Admission control / load shedding between release and the batcher.
     pub admission: AdmissionPolicy,
+    /// Backlog-driven scaling of the active cluster count.
+    pub autoscale: AutoscalePolicy,
 }
 
 impl Default for ServeConfig {
@@ -80,6 +95,7 @@ impl Default for ServeConfig {
             slo: SloPolicy::default(),
             batch: BatchPolicy::Off,
             admission: AdmissionPolicy::Open,
+            autoscale: AutoscalePolicy::Off,
         }
     }
 }
@@ -151,6 +167,23 @@ pub struct ServeReport {
     /// several; deferred-then-served requests carry
     /// [`Disposition::Deferred`]).
     pub deferred: u64,
+    /// The autoscaling policy the run used.
+    pub autoscale: AutoscalePolicy,
+    /// Powered cycles per cluster. Under [`AutoscalePolicy::Off`] every
+    /// cluster is powered for the whole span, so each entry is `makespan`.
+    pub powered_cycles: Vec<u64>,
+    /// Scale-up decisions the autoscaler took (cold wakes + drain cancels).
+    pub scale_ups: u64,
+    /// Scale-down decisions the autoscaler took.
+    pub scale_downs: u64,
+    /// The scale-decision log, in decision order (empty when Off).
+    pub scale_log: Vec<ScaleEvent>,
+    /// Static (leakage/clock-tree) energy actually paid over the run,
+    /// joules: per-cluster powered cycles plus the always-on uncore.
+    pub static_energy_j: f64,
+    /// Static energy a fixed fleet (every cluster powered for the whole
+    /// span) pays — the baseline the saving is measured against.
+    pub fixed_fleet_static_energy_j: f64,
     /// Latency summary over `served`, computed once at aggregation (the
     /// percentile accessors all read this cache).
     latency_stats: Option<Summary>,
@@ -241,6 +274,28 @@ impl ServeReport {
         Some(shed as f64 / (served + shed) as f64)
     }
 
+    /// Powered cluster-cycles summed across the fleet — the occupancy
+    /// integral the static-energy accounting charges (equals
+    /// `clusters × makespan` for a fixed fleet).
+    pub fn active_cluster_cycles(&self) -> u64 {
+        self.powered_cycles.iter().sum()
+    }
+
+    /// Static energy the autoscaler saved vs the fixed-fleet baseline,
+    /// joules (zero when autoscaling is off or never scaled down).
+    pub fn static_energy_saved_j(&self) -> f64 {
+        (self.fixed_fleet_static_energy_j - self.static_energy_j).max(0.0)
+    }
+
+    /// Saved fraction of the fixed-fleet static energy, in [0, 1]
+    /// (0 for an empty span).
+    pub fn static_energy_saved_frac(&self) -> f64 {
+        if self.fixed_fleet_static_energy_j <= 0.0 {
+            return 0.0;
+        }
+        self.static_energy_saved_j() / self.fixed_fleet_static_energy_j
+    }
+
     /// Sustained throughput in TOPS over the whole run (all work).
     pub fn tops(&self) -> f64 {
         if self.makespan == 0 {
@@ -322,6 +377,35 @@ impl ServeReport {
                 j.set("shed_rate_transformer", s);
             }
         }
+        // Autoscale keys appear only when capacity scaling is configured,
+        // so the autoscale-off report stays byte-identical to the
+        // fixed-fleet one (the same discipline as the batching and
+        // admission keys above). `admitted_miss_rate` in this block is the
+        // SLO-cost side of the energy saving; the bench sweeps report its
+        // delta against the fixed fleet.
+        if self.autoscale.enabled() {
+            j.set("autoscale_policy", self.autoscale.name())
+                .set("active_cluster_cycles", self.active_cluster_cycles())
+                .set("scale_ups", self.scale_ups)
+                .set("scale_downs", self.scale_downs)
+                .set("static_energy_j", self.static_energy_j)
+                .set("fixed_fleet_static_energy_j", self.fixed_fleet_static_energy_j)
+                .set("static_energy_saved_j", self.static_energy_saved_j())
+                .set("static_energy_saved_frac", self.static_energy_saved_frac());
+            if !self.admission.enabled() {
+                // Already emitted (admitted-only view) when admission is on.
+                j.set("admitted_miss_rate", self.admitted_miss_rate());
+            }
+            if let AutoscalePolicy::Threshold { up, down, min_active, dwell, warmup } =
+                self.autoscale
+            {
+                j.set("autoscale_up", up)
+                    .set("autoscale_down", down)
+                    .set("autoscale_min_active", min_active)
+                    .set("autoscale_dwell_cycles", dwell)
+                    .set("autoscale_warmup_cycles", warmup);
+            }
+        }
         if let Some(m) = self.miss_rate_for(ModelFamily::Cnn) {
             j.set("miss_rate_cnn", m);
         }
@@ -400,6 +484,11 @@ impl ServeEngine {
         self
     }
 
+    pub fn with_autoscale(mut self, autoscale: AutoscalePolicy) -> ServeEngine {
+        self.cfg.autoscale = autoscale;
+        self
+    }
+
     /// Serve a workload trace online and score it against the SLO policy.
     pub fn run(&mut self, wl: &Workload) -> ServeReport {
         let mut clusters: Vec<SvCluster> = (0..self.hw.clusters)
@@ -416,6 +505,7 @@ impl ServeEngine {
         let mut batcher = DynamicBatcher::new(self.cfg.batch, self.cfg.slo);
         let mut admission =
             AdmissionController::new(self.cfg.admission, self.cfg.slo, &self.hw, &self.sim);
+        let mut autoscaler = Autoscaler::new(self.cfg.autoscale, self.hw.clusters);
 
         // The trace in arrival order (the generator emits it sorted; sort
         // defensively for hand-built traces, stable on same-cycle ids).
@@ -472,8 +562,34 @@ impl ServeEngine {
                     .expect("the engine registers every model id it submits");
             }
 
-            // 2. Online dispatch against live cluster status.
-            lb.dispatch_ready(&mut clusters, &registry, now);
+            // 1c. Autoscale: one control epoch against the fleet's
+            //     aggregate backlog — finish due warm-ups, power down
+            //     fully-drained clusters, take at most one scale decision —
+            //     before dispatch, so the new eligibility mask governs this
+            //     epoch's routing. Skipped entirely (bit for bit) when Off.
+            if autoscaler.enabled() {
+                let mut backlog = LoadBalancer::backlog(&clusters, &registry);
+                // Requests coalescing in the batcher and requests submitted
+                // this epoch but not yet routed are invisible to the
+                // cluster status table; fold both in (the same discipline
+                // as the admission snapshot above) so the controller cannot
+                // scale down into a burst it has not dispatched yet.
+                backlog.queued_requests += batcher.pending() + lb.queued();
+                autoscaler.observe(now, &backlog, &clusters, &registry);
+            }
+
+            // 2. Online dispatch against live cluster status, restricted to
+            //    powered, non-draining clusters when autoscaling.
+            if autoscaler.enabled() {
+                lb.dispatch_ready_eligible(
+                    &mut clusters,
+                    &registry,
+                    now,
+                    Some(autoscaler.dispatch_mask()),
+                );
+            } else {
+                lb.dispatch_ready(&mut clusters, &registry, now);
+            }
 
             // 3. Advance every cluster's scheduler to the horizon.
             for c in clusters.iter_mut() {
@@ -495,6 +611,12 @@ impl ServeEngine {
             if let Some(f) = batcher.next_flush() {
                 t_next = Some(t_next.map_or(f, |t| t.min(f)));
             }
+            // The earliest warm-up completion: a woken cluster must start
+            // accepting work the cycle its warm-up ends, even if no other
+            // event lands there (always `None` when autoscaling is off).
+            if let Some(w) = autoscaler.next_event() {
+                t_next = Some(t_next.map_or(w, |t| t.min(w)));
+            }
             for c in &clusters {
                 if let Some(e) = c.next_event() {
                     // run_until only leaves work behind the horizon when the
@@ -514,7 +636,7 @@ impl ServeEngine {
             }
         }
 
-        self.aggregate(wl, &registry, &lb, &batcher, &admission, clusters, epochs)
+        self.aggregate(wl, &registry, &lb, &batcher, &admission, &autoscaler, clusters, epochs)
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -525,16 +647,39 @@ impl ServeEngine {
         lb: &LoadBalancer,
         batcher: &DynamicBatcher,
         admission: &AdmissionController,
+        autoscaler: &Autoscaler,
         clusters: Vec<SvCluster>,
         epochs: u64,
     ) -> ServeReport {
         let makespan = clusters.iter().map(|c| c.state.makespan).max().unwrap_or(0);
-        // request id → dispatch stamp, indexed once (the table is in
-        // submission order; ids are unique per trace).
-        let dispatch_stamp: std::collections::HashMap<u64, Option<Cycle>> = lb
+        // Static-energy accounting: the fixed fleet pays every cluster for
+        // the whole span; the autoscaled fleet pays per-cluster powered
+        // cycles plus the always-on uncore. With autoscaling off the two
+        // are the same meter reading, not merely close.
+        let mut fixed_meter = EnergyMeter::new();
+        fixed_meter.add_static(&self.hw, makespan);
+        let fixed_fleet_static_energy_j = fixed_meter.total_joules();
+        let (powered_cycles, static_energy_j) = if autoscaler.enabled() {
+            let powered = autoscaler.powered_cycles(makespan);
+            let mut m = EnergyMeter::new();
+            for &p in &powered {
+                m.add_cluster_static(&self.hw, p);
+            }
+            m.add_uncore_static(&self.hw, makespan);
+            (powered, m.total_joules())
+        } else {
+            (vec![makespan; clusters.len()], fixed_fleet_static_energy_j)
+        };
+        // request id → (true submission arrival, dispatch stamp), indexed
+        // once (the table is in submission order; ids are unique per
+        // trace). Scoring reads the table arrival rather than the
+        // cluster-visible one: a request held back by the autoscaler's
+        // eligibility mask reaches the cluster re-stamped to its dispatch
+        // cycle, but the user's clock started at submission.
+        let dispatch_stamp: std::collections::HashMap<u64, (Cycle, Option<Cycle>)> = lb
             .request_table
             .iter()
-            .map(|e| (e.request_id, e.dispatched_at))
+            .map(|e| (e.request_id, (e.arrival, e.dispatched_at)))
             .collect();
         let mut served = Vec::new();
         let mut total_ops = 0u64;
@@ -550,11 +695,11 @@ impl ServeEngine {
             for r in &st.completed {
                 // A completed request was necessarily dispatched: a missing
                 // stamp is an engine bug, not a default-able case.
-                let stamp = dispatch_stamp
+                let (submitted, stamp) = dispatch_stamp
                     .get(&r.request_id)
                     .copied()
-                    .expect("completed request missing from the request table")
-                    .expect("completed request has no dispatch stamp");
+                    .expect("completed request missing from the request table");
+                let stamp = stamp.expect("completed request has no dispatch stamp");
                 if let Some(b) = batcher.batch_of(r.request_id) {
                     // Fan the fused completion back out to its members: the
                     // batch completes as a unit, so every member shares the
@@ -581,7 +726,7 @@ impl ServeEngine {
                     }
                 } else {
                     let arrival =
-                        admission.original_arrival(r.request_id).unwrap_or(r.arrival);
+                        admission.original_arrival(r.request_id).unwrap_or(submitted);
                     let s = scored(
                         registry,
                         &self.cfg.slo,
@@ -632,6 +777,13 @@ impl ServeEngine {
             admission: self.cfg.admission,
             shed: admission.shed().to_vec(),
             deferred: admission.defer_events(),
+            autoscale: self.cfg.autoscale,
+            powered_cycles,
+            scale_ups: autoscaler.count(ScaleDirection::Up),
+            scale_downs: autoscaler.count(ScaleDirection::Down),
+            scale_log: autoscaler.log().to_vec(),
+            static_energy_j,
+            fixed_fleet_static_energy_j,
             latency_stats,
         }
     }

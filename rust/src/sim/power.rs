@@ -8,6 +8,12 @@ use crate::config::HardwareConfig;
 use crate::ops::EnergyRow;
 use crate::sim::{physical, Cycle};
 
+/// Static power of the uncore (balancer/NoC/PHY), milliwatts — paid for
+/// the whole span regardless of how many clusters are powered. Shared by
+/// [`EnergyMeter::add_static`] and [`EnergyMeter::add_uncore_static`] so
+/// the fixed-fleet baseline and the autoscaled decomposition cannot drift.
+pub const UNCORE_STATIC_MW: f64 = 50.0;
+
 /// Accumulates energy by source over a simulation run.
 #[derive(Debug, Clone, Default)]
 pub struct EnergyMeter {
@@ -48,17 +54,41 @@ impl EnergyMeter {
         self.dram_pj += pj;
     }
 
-    /// Add leakage/clock-tree energy for `elapsed` cycles of the whole
-    /// configuration.
-    pub fn add_static(&mut self, hw: &HardwareConfig, elapsed: Cycle) {
+    /// Leakage/clock-tree power of one cluster, in milliwatts.
+    fn cluster_static_mw(hw: &HardwareConfig) -> f64 {
         let c = &hw.cluster;
-        let mw_per_cluster = physical::sa_static_mw(c.systolic.dim) * c.systolic.count as f64
+        physical::sa_static_mw(c.systolic.dim) * c.systolic.count as f64
             + physical::vp_static_mw(c.vector.lanes) * c.vector.count as f64
             + (c.shared_mem_bytes as f64 / (1024.0 * 1024.0))
-                * physical::shared_mem::LEAKAGE_MW_PER_MB;
-        let mw = mw_per_cluster * hw.clusters as f64 + 50.0; // +balancer/NoC/PHY
+                * physical::shared_mem::LEAKAGE_MW_PER_MB
+    }
+
+    fn add_static_mw(&mut self, hw: &HardwareConfig, mw: f64, elapsed: Cycle) {
         let seconds = elapsed as f64 / (hw.clock_ghz * 1e9);
         self.static_pj += mw * 1e-3 * seconds * 1e12;
+    }
+
+    /// Add leakage/clock-tree energy for `elapsed` cycles of the whole
+    /// configuration — every cluster powered, plus the uncore.
+    pub fn add_static(&mut self, hw: &HardwareConfig, elapsed: Cycle) {
+        let mw = Self::cluster_static_mw(hw) * hw.clusters as f64 + UNCORE_STATIC_MW;
+        self.add_static_mw(hw, mw, elapsed);
+    }
+
+    /// Add leakage/clock-tree energy for `elapsed` powered cycles of *one*
+    /// cluster. The serve-layer autoscaler charges each cluster only for
+    /// the cycles it was actually powered; a fully-powered fleet composed
+    /// from this plus [`Self::add_uncore_static`] matches
+    /// [`Self::add_static`] (up to float associativity).
+    pub fn add_cluster_static(&mut self, hw: &HardwareConfig, elapsed: Cycle) {
+        self.add_static_mw(hw, Self::cluster_static_mw(hw), elapsed);
+    }
+
+    /// Add the uncore (balancer/NoC/PHY) static energy for `elapsed`
+    /// cycles — paid for the whole span regardless of how many clusters
+    /// are powered.
+    pub fn add_uncore_static(&mut self, hw: &HardwareConfig, elapsed: Cycle) {
+        self.add_static_mw(hw, UNCORE_STATIC_MW, elapsed);
     }
 
     /// Total energy in joules.
@@ -66,19 +96,24 @@ impl EnergyMeter {
         (self.sa_pj + self.vp_pj + self.sram_pj + self.dram_pj + self.static_pj) * 1e-12
     }
 
-    /// Average power in watts over `elapsed` cycles at `clock_ghz`.
+    /// Average power in watts over `elapsed` cycles at `clock_ghz`. Zero
+    /// elapsed time or a degenerate (zero/negative/non-finite) clock has no
+    /// meaningful average — both return 0.0 rather than NaN/∞.
     pub fn avg_watts(&self, elapsed: Cycle, clock_ghz: f64) -> f64 {
-        if elapsed == 0 {
+        if elapsed == 0 || clock_ghz <= 0.0 || !clock_ghz.is_finite() {
             return 0.0;
         }
         let seconds = elapsed as f64 / (clock_ghz * 1e9);
         self.total_joules() / seconds
     }
 
-    /// Energy efficiency: tera-operations per joule == TOPS/W.
+    /// Energy efficiency: tera-operations per joule == TOPS/W. A meter
+    /// that accumulated no (or non-finite) energy has no meaningful
+    /// efficiency — 0.0, never NaN/∞ (ops without joules would otherwise
+    /// divide by zero).
     pub fn tops_per_watt(&self) -> f64 {
         let j = self.total_joules();
-        if j <= 0.0 {
+        if j <= 0.0 || !j.is_finite() {
             return 0.0;
         }
         self.total_ops as f64 / j / 1e12
@@ -139,5 +174,63 @@ mod tests {
         let w = m.avg_watts(800_000_000, hw.clock_ghz);
         // static-only power of the flagship: a few watts
         assert!(w > 1.0 && w < 50.0, "w={w}");
+    }
+
+    /// Degenerate denominators must yield 0.0, never NaN or ∞: an empty
+    /// run (zero elapsed cycles), a zero/negative/non-finite clock, and a
+    /// meter that accumulated ops but no energy are all legal states the
+    /// reporting layer may hit (empty traces, hand-built meters).
+    #[test]
+    fn avg_watts_and_tops_per_watt_guard_degenerate_denominators() {
+        let hw = HardwareConfig::small();
+        let mut m = EnergyMeter::new();
+        m.add_static(&hw, 1_000_000);
+        assert_eq!(m.avg_watts(0, hw.clock_ghz), 0.0, "zero elapsed cycles");
+        assert_eq!(m.avg_watts(1_000_000, 0.0), 0.0, "zero clock");
+        assert_eq!(m.avg_watts(1_000_000, -0.8), 0.0, "negative clock");
+        assert_eq!(m.avg_watts(1_000_000, f64::NAN), 0.0, "NaN clock");
+        assert_eq!(m.avg_watts(1_000_000, f64::INFINITY), 0.0, "infinite clock");
+        assert!(m.avg_watts(1_000_000, hw.clock_ghz) > 0.0, "sane inputs still work");
+
+        let empty = EnergyMeter::new();
+        assert_eq!(empty.tops_per_watt(), 0.0, "no energy, no efficiency");
+        assert_eq!(empty.avg_watts(1_000, 0.8), 0.0, "zero joules over real time");
+        // Ops recorded but zero joules (a hand-built meter): 0.0, not ∞.
+        let mut ops_only = EnergyMeter::new();
+        ops_only.total_ops = 1_000_000;
+        assert_eq!(ops_only.tops_per_watt(), 0.0);
+        // Non-finite accumulation poisons the ratio: still 0.0, not NaN.
+        let mut poisoned = EnergyMeter::new();
+        poisoned.static_pj = f64::INFINITY;
+        poisoned.total_ops = 1;
+        assert_eq!(poisoned.tops_per_watt(), 0.0);
+    }
+
+    /// The decomposed per-cluster + uncore path the autoscaler charges
+    /// with must agree with the whole-fleet `add_static` (up to float
+    /// associativity), so autoscaled and fixed-fleet energy are comparable.
+    #[test]
+    fn cluster_plus_uncore_static_composes_to_add_static() {
+        let hw = HardwareConfig::gpu_comparable();
+        let elapsed = 80_000_000;
+        let mut whole = EnergyMeter::new();
+        whole.add_static(&hw, elapsed);
+        let mut parts = EnergyMeter::new();
+        for _ in 0..hw.clusters {
+            parts.add_cluster_static(&hw, elapsed);
+        }
+        parts.add_uncore_static(&hw, elapsed);
+        let (a, b) = (whole.total_joules(), parts.total_joules());
+        assert!((a - b).abs() <= a * 1e-12, "whole {a} vs composed {b}");
+        // A partially-powered fleet costs strictly less than a full one
+        // but never less than the uncore floor.
+        let mut partial = EnergyMeter::new();
+        partial.add_cluster_static(&hw, elapsed / 2);
+        partial.add_uncore_static(&hw, elapsed);
+        assert!(partial.total_joules() < whole.total_joules());
+        let mut uncore_only = EnergyMeter::new();
+        uncore_only.add_uncore_static(&hw, elapsed);
+        assert!(partial.total_joules() > uncore_only.total_joules());
+        assert!(uncore_only.total_joules() > 0.0);
     }
 }

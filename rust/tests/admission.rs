@@ -13,7 +13,8 @@ use hsv::balancer::DispatchPolicy;
 use hsv::config::{HardwareConfig, SimConfig};
 use hsv::sched::SchedulerKind;
 use hsv::serve::{
-    AdmissionPolicy, BatchPolicy, Disposition, ServeConfig, ServeEngine, ShedReason, SloPolicy,
+    AdmissionPolicy, AutoscalePolicy, BatchPolicy, Disposition, ServeConfig, ServeEngine,
+    ShedReason, SloPolicy,
 };
 use hsv::util::json::Json;
 use hsv::util::quick;
@@ -30,6 +31,7 @@ fn engine(admission: AdmissionPolicy, slo: SloPolicy) -> ServeEngine {
             slo,
             batch: BatchPolicy::Off,
             admission,
+            autoscale: AutoscalePolicy::Off,
         },
     )
 }
@@ -141,6 +143,7 @@ fn admission_grid_is_deterministic_and_conserves_requests() {
                             slo: SloPolicy::default(),
                             batch,
                             admission,
+                            autoscale: AutoscalePolicy::Off,
                         },
                     )
                     .run(&wl)

@@ -1,0 +1,456 @@
+//! Serve-layer autoscaling test suite.
+//!
+//! Adversarial coverage for the backlog-driven autoscaler: `Off` must keep
+//! the fixed-fleet report shape bit for bit, the whole ArrivalModel ×
+//! AdmissionPolicy × AutoscalePolicy grid must be deterministic, no request
+//! may be lost across a power-down drain, the hysteresis contract (no flap
+//! within the dwell window, `min_active` never violated) must hold on real
+//! traffic, and autoscaled static energy must never exceed the fixed-fleet
+//! baseline for any seed. The `Backlog` arithmetic the controller decides
+//! on gets its own property suite (the fold identity and `note_admitted`
+//! monotonicity), quickcheck-style via `util::quick`.
+
+use hsv::balancer::{Backlog, DispatchPolicy, LoadBalancer};
+use hsv::cluster::SvCluster;
+use hsv::config::{HardwareConfig, SimConfig};
+use hsv::sched::SchedulerKind;
+use hsv::serve::{
+    AdmissionPolicy, AutoscalePolicy, BatchPolicy, ScaleDirection, ServeConfig, ServeEngine,
+    SloPolicy,
+};
+use hsv::util::json::Json;
+use hsv::util::quick;
+use hsv::workload::{ArrivalModel, ModelRegistry, WorkloadRequest, WorkloadSpec};
+
+fn engine(clusters: u32, autoscale: AutoscalePolicy) -> ServeEngine {
+    ServeEngine::new(
+        HardwareConfig::small().with_clusters(clusters),
+        SchedulerKind::Has,
+        SimConfig::default(),
+        ServeConfig {
+            policy: DispatchPolicy::LeastLoaded,
+            slo: SloPolicy::default(),
+            batch: BatchPolicy::Off,
+            admission: AdmissionPolicy::Open,
+            autoscale,
+        },
+    )
+}
+
+fn threshold(up: usize, down: usize, min_active: u32, dwell: u64, warmup: u64) -> AutoscalePolicy {
+    AutoscalePolicy::Threshold { up, down, min_active, dwell, warmup }
+}
+
+fn json_keys(j: &Json) -> Vec<String> {
+    match j {
+        Json::Obj(m) => m.keys().cloned().collect(),
+        _ => panic!("report JSON must be an object"),
+    }
+}
+
+/// `Off` autoscaling must reproduce the fixed-fleet (PR 3) report exactly:
+/// the JSON carries precisely the pre-autoscaling key set — no autoscale
+/// keys, no energy keys — the powered ledger reads "every cluster, whole
+/// span", and the actual static energy equals the fixed-fleet baseline as
+/// the same meter reading, not merely a close value.
+#[test]
+fn off_autoscale_keeps_the_fixed_fleet_report_shape() {
+    let wl = WorkloadSpec::ratio(0.5, 24, 7)
+        .with_arrivals(ArrivalModel::bursty(60_000.0, 6_000.0))
+        .generate();
+    let rep = engine(3, AutoscalePolicy::Off).run(&wl);
+    let mut keys = json_keys(&rep.to_json());
+    keys.sort();
+    let mut expected: Vec<String> = [
+        "hw",
+        "scheduler",
+        "policy",
+        "workload",
+        "requests",
+        "makespan_cycles",
+        "tops",
+        "goodput_tops",
+        "utilization",
+        "mean_latency_ms",
+        "p50_ms",
+        "p95_ms",
+        "p99_ms",
+        "p999_ms",
+        "deadline_miss_rate",
+        "slo_cnn_ms",
+        "slo_transformer_ms",
+        "epochs",
+        "decisions",
+        "miss_rate_cnn",
+        "miss_rate_transformer",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    expected.sort();
+    assert_eq!(keys, expected, "Off report JSON grew or lost keys vs the fixed-fleet engine");
+    assert!(!rep.to_json().to_pretty().contains("autoscale"));
+    assert_eq!(rep.powered_cycles, vec![rep.makespan; 3]);
+    assert_eq!(rep.active_cluster_cycles(), 3 * rep.makespan);
+    assert_eq!(rep.scale_ups, 0);
+    assert_eq!(rep.scale_downs, 0);
+    assert!(rep.scale_log.is_empty());
+    assert_eq!(rep.static_energy_j, rep.fixed_fleet_static_energy_j);
+    assert_eq!(rep.static_energy_saved_j(), 0.0);
+    assert_eq!(rep.static_energy_saved_frac(), 0.0);
+}
+
+/// A threshold policy whose knobs can never fire (`up = usize::MAX`,
+/// `down = 0`) must schedule exactly like `Off` — same dispatch, same
+/// completions — and pay fixed-fleet static energy; the report differs
+/// only by the autoscale keys it now carries.
+#[test]
+fn never_triggering_threshold_schedules_exactly_like_off() {
+    let wl = WorkloadSpec::ratio(0.5, 20, 11)
+        .with_arrivals(ArrivalModel::diurnal(2_000_000.0))
+        .generate();
+    let off = engine(3, AutoscalePolicy::Off).run(&wl);
+    let never = engine(3, threshold(usize::MAX, 0, 1, 0, 0)).run(&wl);
+    let records = |r: &hsv::serve::ServeReport| {
+        r.served
+            .iter()
+            .map(|s| (s.request_id, s.cluster, s.dispatched_at, s.end))
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(records(&off), records(&never), "an idle controller must not steer dispatch");
+    assert_eq!(off.makespan, never.makespan);
+    assert_eq!(off.decisions, never.decisions);
+    assert_eq!(never.scale_ups + never.scale_downs, 0);
+    assert_eq!(never.active_cluster_cycles(), 3 * never.makespan);
+    // Same physical span, same power: decomposed vs whole-fleet metering
+    // may differ only by float associativity.
+    let rel = (never.static_energy_j - never.fixed_fleet_static_energy_j).abs()
+        / never.fixed_fleet_static_energy_j.max(1e-30);
+    assert!(rel < 1e-9, "never-scaled energy must match the fixed fleet (rel {rel})");
+    // The report shape differs from Off exactly by the autoscale keys.
+    let (off_j, never_j) = (off.to_json(), never.to_json());
+    let mut extra: Vec<String> = json_keys(&never_j)
+        .into_iter()
+        .filter(|k| off_j.get(k).is_none())
+        .collect();
+    extra.sort();
+    let mut expected_extra: Vec<String> = [
+        "active_cluster_cycles",
+        "admitted_miss_rate",
+        "autoscale_down",
+        "autoscale_dwell_cycles",
+        "autoscale_min_active",
+        "autoscale_policy",
+        "autoscale_up",
+        "autoscale_warmup_cycles",
+        "fixed_fleet_static_energy_j",
+        "scale_downs",
+        "scale_ups",
+        "static_energy_j",
+        "static_energy_saved_frac",
+        "static_energy_saved_j",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    expected_extra.sort();
+    assert_eq!(extra, expected_extra);
+    for k in json_keys(&off_j) {
+        assert_eq!(
+            off_j.get(&k).map(|v| v.to_string()),
+            never_j.get(&k).map(|v| v.to_string()),
+            "shared key {k} diverged"
+        );
+    }
+}
+
+/// Two runs with the same seed must agree bit for bit across the whole
+/// ArrivalModel × AdmissionPolicy × AutoscalePolicy grid — including a
+/// deliberately flappy zero-dwell controller — and every offered request
+/// must be accounted for exactly once (served or shed) across power-down
+/// drains and cold wakes.
+#[test]
+fn autoscale_grid_is_deterministic_and_conserves_requests() {
+    let arrivals = [
+        ArrivalModel::Poisson,
+        ArrivalModel::diurnal(2_000_000.0),
+        ArrivalModel::bursty(60_000.0, 6_000.0),
+        ArrivalModel::ramp(4.0, 0.5),
+    ];
+    let admissions = [
+        AdmissionPolicy::Open,
+        AdmissionPolicy::PriorityThreshold { floor: 1, max_depth: 2 },
+        AdmissionPolicy::DeadlineFeasible,
+    ];
+    let autoscales = [
+        AutoscalePolicy::Off,
+        threshold(2, 1, 1, 50_000, 10_000),
+        // Adversarial: flap-prone knobs (scale down whenever depth < 4, up
+        // whenever depth > 1, no dwell, instant warm-up).
+        threshold(1, 4, 1, 0, 0),
+    ];
+    for model in arrivals {
+        let wl = WorkloadSpec::ratio(0.5, 15, 31).with_arrivals(model).generate();
+        for admission in admissions {
+            for autoscale in autoscales {
+                let run = || {
+                    let mut eng = engine(3, autoscale);
+                    eng.cfg.admission = admission;
+                    eng.run(&wl)
+                };
+                let a = run();
+                let b = run();
+                let ctx = format!("{} / {admission:?} / {autoscale:?}", model.name());
+                assert_eq!(a.served.len() + a.shed.len(), 15, "{ctx}: request lost");
+                let mut ids: Vec<u64> = a
+                    .served
+                    .iter()
+                    .map(|r| r.request_id)
+                    .chain(a.shed.iter().map(|r| r.request_id))
+                    .collect();
+                ids.sort_unstable();
+                assert_eq!(ids, (0..15).collect::<Vec<u64>>(), "{ctx}");
+                assert!(a.served.iter().all(|r| r.cluster < 3), "{ctx}");
+                assert_eq!(a.to_json().to_pretty(), b.to_json().to_pretty(), "{ctx}");
+                assert_eq!(
+                    a.served
+                        .iter()
+                        .map(|r| (r.request_id, r.cluster, r.end))
+                        .collect::<Vec<_>>(),
+                    b.served
+                        .iter()
+                        .map(|r| (r.request_id, r.cluster, r.end))
+                        .collect::<Vec<_>>(),
+                    "{ctx}"
+                );
+                assert_eq!(a.powered_cycles, b.powered_cycles, "{ctx}");
+                assert_eq!(
+                    a.scale_log
+                        .iter()
+                        .map(|e| (e.cycle, e.cluster, e.direction))
+                        .collect::<Vec<_>>(),
+                    b.scale_log
+                        .iter()
+                        .map(|e| (e.cycle, e.cluster, e.direction))
+                        .collect::<Vec<_>>(),
+                    "{ctx}"
+                );
+                if !autoscale.enabled() {
+                    assert!(
+                        !a.to_json().to_pretty().contains("autoscale"),
+                        "{ctx}: Off report must not mention autoscaling"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Aggressive permanent scale-down (`down = usize::MAX`): the fleet drains
+/// to `min_active` while the trace is still arriving, every drained
+/// cluster finishes its outstanding work before going cold, and no request
+/// is lost or duplicated. The powered ledger must show genuine savings and
+/// the deterministic drain order (least outstanding, then higher id).
+#[test]
+fn permanent_scale_down_conserves_requests_and_saves_energy() {
+    let wl = WorkloadSpec::ratio(0.5, 30, 9)
+        .with_arrivals(ArrivalModel::bursty(40_000.0, 4_000.0))
+        .generate();
+    let rep = engine(3, threshold(usize::MAX, usize::MAX, 1, 0, 0)).run(&wl);
+    assert_eq!(rep.served.len(), 30, "power-down drains must not lose requests");
+    let mut ids: Vec<u64> = rep.served.iter().map(|r| r.request_id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..30).collect::<Vec<u64>>());
+    assert_eq!(rep.total_ops, wl.total_ops());
+    for r in &rep.served {
+        assert!(r.dispatched_at >= r.arrival);
+        assert!(r.end > r.arrival);
+    }
+    assert_eq!(rep.scale_ups, 0, "up threshold can never fire");
+    assert_eq!(rep.scale_downs, 2, "three clusters drain down to min_active = 1");
+    assert!(rep.makespan > 0);
+    assert!(
+        rep.active_cluster_cycles() < 3 * rep.makespan,
+        "drained clusters must stop accruing powered cycles"
+    );
+    assert!(rep.static_energy_j < rep.fixed_fleet_static_energy_j);
+    assert!(rep.static_energy_saved_j() > 0.0);
+    let frac = rep.static_energy_saved_frac();
+    assert!(frac > 0.0 && frac < 1.0, "saved fraction {frac} out of range");
+    let j = rep.to_json();
+    assert_eq!(j.get("autoscale_policy").unwrap().as_str(), Some("threshold"));
+    assert_eq!(j.get("scale_downs").unwrap().as_f64(), Some(2.0));
+    assert!(j.get("static_energy_saved_j").unwrap().as_f64().unwrap() > 0.0);
+}
+
+/// Hysteresis contract on real oscillating traffic: within the scale log,
+/// a decision never reverses inside the dwell window, and replaying the
+/// log never takes the committed capacity (active + warming) below
+/// `min_active` or above the fleet size.
+#[test]
+fn hysteresis_no_flap_within_dwell_and_min_active_never_violated() {
+    let wl = WorkloadSpec::ratio(0.5, 40, 13)
+        .with_mean_interarrival(100_000.0)
+        .with_arrivals(ArrivalModel::bursty(100_000.0, 10_000.0))
+        .generate();
+    let dwell = 150_000u64;
+    let rep = engine(4, threshold(4, 2, 2, dwell, 20_000)).run(&wl);
+    assert_eq!(rep.served.len(), 40);
+    for w in rep.scale_log.windows(2) {
+        if w[0].direction != w[1].direction {
+            assert!(
+                w[1].cycle >= w[0].cycle + dwell,
+                "flap within dwell: {:?} at {} then {:?} at {}",
+                w[0].direction,
+                w[0].cycle,
+                w[1].direction,
+                w[1].cycle
+            );
+        }
+    }
+    let mut capacity: i64 = 4;
+    for e in &rep.scale_log {
+        capacity += match e.direction {
+            ScaleDirection::Up => 1,
+            ScaleDirection::Down => -1,
+        };
+        assert!(capacity >= 2, "min_active violated at cycle {}", e.cycle);
+        assert!(capacity <= 4, "capacity above fleet size at cycle {}", e.cycle);
+    }
+}
+
+/// Energy monotonicity, property-style: for arbitrary seeds, traffic
+/// models, and threshold knobs, autoscaled static energy never exceeds the
+/// fixed-fleet baseline, per-cluster powered cycles never exceed the span,
+/// and every request is conserved.
+#[test]
+fn autoscaled_static_energy_never_exceeds_fixed_fleet() {
+    quick::check(17, 8, |g| {
+        let seed = g.u64_in(0, 1 << 20);
+        let model = *g.pick(&[
+            ArrivalModel::Poisson,
+            ArrivalModel::diurnal(1_000_000.0),
+            ArrivalModel::bursty(50_000.0, 5_000.0),
+            ArrivalModel::ramp(4.0, 0.25),
+        ]);
+        let policy = threshold(
+            g.usize_in(0, 6),
+            g.usize_in(0, 6),
+            g.u64_in(1, 3) as u32,
+            g.u64_in(0, 200_000),
+            g.u64_in(0, 60_000),
+        );
+        let wl = WorkloadSpec::ratio(0.5, 10, seed).with_arrivals(model).generate();
+        let rep = engine(3, policy).run(&wl);
+        assert_eq!(rep.served.len(), 10, "seed {seed} / {policy:?}: conservation");
+        for (i, &p) in rep.powered_cycles.iter().enumerate() {
+            assert!(
+                p <= rep.makespan,
+                "seed {seed} / {policy:?}: cluster {i} powered {p} > makespan {}",
+                rep.makespan
+            );
+        }
+        assert!(rep.active_cluster_cycles() <= 3 * rep.makespan);
+        let tolerance = rep.fixed_fleet_static_energy_j * 1e-9 + 1e-15;
+        assert!(
+            rep.static_energy_j <= rep.fixed_fleet_static_energy_j + tolerance,
+            "seed {seed} / {policy:?}: autoscaled static {} > fixed {}",
+            rep.static_energy_j,
+            rep.fixed_fleet_static_energy_j
+        );
+        true
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Backlog arithmetic properties (the signal both admission and autoscaling
+// decide on).
+// ---------------------------------------------------------------------------
+
+/// `LoadBalancer::backlog` must equal the fold of `LoadBalancer::status`
+/// for arbitrary cluster states: random fleets, random assignments,
+/// clusters stepped to random horizons.
+#[test]
+fn backlog_equals_the_fold_of_status_for_arbitrary_cluster_states() {
+    let reg = ModelRegistry::standard();
+    let hw = HardwareConfig::small();
+    quick::check(19, 24, |g| {
+        let n = g.usize_in(1, 4);
+        let mut clusters: Vec<SvCluster> = (0..n as u32)
+            .map(|i| SvCluster::new(i, &hw, SchedulerKind::Has, SimConfig::default()))
+            .collect();
+        for id in 0..g.usize_in(0, 8) as u64 {
+            let model = g.usize_in(0, reg.len() - 1) as u32;
+            let arrival = g.u64_in(0, 500_000);
+            let target = g.usize_in(0, n - 1);
+            clusters[target].assign(WorkloadRequest::new(id, model, arrival));
+        }
+        // Step a random subset of clusters partway so queued / inflight /
+        // booked mixes arise.
+        for c in clusters.iter_mut() {
+            if g.bool() {
+                let horizon = g.u64_in(0, 2_000_000);
+                c.run_until(&reg, horizon);
+            }
+        }
+        let rows = LoadBalancer::status(&clusters, &reg);
+        let fold = Backlog {
+            queued_requests: rows.iter().map(|r| r.queued_requests).sum(),
+            inflight_tasks: rows.iter().map(|r| r.inflight_tasks).sum(),
+            total_outstanding: rows.iter().map(|r| r.outstanding_cycles).sum(),
+            min_outstanding: rows.iter().map(|r| r.outstanding_cycles).min().unwrap_or(0),
+        };
+        let got = LoadBalancer::backlog(&clusters, &reg);
+        assert_eq!(got, fold, "backlog diverged from the status-table fold");
+        assert_eq!(got.queue_depth(), fold.queued_requests + fold.inflight_tasks);
+        true
+    });
+}
+
+/// `note_admitted` must keep same-epoch decisions monotone: every fold of
+/// an admission into the snapshot raises the queue depth by exactly one
+/// and never lowers any outstanding figure — so a request the
+/// priority-threshold policy sheds against a snapshot still sheds after
+/// more same-epoch admissions (decisions can only get stricter, never
+/// flip back to admit).
+#[test]
+fn note_admitted_keeps_same_epoch_decisions_monotone() {
+    let reg = ModelRegistry::standard();
+    quick::check(23, 32, |g| {
+        let mut b = Backlog {
+            queued_requests: g.usize_in(0, 8),
+            inflight_tasks: g.usize_in(0, 8),
+            total_outstanding: g.u64_in(0, 1 << 40),
+            min_outstanding: g.u64_in(0, 1 << 30),
+        };
+        let floor = g.u64_in(1, 4) as u32;
+        let max_depth = g.usize_in(0, 12);
+        let mut controller = hsv::serve::AdmissionController::new(
+            AdmissionPolicy::PriorityThreshold { floor, max_depth },
+            SloPolicy::default(),
+            &HardwareConfig::small(),
+            &SimConfig::default(),
+        );
+        let low = WorkloadRequest::new(0, 0, 0).with_priority(floor - 1);
+        let mut shed_seen = false;
+        for _ in 0..g.usize_in(1, 12) {
+            let before = b;
+            let decision = controller.decide(&low, 0, 0, &b, &reg);
+            if shed_seen {
+                assert_eq!(
+                    decision,
+                    hsv::serve::Decision::Shed(hsv::serve::ShedReason::BelowPriorityFloor),
+                    "a below-floor shed flipped back to admit as the backlog grew"
+                );
+            }
+            shed_seen |= decision != hsv::serve::Decision::Admit;
+            b.note_admitted(g.u64_in(0, 1 << 20));
+            assert_eq!(b.queued_requests, before.queued_requests + 1);
+            assert_eq!(b.inflight_tasks, before.inflight_tasks);
+            assert!(b.total_outstanding >= before.total_outstanding);
+            assert!(b.min_outstanding >= before.min_outstanding);
+            assert_eq!(b.queue_depth(), before.queue_depth() + 1);
+        }
+        true
+    });
+}

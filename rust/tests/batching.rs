@@ -14,7 +14,8 @@ use hsv::model::{builder, zoo, ModelFamily};
 use hsv::ops::{GemmDims, TaskShape};
 use hsv::sched::SchedulerKind;
 use hsv::serve::{
-    AdmissionPolicy, BatchPolicy, ServeConfig, ServeEngine, ServedRequest, SloPolicy,
+    AdmissionPolicy, AutoscalePolicy, BatchPolicy, ServeConfig, ServeEngine, ServedRequest,
+    SloPolicy,
 };
 use hsv::sim::systolic::gemm_cycles;
 use hsv::umf::{decode_model, encode_model, Frame};
@@ -32,6 +33,7 @@ fn engine_with(batch: BatchPolicy) -> ServeEngine {
             slo: SloPolicy::default(),
             batch,
             admission: AdmissionPolicy::Open,
+            autoscale: AutoscalePolicy::Off,
         },
     )
 }
@@ -217,6 +219,7 @@ fn serve_grid_is_deterministic() {
                             slo: SloPolicy::default(),
                             batch,
                             admission: AdmissionPolicy::Open,
+                            autoscale: AutoscalePolicy::Off,
                         },
                     )
                     .run(&wl)
@@ -327,6 +330,31 @@ fn golden_metric_reports() -> Vec<(String, hsv::serve::ServeReport)> {
         let rep = eng.run(&wl);
         assert_eq!(rep.served.len() + rep.shed.len(), 24, "{tname}/admit-deadline");
         out.push((format!("{tname}/admit-deadline"), rep));
+        // Autoscale-on variant: the same trace against a 3-cluster fleet
+        // with the threshold controller (batching/admission off) — pins the
+        // scale-decision stream and the static-energy split alongside the
+        // latency stream.
+        let mut eng = ServeEngine::new(
+            HardwareConfig::small().with_clusters(3),
+            SchedulerKind::Has,
+            SimConfig::default(),
+            ServeConfig {
+                policy: DispatchPolicy::LeastLoaded,
+                slo: SloPolicy::default(),
+                batch: BatchPolicy::Off,
+                admission: AdmissionPolicy::Open,
+                autoscale: AutoscalePolicy::Threshold {
+                    up: 4,
+                    down: 1,
+                    min_active: 1,
+                    dwell: 100_000,
+                    warmup: 25_000,
+                },
+            },
+        );
+        let rep = eng.run(&wl);
+        assert_eq!(rep.served.len(), 24, "{tname}/autoscale-x3");
+        out.push((format!("{tname}/autoscale-x3"), rep));
     }
     out
 }
@@ -361,6 +389,11 @@ fn golden_seed_metrics_snapshot() {
             m.set("shed", rep.shed.len())
                 .set("deferred", rep.deferred)
                 .set("admitted_miss_rate", rep.admitted_miss_rate());
+        }
+        if rep.autoscale.enabled() {
+            m.set("scale_ups", rep.scale_ups)
+                .set("scale_downs", rep.scale_downs)
+                .set("static_energy_saved_frac", rep.static_energy_saved_frac());
         }
         metrics.set(&key, m);
     }

@@ -6,7 +6,9 @@ use hsv::balancer::DispatchPolicy;
 use hsv::config::{HardwareConfig, SimConfig};
 use hsv::coordinator::Coordinator;
 use hsv::sched::SchedulerKind;
-use hsv::serve::{AdmissionPolicy, BatchPolicy, ServeConfig, ServeEngine, SloPolicy};
+use hsv::serve::{
+    AdmissionPolicy, AutoscalePolicy, BatchPolicy, ServeConfig, ServeEngine, SloPolicy,
+};
 use hsv::workload::{ArrivalModel, Workload, WorkloadSpec};
 
 /// Zero every arrival: the fully backlogged regime where an online engine
@@ -28,6 +30,7 @@ fn engine(hw: HardwareConfig, sched: SchedulerKind, policy: DispatchPolicy) -> S
             slo: SloPolicy::default(),
             batch: BatchPolicy::Off,
             admission: AdmissionPolicy::Open,
+            autoscale: AutoscalePolicy::Off,
         },
     )
 }
