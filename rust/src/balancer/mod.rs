@@ -315,6 +315,7 @@ impl LoadBalancer {
             clusters[target].assign(
                 WorkloadRequest::new(e.request_id, e.model_id, visible_arrival)
                     .with_priority(e.priority),
+                registry,
             );
         }
         // Advance the cursor past the contiguous dispatched prefix (with
@@ -397,7 +398,7 @@ mod tests {
         let mut cs = clusters(2);
         // preload cluster 0 with a heavy model
         let vgg = reg.id_of("vgg16").unwrap();
-        cs[0].assign(WorkloadRequest::new(99, vgg, 0));
+        cs[0].assign(WorkloadRequest::new(99, vgg, 0), &reg);
         lb.submit(WorkloadRequest::new(1, 0, 0), 1).unwrap();
         lb.dispatch(&mut cs, &reg);
         assert_eq!(lb.request_table[0].cluster, Some(1));
@@ -468,7 +469,7 @@ mod tests {
         let mut cs = clusters(2);
         assert_eq!(LoadBalancer::backlog(&cs, &reg), Backlog::idle());
         let vgg = reg.id_of("vgg16").unwrap();
-        cs[0].assign(WorkloadRequest::new(1, vgg, 0));
+        cs[0].assign(WorkloadRequest::new(1, vgg, 0), &reg);
         let b = LoadBalancer::backlog(&cs, &reg);
         assert_eq!(b.queued_requests, 1);
         assert_eq!(b.queue_depth(), 1);
@@ -492,7 +493,7 @@ mod tests {
         // Cluster 1 is idle (least loaded) but ineligible: dispatch must
         // fall back to the eligible, busier cluster 0.
         let vgg = reg.id_of("vgg16").unwrap();
-        cs[0].assign(WorkloadRequest::new(99, vgg, 0));
+        cs[0].assign(WorkloadRequest::new(99, vgg, 0), &reg);
         lb.submit(WorkloadRequest::new(1, 0, 0), 1).unwrap();
         assert_eq!(lb.dispatch_ready_eligible(&mut cs, &reg, 0, Some(&[true, false])), 1);
         assert_eq!(lb.request_table[0].cluster, Some(0));
@@ -526,7 +527,7 @@ mod tests {
         let reg = ModelRegistry::standard();
         let mut cs = clusters(2);
         let vgg = reg.id_of("vgg16").unwrap();
-        cs[0].assign(WorkloadRequest::new(1, vgg, 0));
+        cs[0].assign(WorkloadRequest::new(1, vgg, 0), &reg);
         let status = LoadBalancer::status(&cs, &reg);
         assert_eq!(status.len(), 2);
         assert_eq!(status[0].queued_requests, 1);

@@ -4,6 +4,33 @@
 //! models) plus the queue of requests the load balancer has assigned to it.
 //! Its RISC-V scheduler admits requests as they arrive and runs the
 //! configured scheduling policy until all assigned work is booked.
+//!
+//! # §Perf — O(1) load signals
+//!
+//! [`SvCluster::outstanding`] is the fleet's congestion signal: the
+//! least-loaded dispatcher reads it per cluster per routed request, and the
+//! serve layer's status/backlog fold reads it per cluster per *epoch*. It
+//! used to walk every un-admitted request's whole model graph plus every
+//! in-flight task — O(pending·layers + tasks) per call, quadratic-ish over
+//! a long trace. It is now O(procs):
+//!
+//! - the **queued** share is an incremental counter (`queued_ops_est`),
+//!   credited in [`SvCluster::assign`] and debited on admission, with the
+//!   per-model ops read from [`ModelRegistry::total_ops`]'s precomputed
+//!   table;
+//! - the **in-flight** share is [`ClusterState::inflight_ops_est`],
+//!   maintained where tasks enter and leave the queues;
+//! - the **booked** share was already O(procs) (free-time minus frontier).
+//!
+//! Both counters are kept *exactly* equal to the from-scratch sums — same
+//! integer floors, same order — so the dispatch decision stream is
+//! bit-identical to the naive recompute. A debug assertion cross-checks
+//! every read, `SimConfig::naive_recompute` switches the old walk back on
+//! for A/B benching ([`SvCluster::outstanding_naive`]), and
+//! `rust/tests/perf_equiv.rs` asserts equality property-style. The one
+//! contract change: [`SvCluster::assign`] now takes the registry, and the
+//! same registry must serve `assign`/`run_until` for one cluster (true for
+//! every caller — the serve engine threads one run registry everywhere).
 
 use crate::config::{HardwareConfig, SimConfig};
 use crate::sched::state::ClusterState;
@@ -20,6 +47,9 @@ pub struct SvCluster {
     /// Assigned requests not yet admitted, sorted by arrival.
     pending: Vec<WorkloadRequest>,
     next_pending: usize,
+    /// §Perf: incremental Σ ⌊total_ops(model)/1000⌋ over the un-admitted
+    /// tail of `pending` — the queued share of [`Self::outstanding`].
+    queued_ops_est: u64,
 }
 
 impl SvCluster {
@@ -30,11 +60,13 @@ impl SvCluster {
             sched,
             pending: Vec::new(),
             next_pending: 0,
+            queued_ops_est: 0,
         }
     }
 
     /// Assign a request to this cluster (load-balancer step 5).
-    pub fn assign(&mut self, req: WorkloadRequest) {
+    pub fn assign(&mut self, req: WorkloadRequest, registry: &ModelRegistry) {
+        self.queued_ops_est += registry.total_ops(req.model_id) / 1000;
         // Keep the un-admitted tail sorted by arrival. Assignments normally
         // come in arrival order (a plain push); the serve layer's admission
         // stage can re-release a *deferred* request after younger traffic
@@ -50,26 +82,40 @@ impl SvCluster {
 
     /// Estimated outstanding work in cycles (for least-loaded balancing):
     /// booked-but-unfinished processor time plus a rough estimate of queued
-    /// task time.
+    /// task time. §Perf: O(procs) — see the module docs; exactly equal to
+    /// [`Self::outstanding_naive`] at every observable point.
     pub fn outstanding(&self, registry: &ModelRegistry) -> u64 {
-        let booked: u64 = {
-            let f = self.state.frontier();
-            self.state.procs.iter().map(|p| p.free_at - f.min(p.free_at)).sum()
-        };
+        if self.state.sim.naive_recompute {
+            return self.outstanding_naive(registry);
+        }
+        let fast = self.booked_cycles() + self.queued_ops_est + self.state.inflight_ops_est;
+        debug_assert_eq!(
+            fast,
+            self.outstanding_naive(registry),
+            "incremental load signal diverged from the naive recompute"
+        );
+        fast
+    }
+
+    /// Booked-but-unfinished processor time, measured from the frontier.
+    fn booked_cycles(&self) -> u64 {
+        let f = self.state.frontier();
+        self.state.procs.iter().map(|p| p.free_at - f.min(p.free_at)).sum()
+    }
+
+    /// From-scratch recompute of [`Self::outstanding`] — the pre-incremental
+    /// implementation, kept as the A/B baseline (`SimConfig::
+    /// naive_recompute`) and the oracle for the equivalence suite. Walks
+    /// every un-admitted request's model graph and every in-flight task.
+    pub fn outstanding_naive(&self, registry: &ModelRegistry) -> u64 {
         let queued: u64 = self
             .pending
             .iter()
             .skip(self.next_pending)
             .map(|r| registry.graph(r.model_id).total_ops() / 1000)
             .sum();
-        let inflight: u64 = self
-            .state
-            .queues
-            .iter()
-            .flat_map(|q| q.tasks.iter())
-            .map(|t| t.ops() / 1000)
-            .sum();
-        booked + queued + inflight
+        let (inflight, _) = self.state.recount_inflight();
+        self.booked_cycles() + queued + inflight
     }
 
     /// Admit every pending request that has arrived by `frontier`.
@@ -78,6 +124,8 @@ impl SvCluster {
             && self.pending[self.next_pending].arrival <= frontier
         {
             let r = self.pending[self.next_pending];
+            // Debit exactly what `assign` credited (same table, same floor).
+            self.queued_ops_est -= registry.total_ops(r.model_id) / 1000;
             let g = registry.graph(r.model_id);
             self.state.enqueue_request(g, r.id, r.model_id, r.arrival);
             self.next_pending += 1;
@@ -171,8 +219,15 @@ impl SvCluster {
     }
 
     /// Tasks of admitted requests still waiting in the cluster's queues.
+    /// §Perf: O(1) via the incremental counter (naive scan under the A/B
+    /// toggle, cross-checked in debug builds).
     pub fn inflight_tasks(&self) -> usize {
-        self.state.queues.iter().map(|q| q.tasks.len()).sum()
+        let naive = || -> usize { self.state.queues.iter().map(|q| q.tasks.len()).sum() };
+        if self.state.sim.naive_recompute {
+            return naive();
+        }
+        debug_assert_eq!(self.state.inflight_task_count, naive());
+        self.state.inflight_task_count
     }
 
     /// Number of requests fully scheduled.
@@ -198,9 +253,9 @@ mod tests {
         let mut c = SvCluster::new(0, &hw, SchedulerKind::Has, SimConfig::default());
         let alex = reg.id_of("alexnet").unwrap();
         let bert = reg.id_of("bert-base").unwrap();
-        c.assign(WorkloadRequest::new(1, alex, 0));
-        c.assign(WorkloadRequest::new(2, bert, 1000));
-        c.assign(WorkloadRequest::new(3, alex, 2_000_000_000));
+        c.assign(WorkloadRequest::new(1, alex, 0), &reg);
+        c.assign(WorkloadRequest::new(2, bert, 1000), &reg);
+        c.assign(WorkloadRequest::new(3, alex, 2_000_000_000), &reg);
         c.run(&reg);
         assert_eq!(c.completed(), 3);
     }
@@ -212,7 +267,7 @@ mod tests {
         let mut c = SvCluster::new(0, &hw, SchedulerKind::RoundRobin, SimConfig::default());
         let alex = reg.id_of("alexnet").unwrap();
         let arrival = 10_000_000;
-        c.assign(WorkloadRequest::new(1, alex, arrival));
+        c.assign(WorkloadRequest::new(1, alex, arrival), &reg);
         c.run(&reg);
         let done = &c.state.completed[0];
         assert!(done.end > arrival);
@@ -227,9 +282,9 @@ mod tests {
         let hw = HardwareConfig::small();
         let mut c = SvCluster::new(0, &hw, SchedulerKind::Has, SimConfig::default());
         let alex = reg.id_of("alexnet").unwrap();
-        c.assign(WorkloadRequest::new(1, alex, 5_000));
-        c.assign(WorkloadRequest::new(2, alex, 100)); // deferred, older arrival
-        c.assign(WorkloadRequest::new(3, alex, 5_000)); // equal arrivals keep order
+        c.assign(WorkloadRequest::new(1, alex, 5_000), &reg);
+        c.assign(WorkloadRequest::new(2, alex, 100), &reg); // deferred, older arrival
+        c.assign(WorkloadRequest::new(3, alex, 5_000), &reg); // equal arrivals keep order
         assert_eq!(c.queued_pending(), 3);
         assert_eq!(c.next_event(), Some(100), "oldest arrival drives the next event");
         c.run(&reg);
@@ -242,7 +297,7 @@ mod tests {
         let hw = HardwareConfig::small();
         let mut c = SvCluster::new(0, &hw, SchedulerKind::Has, SimConfig::default());
         let vgg = reg.id_of("vgg16").unwrap();
-        c.assign(WorkloadRequest::new(1, vgg, 0));
+        c.assign(WorkloadRequest::new(1, vgg, 0), &reg);
         let before = c.outstanding(&reg);
         assert!(before > 0);
         c.run(&reg);
@@ -259,7 +314,7 @@ mod tests {
             let mut c = SvCluster::new(0, &hw, sched, SimConfig::default());
             for (i, name) in ["alexnet", "bert-base", "mobilenetv2"].iter().enumerate() {
                 let m = reg.id_of(name).unwrap();
-                c.assign(WorkloadRequest::new(i as u64, m, i as u64 * 50_000));
+                c.assign(WorkloadRequest::new(i as u64, m, i as u64 * 50_000), &reg);
             }
             c
         };
@@ -289,7 +344,7 @@ mod tests {
         assert_eq!(c.next_event(), None);
         assert_eq!(c.booked_through(), 0, "an idle cluster has booked nothing");
         let alex = reg.id_of("alexnet").unwrap();
-        c.assign(WorkloadRequest::new(1, alex, 777));
+        c.assign(WorkloadRequest::new(1, alex, 777), &reg);
         assert!(!c.is_drained());
         assert_eq!(c.next_event(), Some(777));
         assert_eq!(c.queued_pending(), 1);

@@ -183,6 +183,12 @@ pub struct SimConfig {
     pub max_cycles: u64,
     /// Record per-task timeline entries (disable for big DSE sweeps).
     pub record_timeline: bool,
+    /// §Perf A/B toggle (bench/test only): recompute every load signal from
+    /// scratch and bypass the HAS per-head candidate memo, reproducing the
+    /// pre-incremental engine's cost profile. Decisions are bit-identical
+    /// either way — `rust/tests/perf_equiv.rs` asserts it — so the toggle
+    /// measures pure overhead, never behavior.
+    pub naive_recompute: bool,
 }
 
 impl Default for SimConfig {
@@ -195,6 +201,7 @@ impl Default for SimConfig {
             max_partitions: 8,
             max_cycles: u64::MAX / 4,
             record_timeline: false,
+            naive_recompute: false,
         }
     }
 }
@@ -202,6 +209,12 @@ impl Default for SimConfig {
 impl SimConfig {
     pub fn with_timeline(mut self) -> SimConfig {
         self.record_timeline = true;
+        self
+    }
+
+    /// Builder for the §Perf A/B toggle (see [`SimConfig::naive_recompute`]).
+    pub fn with_naive_recompute(mut self) -> SimConfig {
+        self.naive_recompute = true;
         self
     }
 }

@@ -177,10 +177,12 @@ impl Coordinator {
             meter.add_dram_pj(st.hbm.energy_pj());
             dram_bytes += st.hbm.total_bytes;
             for r in &st.completed {
-                let mut rec = *r;
-                rec.ops = wl.registry.graph(r.model_id).total_ops();
-                latencies.push(rec.end - rec.arrival);
-                completed.push(rec);
+                // `CompletedRequest.ops` is populated by the scheduler from
+                // the request's own task queue (it used to be a zero
+                // placeholder patched up here with a per-request graph walk).
+                debug_assert_eq!(r.ops, wl.registry.total_ops(r.model_id));
+                latencies.push(r.end - r.arrival);
+                completed.push(*r);
             }
             for t in &st.timeline {
                 timeline.push((c.id, t.clone()));

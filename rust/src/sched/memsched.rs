@@ -47,10 +47,13 @@ pub fn estimate_fetch(
     let reuse = st.sim.memory_access_scheduling;
     // --- parameters ---
     let pkey = TensorKey::Param { model_id: task.model_id, layer: task.param_layer, slice: task.param_slice };
+    // §Perf: `ready_at` is the residency probe — one hash lookup where the
+    // hot path used to pay `contains` + `ready_at().unwrap()`.
+    let resident = if reuse && task.param_bytes > 0 { st.sm.ready_at(&pkey) } else { None };
     let params = if task.param_bytes == 0 {
         0
-    } else if reuse && st.sm.contains(&pkey) {
-        st.sm.ready_at(&pkey).unwrap()
+    } else if let Some(ready) = resident {
+        ready
     } else {
         let space_at = st
             .sm
@@ -90,10 +93,11 @@ pub fn commit_fetch(
 ) -> MemReady {
     let reuse = st.sim.memory_access_scheduling;
     let pkey = TensorKey::Param { model_id: task.model_id, layer: task.param_layer, slice: task.param_slice };
+    let resident = if reuse && task.param_bytes > 0 { st.sm.ready_at(&pkey) } else { None };
     let params = if task.param_bytes == 0 {
         0
-    } else if reuse && st.sm.contains(&pkey) {
-        st.sm.ready_at(&pkey).unwrap()
+    } else if let Some(ready) = resident {
+        ready
     } else {
         let bytes = task.param_bytes;
         if bytes <= st.sm.capacity() {

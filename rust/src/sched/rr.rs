@@ -37,7 +37,7 @@ pub fn step(st: &mut ClusterState) -> bool {
 
     match task.class() {
         OpClass::Data => {
-            schedule_data(st, &task, deps);
+            schedule_data(st, qi, &task, deps);
         }
         class => {
             // Dedicated processor type only.
@@ -58,7 +58,7 @@ pub fn step(st: &mut ClusterState) -> bool {
             let total = comp + st.sim.sched_overhead_cycles;
             let end = st.book(proc, &task, 0, start, total, task.ops());
             memsched::commit_task_effects(st, &task, end);
-            st.complete_layer(&task, end);
+            st.complete_layer(qi, &task, end);
         }
     }
 
@@ -67,8 +67,9 @@ pub fn step(st: &mut ClusterState) -> bool {
 }
 
 /// Data-movement tasks go through the shared-memory DMA port, occupying no
-/// compute processor. Shared by both schedulers.
-pub fn schedule_data(st: &mut ClusterState, task: &QueuedTask, deps: Cycle) -> Cycle {
+/// compute processor. Shared by both schedulers. `qi` is the index of the
+/// queue `task` heads.
+pub fn schedule_data(st: &mut ClusterState, qi: usize, task: &QueuedTask, deps: Cycle) -> Cycle {
     let bytes = match task.shape {
         crate::ops::TaskShape::Data { bytes } => bytes,
         _ => task.input_bytes,
@@ -76,15 +77,21 @@ pub fn schedule_data(st: &mut ClusterState, task: &QueuedTask, deps: Cycle) -> C
     let end = deps + estimate::dma_cycles(bytes);
     st.meter.add_sram_bytes(2 * bytes);
     memsched::commit_task_effects(st, task, end);
-    st.complete_layer(task, end);
+    st.complete_layer(qi, task, end);
     st.makespan = st.makespan.max(end);
     end
 }
 
 /// Pop the head of queue `qi`; finish the request if the queue is now empty;
-/// advance the round-robin cursor.
+/// advance the round-robin cursor. §Perf: this is the single point where a
+/// task leaves a queue, so it also maintains the incremental in-flight
+/// counters and retires the queue's per-head memo (the memo's one
+/// invalidation rule: it dies with its head).
 pub fn finish_head(st: &mut ClusterState, qi: usize) {
-    st.queues[qi].tasks.pop_front();
+    let popped = st.queues[qi].tasks.pop_front().expect("finish_head on an empty queue");
+    st.inflight_ops_est -= popped.ops() / 1000;
+    st.inflight_task_count -= 1;
+    st.queues[qi].memo = None;
     if st.queues[qi].tasks.is_empty() {
         st.finish_request(qi);
     } else {
@@ -136,7 +143,7 @@ mod tests {
         let g = zoo::by_name("resnet50").unwrap();
         for rec in &st.timeline {
             for &d in &g.layers[rec.layer as usize].deps {
-                let dep_end = st.layer_end[&(1, d)];
+                let dep_end = st.layer_end_of(1, d).expect("dep layer completed");
                 assert!(
                     rec.start >= dep_end,
                     "layer {} starts {} before dep {} ends {}",

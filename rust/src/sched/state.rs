@@ -1,5 +1,33 @@
 //! The scheduling table and per-cluster runtime state (paper Fig 4(b) items
 //! 6–10: model-info buffer, task queues, scheduling table, processor status).
+//!
+//! §Perf — this module is the simulator's innermost state and is engineered
+//! for the scheduling hot path:
+//!
+//! - **Dense layer ends.** Layer ids are dense and topologically ordered, so
+//!   each in-flight request carries its completion times as a plain
+//!   `Vec<Cycle>` ([`RequestQueue::layer_end`], 0 = not yet completed) and
+//!   [`ClusterState::deps_ready`] is array indexing instead of a hashed
+//!   `(request, layer)` map probe per dependency. Completed requests keep a
+//!   compact view in [`ClusterState::completed_layer_ends`] (the vector is
+//!   moved there, not copied, by [`ClusterState::finish_request`] — and
+//!   only under `record_timeline`, so production serve traces don't retain
+//!   it unboundedly).
+//! - **Incremental inflight counters.** [`ClusterState::inflight_ops_est`]
+//!   and [`ClusterState::inflight_task_count`] are updated as tasks enter
+//!   ([`ClusterState::enqueue_request`]) and leave
+//!   ([`crate::sched::rr::finish_head`], [`ClusterState::finish_request`])
+//!   the queues, so the load-balancer's status/backlog fold never walks the
+//!   queues. The counters are *exactly* the from-scratch sums
+//!   ([`ClusterState::recount_inflight`]); `rust/tests/perf_equiv.rs` and a
+//!   debug assertion in [`crate::cluster::SvCluster::outstanding`] hold them
+//!   to that.
+//! - **Fast hashing.** The remaining maps ([`ClusterState::param_demand`],
+//!   the shared-memory residency index) use the zero-dependency
+//!   [`crate::util::fasthash`] hasher instead of SipHash.
+//! - **HAS head memo.** Each queue caches per-head evaluation results that
+//!   are provably immutable while the head is unchanged
+//!   ([`HeadMemo`], see `sched/has.rs` §Perf for the invalidation rules).
 
 use crate::config::{ClusterConfig, SimConfig};
 use crate::model::ModelGraph;
@@ -8,7 +36,8 @@ use crate::sim::dram::HbmModel;
 use crate::sim::power::EnergyMeter;
 use crate::sim::sharedmem::{SharedMem, TensorKey};
 use crate::sim::{Cycle, ProcKind};
-use std::collections::{HashMap, VecDeque};
+use crate::util::fasthash::FxHashMap;
+use std::collections::VecDeque;
 
 /// One compute processor's scheduling-table row.
 #[derive(Debug, Clone)]
@@ -57,6 +86,30 @@ impl QueuedTask {
     }
 }
 
+/// §Perf — cached per-head evaluation results for the HAS candidate loop.
+///
+/// Everything in here is a pure function of the head task and state that is
+/// frozen while the head stays at the front of its queue:
+///
+/// - `t_task` (the dependency-ready time): a head's dependencies are earlier
+///   layers of the same request, already scheduled and completed exactly
+///   once, so their end times never change again;
+/// - `comp` (per-processor compute-cycle estimates): task shape, processor
+///   kinds/sizes and the `vp_runs_array_ops` flag are immutable mid-run.
+///
+/// The memo therefore has a single invalidation rule — it dies with its
+/// head (cleared by [`crate::sched::rr::finish_head`]) — and reusing it is
+/// bit-identical to recomputation by construction.
+#[derive(Debug, Clone)]
+pub struct HeadMemo {
+    /// Layer id of the head this memo was computed for (staleness guard).
+    pub layer: u32,
+    /// `deps_ready(queue, head)` — fixed for a given head.
+    pub t_task: Cycle,
+    /// `estimate::comp_cycles` per processor index (`None` = cannot run).
+    pub comp: Vec<Option<Cycle>>,
+}
+
 /// One in-flight request's task queue (head = next schedulable task; layers
 /// are topologically ordered so the head's dependencies are always already
 /// scheduled).
@@ -67,6 +120,15 @@ pub struct RequestQueue {
     pub arrival: Cycle,
     pub total_layers: u32,
     pub tasks: VecDeque<QueuedTask>,
+    /// Dense completion times indexed by layer id (0 = not yet completed).
+    /// Layer ids are dense and topologically ordered by construction
+    /// ([`ModelGraph::validate`]), so no hashing is ever needed.
+    pub layer_end: Vec<Cycle>,
+    /// Total ops of the whole request — summed once at admission, identical
+    /// to `graph.total_ops()` (same layers, same order).
+    pub total_ops: u64,
+    /// §Perf: the HAS scheduler's per-head memo (see [`HeadMemo`]).
+    pub memo: Option<HeadMemo>,
 }
 
 /// A finished (fully scheduled) request.
@@ -101,11 +163,15 @@ pub struct ClusterState {
     pub sm: SharedMem,
     pub hbm: HbmModel,
     pub queues: Vec<RequestQueue>,
-    /// Completion time of each scheduled layer: (request, layer) → end.
-    pub layer_end: HashMap<(u64, u32), Cycle>,
+    /// Dense layer-end vectors of *completed* requests (request → ends),
+    /// moved out of the queue at [`Self::finish_request`]. Read through
+    /// [`Self::layer_end_of`]. Populated only under
+    /// `SimConfig::record_timeline` — like the timeline it grows without
+    /// bound, so the production serve path keeps it empty.
+    pub completed_layer_ends: FxHashMap<u64, Vec<Cycle>>,
     /// Unscheduled tasks still demanding each parameter tensor
     /// (model, layer) — drives Algorithm 2's flush safety.
-    pub param_demand: HashMap<(u32, u32), u32>,
+    pub param_demand: FxHashMap<(u32, u32), u32>,
     pub meter: EnergyMeter,
     pub timeline: Vec<TaskRecord>,
     pub completed: Vec<CompletedRequest>,
@@ -113,10 +179,17 @@ pub struct ClusterState {
     pub makespan: Cycle,
     /// Number of scheduling decisions taken (perf reporting).
     pub decisions: u64,
-    /// Accumulated ops of all scheduled tasks.
+    /// Accumulated ops of all scheduled (booked) compute tasks.
     pub scheduled_ops: u64,
     /// Round-robin cursor over queues.
     pub rr_cursor: usize,
+    /// §Perf: incremental Σ ⌊task.ops()/1000⌋ over every task still waiting
+    /// in any queue — the in-flight share of the load balancer's
+    /// outstanding-work estimate, kept exactly equal to the from-scratch
+    /// recompute ([`Self::recount_inflight`]).
+    pub inflight_ops_est: u64,
+    /// §Perf: incremental count of tasks still waiting in any queue.
+    pub inflight_task_count: usize,
 }
 
 impl ClusterState {
@@ -147,8 +220,8 @@ impl ClusterState {
             sm: SharedMem::new(cfg.shared_mem_bytes),
             hbm: HbmModel::new(hbm),
             queues: Vec::new(),
-            layer_end: HashMap::new(),
-            param_demand: HashMap::new(),
+            completed_layer_ends: FxHashMap::default(),
+            param_demand: FxHashMap::default(),
             meter: EnergyMeter::new(),
             timeline: Vec::new(),
             completed: Vec::new(),
@@ -156,6 +229,8 @@ impl ClusterState {
             decisions: 0,
             scheduled_ops: 0,
             rr_cursor: 0,
+            inflight_ops_est: 0,
+            inflight_task_count: 0,
         }
     }
 
@@ -177,6 +252,8 @@ impl ClusterState {
             }
         }
         let mut tasks = VecDeque::with_capacity(graph.layers.len());
+        let mut total_ops = 0u64;
+        let mut ops_est = 0u64;
         for l in &graph.layers {
             if l.param_bytes > 0 {
                 let key = (model_id, l.param_owner);
@@ -187,6 +264,9 @@ impl ClusterState {
                     slice: 0,
                 });
             }
+            let ops = l.shape.ops();
+            total_ops += ops;
+            ops_est += ops / 1000;
             tasks.push_back(QueuedTask {
                 request_id,
                 model_id,
@@ -203,12 +283,17 @@ impl ClusterState {
                 param_slice: 0,
             });
         }
+        self.inflight_ops_est += ops_est;
+        self.inflight_task_count += graph.layers.len();
         self.queues.push(RequestQueue {
             request_id,
             model_id,
             arrival,
             total_layers: graph.layers.len() as u32,
             tasks,
+            layer_end: vec![0; graph.layers.len()],
+            total_ops,
+            memo: None,
         });
     }
 
@@ -219,14 +304,32 @@ impl ClusterState {
     }
 
     /// End time of a task's dependencies (plus the request's arrival).
+    /// §Perf: dense array indexing into the queue's layer-end vector — an
+    /// unfinished dependency reads 0 and drops out of the max, exactly like
+    /// the absent-entry case of the old hashed map.
+    #[inline]
     pub fn deps_ready(&self, q: &RequestQueue, t: &QueuedTask) -> Cycle {
+        debug_assert_eq!(q.request_id, t.request_id);
         let mut ready = q.arrival;
         for &d in &t.deps {
-            if let Some(&e) = self.layer_end.get(&(t.request_id, d)) {
-                ready = ready.max(e);
-            }
+            ready = ready.max(q.layer_end[d as usize]);
         }
         ready
+    }
+
+    /// Completion time of `layer` of `request_id`, whether the request is
+    /// still in flight or already finished. `None` = not (yet) completed or
+    /// unknown request. Finished requests are visible only when
+    /// `SimConfig::record_timeline` is on (the completed view is retained
+    /// in introspection mode only — see [`Self::finish_request`]).
+    pub fn layer_end_of(&self, request_id: u64, layer: u32) -> Option<Cycle> {
+        let ends = self
+            .queues
+            .iter()
+            .find(|q| q.request_id == request_id)
+            .map(|q| &q.layer_end)
+            .or_else(|| self.completed_layer_ends.get(&request_id))?;
+        ends.get(layer as usize).copied().filter(|&e| e > 0)
     }
 
     /// Index of the earliest-free processor of `kind`, if any exist.
@@ -267,6 +370,7 @@ impl ClusterState {
             ProcKind::Dma => {}
         }
         self.meter.add_sram_bytes(task.input_bytes + task.output_bytes + task.param_bytes);
+        self.scheduled_ops += ops;
         if self.sim.record_timeline {
             self.timeline.push(TaskRecord {
                 request_id: task.request_id,
@@ -284,31 +388,47 @@ impl ClusterState {
     }
 
     /// Record a layer's completion time (max over sub-tasks) and update the
-    /// shared-memory residency of its output activation.
-    pub fn complete_layer(&mut self, task: &QueuedTask, end: Cycle) {
-        let key = (task.request_id, task.layer);
-        let prev = self.layer_end.get(&key).copied().unwrap_or(0);
-        self.layer_end.insert(key, prev.max(end));
-        self.scheduled_ops += 0; // ops are accounted in book()
+    /// shared-memory residency of its output activation. `qi` must be the
+    /// index of the queue `task` heads.
+    pub fn complete_layer(&mut self, qi: usize, task: &QueuedTask, end: Cycle) {
+        debug_assert_eq!(self.queues[qi].request_id, task.request_id);
+        let slot = &mut self.queues[qi].layer_end[task.layer as usize];
+        *slot = (*slot).max(end);
     }
 
-    /// Called when a queue empties: record the request completion.
+    /// Called when a queue empties: record the request completion. §Perf:
+    /// the end time is one pass over the dense layer-end vector (the vector
+    /// is then *moved* into the completed view), the cursor fixup is O(1),
+    /// and the only non-constant cost left is the order-preserving
+    /// `Vec::remove` memmove over the (small) active-queue array — order
+    /// must be preserved because the round-robin cursor walks queue
+    /// positions, so a swap-remove would change the decision stream.
     pub fn finish_request(&mut self, qidx: usize) {
-        let q = &self.queues[qidx];
-        let end = (0..q.total_layers)
-            .filter_map(|l| self.layer_end.get(&(q.request_id, l)))
-            .copied()
-            .max()
-            .unwrap_or(q.arrival);
-        let ops = 0; // per-request ops accounting happens at the coordinator
+        let q = self.queues.remove(qidx);
+        // Defensive: in production the queue is empty here (finish_head pops
+        // the last task first); direct callers with residual tasks must not
+        // leave them counted as in flight.
+        for t in &q.tasks {
+            self.inflight_ops_est -= t.ops() / 1000;
+        }
+        self.inflight_task_count -= q.tasks.len();
+        // A slot of 0 means the layer never completed — same semantics as an
+        // absent entry of the old hashed map: it contributes nothing, and a
+        // request with no completed layer at all falls back to its arrival.
+        let end = q.layer_end.iter().copied().filter(|&e| e > 0).max().unwrap_or(q.arrival);
         self.completed.push(CompletedRequest {
             request_id: q.request_id,
             model_id: q.model_id,
             arrival: q.arrival,
             end,
-            ops,
+            ops: q.total_ops,
         });
-        self.queues.remove(qidx);
+        // Retain the per-layer view only in introspection mode: like the
+        // timeline, it grows without bound over a long serve trace, and no
+        // production path reads it.
+        if self.sim.record_timeline {
+            self.completed_layer_ends.insert(q.request_id, q.layer_end);
+        }
         if self.rr_cursor > qidx {
             self.rr_cursor -= 1;
         }
@@ -337,9 +457,26 @@ impl ClusterState {
         (busy, count)
     }
 
-    /// Any tasks left in any queue?
+    /// Any tasks left in any queue? §Perf: O(1) via the incremental task
+    /// counter (exactly the old any-nonempty-queue scan).
+    #[inline]
     pub fn has_work(&self) -> bool {
-        self.queues.iter().any(|q| !q.tasks.is_empty())
+        self.inflight_task_count > 0
+    }
+
+    /// From-scratch recompute of the incremental in-flight counters:
+    /// `(Σ ⌊task.ops()/1000⌋, task count)`. The naive-recompute A/B path and
+    /// the equivalence suite compare against this.
+    pub fn recount_inflight(&self) -> (u64, usize) {
+        let mut ops = 0u64;
+        let mut count = 0usize;
+        for q in &self.queues {
+            for t in &q.tasks {
+                ops += t.ops() / 1000;
+                count += 1;
+            }
+        }
+        (ops, count)
     }
 }
 
@@ -375,6 +512,21 @@ mod tests {
     }
 
     #[test]
+    fn enqueue_tracks_inflight_counters_and_total_ops() {
+        let mut st = state();
+        let g = zoo::by_name("alexnet").unwrap();
+        st.enqueue_request(&g, 1, 0, 0);
+        st.enqueue_request(&g, 2, 0, 10);
+        let (ops, count) = st.recount_inflight();
+        assert_eq!(st.inflight_ops_est, ops);
+        assert_eq!(st.inflight_task_count, count);
+        assert_eq!(count, 2 * g.layers.len());
+        assert!(st.has_work());
+        // The queue's request-ops figure is exactly the graph walk.
+        assert_eq!(st.queues[0].total_ops, g.total_ops());
+    }
+
+    #[test]
     fn booking_updates_idle_and_busy() {
         let mut st = state();
         let g = zoo::by_name("alexnet").unwrap();
@@ -385,6 +537,20 @@ mod tests {
         assert_eq!(st.procs[0].idle_cycles, 100);
         assert_eq!(st.procs[0].busy_cycles, 50);
         assert_eq!(st.makespan, 150);
+    }
+
+    #[test]
+    fn booking_accumulates_scheduled_ops() {
+        // Regression: `scheduled_ops` used to be dead (a literal `+= 0`).
+        let mut st = state();
+        let g = zoo::by_name("alexnet").unwrap();
+        st.enqueue_request(&g, 1, 0, 0);
+        let t0 = st.queues[0].tasks[0].clone();
+        let t1 = st.queues[0].tasks[1].clone();
+        st.book(0, &t0, 0, 0, 10, t0.ops());
+        st.book(1, &t1, 0, 0, 10, t1.ops());
+        assert_eq!(st.scheduled_ops, t0.ops() + t1.ops());
+        assert!(st.scheduled_ops > 0);
     }
 
     #[test]
@@ -399,17 +565,97 @@ mod tests {
     }
 
     #[test]
+    fn deps_ready_reads_dense_layer_ends() {
+        let mut st = state();
+        let g = zoo::by_name("resnet50").unwrap();
+        st.enqueue_request(&g, 1, 0, 500);
+        // Find a task with dependencies; mark one dep complete.
+        let qi = 0;
+        let task = st.queues[qi].tasks.iter().find(|t| !t.deps.is_empty()).unwrap().clone();
+        let d = task.deps[0];
+        assert_eq!(st.deps_ready(&st.queues[qi], &task), 500, "unfinished deps read 0");
+        let dep_task = st.queues[qi].tasks[d as usize].clone();
+        st.complete_layer(qi, &dep_task, 9_000);
+        assert_eq!(st.deps_ready(&st.queues[qi], &task), 9_000);
+        assert_eq!(st.layer_end_of(1, d), Some(9_000));
+        assert_eq!(st.layer_end_of(1, task.layer), None, "head not completed yet");
+        assert_eq!(st.layer_end_of(42, 0), None, "unknown request");
+    }
+
+    #[test]
     fn finish_request_records_completion() {
         let mut st = state();
+        st.sim.record_timeline = true; // retain the completed per-layer view
         let g = zoo::by_name("alexnet").unwrap();
         st.enqueue_request(&g, 1, 0, 5);
         for l in 0..st.queues[0].total_layers {
-            st.layer_end.insert((1, l), 1000 + l as u64);
+            st.queues[0].layer_end[l as usize] = 1000 + l as u64;
         }
         st.queues[0].tasks.clear();
         st.finish_request(0);
         assert_eq!(st.completed.len(), 1);
         assert_eq!(st.completed[0].end, 1000 + (g.layers.len() as u64 - 1));
+        assert!(st.queues.is_empty());
+        // The per-request ops figure is real (satellite of the perf PR).
+        assert_eq!(st.completed[0].ops, g.total_ops());
+        // The dense layer-end view survives completion.
+        assert_eq!(st.layer_end_of(1, 0), Some(1000));
+    }
+
+    #[test]
+    fn finish_request_with_no_completed_layer_falls_back_to_arrival() {
+        let mut st = state();
+        let g = zoo::by_name("alexnet").unwrap();
+        st.enqueue_request(&g, 1, 0, 777);
+        st.queues[0].tasks.clear();
+        st.finish_request(0);
+        assert_eq!(st.completed[0].end, 777);
+    }
+
+    /// Satellite: pin the round-robin cursor semantics across removals —
+    /// the cursor keeps pointing at the same *queue* (not the same slot)
+    /// when an earlier queue is removed, and wraps when the removed slot
+    /// was at or past it.
+    #[test]
+    fn finish_request_cursor_semantics_across_removals() {
+        let g = zoo::by_name("alexnet").unwrap();
+        let mk = |cursor: usize| {
+            let mut st = state();
+            for id in 1..=3u64 {
+                st.enqueue_request(&g, id, 0, 0);
+            }
+            for q in &mut st.queues {
+                q.tasks.clear();
+            }
+            st.inflight_ops_est = 0;
+            st.inflight_task_count = 0;
+            st.rr_cursor = cursor;
+            st
+        };
+        // Cursor before the removed index: unchanged.
+        let mut st = mk(0);
+        st.finish_request(2);
+        assert_eq!(st.rr_cursor, 0);
+        // Cursor at the removed index: stays, now naming the next queue.
+        let mut st = mk(1);
+        st.finish_request(1);
+        assert_eq!(st.rr_cursor, 1);
+        assert_eq!(st.queues[st.rr_cursor].request_id, 3);
+        // Cursor after the removed index: shifts down with its queue.
+        let mut st = mk(2);
+        st.finish_request(0);
+        assert_eq!(st.rr_cursor, 1);
+        assert_eq!(st.queues[st.rr_cursor].request_id, 3);
+        // Cursor at the removed *last* index: wraps to 0.
+        let mut st = mk(2);
+        st.finish_request(2);
+        assert_eq!(st.rr_cursor, 0);
+        // Removing the last queue resets the cursor.
+        let mut st = mk(0);
+        st.finish_request(0);
+        st.finish_request(0);
+        st.finish_request(0);
+        assert_eq!(st.rr_cursor, 0);
         assert!(st.queues.is_empty());
     }
 }

@@ -464,8 +464,8 @@ mod tests {
         // outstanding work, so the scale-down retires it first.
         let alex = reg.id_of("alexnet").unwrap();
         let vgg = reg.id_of("vgg16").unwrap();
-        cs[0].assign(WorkloadRequest::new(0, alex, 0));
-        cs[1].assign(WorkloadRequest::new(1, vgg, 0));
+        cs[0].assign(WorkloadRequest::new(0, alex, 0), &reg);
+        cs[1].assign(WorkloadRequest::new(1, vgg, 0), &reg);
         let mut a = Autoscaler::new(threshold(4, 1, 1, 10), 2);
         a.observe(0, &depth(0), &cs, &reg);
         assert_eq!(a.states()[0], PowerState::Draining, "least-outstanding cluster drains");

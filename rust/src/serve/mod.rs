@@ -446,7 +446,10 @@ fn scored(
         latency: end - arrival,
         deadline,
         met: end <= deadline,
-        ops: graph.total_ops(),
+        // §Perf: O(1) from the registry's precomputed per-model ops table
+        // (identical to `graph.total_ops()`), so scoring a long trace never
+        // re-walks model graphs.
+        ops: registry.total_ops(model_id),
         disposition,
     }
 }
@@ -676,7 +679,7 @@ impl ServeEngine {
         // cluster-visible one: a request held back by the autoscaler's
         // eligibility mask reaches the cluster re-stamped to its dispatch
         // cycle, but the user's clock started at submission.
-        let dispatch_stamp: std::collections::HashMap<u64, (Cycle, Option<Cycle>)> = lb
+        let dispatch_stamp: crate::util::fasthash::FxHashMap<u64, (Cycle, Option<Cycle>)> = lb
             .request_table
             .iter()
             .map(|e| (e.request_id, (e.arrival, e.dispatched_at)))

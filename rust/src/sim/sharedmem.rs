@@ -10,10 +10,14 @@
 //!
 //! Flushable tensors are kept in a `BTreeMap` ordered by release time so the
 //! scheduler's space queries — the hottest operation in Algorithm 1's
-//! candidate loop (§Perf) — walk in order instead of sorting per call.
+//! candidate loop (§Perf) — walk in order instead of sorting per call. The
+//! residency index hashes with the zero-dependency
+//! [`crate::util::fasthash`] hasher: `TensorKey` probes run millions of
+//! times per simulated trace and never see untrusted input.
 
 use crate::sim::Cycle;
-use std::collections::{BTreeMap, HashMap};
+use crate::util::fasthash::FxHashMap;
+use std::collections::BTreeMap;
 
 /// Identity of a tensor in shared memory.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -44,7 +48,7 @@ struct Resident {
 pub struct SharedMem {
     capacity: u64,
     used: u64,
-    resident: HashMap<TensorKey, Resident>,
+    resident: FxHashMap<TensorKey, Resident>,
     /// Tensors with no pending readers, ordered by the cycle their space
     /// becomes reclaimable → value is the tensor's byte size.
     flushable: BTreeMap<(Cycle, TensorKey), u64>,
@@ -59,7 +63,7 @@ impl SharedMem {
         SharedMem {
             capacity,
             used: 0,
-            resident: HashMap::new(),
+            resident: FxHashMap::default(),
             flushable: BTreeMap::new(),
             flushes: 0,
             admitted_bytes: 0,
@@ -79,10 +83,12 @@ impl SharedMem {
     }
 
     /// If `key` is resident, the cycle at which its data is ready.
+    #[inline]
     pub fn ready_at(&self, key: &TensorKey) -> Option<Cycle> {
         self.resident.get(key).map(|r| r.ready_at)
     }
 
+    #[inline]
     pub fn contains(&self, key: &TensorKey) -> bool {
         self.resident.contains_key(key)
     }

@@ -1,0 +1,160 @@
+//! §Perf — zero-dependency FxHash-style hasher for scheduler hot paths.
+//!
+//! `std::collections::HashMap` defaults to SipHash-1-3 with per-process
+//! random keys: HashDoS-resistant, but ~10× slower than needed for the
+//! small fixed-width keys the scheduler hashes millions of times per run
+//! (`(u64, u32)` layer keys, `TensorKey`, `(u32, u32)` parameter keys).
+//! None of those maps is fed by untrusted input, so we trade the DoS
+//! armor for throughput with the multiply-rotate mix rustc itself uses
+//! (the "Fx" in firefox/rustc-hash).
+//!
+//! The hasher is also *deterministic across processes* — no random seed —
+//! which is a feature here: simulator state never depends on map iteration
+//! order by contract, and any accidental dependence now reproduces
+//! bit-identically instead of flaking between runs.
+
+use std::collections::{HashMap, HashSet};
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// The rustc-hash multiplier (derived from the golden ratio).
+const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+/// A fast, deterministic, non-cryptographic hasher for fixed-width keys.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+impl FxHasher {
+    #[inline]
+    fn add(&mut self, word: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ word).wrapping_mul(SEED);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        let mut chunks = bytes.chunks_exact(8);
+        for c in &mut chunks {
+            self.add(u64::from_le_bytes(c.try_into().unwrap()));
+        }
+        let rem = chunks.remainder();
+        if !rem.is_empty() {
+            let mut buf = [0u8; 8];
+            buf[..rem.len()].copy_from_slice(rem);
+            self.add(u64::from_le_bytes(buf));
+        }
+    }
+
+    #[inline]
+    fn write_u8(&mut self, v: u8) {
+        self.add(v as u64);
+    }
+
+    #[inline]
+    fn write_u16(&mut self, v: u16) {
+        self.add(v as u64);
+    }
+
+    #[inline]
+    fn write_u32(&mut self, v: u32) {
+        self.add(v as u64);
+    }
+
+    #[inline]
+    fn write_u64(&mut self, v: u64) {
+        self.add(v);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, v: usize) {
+        self.add(v as u64);
+    }
+}
+
+/// `BuildHasher` for [`FxHasher`] (no per-map state).
+pub type FxBuildHasher = BuildHasherDefault<FxHasher>;
+
+/// Drop-in `HashMap` with the fast hasher. Construct with
+/// `FxHashMap::default()` (`new()` is reserved for `RandomState`).
+pub type FxHashMap<K, V> = HashMap<K, V, FxBuildHasher>;
+
+/// Drop-in `HashSet` with the fast hasher.
+pub type FxHashSet<T> = HashSet<T, FxBuildHasher>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hash_of(v: impl std::hash::Hash) -> u64 {
+        let mut h = FxHasher::default();
+        v.hash(&mut h);
+        h.finish()
+    }
+
+    #[test]
+    fn equal_keys_hash_equal() {
+        assert_eq!(hash_of((7u64, 3u32)), hash_of((7u64, 3u32)));
+        assert_ne!(hash_of((7u64, 3u32)), hash_of((7u64, 4u32)));
+        assert_eq!(hash_of("layer3.conv2"), hash_of("layer3.conv2"));
+    }
+
+    #[test]
+    fn deterministic_across_hasher_instances() {
+        // No random per-map state: two maps see identical hashes, so a
+        // run's hashing behavior is reproducible process to process.
+        let a = hash_of(0xDEAD_BEEFu64);
+        let b = hash_of(0xDEAD_BEEFu64);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn map_roundtrip_and_overwrite() {
+        let mut m: FxHashMap<(u64, u32), u64> = FxHashMap::default();
+        for i in 0..1000u64 {
+            m.insert((i, (i % 7) as u32), i * 3);
+        }
+        assert_eq!(m.len(), 1000);
+        for i in 0..1000u64 {
+            assert_eq!(m[&(i, (i % 7) as u32)], i * 3);
+        }
+        m.insert((5, 5), 99);
+        assert_eq!(m[&(5, 5)], 99);
+        assert_eq!(m.remove(&(5, 5)), Some(99));
+        assert!(!m.contains_key(&(5, 5)));
+    }
+
+    #[test]
+    fn partial_byte_writes_mix() {
+        // 1..8-byte tails all produce distinct, stable hashes.
+        let hs: Vec<u64> = (1..=8)
+            .map(|n| {
+                let mut h = FxHasher::default();
+                h.write(&[0xAB; 16][..8 + n]);
+                h.finish()
+            })
+            .collect();
+        for i in 0..hs.len() {
+            for j in i + 1..hs.len() {
+                assert_ne!(hs[i], hs[j], "lengths {} and {} collide", i + 9, j + 9);
+            }
+        }
+    }
+
+    #[test]
+    fn spreads_sequential_keys() {
+        // Sanity: sequential u64 keys should not collapse into a few
+        // buckets (catch a broken mix that only XORs).
+        let mut low_bits: FxHashSet<u64> = FxHashSet::default();
+        for i in 0..256u64 {
+            low_bits.insert(hash_of(i) & 0xFF);
+        }
+        assert!(low_bits.len() > 100, "only {} distinct low bytes", low_bits.len());
+    }
+}

@@ -6,6 +6,7 @@
 //! the scale this project needs.
 
 pub mod prng;
+pub mod fasthash;
 pub mod json;
 pub mod cli;
 pub mod stats;

@@ -15,30 +15,46 @@ use crate::util::prng::Rng;
 #[derive(Debug, Clone)]
 pub struct ModelRegistry {
     graphs: Vec<ModelGraph>,
+    /// §Perf: per-model total-ops table, filled at registration. Hot paths
+    /// (`SvCluster::outstanding`, serve-report scoring, admission) read one
+    /// array slot instead of re-walking the model graph per query.
+    ops_table: Vec<u64>,
 }
 
 impl ModelRegistry {
+    fn from_graphs(graphs: Vec<ModelGraph>) -> ModelRegistry {
+        let ops_table = graphs.iter().map(|g| g.total_ops()).collect();
+        ModelRegistry { graphs, ops_table }
+    }
+
     /// The standard eight-model registry.
     pub fn standard() -> ModelRegistry {
-        ModelRegistry { graphs: zoo::all_models() }
+        ModelRegistry::from_graphs(zoo::all_models())
     }
 
     /// A registry over caller-provided graphs (custom deployments, e2e
     /// serving examples).
     pub fn custom(graphs: Vec<ModelGraph>) -> ModelRegistry {
         assert!(!graphs.is_empty());
-        ModelRegistry { graphs }
+        ModelRegistry::from_graphs(graphs)
     }
 
     /// Register an additional graph at runtime (e.g. a fused multi-batch
     /// variant minted by the serve-layer batcher); returns its model id.
     pub fn add(&mut self, graph: ModelGraph) -> u32 {
+        self.ops_table.push(graph.total_ops());
         self.graphs.push(graph);
         (self.graphs.len() - 1) as u32
     }
 
     pub fn graph(&self, id: u32) -> &ModelGraph {
         &self.graphs[id as usize]
+    }
+
+    /// Total operation count of one inference of model `id` — O(1), read
+    /// from the precomputed table (identical to `graph(id).total_ops()`).
+    pub fn total_ops(&self, id: u32) -> u64 {
+        self.ops_table[id as usize]
     }
 
     pub fn id_of(&self, name: &str) -> Option<u32> {
@@ -99,7 +115,7 @@ pub struct Workload {
 impl Workload {
     /// Total useful operations across all requests.
     pub fn total_ops(&self) -> u64 {
-        self.requests.iter().map(|r| self.registry.graph(r.model_id).total_ops()).sum()
+        self.requests.iter().map(|r| self.registry.total_ops(r.model_id)).sum()
     }
 
     /// Count of requests per model name (reporting).
@@ -379,6 +395,21 @@ mod tests {
         assert_eq!(reg.len(), 8);
         assert!(reg.id_of("gpt2").is_some());
         assert!(reg.id_of("nope").is_none());
+    }
+
+    #[test]
+    fn ops_table_matches_graph_walk_including_runtime_adds() {
+        let mut reg = ModelRegistry::standard();
+        for id in 0..reg.len() as u32 {
+            assert_eq!(reg.total_ops(id), reg.graph(id).total_ops());
+            assert!(reg.total_ops(id) > 0);
+        }
+        // Graphs minted at runtime (the batcher's fused variants) must land
+        // in the table too.
+        let fused = crate::model::builder::batched(reg.graph(0), 3);
+        let id = reg.add(fused);
+        assert_eq!(reg.total_ops(id), reg.graph(id).total_ops());
+        assert_eq!(reg.total_ops(id), 3 * reg.total_ops(0));
     }
 
     #[test]

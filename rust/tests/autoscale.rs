@@ -383,7 +383,7 @@ fn backlog_equals_the_fold_of_status_for_arbitrary_cluster_states() {
             let model = g.usize_in(0, reg.len() - 1) as u32;
             let arrival = g.u64_in(0, 500_000);
             let target = g.usize_in(0, n - 1);
-            clusters[target].assign(WorkloadRequest::new(id, model, arrival));
+            clusters[target].assign(WorkloadRequest::new(id, model, arrival), &reg);
         }
         // Step a random subset of clusters partway so queued / inflight /
         // booked mixes arise.

@@ -1,0 +1,222 @@
+//! §Perf equivalence suite — the incremental hot-path machinery must be
+//! *bit-identical* to a from-scratch recompute, not merely close:
+//!
+//! - the incremental `outstanding()` / `Backlog` counters equal the naive
+//!   walk after every event of randomized serve traces (all arrival models
+//!   × both schedulers × both dispatch policies);
+//! - the HAS candidate memo produces the same decision stream as the
+//!   cache-off baseline over the full model zoo;
+//! - offline and online runs under `SimConfig::naive_recompute` reproduce
+//!   the default engine's reports byte for byte.
+//!
+//! In debug builds the library additionally cross-checks every
+//! `outstanding()` read against the naive recompute via `debug_assert`, so
+//! every test in the whole suite exercises the equivalence at every
+//! observation point, not just the ones sampled here.
+
+use hsv::balancer::{Backlog, DispatchPolicy, LoadBalancer};
+use hsv::cluster::SvCluster;
+use hsv::config::{HardwareConfig, SimConfig};
+use hsv::coordinator::Coordinator;
+use hsv::model::zoo;
+use hsv::sched::state::ClusterState;
+use hsv::sched::SchedulerKind;
+use hsv::serve::{ServeConfig, ServeEngine};
+use hsv::util::quick;
+use hsv::workload::{ArrivalModel, WorkloadSpec};
+
+fn arrival_models() -> [ArrivalModel; 4] {
+    [
+        ArrivalModel::Poisson,
+        ArrivalModel::diurnal(2_000_000.0),
+        ArrivalModel::bursty(60_000.0, 6_000.0),
+        ArrivalModel::ramp(4.0, 0.5),
+    ]
+}
+
+/// Property: after every dispatch/advance event of a randomized serve
+/// trace, the incremental load signals exactly equal a from-scratch naive
+/// recompute, and the `Backlog` aggregate equals the fold of the status
+/// table.
+#[test]
+fn incremental_counters_equal_naive_recompute_after_every_event() {
+    let hw = HardwareConfig::small();
+    quick::check(0xFEED_5EED, 18, |g| {
+        let arrival = *g.pick(&arrival_models());
+        let sched = if g.bool() { SchedulerKind::Has } else { SchedulerKind::RoundRobin };
+        let policy =
+            if g.bool() { DispatchPolicy::LeastLoaded } else { DispatchPolicy::RoundRobin };
+        let n = g.usize_in(3, 12);
+        let ratio = g.f64_in(0.0, 1.0);
+        let wl = WorkloadSpec::ratio(ratio, n, g.rng.next_u64()).with_arrivals(arrival).generate();
+        let ncl = g.usize_in(1, 3) as u32;
+        let mut clusters: Vec<SvCluster> = (0..ncl)
+            .map(|i| SvCluster::new(i, &hw, sched, SimConfig::default()))
+            .collect();
+        let mut lb = LoadBalancer::new(policy);
+        lb.register_registry(&wl.registry);
+        for r in &wl.requests {
+            lb.submit(*r, 0).unwrap();
+        }
+        let check_all = |clusters: &[SvCluster]| {
+            for c in clusters {
+                assert_eq!(
+                    c.outstanding(&wl.registry),
+                    c.outstanding_naive(&wl.registry),
+                    "outstanding diverged"
+                );
+                let (ops, count) = c.state.recount_inflight();
+                assert_eq!(c.state.inflight_ops_est, ops, "inflight ops counter diverged");
+                assert_eq!(c.state.inflight_task_count, count, "task counter diverged");
+                assert_eq!(c.inflight_tasks(), count);
+                assert_eq!(c.state.has_work(), count > 0);
+            }
+            let rows = LoadBalancer::status(clusters, &wl.registry);
+            let fold = Backlog {
+                queued_requests: rows.iter().map(|r| r.queued_requests).sum(),
+                inflight_tasks: rows.iter().map(|r| r.inflight_tasks).sum(),
+                total_outstanding: rows.iter().map(|r| r.outstanding_cycles).sum(),
+                min_outstanding: rows.iter().map(|r| r.outstanding_cycles).min().unwrap_or(0),
+            };
+            assert_eq!(LoadBalancer::backlog(clusters, &wl.registry), fold);
+        };
+        check_all(&clusters);
+        // Drive the fleet through arbitrary horizon slices; every slice is
+        // one "event" boundary (dispatch epoch + scheduler advance).
+        let mut horizon = 0u64;
+        let mut guard = 0;
+        loop {
+            if lb.queued() == 0 && clusters.iter().all(|c| c.is_drained()) {
+                break;
+            }
+            lb.dispatch_ready(&mut clusters, &wl.registry, horizon);
+            for c in clusters.iter_mut() {
+                c.run_until(&wl.registry, horizon);
+            }
+            check_all(&clusters);
+            horizon += g.u64_in(10_000, 250_000);
+            guard += 1;
+            assert!(guard < 10_000, "trace failed to drain");
+        }
+        check_all(&clusters);
+        true
+    });
+}
+
+/// The HAS candidate memo must not change a single decision: cache-on and
+/// cache-off runs over the full model zoo (two requests of every model,
+/// staggered arrivals) produce identical decision counts, timelines, and
+/// completion records.
+#[test]
+fn has_candidate_cache_off_matches_cache_on_over_full_zoo() {
+    let hw = HardwareConfig::small();
+    let run = |naive: bool| -> ClusterState {
+        let sim = if naive {
+            SimConfig::default().with_naive_recompute().with_timeline()
+        } else {
+            SimConfig::default().with_timeline()
+        };
+        let mut st = ClusterState::new(hw.cluster, hw.hbm, sim);
+        let models = zoo::all_models();
+        for (i, g) in models.iter().enumerate() {
+            st.enqueue_request(g, i as u64, i as u32, 0);
+        }
+        for (i, g) in models.iter().enumerate() {
+            let id = models.len() + i;
+            st.enqueue_request(g, id as u64, i as u32, (i as u64 + 1) * 10_000);
+        }
+        while hsv::sched::has::step(&mut st) {}
+        st
+    };
+    let fast = run(false);
+    let naive = run(true);
+    assert_eq!(fast.decisions, naive.decisions);
+    assert_eq!(fast.makespan, naive.makespan);
+    assert_eq!(fast.scheduled_ops, naive.scheduled_ops);
+    assert_eq!(fast.timeline.len(), naive.timeline.len());
+    for (a, b) in fast.timeline.iter().zip(&naive.timeline) {
+        assert_eq!(
+            (a.request_id, a.layer, a.sub, a.proc, a.start, a.end),
+            (b.request_id, b.layer, b.sub, b.proc, b.start, b.end),
+            "timeline diverged between cache-on and cache-off"
+        );
+    }
+    assert_eq!(fast.completed.len(), naive.completed.len());
+    for (a, b) in fast.completed.iter().zip(&naive.completed) {
+        assert_eq!((a.request_id, a.end, a.ops), (b.request_id, b.end, b.ops));
+    }
+}
+
+/// Offline coordinator runs under the naive-recompute toggle reproduce the
+/// default engine's report byte for byte (both schedulers).
+#[test]
+fn offline_report_identical_under_naive_recompute() {
+    let hw = HardwareConfig::small().with_clusters(2);
+    let wl = WorkloadSpec::ratio(0.6, 10, 7).generate();
+    for sched in [SchedulerKind::Has, SchedulerKind::RoundRobin] {
+        let a = Coordinator::new(hw.clone(), sched, SimConfig::default()).run(&wl);
+        let b =
+            Coordinator::new(hw.clone(), sched, SimConfig::default().with_naive_recompute())
+                .run(&wl);
+        assert_eq!(a.makespan, b.makespan, "{sched:?}");
+        assert_eq!(a.decisions, b.decisions, "{sched:?}");
+        assert_eq!(a.latencies, b.latencies, "{sched:?}");
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string(), "{sched:?}");
+    }
+}
+
+/// Online serve runs under the naive-recompute toggle reproduce the default
+/// engine's decision stream and report byte for byte, across every arrival
+/// model and both schedulers.
+#[test]
+fn serve_decision_stream_identical_under_naive_recompute() {
+    for arrival in arrival_models() {
+        for sched in [SchedulerKind::Has, SchedulerKind::RoundRobin] {
+            let wl = WorkloadSpec::ratio(0.5, 12, 33).with_arrivals(arrival).generate();
+            let run = |naive: bool| {
+                let sim = if naive {
+                    SimConfig::default().with_naive_recompute()
+                } else {
+                    SimConfig::default()
+                };
+                let hw = HardwareConfig::small().with_clusters(2);
+                ServeEngine::new(hw, sched, sim, ServeConfig::default()).run(&wl)
+            };
+            let a = run(false);
+            let b = run(true);
+            let tag = format!("{} {sched:?}", arrival.name());
+            assert_eq!(a.makespan, b.makespan, "{tag}");
+            assert_eq!(a.decisions, b.decisions, "{tag}");
+            assert_eq!(a.epochs, b.epochs, "{tag}");
+            assert_eq!(
+                a.served
+                    .iter()
+                    .map(|r| (r.request_id, r.cluster, r.dispatched_at, r.end))
+                    .collect::<Vec<_>>(),
+                b.served
+                    .iter()
+                    .map(|r| (r.request_id, r.cluster, r.dispatched_at, r.end))
+                    .collect::<Vec<_>>(),
+                "{tag}"
+            );
+            assert_eq!(a.to_json().to_string(), b.to_json().to_string(), "{tag}");
+        }
+    }
+}
+
+/// Satellite regression: per-request ops are real everywhere — the
+/// scheduler populates `CompletedRequest.ops` from the request's own task
+/// queue, matching the registry's precomputed table.
+#[test]
+fn completed_request_ops_are_real() {
+    let wl = WorkloadSpec::ratio(0.5, 8, 21).generate();
+    let hw = HardwareConfig::small().with_clusters(2);
+    let rep = Coordinator::new(hw, SchedulerKind::Has, SimConfig::default()).run(&wl);
+    assert_eq!(rep.completed.len(), 8);
+    for r in &rep.completed {
+        assert!(r.ops > 0, "request {} has zero ops", r.request_id);
+        assert_eq!(r.ops, wl.registry.total_ops(r.model_id));
+        assert_eq!(r.ops, wl.registry.graph(r.model_id).total_ops());
+    }
+    assert_eq!(rep.total_ops, wl.total_ops());
+}
