@@ -69,6 +69,7 @@ fn main() {
             batch: BatchPolicy::Off,
             admission: AdmissionPolicy::Open,
             autoscale: AutoscalePolicy::Off,
+            ..Default::default()
         };
         let mut engine = ServeEngine::new(hw.clone(), sched, sim.clone(), cfg);
         let rep = engine.run(&wl);
@@ -137,6 +138,7 @@ fn main() {
             batch: BatchPolicy::SloAware { max_batch: 8 },
             admission: AdmissionPolicy::Open,
             autoscale: AutoscalePolicy::Off,
+            ..Default::default()
         },
     );
     let batched = batched_engine.run(&wl);
@@ -188,6 +190,7 @@ fn main() {
                 batch: BatchPolicy::Off,
                 admission,
                 autoscale: AutoscalePolicy::Off,
+                ..Default::default()
             },
         );
         shed_reports.push(engine.run(&crowd));
@@ -258,6 +261,7 @@ fn main() {
                 batch: BatchPolicy::Off,
                 admission: AdmissionPolicy::Open,
                 autoscale,
+                ..Default::default()
             },
         );
         scale_reports.push(engine.run(&night_and_day));

@@ -67,6 +67,7 @@ fn main() {
                         batch: BatchPolicy::Off,
                         admission: AdmissionPolicy::Open,
                         autoscale: AutoscalePolicy::Off,
+                        ..Default::default()
                     },
                 )
                 .run(&wl)
@@ -147,6 +148,7 @@ fn main() {
                         batch,
                         admission: AdmissionPolicy::Open,
                         autoscale: AutoscalePolicy::Off,
+                        ..Default::default()
                     },
                 )
                 .run(&wl);
@@ -243,6 +245,7 @@ fn main() {
                         batch: BatchPolicy::Off,
                         admission,
                         autoscale: AutoscalePolicy::Off,
+                        ..Default::default()
                     },
                 )
                 .run(&wl);
@@ -334,6 +337,7 @@ fn main() {
                         batch: BatchPolicy::Off,
                         admission: AdmissionPolicy::Open,
                         autoscale,
+                        ..Default::default()
                     },
                 )
                 .run(&wl)

@@ -18,6 +18,7 @@ mod common;
 
 use hsv::config::{HardwareConfig, SimConfig};
 use hsv::coordinator::Coordinator;
+use hsv::obs::{chrome_trace, metrics_csv, ObsPolicy};
 use hsv::sched::SchedulerKind;
 use hsv::serve::{AdmissionPolicy, ServeConfig, ServeEngine};
 use hsv::util::json::Json;
@@ -152,6 +153,52 @@ fn main() {
         rows.push(row("serve_diurnal", clusters, &measure_serve(&wl, clusters, false)));
     }
 
+    // --- Observability A/B (report-only) + sample artifacts --------------
+    // Tracing on vs off over the same saturated 4-cluster trace: the
+    // recorder is read-only (byte-identical reports, see rust/tests/obs.rs),
+    // so the delta is pure recording overhead. The trace also feeds the
+    // sample exporter artifacts CI uploads (BENCH_obs_trace.json loads in
+    // Perfetto; BENCH_obs_metrics.csv is the epoch time series).
+    println!();
+    let owl_obs = saturated_wl(sz.saturated);
+    let obs_off = measure_serve(&owl_obs, 4, false);
+    let mut obs_cfg = serve_cfg();
+    obs_cfg.obs = ObsPolicy::on();
+    let hw = HardwareConfig::small().with_clusters(4);
+    let mut eng = ServeEngine::new(hw, SchedulerKind::Has, sim(false), obs_cfg);
+    let t_obs = Instant::now();
+    let rep = eng.run(&owl_obs);
+    let obs_wall = t_obs.elapsed().as_secs_f64();
+    assert_eq!(rep.makespan, obs_off.makespan, "tracing changed the simulation");
+    assert_eq!(rep.decisions, obs_off.decisions, "tracing changed the decision count");
+    let trace = eng.obs.as_ref().expect("tracing was on");
+    let obs_overhead = obs_wall / obs_off.wall_s.max(1e-9);
+    println!(
+        "  obs serve_saturated x4 ({} req): off {:.3}s vs trace {:.3}s -> {:.2}x \
+         ({} events, {} tasks)",
+        sz.saturated,
+        obs_off.wall_s,
+        obs_wall,
+        obs_overhead,
+        trace.events().len(),
+        trace.tasks().len(),
+    );
+    std::fs::write("BENCH_obs_trace.json", chrome_trace(trace).to_pretty())
+        .expect("write BENCH_obs_trace.json");
+    metrics_csv(trace).save("BENCH_obs_metrics.csv").expect("write BENCH_obs_metrics.csv");
+    println!("  wrote BENCH_obs_trace.json + BENCH_obs_metrics.csv");
+    let mut obs_json = Json::obj();
+    obs_json
+        .set("case", "serve_saturated")
+        .set("clusters", 4u32)
+        .set("requests", sz.saturated)
+        .set("off_wall_s", obs_off.wall_s)
+        .set("trace_wall_s", obs_wall)
+        .set("trace_overhead", obs_overhead)
+        .set("events", trace.events().len())
+        .set("tasks", trace.tasks().len())
+        .set("epoch_samples", trace.samples().len());
+
     // --- Offline A/B (report-only): the offline dispatcher reads the load
     // signal only during its single clairvoyant dispatch pass, so the gap
     // is smaller than online serving's — recorded for the trend, not gated.
@@ -209,6 +256,7 @@ fn main() {
     doc.set("bench", "sim_throughput")
         .set("mode", mode)
         .set("rows", Json::Arr(rows))
+        .set("obs", obs_json)
         .set("ab_offline", ab_offline)
         .set("ab", ab);
     println!("\nBENCH {}", doc.to_string());

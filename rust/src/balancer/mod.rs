@@ -262,6 +262,26 @@ impl LoadBalancer {
         now: Cycle,
         eligible: Option<&[bool]>,
     ) -> usize {
+        self.dispatch_ready_eligible_traced(
+            clusters,
+            registry,
+            now,
+            eligible,
+            &mut crate::obs::NoopSink,
+        )
+    }
+
+    /// [`Self::dispatch_ready_eligible`] with every routing decision
+    /// mirrored into an observability sink as a `Dispatched` request event
+    /// (stamped with the same cycle as the request-table row).
+    pub fn dispatch_ready_eligible_traced(
+        &mut self,
+        clusters: &mut [SvCluster],
+        registry: &ModelRegistry,
+        now: Cycle,
+        eligible: Option<&[bool]>,
+        obs: &mut dyn crate::obs::ObsSink,
+    ) -> usize {
         let can = |i: usize| eligible.map_or(true, |m| m[i]);
         if !(0..clusters.len()).any(can) {
             return 0;
@@ -301,7 +321,13 @@ impl LoadBalancer {
             e.cluster = Some(target as u32);
             // Offline (clairvoyant) dispatch stamps the arrival itself; the
             // online engine stamps its current cycle.
-            e.dispatched_at = Some(if now == Cycle::MAX { e.arrival } else { now });
+            let stamp = if now == Cycle::MAX { e.arrival } else { now };
+            e.dispatched_at = Some(stamp);
+            obs.request_event(crate::obs::ReqEvent {
+                request_id: e.request_id,
+                cycle: stamp,
+                kind: crate::obs::ReqEventKind::Dispatched { cluster: target as u32 },
+            });
             // The cluster must never book work before the controller routed
             // it: a request held back by the eligibility mask (autoscaler
             // scaled the fleet to zero dispatchable clusters for a stretch)

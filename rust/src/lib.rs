@@ -35,6 +35,11 @@
 //!   cold and wakes them (through a warm-up latency) as the aggregate
 //!   queue depth moves, charging static energy only for powered cycles
 //!   against the fixed-fleet baseline.
+//! - [`obs`] — zero-dependency observability for the serving path: causal
+//!   per-request lifecycle spans, a bounded per-epoch fleet time series, and
+//!   exporters (Chrome trace-event JSON for Perfetto, metrics CSV, terminal
+//!   summary). Recording is strictly read-only — decisions and reports are
+//!   byte-identical with it on or off.
 //! - [`gpu`] — the Titan RTX reference model used for Fig 1 and Fig 10.
 //! - [`dse`] — the design-space-exploration driver (paper §VI-C).
 //! - `runtime` (feature `pjrt`) — the PJRT functional-execution path: loads
@@ -94,6 +99,7 @@ pub mod balancer;
 pub mod coordinator;
 pub mod workload;
 pub mod serve;
+pub mod obs;
 pub mod gpu;
 pub mod dse;
 pub mod report;

@@ -18,7 +18,7 @@ use hsv::model::zoo;
 use hsv::report::{self, timeline};
 use hsv::sched::SchedulerKind;
 use hsv::serve::{
-    AdmissionPolicy, AutoscalePolicy, BatchPolicy, ServeConfig, ServeEngine, SloPolicy,
+    AdmissionPolicy, AutoscalePolicy, BatchPolicy, ObsPolicy, ServeConfig, ServeEngine, SloPolicy,
 };
 use hsv::umf;
 use hsv::util::cli::Args;
@@ -33,6 +33,7 @@ const USAGE: &str = "hsv <simulate|serve|dse|gpu|timeline|convert|zoo|pjrt> [--o
            [--admission-floor PRIO]
            [--autoscale off|threshold] [--autoscale-up DEPTH] [--autoscale-down DEPTH]
            [--autoscale-min N] [--autoscale-dwell CYCLES] [--autoscale-warmup CYCLES]
+           [--trace out/trace.json] [--metrics out/metrics.csv]
            [--clusters N] [--small] [--out out/serve.json]
   dse      --requests 12 [--threads N] [--out out/dse.csv]
   gpu      --ratio 0.5 --requests 40 --seed 42
@@ -203,14 +204,38 @@ fn serve(args: &Args) {
             std::process::exit(2);
         }
     };
+    // Observability: recording turns on when either export path is given.
+    // It is read-only — the report below is byte-identical either way.
+    let trace_out = args.str_opt("trace");
+    let metrics_out = args.str_opt("metrics");
+    let obs = if trace_out.is_some() || metrics_out.is_some() {
+        ObsPolicy::on()
+    } else {
+        ObsPolicy::Off
+    };
     let mut engine = ServeEngine::new(
         hw,
         sched,
         sim,
-        ServeConfig { policy, slo, batch, admission, autoscale },
+        ServeConfig { policy, slo, batch, admission, autoscale, obs },
     );
     let r = engine.run(&wl);
     print!("{}", report::summarize_serve(&r));
+    if let Some(tr) = &engine.obs {
+        if let Some(path) = trace_out {
+            if let Some(parent) = std::path::Path::new(path).parent() {
+                std::fs::create_dir_all(parent).expect("create trace dir");
+            }
+            std::fs::write(path, hsv::obs::chrome_trace(tr).to_string())
+                .expect("write chrome trace");
+            println!("wrote {path} (load in chrome://tracing or ui.perfetto.dev)");
+        }
+        if let Some(path) = metrics_out {
+            hsv::obs::metrics_csv(tr).save(path).expect("write metrics csv");
+            println!("wrote {path}");
+        }
+        print!("{}", hsv::obs::summary(tr, args.usize("width", 100)));
+    }
     if let Some(out) = args.str_opt("out") {
         if let Some(parent) = std::path::Path::new(out).parent() {
             std::fs::create_dir_all(parent).expect("create output dir");

@@ -1,0 +1,96 @@
+//! CSV time-series and terminal-summary exporters for an [`ObsTrace`].
+
+use super::{ObsTrace, ReqEventKind};
+use crate::report::timeline;
+use crate::util::csv::CsvWriter;
+
+/// The epoch time series as a CSV document: one row per retained sample,
+/// fleet aggregates first, then a per-cluster column group
+/// (`c{i}_queued`, `c{i}_inflight`, `c{i}_outstanding`, `c{i}_power`,
+/// `c{i}_makespan`).
+pub fn metrics_csv(trace: &ObsTrace) -> CsvWriter {
+    let mut header: Vec<String> = [
+        "epoch",
+        "cycle",
+        "queued_requests",
+        "inflight_tasks",
+        "total_outstanding",
+        "min_outstanding",
+        "batcher_pending",
+        "balancer_queued",
+        "deferred_pending",
+        "active_clusters",
+        "dynamic_energy_j",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    for i in 0..trace.cluster_count() {
+        for col in ["queued", "inflight", "outstanding", "power", "makespan"] {
+            header.push(format!("c{i}_{col}"));
+        }
+    }
+    let mut w = CsvWriter::new(header);
+    for s in trace.samples() {
+        let mut row: Vec<String> = vec![
+            s.epoch.to_string(),
+            s.cycle.to_string(),
+            s.queued_requests.to_string(),
+            s.inflight_tasks.to_string(),
+            s.total_outstanding.to_string(),
+            s.min_outstanding.to_string(),
+            s.batcher_pending.to_string(),
+            s.balancer_queued.to_string(),
+            s.deferred_pending.to_string(),
+            s.active_clusters.to_string(),
+            format!("{}", s.dynamic_energy_j),
+        ];
+        for c in &s.clusters {
+            row.push(c.queued_requests.to_string());
+            row.push(c.inflight_tasks.to_string());
+            row.push(c.outstanding_cycles.to_string());
+            row.push(c.power.name().to_string());
+            row.push(c.makespan.to_string());
+        }
+        w.row(row);
+    }
+    w
+}
+
+/// Terminal summary: one header line of trace-wide counts, then the
+/// harvested task records rendered as the per-processor ASCII timeline
+/// (the serve-path counterpart of `hsv timeline`).
+pub fn summary(trace: &ObsTrace, width: usize) -> String {
+    let mut admitted = 0u64;
+    let mut deferred = 0u64;
+    let mut shed = 0u64;
+    let mut dispatched = 0u64;
+    let mut completed = 0u64;
+    for ev in trace.events() {
+        match ev.kind {
+            ReqEventKind::Admitted { .. } => admitted += 1,
+            ReqEventKind::Deferred { .. } => deferred += 1,
+            ReqEventKind::Shed { .. } => shed += 1,
+            ReqEventKind::Dispatched { .. } => dispatched += 1,
+            ReqEventKind::Completed { .. } => completed += 1,
+            _ => {}
+        }
+    }
+    let mut out = format!(
+        "obs: {} requests | admit {admitted} defer {deferred} shed {shed} | \
+         dispatch {dispatched} complete {completed} | {} tasks | \
+         {} epoch samples kept of {} | {} scale events\n",
+        trace.request_ids().len(),
+        trace.tasks().len(),
+        trace.samples().len(),
+        trace.samples_seen(),
+        trace.scale_log().len(),
+    );
+    out.push_str(&timeline::render_records(
+        trace.tasks(),
+        trace.makespan(),
+        trace.clock_ghz(),
+        width,
+    ));
+    out
+}

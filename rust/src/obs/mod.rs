@@ -1,0 +1,563 @@
+//! Serve-path observability: request lifecycle tracing, per-epoch fleet
+//! metrics, and exporters (Chrome trace-event JSON, CSV time series, and a
+//! terminal summary).
+//!
+//! The serve stack (admission → batching → autoscale → dispatch → cluster
+//! scheduling) used to emit only end-of-run aggregates in
+//! [`crate::serve::ServeReport`], so a p99 miss, a defer-then-shed spiral,
+//! or an autoscale flap could only be inferred, never inspected. This
+//! module threads a recorder through every serve stage:
+//!
+//! - **Request lifecycle spans** ([`ReqEvent`]): arrival, admission verdict
+//!   (admit / defer / shed with [`crate::serve::ShedReason`]), batch
+//!   coalescing and fusion, dispatch, per-layer task execution (reusing
+//!   [`TaskRecord`] via `SimConfig::record_timeline`), and completion —
+//!   one request's full story is reconstructable via
+//!   [`ObsTrace::span_of`].
+//! - **Per-epoch fleet time series** ([`EpochSample`]): backlog, per-cluster
+//!   outstanding work (queued/in-flight split), power states, batcher
+//!   occupancy, and cumulative dynamic energy, sampled once per engine
+//!   epoch into a bounded [`Reservoir`] so multi-million-request traces
+//!   stay O(capacity) in memory. (Lifecycle events are inherently
+//!   O(requests); the *time series* is the unbounded-horizon axis and is
+//!   the one that is capacity-bounded.)
+//! - **Exporters**: [`chrome::chrome_trace`] (loadable in `chrome://tracing`
+//!   / Perfetto: one track per cluster·processor plus an async track per
+//!   request), [`export::metrics_csv`] via [`crate::util::csv::CsvWriter`],
+//!   and [`export::summary`] extending [`crate::report::timeline`].
+//!
+//! # §Contract — recording observes, never perturbs
+//!
+//! The recorder is strictly read-only with respect to simulation state.
+//! Every hook either copies values the stage already computed (verdicts,
+//! dispatch stamps, scale decisions) or reads signals that are pure
+//! functions of cluster state (`LoadBalancer::status`, energy meters).
+//! The only simulation knob the engine touches when tracing is on is
+//! `SimConfig::record_timeline`, which appends [`TaskRecord`]s and retains
+//! completed-layer ends — neither feeds back into any scheduling decision.
+//! Consequence (pinned by `rust/tests/obs.rs` across the ArrivalModel ×
+//! scheduler grid): the scheduling decision stream and all existing JSON
+//! output are **byte-identical** with observability off and on.
+//!
+//! # §Perf — the off path does no work
+//!
+//! Stages take `&mut dyn ObsSink`; with observability off the engine passes
+//! [`NoopSink`], whose defaulted trait methods are empty bodies — the cost
+//! is one virtual call per hook site per request, and zero per simulated
+//! cycle (the per-epoch fleet sample is built only when a recorder exists).
+//! The public stage entry points (`offer`, `poll`, `dispatch_ready`, …)
+//! delegate to their `*_traced` variants with a `NoopSink`, so existing
+//! call sites compile and behave unchanged. The `sim_throughput` bench
+//! gates the obs-off regression at < 2%.
+
+pub mod chrome;
+pub mod export;
+
+pub use chrome::chrome_trace;
+pub use export::{metrics_csv, summary};
+
+use crate::sched::state::TaskRecord;
+use crate::serve::admission::ShedReason;
+use crate::serve::autoscale::{PowerState, ScaleEvent};
+use crate::serve::batch::FUSED_ID_BASE;
+use crate::serve::ServeReport;
+use crate::sim::Cycle;
+use crate::util::fasthash::FxHashMap;
+
+/// Default epoch-sample capacity of [`ObsPolicy::on`] — enough to keep
+/// every sample of any test-scale run, small enough (a few MB of samples)
+/// to bound fleet-scale traces.
+pub const DEFAULT_METRICS_CAPACITY: usize = 65_536;
+
+/// Observability policy of the serving engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ObsPolicy {
+    /// No recording: every hook is a no-op through [`NoopSink`] (the
+    /// pre-observability engine, bit for bit — and, by the §Contract,
+    /// `Trace` produces the same decisions and report too).
+    #[default]
+    Off,
+    /// Record lifecycle events, task records, and a bounded epoch time
+    /// series of at most `metrics_capacity` retained samples.
+    Trace { metrics_capacity: usize },
+}
+
+impl ObsPolicy {
+    /// Short label used in reports and CLI output.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ObsPolicy::Off => "off",
+            ObsPolicy::Trace { .. } => "trace",
+        }
+    }
+
+    /// Is recording configured?
+    pub fn enabled(&self) -> bool {
+        !matches!(self, ObsPolicy::Off)
+    }
+
+    /// Tracing with the default epoch-sample capacity.
+    pub fn on() -> ObsPolicy {
+        ObsPolicy::Trace { metrics_capacity: DEFAULT_METRICS_CAPACITY }
+    }
+
+    /// Retained-sample bound of the epoch time series (0 when off).
+    pub fn metrics_capacity(&self) -> usize {
+        match self {
+            ObsPolicy::Off => 0,
+            ObsPolicy::Trace { metrics_capacity } => *metrics_capacity,
+        }
+    }
+}
+
+/// What happened to a request at one point of its lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReqEventKind {
+    /// The request entered the serving path (cycle = the true trace
+    /// arrival, even when the engine releases it in a later epoch).
+    Arrival,
+    /// The admission stage forwarded the request (`deferred` = it had been
+    /// parked at least once before this verdict).
+    Admitted { deferred: bool },
+    /// The admission stage parked the request until cycle `until`.
+    Deferred { until: Cycle },
+    /// The admission stage dropped the request permanently.
+    Shed { reason: ShedReason },
+    /// The batcher held the request back in the `model_id` coalescing
+    /// queue.
+    Coalescing { model_id: u32 },
+    /// The batcher flushed the request's queue as emission `batch_id`
+    /// (`>= FUSED_ID_BASE`) carrying `size` members.
+    BatchFormed { batch_id: u64, size: u32 },
+    /// The load balancer routed the emission to `cluster`. Lands on the
+    /// *emission* id — the fused batch id for coalesced requests;
+    /// [`ObsTrace::span_of`] resolves members through the batch.
+    Dispatched { cluster: u32 },
+    /// The request completed on `cluster` (fan-out per member; emitted at
+    /// aggregation via [`ObsTrace::finish`]).
+    Completed { cluster: u32 },
+}
+
+/// One causally-ordered lifecycle event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReqEvent {
+    pub request_id: u64,
+    pub cycle: Cycle,
+    pub kind: ReqEventKind,
+}
+
+/// One cluster's slice of an [`EpochSample`].
+#[derive(Debug, Clone)]
+pub struct ClusterSample {
+    /// Requests assigned but not yet admitted by the cluster scheduler.
+    pub queued_requests: usize,
+    /// Tasks of admitted requests still waiting in the cluster's queues.
+    pub inflight_tasks: usize,
+    /// Estimated outstanding work in cycles.
+    pub outstanding_cycles: u64,
+    /// Power state as the autoscaler sees it (always `Active` with
+    /// autoscaling off).
+    pub power: PowerState,
+    /// Furthest booked cycle.
+    pub makespan: Cycle,
+}
+
+/// One per-epoch fleet snapshot — everything the engine's control stages
+/// could observe at that cycle, copied without mutating anything.
+#[derive(Debug, Clone)]
+pub struct EpochSample {
+    /// 0-based engine epoch index.
+    pub epoch: u64,
+    pub cycle: Cycle,
+    /// Fleet-wide queued requests (cluster-side).
+    pub queued_requests: usize,
+    /// Fleet-wide in-flight tasks.
+    pub inflight_tasks: usize,
+    /// Fleet-wide outstanding-cycle estimate.
+    pub total_outstanding: u64,
+    /// Outstanding estimate of the least-loaded cluster.
+    pub min_outstanding: u64,
+    /// Requests held back in the batcher's coalescing queues.
+    pub batcher_pending: usize,
+    /// Requests submitted to the balancer but not yet routed.
+    pub balancer_queued: usize,
+    /// Requests parked on a deferred admission release.
+    pub deferred_pending: usize,
+    /// Active-or-warming clusters (committed capacity).
+    pub active_clusters: usize,
+    /// Cumulative *dynamic* energy booked so far, joules (Σ cluster
+    /// meters). Static energy depends on powered intervals that only close
+    /// at aggregation, so it is reported end-of-run in the
+    /// [`ServeReport`], not per epoch.
+    pub dynamic_energy_j: f64,
+    /// Per-cluster split, indexed by cluster id.
+    pub clusters: Vec<ClusterSample>,
+}
+
+/// Recorder interface threaded through the serve stages. Every method has
+/// an empty default body, so a sink implements only what it wants and
+/// [`NoopSink`] is zero code.
+pub trait ObsSink {
+    /// One request lifecycle event.
+    fn request_event(&mut self, _ev: ReqEvent) {}
+    /// One autoscaler decision.
+    fn scale_event(&mut self, _ev: &ScaleEvent) {}
+    /// One per-epoch fleet snapshot.
+    fn epoch_sample(&mut self, _s: EpochSample) {}
+    /// One booked task execution, harvested from a cluster timeline.
+    fn task_record(&mut self, _cluster: u32, _rec: &TaskRecord) {}
+}
+
+/// The do-nothing sink the off path runs through.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NoopSink;
+
+impl ObsSink for NoopSink {}
+
+/// Deterministic bounded buffer for an unknown-length stream: keeps every
+/// `stride`-th item (`stride` starts at 1 and doubles each time the buffer
+/// fills, dropping the odd-position half), so retained samples always cover
+/// the whole stream uniformly — item 0 is never dropped, and at least
+/// `capacity / 2` samples survive any stream length.
+///
+/// Invariant: after `n` pushes the buffer holds exactly the items with
+/// index `i % stride == 0`, in order. Decimation preserves it because the
+/// capacity is forced even: retaining even *positions* of `{0, s, 2s, …}`
+/// yields `{0, 2s, 4s, …}`, the multiples of the doubled stride, and the
+/// triggering item's index `capacity·s` is itself a multiple of `2s`.
+#[derive(Debug, Clone)]
+pub struct Reservoir<T> {
+    cap: usize,
+    stride: u64,
+    seen: u64,
+    kept: Vec<T>,
+}
+
+impl<T> Reservoir<T> {
+    /// `capacity` is rounded down to an even number, minimum 2 (the
+    /// invariant above needs an even capacity).
+    pub fn new(capacity: usize) -> Reservoir<T> {
+        let cap = if capacity < 2 { 2 } else { capacity & !1 };
+        Reservoir { cap, stride: 1, seen: 0, kept: Vec::new() }
+    }
+
+    /// Offer the next stream item; kept iff its index is on-stride.
+    pub fn push(&mut self, item: T) {
+        if self.seen % self.stride == 0 {
+            if self.kept.len() == self.cap {
+                let mut pos = 0usize;
+                self.kept.retain(|_| {
+                    let keep = pos % 2 == 0;
+                    pos += 1;
+                    keep
+                });
+                self.stride *= 2;
+                debug_assert_eq!(self.seen % self.stride, 0, "even capacity keeps the trigger");
+            }
+            if self.seen % self.stride == 0 {
+                self.kept.push(item);
+            }
+        }
+        self.seen += 1;
+    }
+
+    /// Retained items, in stream order.
+    pub fn as_slice(&self) -> &[T] {
+        &self.kept
+    }
+
+    pub fn len(&self) -> usize {
+        self.kept.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.kept.is_empty()
+    }
+
+    /// Items offered so far (retained or not).
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    /// Current sampling stride (1 until the first decimation).
+    pub fn stride(&self) -> u64 {
+        self.stride
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+}
+
+/// One request's reconstructed lifecycle (see [`ObsTrace::span_of`]).
+/// `None` fields mean the stage never saw the request (e.g. a shed request
+/// has no dispatch and no tasks).
+#[derive(Debug, Clone, Default)]
+pub struct RequestSpan {
+    pub request_id: u64,
+    /// True trace arrival.
+    pub arrival: Option<Cycle>,
+    /// Cycle of the admit verdict (admission-on runs only).
+    pub admitted_at: Option<Cycle>,
+    /// Defer decisions taken before the final verdict.
+    pub deferrals: u32,
+    /// Shed decision (cycle, reason) — terminal; excludes every later stage.
+    pub shed: Option<(Cycle, ShedReason)>,
+    /// Cycle the batcher queued the request for coalescing.
+    pub coalesced_at: Option<Cycle>,
+    /// Fused emission id the request rode in, if any.
+    pub batch: Option<u64>,
+    /// Dispatch (cycle, cluster) of the request's emission.
+    pub dispatched: Option<(Cycle, u32)>,
+    /// Earliest booked task start of the emission.
+    pub first_task_start: Option<Cycle>,
+    /// Latest booked task end of the emission.
+    pub last_task_end: Option<Cycle>,
+    /// Completion (cycle, cluster).
+    pub completed: Option<(Cycle, u32)>,
+}
+
+/// The in-memory recorder: collects lifecycle events, scale decisions, the
+/// bounded epoch time series, and harvested task records, and answers the
+/// span/series queries the exporters are built on. Implements [`ObsSink`];
+/// the serving engine owns one per traced run
+/// (`ServeEngine::obs`).
+#[derive(Debug, Clone)]
+pub struct ObsTrace {
+    clock_ghz: f64,
+    cluster_count: u32,
+    events: Vec<ReqEvent>,
+    scale_log: Vec<ScaleEvent>,
+    samples: Reservoir<EpochSample>,
+    tasks: Vec<(u32, TaskRecord)>,
+    /// member id → fused emission id (from `BatchFormed` events).
+    member_batch: FxHashMap<u64, u64>,
+    /// fused emission id → member ids, in arrival order.
+    batch_members: FxHashMap<u64, Vec<u64>>,
+    makespan: Cycle,
+}
+
+impl ObsTrace {
+    pub fn new(policy: ObsPolicy, clock_ghz: f64, clusters: u32) -> ObsTrace {
+        ObsTrace {
+            clock_ghz,
+            cluster_count: clusters,
+            events: Vec::new(),
+            scale_log: Vec::new(),
+            samples: Reservoir::new(policy.metrics_capacity().max(2)),
+            tasks: Vec::new(),
+            member_batch: FxHashMap::default(),
+            batch_members: FxHashMap::default(),
+            makespan: 0,
+        }
+    }
+
+    /// Seal the trace at aggregation: stamp the run span and fan the
+    /// served completions out as [`ReqEventKind::Completed`] events (the
+    /// report already resolved batches to per-member completions).
+    pub fn finish(&mut self, report: &ServeReport) {
+        self.makespan = report.makespan;
+        for r in &report.served {
+            self.events.push(ReqEvent {
+                request_id: r.request_id,
+                cycle: r.end,
+                kind: ReqEventKind::Completed { cluster: r.cluster },
+            });
+        }
+    }
+
+    pub fn clock_ghz(&self) -> f64 {
+        self.clock_ghz
+    }
+
+    pub fn cluster_count(&self) -> u32 {
+        self.cluster_count
+    }
+
+    /// Run span (set by [`Self::finish`]).
+    pub fn makespan(&self) -> Cycle {
+        self.makespan
+    }
+
+    /// Every lifecycle event, in recording order.
+    pub fn events(&self) -> &[ReqEvent] {
+        &self.events
+    }
+
+    /// Autoscaler decisions, in decision order.
+    pub fn scale_log(&self) -> &[ScaleEvent] {
+        &self.scale_log
+    }
+
+    /// Retained epoch samples (bounded; see [`Reservoir`]).
+    pub fn samples(&self) -> &[EpochSample] {
+        self.samples.as_slice()
+    }
+
+    /// Epochs sampled over the run, retained or not.
+    pub fn samples_seen(&self) -> u64 {
+        self.samples.seen()
+    }
+
+    /// Harvested task records as (cluster, record) pairs — the same shape
+    /// [`crate::report::timeline::render_records`] consumes.
+    pub fn tasks(&self) -> &[(u32, TaskRecord)] {
+        &self.tasks
+    }
+
+    /// Distinct trace-request ids seen (fused emission ids excluded),
+    /// ascending.
+    pub fn request_ids(&self) -> Vec<u64> {
+        let mut ids: Vec<u64> = self
+            .events
+            .iter()
+            .map(|e| e.request_id)
+            .filter(|&id| id < FUSED_ID_BASE)
+            .collect();
+        ids.sort_unstable();
+        ids.dedup();
+        ids
+    }
+
+    /// The id a request's work actually ran under: its fused batch id if
+    /// it was coalesced, else itself.
+    pub fn emission_of(&self, request_id: u64) -> u64 {
+        self.member_batch.get(&request_id).copied().unwrap_or(request_id)
+    }
+
+    /// Member ids of a fused emission (empty for solo ids).
+    pub fn members_of(&self, batch_id: u64) -> &[u64] {
+        self.batch_members.get(&batch_id).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    /// Task records booked for a request, resolved through its batch.
+    pub fn tasks_of(&self, request_id: u64) -> Vec<&TaskRecord> {
+        let emission = self.emission_of(request_id);
+        self.tasks.iter().filter(|(_, t)| t.request_id == emission).map(|(_, t)| t).collect()
+    }
+
+    /// Reconstruct one request's lifecycle from its events (dispatch and
+    /// task records resolve through the fused batch when coalesced).
+    pub fn span_of(&self, request_id: u64) -> RequestSpan {
+        let emission = self.emission_of(request_id);
+        let mut span = RequestSpan { request_id, ..RequestSpan::default() };
+        for ev in &self.events {
+            if ev.request_id == request_id {
+                match ev.kind {
+                    ReqEventKind::Arrival => span.arrival = Some(ev.cycle),
+                    ReqEventKind::Admitted { .. } => span.admitted_at = Some(ev.cycle),
+                    ReqEventKind::Deferred { .. } => span.deferrals += 1,
+                    ReqEventKind::Shed { reason } => span.shed = Some((ev.cycle, reason)),
+                    ReqEventKind::Coalescing { .. } => span.coalesced_at = Some(ev.cycle),
+                    ReqEventKind::BatchFormed { batch_id, .. } => span.batch = Some(batch_id),
+                    ReqEventKind::Dispatched { cluster } => {
+                        span.dispatched = Some((ev.cycle, cluster))
+                    }
+                    ReqEventKind::Completed { cluster } => {
+                        span.completed = Some((ev.cycle, cluster))
+                    }
+                }
+            } else if emission != request_id && ev.request_id == emission {
+                if let ReqEventKind::Dispatched { cluster } = ev.kind {
+                    span.dispatched = Some((ev.cycle, cluster));
+                }
+            }
+        }
+        for (_, t) in self.tasks.iter().filter(|(_, t)| t.request_id == emission) {
+            span.first_task_start =
+                Some(span.first_task_start.map_or(t.start, |s| s.min(t.start)));
+            span.last_task_end = Some(span.last_task_end.map_or(t.end, |e| e.max(t.end)));
+        }
+        span
+    }
+}
+
+impl ObsSink for ObsTrace {
+    fn request_event(&mut self, ev: ReqEvent) {
+        if let ReqEventKind::BatchFormed { batch_id, .. } = ev.kind {
+            self.member_batch.insert(ev.request_id, batch_id);
+            self.batch_members.entry(batch_id).or_default().push(ev.request_id);
+        }
+        self.events.push(ev);
+    }
+
+    fn scale_event(&mut self, ev: &ScaleEvent) {
+        self.scale_log.push(*ev);
+    }
+
+    fn epoch_sample(&mut self, s: EpochSample) {
+        self.samples.push(s);
+    }
+
+    fn task_record(&mut self, cluster: u32, rec: &TaskRecord) {
+        self.tasks.push((cluster, rec.clone()));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reservoir_keeps_stream_bounded_and_uniform() {
+        let mut r: Reservoir<u64> = Reservoir::new(8);
+        for i in 0..1_000 {
+            r.push(i);
+        }
+        assert_eq!(r.seen(), 1_000);
+        assert!(r.len() <= 8, "capacity exceeded: {}", r.len());
+        assert!(r.len() >= 4, "decimation dropped below half capacity");
+        let kept = r.as_slice();
+        assert_eq!(kept[0], 0, "the first sample is never dropped");
+        // Every retained item sits exactly on the final stride.
+        for &v in kept {
+            assert_eq!(v % r.stride(), 0);
+        }
+        // And every on-stride index below the trigger horizon is retained.
+        assert_eq!(kept.len() as u64, (kept.last().unwrap() / r.stride()) + 1);
+    }
+
+    #[test]
+    fn reservoir_small_streams_keep_everything() {
+        let mut r: Reservoir<u32> = Reservoir::new(64);
+        for i in 0..64 {
+            r.push(i);
+        }
+        assert_eq!(r.as_slice(), (0..64).collect::<Vec<_>>().as_slice());
+        assert_eq!(r.stride(), 1);
+    }
+
+    #[test]
+    fn reservoir_odd_capacity_rounds_down_even() {
+        let r: Reservoir<u8> = Reservoir::new(7);
+        assert_eq!(r.capacity(), 6);
+        let r: Reservoir<u8> = Reservoir::new(0);
+        assert_eq!(r.capacity(), 2);
+    }
+
+    #[test]
+    fn trace_resolves_members_through_their_batch() {
+        let mut t = ObsTrace::new(ObsPolicy::on(), 1.0, 1);
+        let fused = FUSED_ID_BASE + 3;
+        for id in [10, 11] {
+            t.request_event(ReqEvent { request_id: id, cycle: 0, kind: ReqEventKind::Arrival });
+            t.request_event(ReqEvent {
+                request_id: id,
+                cycle: 5,
+                kind: ReqEventKind::BatchFormed { batch_id: fused, size: 2 },
+            });
+        }
+        t.request_event(ReqEvent {
+            request_id: fused,
+            cycle: 6,
+            kind: ReqEventKind::Dispatched { cluster: 0 },
+        });
+        assert_eq!(t.emission_of(10), fused);
+        assert_eq!(t.emission_of(99), 99);
+        assert_eq!(t.members_of(fused), &[10, 11]);
+        let span = t.span_of(11);
+        assert_eq!(span.batch, Some(fused));
+        assert_eq!(span.dispatched, Some((6, 0)));
+        assert_eq!(t.request_ids(), vec![10, 11], "fused ids are not trace requests");
+    }
+}

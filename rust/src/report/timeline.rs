@@ -3,23 +3,40 @@
 //! shown as `.`).
 
 use crate::coordinator::RunReport;
-use crate::sim::ProcKind;
+use crate::sched::state::TaskRecord;
+use crate::sim::{Cycle, ProcKind};
 use std::collections::BTreeMap;
+
+const EMPTY_MSG: &str = "(timeline empty — run with SimConfig::record_timeline)";
 
 /// Render the run's timeline as text. `width` is the chart width in
 /// characters; each processor of each cluster becomes one row. Request ids
 /// are drawn with single characters (0–9, a–z cycling); idle time is `.`.
 pub fn render(report: &RunReport, width: usize) -> String {
-    if report.timeline.is_empty() {
-        return "(timeline empty — run with SimConfig::record_timeline)".to_string();
+    render_records(&report.timeline, report.makespan, report.clock_ghz, width)
+}
+
+/// [`render`] over bare `(cluster, record)` pairs — the shape the serve
+/// path's observability layer harvests (`hsv::obs::ObsTrace::tasks`), so
+/// online traces render without a [`RunReport`]. A `width` under 2 cannot
+/// hold even one task cell next to an idle cell (the cell clamps below
+/// assume width ≥ 2 — width 0 used to divide by zero and underflow), so it
+/// degenerates to the empty-timeline message rather than panicking.
+pub fn render_records(
+    records: &[(u32, TaskRecord)],
+    makespan: Cycle,
+    clock_ghz: f64,
+    width: usize,
+) -> String {
+    if records.is_empty() || width < 2 {
+        return EMPTY_MSG.to_string();
     }
-    let t_end = report.makespan.max(1);
+    let t_end = makespan.max(1);
     let scale = t_end as f64 / width as f64;
 
     // Group records by (cluster, proc).
-    let mut rows: BTreeMap<(u32, usize), Vec<&(u32, crate::sched::state::TaskRecord)>> =
-        BTreeMap::new();
-    for rec in &report.timeline {
+    let mut rows: BTreeMap<(u32, usize), Vec<&(u32, TaskRecord)>> = BTreeMap::new();
+    for rec in records {
         rows.entry((rec.0, rec.1.proc)).or_default().push(rec);
     }
 
@@ -27,7 +44,7 @@ pub fn render(report: &RunReport, width: usize) -> String {
     out.push_str(&format!(
         "timeline: {} cycles ({:.3} ms), 1 char ≈ {:.0} cycles\n",
         t_end,
-        t_end as f64 / (report.clock_ghz * 1e6),
+        t_end as f64 / (clock_ghz * 1e6),
         scale
     ));
     for ((cluster, proc), recs) in rows {
@@ -76,6 +93,7 @@ mod tests {
     use super::*;
     use crate::config::{HardwareConfig, SimConfig};
     use crate::coordinator::Coordinator;
+    use crate::ops::OpKind;
     use crate::sched::SchedulerKind;
     use crate::workload::WorkloadSpec;
 
@@ -87,6 +105,30 @@ mod tests {
             SimConfig::default().with_timeline(),
         )
         .run(&wl)
+    }
+
+    /// A synthetic booked task for direct renderer tests.
+    fn rec(
+        cluster: u32,
+        proc: usize,
+        kind: ProcKind,
+        request_id: u64,
+        start: Cycle,
+        end: Cycle,
+    ) -> (u32, TaskRecord) {
+        (
+            cluster,
+            TaskRecord {
+                request_id,
+                layer: 0,
+                sub: 0,
+                proc,
+                kind,
+                op: OpKind::Gemm,
+                start,
+                end,
+            },
+        )
     }
 
     #[test]
@@ -104,6 +146,74 @@ mod tests {
         let r = Coordinator::new(HardwareConfig::small(), SchedulerKind::Has, SimConfig::default())
             .run(&wl);
         assert!(render(&r, 80).contains("timeline empty"));
+    }
+
+    /// Regression: width 0 used to divide by zero building `scale` and
+    /// underflow on `width - 1`; width 1 produced a degenerate one-column
+    /// chart where `a + 1` clamped past the row. Both now degrade to the
+    /// empty-timeline message instead of panicking.
+    #[test]
+    fn degenerate_widths_return_empty_message() {
+        let records = vec![rec(0, 0, ProcKind::Systolic, 1, 0, 50)];
+        for width in [0, 1] {
+            let txt = render_records(&records, 100, 1.0, width);
+            assert!(txt.contains("timeline empty"), "width {width}: {txt}");
+        }
+        // And the RunReport entry point takes the same guard.
+        let mut r = run();
+        assert!(render(&r, 0).contains("timeline empty"));
+        assert!(render(&r, 1).contains("timeline empty"));
+        r.timeline.clear();
+        assert!(render(&r, 0).contains("timeline empty"));
+        // Width 2 is the smallest renderable chart.
+        assert!(render_records(&records, 100, 1.0, 2).contains("c0.SA0"));
+    }
+
+    /// Each (cluster, proc) pair becomes exactly one row, in sorted order.
+    #[test]
+    fn rows_group_per_cluster_and_proc() {
+        let records = vec![
+            rec(1, 0, ProcKind::Dma, 3, 10, 20),
+            rec(0, 1, ProcKind::Vector, 2, 0, 40),
+            rec(0, 0, ProcKind::Systolic, 1, 0, 30),
+            rec(0, 0, ProcKind::Systolic, 2, 30, 60),
+        ];
+        let txt = render_records(&records, 100, 1.0, 20);
+        let rows: Vec<&str> =
+            txt.lines().filter(|l| l.starts_with('c')).collect();
+        assert_eq!(rows.len(), 3, "4 records on 3 procs make 3 rows:\n{txt}");
+        assert!(rows[0].starts_with("c0.SA0"));
+        assert!(rows[1].starts_with("c0.VP1"));
+        assert!(rows[2].starts_with("c1.DM0"));
+        // Two requests share the c0.SA0 row with their own glyphs.
+        assert!(rows[0].contains('1') && rows[0].contains('2'), "{}", rows[0]);
+    }
+
+    /// Request glyphs cycle through the 62-character alphabet.
+    #[test]
+    fn request_chars_cycle_past_62_ids() {
+        assert_eq!(req_char(0), '0');
+        assert_eq!(req_char(9), '9');
+        assert_eq!(req_char(10), 'a');
+        assert_eq!(req_char(36), 'A');
+        assert_eq!(req_char(61), 'Z');
+        assert_eq!(req_char(62), '0', "id 62 wraps to the first glyph");
+        assert_eq!(req_char(63), '1');
+        assert_eq!(req_char(62 * 3 + 11), 'b');
+        // And a rendered row uses the wrapped glyph.
+        let records = vec![rec(0, 0, ProcKind::Systolic, 62, 0, 100)];
+        let txt = render_records(&records, 100, 1.0, 10);
+        assert!(txt.contains("|0000000000|"), "{txt}");
+    }
+
+    /// Cycles with nothing booked render as `.` gaps around the task cells.
+    #[test]
+    fn idle_gaps_render_as_dots() {
+        // One task in the middle 20% of a 100-cycle span, width 10.
+        let records = vec![rec(0, 0, ProcKind::Vector, 5, 40, 60)];
+        let txt = render_records(&records, 100, 1.0, 10);
+        let row = txt.lines().find(|l| l.starts_with("c0.VP0")).unwrap();
+        assert!(row.contains("|....55....|"), "{row}");
     }
 
     #[test]

@@ -234,6 +234,16 @@ impl ClusterState {
         }
     }
 
+    /// Forward every recorded timeline task to an observability sink as
+    /// this cluster's records. Read-only; the timeline is populated only
+    /// when `SimConfig::record_timeline` is set, which the serve engine
+    /// forces on while tracing.
+    pub fn export_tasks(&self, cluster: u32, sink: &mut dyn crate::obs::ObsSink) {
+        for rec in &self.timeline {
+            sink.task_record(cluster, rec);
+        }
+    }
+
     /// Admit a request: expand its model graph into a task queue (Fig 4(b)
     /// step 6–7: layer-wise tasks with estimation info into the queue and
     /// scheduling table).

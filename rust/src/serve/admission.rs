@@ -66,6 +66,7 @@
 use crate::balancer::Backlog;
 use crate::config::{ClusterConfig, HardwareConfig, SimConfig};
 use crate::model::ModelFamily;
+use crate::obs::{NoopSink, ObsSink, ReqEvent, ReqEventKind};
 use crate::sched::estimate::service_floor_cycles;
 use crate::serve::slo::SloPolicy;
 use crate::sim::Cycle;
@@ -294,9 +295,28 @@ impl AdmissionController {
         backlog: &mut Backlog,
         registry: &ModelRegistry,
     ) -> Option<WorkloadRequest> {
+        self.offer_traced(req, now, backlog, registry, &mut NoopSink)
+    }
+
+    /// [`Self::offer`] with the verdict mirrored into an observability
+    /// sink (§Contract: the sink only copies the decision the stage
+    /// already took — it can never change it).
+    pub fn offer_traced(
+        &mut self,
+        req: WorkloadRequest,
+        now: Cycle,
+        backlog: &mut Backlog,
+        registry: &ModelRegistry,
+        obs: &mut dyn ObsSink,
+    ) -> Option<WorkloadRequest> {
         let deferrals = self.deferral_counts.get(&req.id).copied().unwrap_or(0);
         match self.decide(&req, now, deferrals, backlog, registry) {
             Decision::Admit => {
+                obs.request_event(ReqEvent {
+                    request_id: req.id,
+                    cycle: now,
+                    kind: ReqEventKind::Admitted { deferred: deferrals > 0 },
+                });
                 let cost = match self.policy {
                     AdmissionPolicy::DeadlineFeasible => {
                         // Outstanding estimates are in proc-cycles; the wall-
@@ -319,6 +339,11 @@ impl AdmissionController {
             }
             Decision::Defer { until } => {
                 debug_assert!(until > now, "deferred release must be in the future");
+                obs.request_event(ReqEvent {
+                    request_id: req.id,
+                    cycle: now,
+                    kind: ReqEventKind::Deferred { until },
+                });
                 self.defer_events += 1;
                 *self.deferral_counts.entry(req.id).or_insert(0) += 1;
                 self.original_arrivals.entry(req.id).or_insert(req.arrival);
@@ -326,6 +351,11 @@ impl AdmissionController {
                 None
             }
             Decision::Shed(reason) => {
+                obs.request_event(ReqEvent {
+                    request_id: req.id,
+                    cycle: now,
+                    kind: ReqEventKind::Shed { reason },
+                });
                 let family = registry.graph(req.model_id).family;
                 self.shed.push(ShedRequest {
                     request_id: req.id,
@@ -351,6 +381,18 @@ impl AdmissionController {
         backlog: &mut Backlog,
         registry: &ModelRegistry,
     ) -> Vec<WorkloadRequest> {
+        self.poll_traced(now, backlog, registry, &mut NoopSink)
+    }
+
+    /// [`Self::poll`] with each re-offer's verdict mirrored into an
+    /// observability sink.
+    pub fn poll_traced(
+        &mut self,
+        now: Cycle,
+        backlog: &mut Backlog,
+        registry: &ModelRegistry,
+        obs: &mut dyn ObsSink,
+    ) -> Vec<WorkloadRequest> {
         let due: Vec<(Cycle, u64)> = self
             .deferred
             .range(..=(now, u64::MAX))
@@ -359,7 +401,7 @@ impl AdmissionController {
         due.into_iter()
             .filter_map(|key| {
                 let req = self.deferred.remove(&key).expect("due key vanished");
-                self.offer(req, now, backlog, registry)
+                self.offer_traced(req, now, backlog, registry, obs)
             })
             .collect()
     }

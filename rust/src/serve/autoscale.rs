@@ -122,6 +122,18 @@ pub enum PowerState {
     Warming { ready_at: Cycle },
 }
 
+impl PowerState {
+    /// Short label used in telemetry exports (metrics CSV).
+    pub fn name(&self) -> &'static str {
+        match self {
+            PowerState::Active => "active",
+            PowerState::Draining => "draining",
+            PowerState::Cold => "cold",
+            PowerState::Warming { .. } => "warming",
+        }
+    }
+}
+
 /// Direction of one scale decision.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ScaleDirection {
@@ -230,6 +242,34 @@ impl Autoscaler {
     /// the backlog snapshot. Called by the engine once per event-loop epoch,
     /// before dispatch, so a decision takes effect in the same epoch.
     pub fn observe(
+        &mut self,
+        now: Cycle,
+        backlog: &Backlog,
+        clusters: &[SvCluster],
+        registry: &ModelRegistry,
+    ) {
+        self.observe_traced(now, backlog, clusters, registry, &mut crate::obs::NoopSink)
+    }
+
+    /// [`Self::observe`] with any scale decision taken this epoch mirrored
+    /// into an observability sink (the decision also lands in [`Self::log`]
+    /// either way — the sink copy is what keeps recording read-only).
+    pub fn observe_traced(
+        &mut self,
+        now: Cycle,
+        backlog: &Backlog,
+        clusters: &[SvCluster],
+        registry: &ModelRegistry,
+        obs: &mut dyn crate::obs::ObsSink,
+    ) {
+        let before = self.log.len();
+        self.observe_inner(now, backlog, clusters, registry);
+        for ev in &self.log[before..] {
+            obs.scale_event(ev);
+        }
+    }
+
+    fn observe_inner(
         &mut self,
         now: Cycle,
         backlog: &Backlog,

@@ -43,6 +43,7 @@
 
 use crate::model::builder;
 use crate::model::ModelFamily;
+use crate::obs::{NoopSink, ObsSink, ReqEvent, ReqEventKind};
 use crate::serve::slo::SloPolicy;
 use crate::sim::Cycle;
 use crate::workload::{ModelRegistry, WorkloadRequest};
@@ -167,12 +168,30 @@ impl DynamicBatcher {
         now: Cycle,
         registry: &mut ModelRegistry,
     ) -> Vec<WorkloadRequest> {
+        self.offer_traced(req, now, registry, &mut NoopSink)
+    }
+
+    /// [`Self::offer`] with coalescing and batch-formation mirrored into an
+    /// observability sink (the pass-through path records nothing — with
+    /// batching off there is no coalescing story to tell).
+    pub fn offer_traced(
+        &mut self,
+        req: WorkloadRequest,
+        now: Cycle,
+        registry: &mut ModelRegistry,
+        obs: &mut dyn ObsSink,
+    ) -> Vec<WorkloadRequest> {
         debug_assert!(req.arrival <= now, "offered a request from the future");
         if !self.policy.enabled() {
             // Pass-through: exactly the unbatched engine, including a size
             // cap of 1 (a 1-batch is the request itself).
             return vec![req];
         }
+        obs.request_event(ReqEvent {
+            request_id: req.id,
+            cycle: now,
+            kind: ReqEventKind::Coalescing { model_id: req.model_id },
+        });
         let family = registry.graph(req.model_id).family;
         let q = self
             .queues
@@ -181,7 +200,7 @@ impl DynamicBatcher {
         q.members.push(req);
         if q.members.len() as u32 >= self.policy.cap() {
             let model_id = req.model_id;
-            vec![self.flush(model_id, now, registry)]
+            vec![self.flush(model_id, now, registry, obs)]
         } else {
             Vec::new()
         }
@@ -196,13 +215,25 @@ impl DynamicBatcher {
         drain: bool,
         registry: &mut ModelRegistry,
     ) -> Vec<WorkloadRequest> {
+        self.poll_traced(now, drain, registry, &mut NoopSink)
+    }
+
+    /// [`Self::poll`] with batch formation mirrored into an observability
+    /// sink.
+    pub fn poll_traced(
+        &mut self,
+        now: Cycle,
+        drain: bool,
+        registry: &mut ModelRegistry,
+        obs: &mut dyn ObsSink,
+    ) -> Vec<WorkloadRequest> {
         let due: Vec<u32> = self
             .queues
             .iter()
             .filter(|(_, q)| drain || now >= q.since.saturating_add(self.wait_budget(q.family)))
             .map(|(&model_id, _)| model_id)
             .collect();
-        due.into_iter().map(|m| self.flush(m, now, registry)).collect()
+        due.into_iter().map(|m| self.flush(m, now, registry, obs)).collect()
     }
 
     /// Emit one queue as a single load-balancer submission.
@@ -211,6 +242,7 @@ impl DynamicBatcher {
         model_id: u32,
         now: Cycle,
         registry: &mut ModelRegistry,
+        obs: &mut dyn ObsSink,
     ) -> WorkloadRequest {
         let q = self.queues.remove(&model_id).expect("flush of an absent queue");
         debug_assert!(!q.members.is_empty());
@@ -240,6 +272,13 @@ impl DynamicBatcher {
         let priority = q.members.iter().map(|m| m.priority).max().unwrap_or(0);
         let id = self.next_fused;
         self.next_fused += 1;
+        for m in &q.members {
+            obs.request_event(ReqEvent {
+                request_id: m.id,
+                cycle: now,
+                kind: ReqEventKind::BatchFormed { batch_id: id, size: batch },
+            });
+        }
         self.batches.insert(
             id,
             FusedBatch { base_model_id: model_id, fused_model_id, members: q.members },

@@ -62,10 +62,13 @@ pub use autoscale::{Autoscaler, AutoscalePolicy, PowerState, ScaleDirection, Sca
 pub use batch::{BatchPolicy, DynamicBatcher, FusedBatch};
 pub use slo::SloPolicy;
 
+pub use crate::obs::ObsPolicy;
+
 use crate::balancer::{DispatchPolicy, LoadBalancer};
 use crate::cluster::SvCluster;
 use crate::config::{HardwareConfig, SimConfig};
 use crate::model::ModelFamily;
+use crate::obs::{ClusterSample, EpochSample, NoopSink, ObsSink, ObsTrace, ReqEvent, ReqEventKind};
 use crate::sched::SchedulerKind;
 use crate::sim::power::EnergyMeter;
 use crate::sim::Cycle;
@@ -86,6 +89,10 @@ pub struct ServeConfig {
     pub admission: AdmissionPolicy,
     /// Backlog-driven scaling of the active cluster count.
     pub autoscale: AutoscalePolicy,
+    /// Request tracing + epoch metrics recording ([`crate::obs`]). Strictly
+    /// read-only: decisions and the [`ServeReport`] are byte-identical with
+    /// recording on or off (pinned by `rust/tests/obs.rs`).
+    pub obs: ObsPolicy,
 }
 
 impl Default for ServeConfig {
@@ -96,6 +103,7 @@ impl Default for ServeConfig {
             batch: BatchPolicy::Off,
             admission: AdmissionPolicy::Open,
             autoscale: AutoscalePolicy::Off,
+            obs: ObsPolicy::Off,
         }
     }
 }
@@ -454,12 +462,57 @@ fn scored(
     }
 }
 
+/// Snapshot the fleet for the epoch time series — the same read-only
+/// signals the engine's own control stages consume ([`LoadBalancer::status`]
+/// rows, autoscaler power states, batcher/balancer/admission queue sizes,
+/// cumulative dynamic energy), folded into one [`EpochSample`].
+#[allow(clippy::too_many_arguments)]
+fn fleet_sample(
+    epoch: u64,
+    now: Cycle,
+    clusters: &[SvCluster],
+    registry: &ModelRegistry,
+    lb: &LoadBalancer,
+    batcher: &DynamicBatcher,
+    admission: &AdmissionController,
+    autoscaler: &Autoscaler,
+) -> EpochSample {
+    let rows = LoadBalancer::status(clusters, registry);
+    let states = autoscaler.states();
+    EpochSample {
+        epoch,
+        cycle: now,
+        queued_requests: rows.iter().map(|r| r.queued_requests).sum(),
+        inflight_tasks: rows.iter().map(|r| r.inflight_tasks).sum(),
+        total_outstanding: rows.iter().map(|r| r.outstanding_cycles).sum(),
+        min_outstanding: rows.iter().map(|r| r.outstanding_cycles).min().unwrap_or(0),
+        batcher_pending: batcher.pending(),
+        balancer_queued: lb.queued(),
+        deferred_pending: admission.pending(),
+        active_clusters: autoscaler.capacity(),
+        dynamic_energy_j: clusters.iter().map(|c| c.state.meter.total_joules()).sum(),
+        clusters: rows
+            .iter()
+            .map(|r| ClusterSample {
+                queued_requests: r.queued_requests,
+                inflight_tasks: r.inflight_tasks,
+                outstanding_cycles: r.outstanding_cycles,
+                power: states[r.cluster as usize],
+                makespan: r.makespan,
+            })
+            .collect(),
+    }
+}
+
 /// The online serving engine: balancer + clusters + event clock.
 pub struct ServeEngine {
     pub hw: HardwareConfig,
     pub sched: SchedulerKind,
     pub sim: SimConfig,
     pub cfg: ServeConfig,
+    /// The trace recorded by the last [`Self::run`] (`None` until a run
+    /// completes with [`ObsPolicy`] enabled).
+    pub obs: Option<ObsTrace>,
 }
 
 impl ServeEngine {
@@ -469,7 +522,7 @@ impl ServeEngine {
         sim: SimConfig,
         cfg: ServeConfig,
     ) -> ServeEngine {
-        ServeEngine { hw, sched, sim, cfg }
+        ServeEngine { hw, sched, sim, cfg, obs: None }
     }
 
     pub fn with_policy(mut self, policy: DispatchPolicy) -> ServeEngine {
@@ -492,10 +545,27 @@ impl ServeEngine {
         self
     }
 
+    pub fn with_obs(mut self, obs: ObsPolicy) -> ServeEngine {
+        self.cfg.obs = obs;
+        self
+    }
+
     /// Serve a workload trace online and score it against the SLO policy.
+    /// With [`ObsPolicy`] enabled the run additionally records a request
+    /// trace + epoch time series into [`Self::obs`] — recording is strictly
+    /// read-only, so the report is byte-identical either way.
     pub fn run(&mut self, wl: &Workload) -> ServeReport {
+        self.obs = None;
+        let obs_on = self.cfg.obs.enabled();
+        // Tracing needs the per-task timeline. Forcing it on is report-pure:
+        // `record_timeline` only appends records, it steers no decision
+        // (pinned by rust/tests/obs.rs).
+        let sim = if obs_on { self.sim.clone().with_timeline() } else { self.sim.clone() };
+        let mut recorder = obs_on
+            .then(|| ObsTrace::new(self.cfg.obs, self.hw.clock_ghz, self.hw.clusters));
+        let mut noop = NoopSink;
         let mut clusters: Vec<SvCluster> = (0..self.hw.clusters)
-            .map(|i| SvCluster::new(i, &self.hw, self.sched, self.sim.clone()))
+            .map(|i| SvCluster::new(i, &self.hw, self.sched, sim.clone()))
             .collect();
         let mut lb = LoadBalancer::new(self.cfg.policy);
         // The run's registry starts as the workload's and grows fused
@@ -520,6 +590,13 @@ impl ServeEngine {
         let mut epochs = 0u64;
 
         loop {
+            // The per-epoch recorder view: the real trace when observing,
+            // a no-op sink (one virtual call per hook, no allocation)
+            // otherwise.
+            let sink: &mut dyn ObsSink = match recorder.as_mut() {
+                Some(r) => r,
+                None => &mut noop,
+            };
             // 1. Release: requests whose arrival cycle has come enter the
             //    admission stage and then the batcher's coalescing queues
             //    (both pass-throughs when admission is `Open` / batching is
@@ -535,17 +612,33 @@ impl ServeEngine {
                 // so count them toward the queue depth here.
                 let mut backlog = LoadBalancer::backlog(&clusters, &registry);
                 backlog.queued_requests += batcher.pending();
-                let mut admitted = admission.poll(now, &mut backlog, &registry);
+                let mut admitted = admission.poll_traced(now, &mut backlog, &registry, sink);
                 while next < n && trace[next].arrival <= now {
-                    admitted.extend(admission.offer(trace[next], now, &mut backlog, &registry));
+                    sink.request_event(ReqEvent {
+                        request_id: trace[next].id,
+                        cycle: trace[next].arrival,
+                        kind: ReqEventKind::Arrival,
+                    });
+                    admitted.extend(admission.offer_traced(
+                        trace[next],
+                        now,
+                        &mut backlog,
+                        &registry,
+                        sink,
+                    ));
                     next += 1;
                 }
                 for r in admitted {
-                    emitted.extend(batcher.offer(r, now, &mut registry));
+                    emitted.extend(batcher.offer_traced(r, now, &mut registry, sink));
                 }
             } else {
                 while next < n && trace[next].arrival <= now {
-                    emitted.extend(batcher.offer(trace[next], now, &mut registry));
+                    sink.request_event(ReqEvent {
+                        request_id: trace[next].id,
+                        cycle: trace[next].arrival,
+                        kind: ReqEventKind::Arrival,
+                    });
+                    emitted.extend(batcher.offer_traced(trace[next], now, &mut registry, sink));
                     next += 1;
                 }
             }
@@ -553,7 +646,7 @@ impl ServeEngine {
             //     deferred request can still be admitted, no future
             //     same-model arrival can grow a batch, so drain.
             let trace_done = next >= n && admission.pending() == 0;
-            emitted.extend(batcher.poll(now, trace_done, &mut registry));
+            emitted.extend(batcher.poll_traced(now, trace_done, &mut registry, sink));
             for e in emitted {
                 // Fused graphs enter the model table as they are minted.
                 if !lb.model_table.contains_key(&e.model_id) {
@@ -578,27 +671,32 @@ impl ServeEngine {
                 // as the admission snapshot above) so the controller cannot
                 // scale down into a burst it has not dispatched yet.
                 backlog.queued_requests += batcher.pending() + lb.queued();
-                autoscaler.observe(now, &backlog, &clusters, &registry);
+                autoscaler.observe_traced(now, &backlog, &clusters, &registry, sink);
             }
 
             // 2. Online dispatch against live cluster status, restricted to
-            //    powered, non-draining clusters when autoscaling.
-            if autoscaler.enabled() {
-                lb.dispatch_ready_eligible(
-                    &mut clusters,
-                    &registry,
-                    now,
-                    Some(autoscaler.dispatch_mask()),
-                );
-            } else {
-                lb.dispatch_ready(&mut clusters, &registry, now);
-            }
+            //    powered, non-draining clusters when autoscaling (`None`
+            //    mask is exactly `dispatch_ready`, bit for bit).
+            let mask = autoscaler.enabled().then(|| autoscaler.dispatch_mask());
+            lb.dispatch_ready_eligible_traced(&mut clusters, &registry, now, mask, sink);
 
             // 3. Advance every cluster's scheduler to the horizon.
             for c in clusters.iter_mut() {
                 c.run_until(&registry, now);
             }
             epochs += 1;
+            if let Some(rec) = recorder.as_mut() {
+                rec.epoch_sample(fleet_sample(
+                    epochs - 1,
+                    now,
+                    &clusters,
+                    &registry,
+                    &lb,
+                    &batcher,
+                    &admission,
+                    &autoscaler,
+                ));
+            }
 
             // 4. Jump the clock to the next event: the next trace arrival,
             //    the earliest deferred re-release, the earliest batch-queue
@@ -639,7 +737,19 @@ impl ServeEngine {
             }
         }
 
-        self.aggregate(wl, &registry, &lb, &batcher, &admission, &autoscaler, clusters, epochs)
+        let report = self
+            .aggregate(wl, &registry, &lb, &batcher, &admission, &autoscaler, &clusters, epochs);
+        if let Some(mut rec) = recorder {
+            // Harvest the per-task timelines and close the request spans
+            // with their completion cycles — all read-only over state the
+            // run produced anyway.
+            for c in &clusters {
+                c.state.export_tasks(c.id, &mut rec);
+            }
+            rec.finish(&report);
+            self.obs = Some(rec);
+        }
+        report
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -651,7 +761,7 @@ impl ServeEngine {
         batcher: &DynamicBatcher,
         admission: &AdmissionController,
         autoscaler: &Autoscaler,
-        clusters: Vec<SvCluster>,
+        clusters: &[SvCluster],
         epochs: u64,
     ) -> ServeReport {
         let makespan = clusters.iter().map(|c| c.state.makespan).max().unwrap_or(0);
@@ -689,7 +799,7 @@ impl ServeEngine {
         let mut decisions = 0u64;
         let mut busy = 0u64;
         let mut proc_count = 0u64;
-        for c in &clusters {
+        for c in clusters {
             let st = &c.state;
             decisions += st.decisions;
             let (c_busy, c_count) = st.compute_busy_and_count();

@@ -32,6 +32,7 @@ fn engine(admission: AdmissionPolicy, slo: SloPolicy) -> ServeEngine {
             batch: BatchPolicy::Off,
             admission,
             autoscale: AutoscalePolicy::Off,
+            ..Default::default()
         },
     )
 }
@@ -144,6 +145,7 @@ fn admission_grid_is_deterministic_and_conserves_requests() {
                             batch,
                             admission,
                             autoscale: AutoscalePolicy::Off,
+                            ..Default::default()
                         },
                     )
                     .run(&wl)

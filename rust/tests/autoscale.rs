@@ -33,6 +33,7 @@ fn engine(clusters: u32, autoscale: AutoscalePolicy) -> ServeEngine {
             batch: BatchPolicy::Off,
             admission: AdmissionPolicy::Open,
             autoscale,
+            ..Default::default()
         },
     )
 }

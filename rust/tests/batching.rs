@@ -34,6 +34,7 @@ fn engine_with(batch: BatchPolicy) -> ServeEngine {
             batch,
             admission: AdmissionPolicy::Open,
             autoscale: AutoscalePolicy::Off,
+            ..Default::default()
         },
     )
 }
@@ -220,6 +221,7 @@ fn serve_grid_is_deterministic() {
                             batch,
                             admission: AdmissionPolicy::Open,
                             autoscale: AutoscalePolicy::Off,
+                            ..Default::default()
                         },
                     )
                     .run(&wl)
@@ -350,6 +352,7 @@ fn golden_metric_reports() -> Vec<(String, hsv::serve::ServeReport)> {
                     dwell: 100_000,
                     warmup: 25_000,
                 },
+                ..Default::default()
             },
         );
         let rep = eng.run(&wl);

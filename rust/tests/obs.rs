@@ -1,0 +1,345 @@
+//! Observability integration tests: the recording-never-perturbs contract
+//! (byte-identical reports and decision streams with tracing off and on,
+//! across the arrival-model × scheduler grid and the full serve stack),
+//! span causality invariants, the bounded epoch reservoir, and structural
+//! validation of the Chrome trace-event export through `util::json`.
+
+use hsv::balancer::DispatchPolicy;
+use hsv::config::{HardwareConfig, SimConfig};
+use hsv::obs::{chrome_trace, metrics_csv, summary, ObsPolicy, ObsTrace};
+use hsv::sched::SchedulerKind;
+use hsv::serve::{
+    AdmissionPolicy, AutoscalePolicy, BatchPolicy, ServeConfig, ServeEngine, ServeReport,
+    SloPolicy,
+};
+use hsv::util::json::Json;
+use hsv::workload::{ArrivalModel, Workload, WorkloadSpec};
+
+/// The four online traffic models the serving tests exercise.
+fn arrival_models() -> Vec<(&'static str, ArrivalModel)> {
+    vec![
+        ("poisson", ArrivalModel::Poisson),
+        ("diurnal", ArrivalModel::diurnal(400_000.0)),
+        ("bursty", ArrivalModel::bursty(60_000.0, 6_000.0)),
+        ("ramp", ArrivalModel::ramp(2.0, 0.25)),
+    ]
+}
+
+/// The full-stack serve configuration: SLO-aware batching, feasibility
+/// admission, and the threshold autoscaler all on.
+fn full_stack(obs: ObsPolicy) -> ServeConfig {
+    ServeConfig {
+        policy: DispatchPolicy::LeastLoaded,
+        slo: SloPolicy::default(),
+        batch: BatchPolicy::SloAware { max_batch: 4 },
+        admission: AdmissionPolicy::DeadlineFeasible,
+        autoscale: AutoscalePolicy::Threshold {
+            up: 4,
+            down: 1,
+            min_active: 1,
+            dwell: 100_000,
+            warmup: 25_000,
+        },
+        obs,
+    }
+}
+
+fn run(hw: HardwareConfig, sched: SchedulerKind, cfg: ServeConfig, wl: &Workload) -> ServeReport {
+    ServeEngine::new(hw, sched, SimConfig::default(), cfg).run(wl)
+}
+
+/// Run the same workload with tracing off and on and pin byte-identity:
+/// the serialized report, the decision count, and the served / shed
+/// streams must not differ by a single byte.
+fn assert_byte_identical(
+    label: &str,
+    hw: HardwareConfig,
+    sched: SchedulerKind,
+    mut cfg: ServeConfig,
+    wl: &Workload,
+) -> ServeReport {
+    cfg.obs = ObsPolicy::Off;
+    let off = run(hw.clone(), sched, cfg, wl);
+    cfg.obs = ObsPolicy::on();
+    let on = run(hw, sched, cfg, wl);
+    assert_eq!(
+        off.to_json().to_string(),
+        on.to_json().to_string(),
+        "{label}: tracing changed the serialized report"
+    );
+    assert_eq!(off.decisions, on.decisions, "{label}: decision stream diverged");
+    assert_eq!(off.epochs, on.epochs, "{label}: epoch count diverged");
+    assert_eq!(off.served.len(), on.served.len(), "{label}: served count diverged");
+    for (a, b) in off.served.iter().zip(&on.served) {
+        assert_eq!(
+            (a.request_id, a.cluster, a.batch, a.dispatched_at, a.end, a.met),
+            (b.request_id, b.cluster, b.batch, b.dispatched_at, b.end, b.met),
+            "{label}: served record diverged"
+        );
+    }
+    assert_eq!(off.shed.len(), on.shed.len(), "{label}: shed count diverged");
+    for (a, b) in off.shed.iter().zip(&on.shed) {
+        assert_eq!(
+            (a.request_id, a.decided_at, a.reason),
+            (b.request_id, b.decided_at, b.reason),
+            "{label}: shed record diverged"
+        );
+    }
+    on
+}
+
+/// The §Contract grid: every arrival model × both schedulers, with the
+/// plain engine (no batching/admission/autoscale) — tracing must be
+/// invisible in the output.
+#[test]
+fn tracing_is_byte_invisible_across_arrival_and_scheduler_grid() {
+    for (mname, model) in arrival_models() {
+        for sched in [SchedulerKind::Has, SchedulerKind::RoundRobin] {
+            let wl = WorkloadSpec::ratio(0.5, 24, 31).with_arrivals(model).generate();
+            assert_byte_identical(
+                &format!("{mname}/{sched:?}"),
+                HardwareConfig::small().with_clusters(2),
+                sched,
+                ServeConfig {
+                    policy: DispatchPolicy::LeastLoaded,
+                    slo: SloPolicy::default(),
+                    batch: BatchPolicy::Off,
+                    admission: AdmissionPolicy::Open,
+                    autoscale: AutoscalePolicy::Off,
+                    obs: ObsPolicy::Off,
+                },
+                &wl,
+            );
+        }
+    }
+}
+
+/// A saturated 4-cluster run with the whole stack on: byte-identity holds,
+/// and the trace carries a complete story — one span with tasks per served
+/// request and one retained epoch sample per engine epoch.
+#[test]
+fn saturated_full_stack_trace_is_complete_and_invisible() {
+    let wl = WorkloadSpec::ratio(0.5, 48, 23)
+        .with_mean_interarrival(6_000.0)
+        .with_arrivals(ArrivalModel::bursty(6_000.0, 1_500.0))
+        .generate();
+    let hw = HardwareConfig::small().with_clusters(4);
+    let report = assert_byte_identical(
+        "saturated",
+        hw.clone(),
+        SchedulerKind::Has,
+        full_stack(ObsPolicy::Off),
+        &wl,
+    );
+    assert!(!report.served.is_empty(), "saturated run served nothing");
+
+    let mut engine =
+        ServeEngine::new(hw, SchedulerKind::Has, SimConfig::default(), full_stack(ObsPolicy::on()));
+    let rep = engine.run(&wl);
+    let trace = engine.obs.as_ref().expect("tracing was on, the engine must keep the trace");
+    assert_eq!(trace.makespan(), rep.makespan);
+
+    // Every request that arrived has an Arrival event; every served request
+    // has a full span with booked tasks; every shed request terminates at
+    // its shed verdict with no execution.
+    assert_eq!(trace.request_ids().len(), wl.requests.len());
+    for r in &rep.served {
+        let span = trace.span_of(r.request_id);
+        assert_eq!(span.arrival, Some(r.arrival), "request {}", r.request_id);
+        assert_eq!(span.completed, Some((r.end, r.cluster)), "request {}", r.request_id);
+        assert_eq!(span.batch, r.batch, "request {}", r.request_id);
+        let (disp, _) = span.dispatched.expect("served requests dispatch");
+        assert_eq!(disp, r.dispatched_at, "request {}", r.request_id);
+        assert!(
+            !trace.tasks_of(r.request_id).is_empty(),
+            "served request {} booked no tasks",
+            r.request_id
+        );
+    }
+    for s in &rep.shed {
+        let span = trace.span_of(s.request_id);
+        assert_eq!(span.shed.map(|(c, _)| c), Some(s.decided_at));
+        assert!(span.dispatched.is_none(), "shed request {} was dispatched", s.request_id);
+        assert!(span.completed.is_none(), "shed request {} completed", s.request_id);
+        assert!(trace.tasks_of(s.request_id).is_empty(), "shed request {} ran", s.request_id);
+    }
+
+    // One epoch sample per engine epoch, all retained (the run is far below
+    // the default reservoir capacity), epochs numbered densely from 0.
+    assert_eq!(trace.samples_seen(), rep.epochs);
+    assert_eq!(trace.samples().len() as u64, rep.epochs);
+    for (i, s) in trace.samples().iter().enumerate() {
+        assert_eq!(s.epoch, i as u64);
+        assert_eq!(s.clusters.len(), 4);
+    }
+    // The autoscaler's decision stream is mirrored verbatim.
+    assert_eq!(trace.scale_log().len(), rep.scale_log.len());
+
+    // The exporters accept the trace: the CSV has one row per retained
+    // sample and the summary names the run's spans.
+    let csv = metrics_csv(trace);
+    assert_eq!(csv.len(), trace.samples().len());
+    let header = csv.render().lines().next().unwrap().to_string();
+    assert!(header.contains("c3_power"), "per-cluster columns missing: {header}");
+    let text = summary(trace, 80);
+    assert!(text.starts_with("obs: "), "summary missing the count header:\n{text}");
+    assert!(text.contains("dispatch"), "summary missing dispatch count:\n{text}");
+}
+
+/// Causality over every span the full-stack trace produced: arrival ≤
+/// admission ≤ dispatch ≤ first task start ≤ last task end ≤ completion.
+#[test]
+fn spans_are_causally_ordered() {
+    let wl = WorkloadSpec::ratio(0.5, 32, 5)
+        .with_mean_interarrival(12_000.0)
+        .with_arrivals(ArrivalModel::ramp(1.5, 0.3))
+        .generate();
+    let mut engine = ServeEngine::new(
+        HardwareConfig::small().with_clusters(2),
+        SchedulerKind::Has,
+        SimConfig::default(),
+        full_stack(ObsPolicy::on()),
+    );
+    let rep = engine.run(&wl);
+    let trace = engine.obs.as_ref().unwrap();
+    assert!(!rep.served.is_empty());
+    for id in trace.request_ids() {
+        let span = trace.span_of(id);
+        let arrival = span.arrival.expect("every request arrives");
+        if let Some((at, _)) = span.shed {
+            assert!(arrival <= at, "request {id}: shed before arrival");
+            continue;
+        }
+        if let Some(at) = span.admitted_at {
+            assert!(arrival <= at, "request {id}: admitted before arrival");
+        }
+        if let Some(at) = span.coalesced_at {
+            assert!(arrival <= at, "request {id}: coalesced before arrival");
+        }
+        let (disp, _) = match span.dispatched {
+            Some(d) => d,
+            // Trace tail: a request can still be parked when the run drains.
+            None => continue,
+        };
+        assert!(arrival <= disp, "request {id}: dispatched into the past");
+        if let Some(at) = span.admitted_at {
+            assert!(at <= disp, "request {id}: dispatched before its admit verdict");
+        }
+        let start = span.first_task_start.expect("dispatched requests book tasks");
+        let end = span.last_task_end.unwrap();
+        assert!(disp <= start, "request {id}: task booked before dispatch");
+        assert!(start <= end, "request {id}: task span inverted");
+        if let Some((done, _)) = span.completed {
+            assert!(end <= done, "request {id}: completed before its last task end");
+        }
+    }
+}
+
+/// The epoch reservoir honours a tiny capacity over a long run: retained
+/// samples stay bounded, uniformly strided, and anchored at epoch 0, while
+/// `samples_seen` still counts every epoch.
+#[test]
+fn epoch_reservoir_stays_bounded_under_tiny_capacity() {
+    let wl = WorkloadSpec::ratio(0.5, 64, 9)
+        .with_arrivals(ArrivalModel::Poisson)
+        .generate();
+    let mut engine = ServeEngine::new(
+        HardwareConfig::small().with_clusters(2),
+        SchedulerKind::Has,
+        SimConfig::default(),
+        ServeConfig {
+            policy: DispatchPolicy::LeastLoaded,
+            slo: SloPolicy::default(),
+            batch: BatchPolicy::Off,
+            admission: AdmissionPolicy::Open,
+            autoscale: AutoscalePolicy::Off,
+            obs: ObsPolicy::Trace { metrics_capacity: 8 },
+        },
+    );
+    let rep = engine.run(&wl);
+    let trace = engine.obs.as_ref().unwrap();
+    assert!(rep.epochs > 8, "run too short to exercise decimation: {} epochs", rep.epochs);
+    assert_eq!(trace.samples_seen(), rep.epochs);
+    let kept = trace.samples();
+    assert!(kept.len() <= 8, "capacity exceeded: {}", kept.len());
+    assert!(kept.len() >= 4, "decimation dropped below half capacity");
+    assert_eq!(kept[0].epoch, 0, "the first epoch is never dropped");
+    let stride = kept[1].epoch - kept[0].epoch;
+    for w in kept.windows(2) {
+        assert_eq!(w[1].epoch - w[0].epoch, stride, "retained epochs are not uniform");
+    }
+}
+
+/// Structural validation of the Chrome trace-event document, round-tripped
+/// through the in-tree JSON parser: the envelope, per-task complete events,
+/// per-request async tracks, and per-sample counters all hold shape.
+#[test]
+fn chrome_trace_export_is_structurally_valid() {
+    let wl = WorkloadSpec::ratio(0.5, 24, 41)
+        .with_mean_interarrival(8_000.0)
+        .with_arrivals(ArrivalModel::bursty(8_000.0, 2_000.0))
+        .generate();
+    let mut engine = ServeEngine::new(
+        HardwareConfig::small().with_clusters(4),
+        SchedulerKind::Has,
+        SimConfig::default(),
+        full_stack(ObsPolicy::on()),
+    );
+    let rep = engine.run(&wl);
+    let trace: &ObsTrace = engine.obs.as_ref().unwrap();
+    let doc = chrome_trace(trace);
+
+    // Round-trip: the serialized document re-parses, and the reparse
+    // carries the same event count.
+    let text = doc.to_string();
+    let parsed = Json::parse(&text).expect("chrome trace JSON must re-parse");
+    let events = parsed
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .expect("traceEvents array");
+    assert_eq!(parsed.get("displayTimeUnit").and_then(Json::as_str), Some("ms"));
+    assert_eq!(events.len(), doc.get("traceEvents").and_then(Json::as_arr).unwrap().len());
+
+    let ph = |e: &Json| e.get("ph").and_then(Json::as_str).unwrap_or("").to_string();
+    let mut tasks = 0usize;
+    let mut begins = 0usize;
+    let mut ends = 0usize;
+    let mut counters = 0usize;
+    for e in events {
+        match ph(e).as_str() {
+            "X" => {
+                tasks += 1;
+                for key in ["name", "ts", "dur", "pid", "tid"] {
+                    assert!(e.get(key).is_some(), "task event missing {key}: {}", e.to_string());
+                }
+                assert!(e.get("ts").and_then(Json::as_f64).unwrap() >= 0.0);
+                assert!(e.get("dur").and_then(Json::as_f64).unwrap() >= 0.0);
+            }
+            "b" => {
+                begins += 1;
+                // Async ids are strings: fused ids exceed exact-f64 range.
+                assert!(e.get("id").and_then(Json::as_str).is_some(), "async id must be a string");
+            }
+            "e" => ends += 1,
+            "n" | "i" | "C" | "M" => {
+                if ph(e) == "C" {
+                    counters += 1;
+                    assert!(e.get("args").is_some(), "counter without args");
+                }
+            }
+            other => panic!("unexpected phase {other:?} in {}", e.to_string()),
+        }
+    }
+    assert_eq!(tasks, trace.tasks().len(), "one X event per booked task");
+    assert_eq!(begins, ends, "unbalanced async begin/end events");
+    assert!(
+        begins >= rep.served.len(),
+        "fewer async request tracks ({begins}) than served requests ({})",
+        rep.served.len()
+    );
+    assert_eq!(
+        counters,
+        4 * trace.samples().len(),
+        "four counter series per retained epoch sample"
+    );
+}

@@ -31,6 +31,7 @@ fn engine(hw: HardwareConfig, sched: SchedulerKind, policy: DispatchPolicy) -> S
             batch: BatchPolicy::Off,
             admission: AdmissionPolicy::Open,
             autoscale: AutoscalePolicy::Off,
+            ..Default::default()
         },
     )
 }
