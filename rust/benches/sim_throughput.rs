@@ -1,17 +1,21 @@
 //! §Perf — simulator-throughput benchmark: simulated-requests/sec,
 //! scheduler decisions/sec, and wall time for offline (`Coordinator::run`)
-//! and online serve runs (saturated + diurnal) across 1/4/8 clusters, plus
-//! a self-relative A/B check: the incremental engine vs the
-//! `SimConfig::naive_recompute` baseline (which restores the from-scratch
-//! load-signal walks and disables the HAS candidate memo — the decision
-//! streams are bit-identical, see `rust/tests/perf_equiv.rs`, so the ratio
-//! is pure overhead).
+//! and online serve runs (saturated + diurnal) across 1/4/8 clusters and
+//! fleet-scale saturated serve at 16/64/256 clusters, plus two
+//! self-relative A/B checks with bit-identical decision streams (see
+//! `rust/tests/perf_equiv.rs`):
+//!
+//! - the incremental engine vs the `SimConfig::naive_recompute` baseline
+//!   (which restores the from-scratch load-signal walks and disables the
+//!   HAS candidate memo), so the ratio is pure overhead — gated ≥ 3× on
+//!   the 8-cluster saturated case in every mode;
+//! - the fork-join cluster advance (`SimConfig::parallel`) vs the
+//!   sequential engine on the 64-cluster saturated case — gated ≥ 2× in
+//!   full mode, report-only in smoke/default (CI runners are 2-core).
 //!
 //! Output: one `BENCH {json}` line on stdout plus `BENCH_sim_throughput.json`
 //! in the working directory. Modes: `HSV_BENCH_SMOKE=1` (CI per-push),
-//! default (local), `HSV_BENCH_FULL=1` (paper scale). The acceptance gate:
-//! the incremental engine beats the naive baseline by ≥ 3× on the
-//! 8-cluster saturated serve case.
+//! default (local), `HSV_BENCH_FULL=1` (paper scale).
 
 #[path = "common/mod.rs"]
 mod common;
@@ -37,15 +41,20 @@ struct Sizes {
     /// engine's overhead grows quadratic-ish with trace length, so the
     /// ratio needs a long enough trace to be meaningful).
     ab: usize,
+    /// Requests for the fleet-scale (16/64/256-cluster) saturated cases and
+    /// the 64-cluster parallel-vs-sequential A/B. Full mode is sized so the
+    /// per-epoch cluster advance dominates and the fork-join speedup is
+    /// meaningful; smoke keeps the same code path warm on CI.
+    fleet: usize,
 }
 
 fn sizes() -> (&'static str, Sizes) {
     if smoke_mode() {
-        ("smoke", Sizes { offline: 64, saturated: 96, diurnal: 48, ab: 400 })
+        ("smoke", Sizes { offline: 64, saturated: 96, diurnal: 48, ab: 400, fleet: 192 })
     } else if common::full_mode() {
-        ("full", Sizes { offline: 384, saturated: 384, diurnal: 192, ab: 1200 })
+        ("full", Sizes { offline: 384, saturated: 384, diurnal: 192, ab: 1200, fleet: 2048 })
     } else {
-        ("default", Sizes { offline: 192, saturated: 256, diurnal: 96, ab: 640 })
+        ("default", Sizes { offline: 192, saturated: 256, diurnal: 96, ab: 640, fleet: 512 })
     }
 }
 
@@ -55,6 +64,15 @@ fn sizes() -> (&'static str, Sizes) {
 /// at-0 trace would dispatch once and skip the hot path entirely).
 fn saturated_wl(n: usize) -> Workload {
     WorkloadSpec::ratio(0.5, n, 11).with_mean_interarrival(4_000.0).generate()
+}
+
+/// Fleet-scale saturated traffic: the arrival rate scales with the cluster
+/// count so every fleet size sees the same per-cluster load as the
+/// 8-cluster case (total mean gap = 32 000 / clusters cycles).
+fn fleet_wl(n: usize, clusters: u32) -> Workload {
+    WorkloadSpec::ratio(0.5, n, 11)
+        .with_mean_interarrival(32_000.0 / clusters as f64)
+        .generate()
 }
 
 fn diurnal_wl(n: usize) -> Workload {
@@ -101,9 +119,9 @@ fn measure_offline(wl: &Workload, clusters: u32, naive: bool) -> Measured {
     }
 }
 
-fn measure_serve(wl: &Workload, clusters: u32, naive: bool) -> Measured {
+fn measure_serve(wl: &Workload, clusters: u32, sim: SimConfig) -> Measured {
     let hw = HardwareConfig::small().with_clusters(clusters);
-    let mut eng = ServeEngine::new(hw, SchedulerKind::Has, sim(naive), serve_cfg());
+    let mut eng = ServeEngine::new(hw, SchedulerKind::Has, sim, serve_cfg());
     let t0 = Instant::now();
     let rep = eng.run(wl);
     Measured {
@@ -138,7 +156,10 @@ fn row(case: &str, clusters: u32, m: &Measured) -> Json {
 fn main() {
     let (mode, sz) = sizes();
     println!("=== sim_throughput ===");
-    println!("simulated-requests/sec + decisions/sec, offline and serve, 1/4/8 clusters");
+    println!(
+        "simulated-requests/sec + decisions/sec, offline and serve, \
+         1/4/8 clusters + 16/64/256-cluster fleets"
+    );
     println!("mode: {mode} (HSV_BENCH_SMOKE=1 for CI smoke, HSV_BENCH_FULL=1 for paper scale)");
     println!();
 
@@ -148,9 +169,24 @@ fn main() {
         let wl = saturated_wl(sz.offline);
         rows.push(row("offline", clusters, &measure_offline(&wl, clusters, false)));
         let wl = saturated_wl(sz.saturated);
-        rows.push(row("serve_saturated", clusters, &measure_serve(&wl, clusters, false)));
+        rows.push(row("serve_saturated", clusters, &measure_serve(&wl, clusters, sim(false))));
         let wl = diurnal_wl(sz.diurnal);
-        rows.push(row("serve_diurnal", clusters, &measure_serve(&wl, clusters, false)));
+        rows.push(row("serve_diurnal", clusters, &measure_serve(&wl, clusters, sim(false))));
+    }
+
+    // --- Fleet-scale saturated serve: the ROADMAP's 64–256-cluster target,
+    // sequential and fork-join (`SimConfig::parallel`) side by side. All
+    // modes run these (smoke included, so CI exercises the 64- and
+    // 256-cluster paths on every push); only full mode gates the speedup.
+    println!();
+    for clusters in [16u32, 64, 256] {
+        let wl = fleet_wl(sz.fleet, clusters);
+        rows.push(row("serve_fleet", clusters, &measure_serve(&wl, clusters, sim(false))));
+        rows.push(row(
+            "serve_fleet_par",
+            clusters,
+            &measure_serve(&wl, clusters, SimConfig::default().with_parallel()),
+        ));
     }
 
     // --- Observability A/B (report-only) + sample artifacts --------------
@@ -161,7 +197,7 @@ fn main() {
     // Perfetto; BENCH_obs_metrics.csv is the epoch time series).
     println!();
     let owl_obs = saturated_wl(sz.saturated);
-    let obs_off = measure_serve(&owl_obs, 4, false);
+    let obs_off = measure_serve(&owl_obs, 4, sim(false));
     let mut obs_cfg = serve_cfg();
     obs_cfg.obs = ObsPolicy::on();
     let hw = HardwareConfig::small().with_clusters(4);
@@ -226,10 +262,10 @@ fn main() {
     let wl = saturated_wl(sz.ab);
     // Two incremental runs, best-of: a noise spike on the fast leg is the
     // only way the gate can flake, so give it one retry's worth of slack.
-    let fast_a = measure_serve(&wl, 8, false);
-    let fast_b = measure_serve(&wl, 8, false);
+    let fast_a = measure_serve(&wl, 8, sim(false));
+    let fast_b = measure_serve(&wl, 8, sim(false));
     let fast = if fast_b.wall_s < fast_a.wall_s { fast_b } else { fast_a };
-    let naive = measure_serve(&wl, 8, true);
+    let naive = measure_serve(&wl, 8, sim(true));
     assert_eq!(fast.makespan, naive.makespan, "A/B toggle changed the simulation");
     assert_eq!(fast.decisions, naive.decisions, "A/B toggle changed the decision count");
     let speedup = naive.wall_s / fast.wall_s.max(1e-9);
@@ -252,13 +288,53 @@ fn main() {
         .set("required_speedup", 3.0)
         .set("pass", pass);
 
+    // --- A/B gate: fork-join parallel advance vs sequential, 64-cluster
+    // saturated. The decision streams are bit-identical (perf_equiv), so
+    // the ratio is pure wall-clock. Gated ≥ 2× in full mode only — smoke
+    // and default report the ratio but cannot fail on it (CI runners have
+    // too few cores for the gate to be meaningful).
+    println!();
+    let pwl = fleet_wl(sz.fleet, 64);
+    let seq = measure_serve(&pwl, 64, sim(false));
+    // Best-of-two on the parallel leg: a noise spike there is the only way
+    // the gate can flake.
+    let par_a = measure_serve(&pwl, 64, SimConfig::default().with_parallel());
+    let par_b = measure_serve(&pwl, 64, SimConfig::default().with_parallel());
+    let par = if par_b.wall_s < par_a.wall_s { par_b } else { par_a };
+    assert_eq!(seq.makespan, par.makespan, "parallel toggle changed the simulation");
+    assert_eq!(seq.decisions, par.decisions, "parallel toggle changed the decision count");
+    let par_speedup = seq.wall_s / par.wall_s.max(1e-9);
+    println!(
+        "  A/B serve_fleet x64 ({} req): sequential {:.3}s vs parallel {:.3}s -> {:.2}x",
+        sz.fleet, seq.wall_s, par.wall_s, par_speedup
+    );
+    let par_gated = common::full_mode();
+    let par_band =
+        common::check_band("parallel speedup over sequential advance (x)", par_speedup, 2.0, 1e9);
+    let par_pass = par_band || !par_gated;
+    if !par_gated {
+        println!("  (report-only outside full mode; HSV_BENCH_FULL=1 enforces the 2x gate)");
+    }
+    let mut ab_par = Json::obj();
+    ab_par
+        .set("case", "serve_fleet")
+        .set("clusters", 64u32)
+        .set("requests", sz.fleet)
+        .set("sequential_wall_s", seq.wall_s)
+        .set("parallel_wall_s", par.wall_s)
+        .set("speedup", par_speedup)
+        .set("required_speedup", 2.0)
+        .set("gated", par_gated)
+        .set("pass", par_pass);
+
     let mut doc = Json::obj();
     doc.set("bench", "sim_throughput")
         .set("mode", mode)
         .set("rows", Json::Arr(rows))
         .set("obs", obs_json)
         .set("ab_offline", ab_offline)
-        .set("ab", ab);
+        .set("ab", ab)
+        .set("ab_parallel", ab_par);
     println!("\nBENCH {}", doc.to_string());
     std::fs::write("BENCH_sim_throughput.json", doc.to_pretty())
         .expect("write BENCH_sim_throughput.json");
@@ -268,6 +344,10 @@ fn main() {
         // The ≥3× acceptance criterion is a hard gate, not advisory: fail
         // the process (after writing the artifact) so CI goes red.
         eprintln!("FAIL: incremental speedup {speedup:.2}x is below the 3x gate");
+        std::process::exit(1);
+    }
+    if !par_pass {
+        eprintln!("FAIL: parallel speedup {par_speedup:.2}x is below the 2x full-mode gate");
         std::process::exit(1);
     }
 }

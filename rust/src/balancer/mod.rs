@@ -5,6 +5,17 @@
 //! UMF decoder identifies the user/model of each incoming packet; the
 //! controller dispatches requests to SV clusters by consulting the status
 //! table.
+//!
+//! # §Parallelism
+//!
+//! The balancer is the *only* channel through which clusters interact, and
+//! it runs strictly at epoch boundaries: dispatch, [`LoadBalancer::status`],
+//! and [`LoadBalancer::backlog`] all execute on the main thread, folding
+//! over the cluster vector in id order, before and after the fork-join
+//! advance (`cluster::advance_clusters`). That sequencing is what makes the
+//! parallel engine's decision stream bit-identical to the sequential one —
+//! nothing here may ever read or mutate a cluster while the advance is in
+//! flight.
 
 use crate::cluster::SvCluster;
 use crate::sim::Cycle;

@@ -236,6 +236,51 @@ impl SvCluster {
     }
 }
 
+/// Advance every cluster to `horizon` — the fork-join step shared by the
+/// serve engine (per epoch) and the offline coordinator (`Cycle::MAX`).
+///
+/// Clusters only interact through the load balancer at epoch boundaries, so
+/// between barriers each one advances on its own state and the shared
+/// read-only registry. With a pool, the advance fans out over
+/// [`crate::util::threadpool::ThreadPool::map`], which preserves item order;
+/// without one it is the plain sequential sweep. Either way the caller gets
+/// the clusters back in id order with bit-identical state, so every fold
+/// (status, backlog, next-event) and every `ObsSink` record that runs after
+/// the barrier is byte-identical to the sequential engine —
+/// `rust/tests/perf_equiv.rs` pins it.
+///
+/// The registry rides along as an `Arc` because `ThreadPool::map` requires
+/// `'static` items. Each job's clone drops inside the closure before the
+/// result is sent, and `map` only returns after receiving every result, so
+/// the caller's `Arc` is unique again at the barrier and a later
+/// `Arc::make_mut` (the serve engine mutates the registry when the batcher
+/// mints fused models) never deep-clones.
+pub fn advance_clusters(
+    mut clusters: Vec<SvCluster>,
+    registry: &std::sync::Arc<ModelRegistry>,
+    horizon: Cycle,
+    pool: Option<&crate::util::threadpool::ThreadPool>,
+) -> Vec<SvCluster> {
+    match pool {
+        Some(pool) if clusters.len() > 1 => {
+            let items: Vec<(SvCluster, std::sync::Arc<ModelRegistry>)> = clusters
+                .into_iter()
+                .map(|c| (c, std::sync::Arc::clone(registry)))
+                .collect();
+            pool.map(items, move |(mut c, reg)| {
+                c.run_until(&reg, horizon);
+                c
+            })
+        }
+        _ => {
+            for c in clusters.iter_mut() {
+                c.run_until(registry, horizon);
+            }
+            clusters
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -189,6 +189,17 @@ pub struct SimConfig {
     /// either way — `rust/tests/perf_equiv.rs` asserts it — so the toggle
     /// measures pure overhead, never behavior.
     pub naive_recompute: bool,
+    /// Fork-join the per-epoch cluster advance across `util::threadpool`
+    /// workers. Clusters only interact through the balancer at epoch
+    /// boundaries, and every fold/record at the barrier runs sequentially
+    /// in cluster-id order, so decisions, JSON reports, and traces are
+    /// byte-identical to the sequential engine —
+    /// `rust/tests/perf_equiv.rs` pins it. Off by default: small fleets
+    /// don't amortize the fork-join overhead.
+    pub parallel: bool,
+    /// Worker threads for the parallel advance; 0 means the machine's
+    /// available parallelism. Always clamped to the cluster count.
+    pub threads: usize,
 }
 
 impl Default for SimConfig {
@@ -202,6 +213,8 @@ impl Default for SimConfig {
             max_cycles: u64::MAX / 4,
             record_timeline: false,
             naive_recompute: false,
+            parallel: false,
+            threads: 0,
         }
     }
 }
@@ -216,6 +229,31 @@ impl SimConfig {
     pub fn with_naive_recompute(mut self) -> SimConfig {
         self.naive_recompute = true;
         self
+    }
+
+    /// Builder for the fork-join cluster advance (see [`SimConfig::parallel`]).
+    pub fn with_parallel(mut self) -> SimConfig {
+        self.parallel = true;
+        self
+    }
+
+    /// Builder for the parallel-advance worker count (0 = machine
+    /// parallelism); implies nothing about [`SimConfig::parallel`].
+    pub fn with_threads(mut self, threads: usize) -> SimConfig {
+        self.threads = threads;
+        self
+    }
+
+    /// Resolved worker count for a fork-join advance over `clusters`
+    /// clusters: the explicit `threads` knob (or the machine's available
+    /// parallelism when 0), never more workers than clusters.
+    pub fn worker_threads(&self, clusters: usize) -> usize {
+        let n = if self.threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        } else {
+            self.threads
+        };
+        n.clamp(1, clusters.max(1))
     }
 }
 

@@ -3,8 +3,9 @@
 //! Owns the load balancer and the SV clusters, runs a workload trace through
 //! them, and aggregates throughput / energy / latency into a [`RunReport`].
 //! Clusters simulate independently (the hardware property behind the paper's
-//! linear cluster scaling) — on multi-cluster configs they run on the
-//! in-tree thread pool.
+//! linear cluster scaling) — with `SimConfig::parallel` on, multi-cluster
+//! configs run on the in-tree thread pool via the same fork-join step as the
+//! serve engine (`cluster::advance_clusters`), with a bit-identical report.
 
 use crate::balancer::{DispatchPolicy, LoadBalancer};
 use crate::cluster::SvCluster;
@@ -139,15 +140,16 @@ impl Coordinator {
         }
         lb.dispatch(&mut clusters, &wl.registry);
 
-        // Clusters are independent: simulate in parallel when there are
-        // several (each owns its state; the registry is shared read-only).
-        if clusters.len() > 1 {
-            let registry = wl.registry.clone();
-            let pool = ThreadPool::new(clusters.len());
-            clusters = pool.map(clusters, move |mut c| {
-                c.run(&registry);
-                c
-            });
+        // Clusters are independent (each owns its state; the registry is
+        // shared read-only), so the advance is the same fork-join step the
+        // serve engine uses per epoch — here with an unbounded horizon.
+        // Sequential unless `SimConfig::parallel` asks for the pool; the
+        // report is bit-identical either way (`rust/tests/perf_equiv.rs`).
+        if self.sim.parallel && clusters.len() > 1 {
+            let pool = ThreadPool::new(self.sim.worker_threads(clusters.len()));
+            let registry = std::sync::Arc::new(wl.registry.clone());
+            clusters =
+                crate::cluster::advance_clusters(clusters, &registry, Cycle::MAX, Some(&pool));
         } else {
             for c in &mut clusters {
                 c.run(&wl.registry);

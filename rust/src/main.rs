@@ -34,6 +34,7 @@ const USAGE: &str = "hsv <simulate|serve|dse|gpu|timeline|convert|zoo|pjrt> [--o
            [--autoscale off|threshold] [--autoscale-up DEPTH] [--autoscale-down DEPTH]
            [--autoscale-min N] [--autoscale-dwell CYCLES] [--autoscale-warmup CYCLES]
            [--trace out/trace.json] [--metrics out/metrics.csv]
+           [--parallel] [--threads N]
            [--clusters N] [--small] [--out out/serve.json]
   dse      --requests 12 [--threads N] [--out out/dse.csv]
   gpu      --ratio 0.5 --requests 40 --seed 42
@@ -80,6 +81,12 @@ fn sim_from_args(args: &Args) -> SimConfig {
     sim.vp_runs_array_ops = args.bool("vp-array", true);
     sim.sublayer_partitioning = args.bool("partition", true);
     sim.memory_access_scheduling = args.bool("memsched", true);
+    // Fork-join cluster advance (serve + offline coordinator). Results are
+    // bit-identical to the sequential engine; --threads 0 means auto.
+    if args.has("parallel") {
+        sim.parallel = true;
+    }
+    sim.threads = args.usize("threads", 0);
     sim
 }
 

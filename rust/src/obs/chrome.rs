@@ -69,7 +69,9 @@ fn event_label(ev: &ReqEvent) -> (&'static str, Json) {
             ("coalesce", args)
         }
         ReqEventKind::BatchFormed { batch_id, size } => {
-            args.set("batch", batch_id.to_string()).set("size", size);
+            // Fused batch ids start at 1 << 62 — far past f64's exact-integer
+            // range, so they travel as strings (`Json::id_str`).
+            args.set("batch", Json::id_str(batch_id)).set("size", size);
             ("batch", args)
         }
         ReqEventKind::Dispatched { cluster } => {
@@ -104,7 +106,7 @@ pub fn chrome_trace(trace: &ObsTrace) -> Json {
     // One X (complete) event per booked task: pid = cluster, tid = proc.
     for (cluster, t) in trace.tasks() {
         let mut args = Json::obj();
-        args.set("request", t.request_id.to_string()).set("layer", t.layer).set("sub", t.sub);
+        args.set("request", Json::id_str(t.request_id)).set("layer", t.layer).set("sub", t.sub);
         let mut j = Json::obj();
         j.set("name", format!("{:?}", t.op))
             .set("cat", "task")
@@ -126,7 +128,8 @@ pub fn chrome_trace(trace: &ObsTrace) -> Json {
         per_request.entry(ev.request_id).or_default().push(ev);
     }
     for (id, evs) in per_request {
-        let id_str = id.to_string();
+        // Async-track ids can be fused batch ids (≥ 1 << 62): string form.
+        let id_json = Json::id_str(id);
         let name = format!("req {id}");
         let start = evs.iter().map(|e| e.cycle).min().unwrap_or(0);
         let end = evs.iter().map(|e| e.cycle).max().unwrap_or(start);
@@ -134,7 +137,7 @@ pub fn chrome_trace(trace: &ObsTrace) -> Json {
         b.set("name", name.as_str())
             .set("cat", "request")
             .set("ph", "b")
-            .set("id", id_str.as_str())
+            .set("id", id_json.clone())
             .set("ts", us(start))
             .set("pid", requests_pid)
             .set("tid", 0u32);
@@ -145,7 +148,7 @@ pub fn chrome_trace(trace: &ObsTrace) -> Json {
             j.set("name", label)
                 .set("cat", "request")
                 .set("ph", "n")
-                .set("id", id_str.as_str())
+                .set("id", id_json.clone())
                 .set("ts", us(ev.cycle))
                 .set("pid", requests_pid)
                 .set("tid", 0u32)
@@ -156,7 +159,7 @@ pub fn chrome_trace(trace: &ObsTrace) -> Json {
         e.set("name", name.as_str())
             .set("cat", "request")
             .set("ph", "e")
-            .set("id", id_str.as_str())
+            .set("id", id_json.clone())
             .set("ts", us(end))
             .set("pid", requests_pid)
             .set("tid", 0u32);

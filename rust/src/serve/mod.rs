@@ -64,8 +64,10 @@ pub use slo::SloPolicy;
 
 pub use crate::obs::ObsPolicy;
 
+use std::sync::Arc;
+
 use crate::balancer::{DispatchPolicy, LoadBalancer};
-use crate::cluster::SvCluster;
+use crate::cluster::{advance_clusters, SvCluster};
 use crate::config::{HardwareConfig, SimConfig};
 use crate::model::ModelFamily;
 use crate::obs::{ClusterSample, EpochSample, NoopSink, ObsSink, ObsTrace, ReqEvent, ReqEventKind};
@@ -567,10 +569,19 @@ impl ServeEngine {
         let mut clusters: Vec<SvCluster> = (0..self.hw.clusters)
             .map(|i| SvCluster::new(i, &self.hw, self.sched, sim.clone()))
             .collect();
+        // §Parallelism: the fork-join pool for step 3, one per run. Only
+        // worth forking for real fleets; a single cluster always advances
+        // inline. Decisions are bit-identical either way (perf_equiv).
+        let pool = (sim.parallel && clusters.len() > 1)
+            .then(|| crate::util::threadpool::ThreadPool::new(sim.worker_threads(clusters.len())));
         let mut lb = LoadBalancer::new(self.cfg.policy);
         // The run's registry starts as the workload's and grows fused
-        // multi-batch graphs as the batcher mints them.
-        let mut registry = wl.registry.clone();
+        // multi-batch graphs as the batcher mints them. It lives in an Arc
+        // so the parallel advance can share it across workers without a
+        // copy; on the main thread `Arc::make_mut` gives the batcher its
+        // `&mut` (the Arc is unique again at every epoch barrier, so this
+        // never clones — see `cluster::advance_clusters`).
+        let mut registry = Arc::new(wl.registry.clone());
         // The engine is its own UMF front end: every registry model is
         // "loaded" up front (identity mapping), so `submit` type-checks each
         // request's model id (see `BalancerError::UnknownModel`).
@@ -629,7 +640,12 @@ impl ServeEngine {
                     next += 1;
                 }
                 for r in admitted {
-                    emitted.extend(batcher.offer_traced(r, now, &mut registry, sink));
+                    emitted.extend(batcher.offer_traced(
+                        r,
+                        now,
+                        Arc::make_mut(&mut registry),
+                        sink,
+                    ));
                 }
             } else {
                 while next < n && trace[next].arrival <= now {
@@ -638,7 +654,12 @@ impl ServeEngine {
                         cycle: trace[next].arrival,
                         kind: ReqEventKind::Arrival,
                     });
-                    emitted.extend(batcher.offer_traced(trace[next], now, &mut registry, sink));
+                    emitted.extend(batcher.offer_traced(
+                        trace[next],
+                        now,
+                        Arc::make_mut(&mut registry),
+                        sink,
+                    ));
                     next += 1;
                 }
             }
@@ -646,7 +667,12 @@ impl ServeEngine {
             //     deferred request can still be admitted, no future
             //     same-model arrival can grow a batch, so drain.
             let trace_done = next >= n && admission.pending() == 0;
-            emitted.extend(batcher.poll_traced(now, trace_done, &mut registry, sink));
+            emitted.extend(batcher.poll_traced(
+                now,
+                trace_done,
+                Arc::make_mut(&mut registry),
+                sink,
+            ));
             for e in emitted {
                 // Fused graphs enter the model table as they are minted.
                 if !lb.model_table.contains_key(&e.model_id) {
@@ -680,10 +706,11 @@ impl ServeEngine {
             let mask = autoscaler.enabled().then(|| autoscaler.dispatch_mask());
             lb.dispatch_ready_eligible_traced(&mut clusters, &registry, now, mask, sink);
 
-            // 3. Advance every cluster's scheduler to the horizon.
-            for c in clusters.iter_mut() {
-                c.run_until(&registry, now);
-            }
+            // 3. Advance every cluster's scheduler to the horizon — the
+            //    fork-join step when `SimConfig::parallel` is on. Clusters
+            //    come back in id order with bit-identical state, and every
+            //    fold and record below runs sequentially at this barrier.
+            clusters = advance_clusters(clusters, &registry, now, pool.as_ref());
             epochs += 1;
             if let Some(rec) = recorder.as_mut() {
                 rec.epoch_sample(fleet_sample(

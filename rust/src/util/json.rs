@@ -23,6 +23,15 @@ impl Json {
         Json::Obj(BTreeMap::new())
     }
 
+    /// A numeric identifier emitted as a decimal string. JSON numbers are
+    /// f64 here, which is exact only up to 2^53 — fused batch ids start at
+    /// `serve::batch::FUSED_ID_BASE` (1 << 62), far past that. Ids aren't
+    /// arithmetic anyway; emitting them as strings round-trips every u64
+    /// bit-exactly (the Chrome trace exporter relies on this).
+    pub fn id_str(v: u64) -> Json {
+        Json::Str(v.to_string())
+    }
+
     /// Insert into an object; panics if self is not an object.
     pub fn set(&mut self, key: &str, value: impl Into<Json>) -> &mut Self {
         match self {
@@ -197,16 +206,34 @@ impl From<f64> for Json {
 }
 impl From<u64> for Json {
     fn from(v: u64) -> Json {
+        // f64 holds integers exactly only up to 2^53; beyond that `as f64`
+        // silently rounds (fused batch ids start at 1 << 62). Catch the
+        // corruption at the conversion; big ids go through `Json::id_str`.
+        debug_assert!(
+            (v as f64) as u64 == v,
+            "Json::from(u64): {v} is not exactly representable as f64; \
+             use Json::id_str for identifiers"
+        );
         Json::Num(v as f64)
     }
 }
 impl From<usize> for Json {
     fn from(v: usize) -> Json {
+        debug_assert!(
+            (v as f64) as usize == v,
+            "Json::from(usize): {v} is not exactly representable as f64; \
+             use Json::id_str for identifiers"
+        );
         Json::Num(v as f64)
     }
 }
 impl From<i64> for Json {
     fn from(v: i64) -> Json {
+        debug_assert!(
+            (v as f64) as i64 == v,
+            "Json::from(i64): {v} is not exactly representable as f64; \
+             use Json::id_str for identifiers"
+        );
         Json::Num(v as f64)
     }
 }
@@ -446,6 +473,42 @@ mod tests {
     fn integers_stay_exact() {
         let v = Json::from(1_234_567_890_123u64);
         assert_eq!(v.to_string(), "1234567890123");
+    }
+
+    #[test]
+    fn u64_roundtrip_at_2p53_boundary() {
+        // 2^53 is the last exactly-representable contiguous integer.
+        let max_exact = 1u64 << 53;
+        let v = Json::from(max_exact);
+        assert_eq!(v.to_string(), "9007199254740992");
+        let back = Json::parse(&v.to_string()).unwrap();
+        assert_eq!(back.as_f64(), Some(max_exact as f64));
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "not exactly representable")]
+    fn u64_conversion_rejects_inexact_values() {
+        // 2^53 + 1 is the first u64 that `as f64` silently rounds.
+        let _ = Json::from((1u64 << 53) + 1);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "not exactly representable")]
+    fn usize_conversion_rejects_inexact_values() {
+        let _ = Json::from(((1u64 << 53) + 1) as usize);
+    }
+
+    #[test]
+    fn id_str_roundtrips_fused_batch_ids() {
+        // FUSED_ID_BASE = 1 << 62; real fused ids are BASE + counter, which
+        // are NOT representable as f64 — they must go through id_str.
+        let id = (1u64 << 62) + 1;
+        let v = Json::id_str(id);
+        assert_eq!(v.to_string(), format!("\"{id}\""));
+        let back = Json::parse(&v.to_string()).unwrap();
+        assert_eq!(back.as_str().unwrap().parse::<u64>().unwrap(), id);
     }
 
     #[test]

@@ -18,6 +18,12 @@ pub struct Summary {
 impl Summary {
     pub fn of(xs: &[f64]) -> Summary {
         assert!(!xs.is_empty(), "Summary::of empty sample");
+        // A NaN/Inf sample would otherwise surface as an unexplained
+        // `partial_cmp` unwrap panic deep inside report aggregation; name
+        // the offending value and its index up front instead.
+        if let Some((i, &x)) = xs.iter().enumerate().find(|(_, x)| !x.is_finite()) {
+            panic!("Summary::of: sample[{i}] is not finite ({x})");
+        }
         let n = xs.len();
         let mean = xs.iter().sum::<f64>() / n as f64;
         let var = if n > 1 {
@@ -111,5 +117,17 @@ mod tests {
     #[should_panic]
     fn geomean_rejects_nonpositive() {
         geomean(&[1.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "sample[2] is not finite (NaN)")]
+    fn summary_names_the_nan_sample() {
+        Summary::of(&[1.0, 2.0, f64::NAN, 4.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "sample[0] is not finite (inf)")]
+    fn summary_rejects_infinite_samples() {
+        Summary::of(&[f64::INFINITY, 1.0]);
     }
 }

@@ -1,7 +1,15 @@
 //! Fixed-size thread pool with a parallel-map helper (rayon is unavailable
 //! offline). Used by the DSE driver to sweep thousands of independent
-//! simulations across cores.
+//! simulations across cores, and by the serve engine / coordinator for the
+//! fork-join cluster advance (`SimConfig::parallel`).
+//!
+//! Panic policy: a panicking job must not shrink the pool. Workers run every
+//! job under `catch_unwind`, so a panic is confined to the job that raised
+//! it; `map` captures the payload per item and re-raises the first one on
+//! the calling thread as soon as it arrives, instead of starving the result
+//! channel and dying later with an unrelated message.
 
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
@@ -9,8 +17,12 @@ use std::thread;
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
 /// A simple fixed-size worker pool.
+///
+/// The submission side is behind a `Mutex`, so a shared pool (`Arc<ThreadPool>`)
+/// accepts `execute`/`map` calls from several threads at once; each `map` call
+/// collects on its own result channel, so overlapping maps don't mix results.
 pub struct ThreadPool {
-    tx: Option<mpsc::Sender<Job>>,
+    tx: Mutex<Option<mpsc::Sender<Job>>>,
     workers: Vec<thread::JoinHandle<()>>,
 }
 
@@ -28,14 +40,21 @@ impl ThreadPool {
                     .spawn(move || loop {
                         let job = { rx.lock().unwrap().recv() };
                         match job {
-                            Ok(job) => job(),
+                            // A panicking job must not kill the worker: the
+                            // pool would silently shrink for its whole life.
+                            // Jobs that care (map) catch their own panics
+                            // before this point; this is the backstop for
+                            // fire-and-forget `execute` jobs.
+                            Ok(job) => {
+                                let _ = catch_unwind(AssertUnwindSafe(job));
+                            }
                             Err(_) => break, // channel closed: shut down
                         }
                     })
                     .expect("spawn worker")
             })
             .collect();
-        ThreadPool { tx: Some(tx), workers }
+        ThreadPool { tx: Mutex::new(Some(tx)), workers }
     }
 
     /// Pool sized to the machine's parallelism.
@@ -44,12 +63,23 @@ impl ThreadPool {
         ThreadPool::new(n)
     }
 
+    /// Number of worker threads in the pool.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
     /// Submit a fire-and-forget job.
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
-        self.tx.as_ref().unwrap().send(Box::new(f)).expect("pool closed");
+        let guard = self.tx.lock().unwrap();
+        guard.as_ref().unwrap().send(Box::new(f)).expect("pool closed");
     }
 
     /// Map `f` over `items` in parallel, preserving order.
+    ///
+    /// If `f` panics for some item, the panic payload is forwarded and
+    /// re-raised here (on the calling thread) as soon as it is received —
+    /// the workers themselves stay alive, and other in-flight `map` calls
+    /// on the same pool are unaffected.
     pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
     where
         T: Send + 'static,
@@ -58,12 +88,12 @@ impl ThreadPool {
     {
         let n = items.len();
         let f = Arc::new(f);
-        let (rtx, rrx) = mpsc::channel::<(usize, R)>();
+        let (rtx, rrx) = mpsc::channel::<(usize, thread::Result<R>)>();
         for (i, item) in items.into_iter().enumerate() {
             let f = Arc::clone(&f);
             let rtx = rtx.clone();
             self.execute(move || {
-                let r = f(item);
+                let r = catch_unwind(AssertUnwindSafe(|| f(item)));
                 // Receiver may have been dropped on panic elsewhere; ignore.
                 let _ = rtx.send((i, r));
             });
@@ -71,8 +101,15 @@ impl ThreadPool {
         drop(rtx);
         let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
         for _ in 0..n {
-            let (i, r) = rrx.recv().expect("worker panicked");
-            slots[i] = Some(r);
+            // Workers survive panics and always send a result, so a closed
+            // channel here means the pool itself was torn down.
+            let (i, r) = rrx.recv().expect("pool closed mid-map");
+            match r {
+                Ok(r) => slots[i] = Some(r),
+                // Drop the receiver implicitly and re-raise the original
+                // payload promptly; remaining jobs ignore the dead channel.
+                Err(payload) => resume_unwind(payload),
+            }
         }
         slots.into_iter().map(|s| s.unwrap()).collect()
     }
@@ -81,7 +118,7 @@ impl ThreadPool {
 impl Drop for ThreadPool {
     fn drop(&mut self) {
         // Close the channel so workers exit, then join them.
-        self.tx.take();
+        self.tx.lock().unwrap().take();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
@@ -135,5 +172,88 @@ mod tests {
     fn par_map_helper() {
         let out = par_map(vec![1, 2, 3], |x| x + 1);
         assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn pool_survives_panicking_jobs() {
+        // A panicking fire-and-forget job must not shrink the pool: all
+        // workers stay alive and a full-width map still completes.
+        let pool = ThreadPool::new(2);
+        for _ in 0..4 {
+            pool.execute(|| panic!("job blew up"));
+        }
+        let out = pool.map((0..64u64).collect(), |x| x + 1);
+        assert_eq!(out, (1..=64u64).collect::<Vec<_>>());
+        // And `execute` jobs submitted after the panics still run.
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..8 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // join
+        assert_eq!(counter.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn map_repanics_with_original_payload() {
+        let pool = ThreadPool::new(2);
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            pool.map((0..16u32).collect(), |x| {
+                if x == 7 {
+                    panic!("item 7 is cursed");
+                }
+                x
+            })
+        }));
+        let payload = caught.expect_err("map must propagate the panic");
+        let msg = payload
+            .downcast_ref::<&str>()
+            .copied()
+            .map(String::from)
+            .or_else(|| payload.downcast_ref::<String>().cloned())
+            .unwrap_or_default();
+        assert_eq!(msg, "item 7 is cursed");
+        // The pool is still fully functional afterwards.
+        let out = pool.map(vec![1u32, 2, 3], |x| x * 10);
+        assert_eq!(out, vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn overlapping_maps_from_same_pool() {
+        // The serve engine shares one pool across epochs; tests and future
+        // callers may drive it from several threads. Result routing must
+        // stay per-call and ordered.
+        let pool = Arc::new(ThreadPool::new(3));
+        let handles: Vec<_> = (0..4u64)
+            .map(|k| {
+                let pool = Arc::clone(&pool);
+                thread::spawn(move || {
+                    pool.map((0..200u64).collect(), move |x| x * 2 + k)
+                })
+            })
+            .collect();
+        for (k, h) in handles.into_iter().enumerate() {
+            let out = h.join().expect("mapper thread");
+            let want: Vec<u64> = (0..200u64).map(|x| x * 2 + k as u64).collect();
+            assert_eq!(out, want);
+        }
+    }
+
+    #[test]
+    fn jobs_outnumber_workers_100x() {
+        let pool = ThreadPool::new(2);
+        let out = pool.map((0..200u64).collect(), |x| x.wrapping_mul(31) ^ 5);
+        let want: Vec<u64> = (0..200u64).map(|x| x.wrapping_mul(31) ^ 5).collect();
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn zero_worker_request_clamps_to_one() {
+        let pool = ThreadPool::new(0);
+        assert_eq!(pool.size(), 1);
+        let out = pool.map((0..32u32).collect(), |x| x + 100);
+        assert_eq!(out, (100..132u32).collect::<Vec<_>>());
     }
 }

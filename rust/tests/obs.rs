@@ -186,6 +186,38 @@ fn saturated_full_stack_trace_is_complete_and_invisible() {
     assert!(text.contains("dispatch"), "summary missing dispatch count:\n{text}");
 }
 
+/// The recording-never-perturbs contract holds under the fork-join cluster
+/// advance too: with `SimConfig::parallel` on, tracing off ↔ on is still
+/// byte-identical, and both match the sequential engine's report exactly
+/// (recording happens only at the epoch barrier, in cluster-id order).
+#[test]
+fn tracing_is_byte_invisible_with_parallel_advance() {
+    let wl = WorkloadSpec::ratio(0.5, 32, 23)
+        .with_mean_interarrival(6_000.0)
+        .with_arrivals(ArrivalModel::bursty(6_000.0, 1_500.0))
+        .generate();
+    let hw = HardwareConfig::small().with_clusters(4);
+    let run = |sim: SimConfig, obs: ObsPolicy| {
+        ServeEngine::new(hw.clone(), SchedulerKind::Has, sim, full_stack(obs)).run(&wl)
+    };
+    let par_sim = || SimConfig::default().with_parallel().with_threads(4);
+    let off = run(par_sim(), ObsPolicy::Off);
+    let on = run(par_sim(), ObsPolicy::on());
+    let seq = run(SimConfig::default(), ObsPolicy::Off);
+    assert_eq!(
+        off.to_json().to_string(),
+        on.to_json().to_string(),
+        "parallel: tracing changed the serialized report"
+    );
+    assert_eq!(off.decisions, on.decisions, "parallel: decision stream diverged");
+    assert_eq!(off.epochs, on.epochs, "parallel: epoch count diverged");
+    assert_eq!(
+        seq.to_json().to_string(),
+        off.to_json().to_string(),
+        "parallel advance changed the report vs the sequential engine"
+    );
+}
+
 /// Causality over every span the full-stack trace produced: arrival ≤
 /// admission ≤ dispatch ≤ first task start ≤ last task end ≤ completion.
 #[test]

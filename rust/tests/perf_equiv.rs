@@ -7,7 +7,11 @@
 //! - the HAS candidate memo produces the same decision stream as the
 //!   cache-off baseline over the full model zoo;
 //! - offline and online runs under `SimConfig::naive_recompute` reproduce
-//!   the default engine's reports byte for byte.
+//!   the default engine's reports byte for byte;
+//! - the fork-join cluster advance (`SimConfig::parallel`) reproduces the
+//!   sequential engine byte for byte across the arrival × scheduler grid
+//!   with the full serve stack on, at 1/4/64 clusters and 1/2/8 threads,
+//!   online and offline.
 //!
 //! In debug builds the library additionally cross-checks every
 //! `outstanding()` read against the naive recompute via `debug_assert`, so
@@ -21,7 +25,9 @@ use hsv::coordinator::Coordinator;
 use hsv::model::zoo;
 use hsv::sched::state::ClusterState;
 use hsv::sched::SchedulerKind;
-use hsv::serve::{ServeConfig, ServeEngine};
+use hsv::serve::{
+    AdmissionPolicy, AutoscalePolicy, BatchPolicy, ObsPolicy, ServeConfig, ServeEngine, SloPolicy,
+};
 use hsv::util::quick;
 use hsv::workload::{ArrivalModel, WorkloadSpec};
 
@@ -200,6 +206,119 @@ fn serve_decision_stream_identical_under_naive_recompute() {
                 "{tag}"
             );
             assert_eq!(a.to_json().to_string(), b.to_json().to_string(), "{tag}");
+        }
+    }
+}
+
+/// The full serve stack (SLO-aware batching + feasibility admission +
+/// threshold autoscaling) — the widest decision surface the parallel
+/// advance has to keep bit-identical.
+fn full_stack() -> ServeConfig {
+    ServeConfig {
+        policy: DispatchPolicy::LeastLoaded,
+        slo: SloPolicy::default(),
+        batch: BatchPolicy::SloAware { max_batch: 4 },
+        admission: AdmissionPolicy::DeadlineFeasible,
+        autoscale: AutoscalePolicy::Threshold {
+            up: 4,
+            down: 1,
+            min_active: 1,
+            dwell: 100_000,
+            warmup: 25_000,
+        },
+        obs: ObsPolicy::Off,
+    }
+}
+
+/// §Parallelism: the fork-join cluster advance (`SimConfig::parallel`)
+/// reproduces the sequential engine byte for byte — decision stream, epoch
+/// count, served tuples, and the full serialized report — across every
+/// arrival model × both schedulers with the full stack on, at 1/4/64
+/// clusters and 1/2/8 worker threads. Clusters only interact through the
+/// balancer at epoch boundaries and every fold at the barrier runs in
+/// cluster-id order, so this grid is the proof the toggle is perf-only.
+#[test]
+fn parallel_serve_identical_to_sequential_across_grid() {
+    for arrival in arrival_models() {
+        for sched in [SchedulerKind::Has, SchedulerKind::RoundRobin] {
+            let wl = WorkloadSpec::ratio(0.5, 16, 33).with_arrivals(arrival).generate();
+            for ncl in [1u32, 4, 64] {
+                let hw = HardwareConfig::small().with_clusters(ncl);
+                let run = |sim: SimConfig| {
+                    ServeEngine::new(hw.clone(), sched, sim, full_stack()).run(&wl)
+                };
+                let seq = run(SimConfig::default());
+                for threads in [1usize, 2, 8] {
+                    let par =
+                        run(SimConfig::default().with_parallel().with_threads(threads));
+                    let tag =
+                        format!("{} {sched:?} {ncl}cl {threads}thr", arrival.name());
+                    assert_eq!(seq.makespan, par.makespan, "{tag}");
+                    assert_eq!(seq.decisions, par.decisions, "{tag}");
+                    assert_eq!(seq.epochs, par.epochs, "{tag}");
+                    assert_eq!(
+                        seq.served
+                            .iter()
+                            .map(|r| (r.request_id, r.cluster, r.dispatched_at, r.end))
+                            .collect::<Vec<_>>(),
+                        par.served
+                            .iter()
+                            .map(|r| (r.request_id, r.cluster, r.dispatched_at, r.end))
+                            .collect::<Vec<_>>(),
+                        "{tag}"
+                    );
+                    assert_eq!(
+                        seq.to_json().to_string(),
+                        par.to_json().to_string(),
+                        "{tag}: parallel advance changed the serialized report"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The parallel and naive-recompute toggles compose: both on still
+/// reproduces the default engine byte for byte.
+#[test]
+fn parallel_composes_with_naive_recompute() {
+    let wl = WorkloadSpec::ratio(0.5, 12, 71)
+        .with_arrivals(ArrivalModel::bursty(60_000.0, 6_000.0))
+        .generate();
+    let hw = HardwareConfig::small().with_clusters(4);
+    let run = |sim: SimConfig| {
+        ServeEngine::new(hw.clone(), SchedulerKind::Has, sim, full_stack()).run(&wl)
+    };
+    let base = run(SimConfig::default());
+    let both = run(SimConfig::default().with_parallel().with_threads(4).with_naive_recompute());
+    assert_eq!(base.to_json().to_string(), both.to_json().to_string());
+    assert_eq!(base.decisions, both.decisions);
+    assert_eq!(base.epochs, both.epochs);
+}
+
+/// Offline coordinator runs under the parallel toggle reproduce the
+/// sequential report byte for byte (both schedulers, several thread
+/// counts, including more workers than clusters).
+#[test]
+fn offline_report_identical_under_parallel() {
+    let wl = WorkloadSpec::ratio(0.6, 12, 7).generate();
+    for sched in [SchedulerKind::Has, SchedulerKind::RoundRobin] {
+        for ncl in [2u32, 4] {
+            let hw = HardwareConfig::small().with_clusters(ncl);
+            let a = Coordinator::new(hw.clone(), sched, SimConfig::default()).run(&wl);
+            for threads in [1usize, 3, 8] {
+                let b = Coordinator::new(
+                    hw.clone(),
+                    sched,
+                    SimConfig::default().with_parallel().with_threads(threads),
+                )
+                .run(&wl);
+                let tag = format!("{sched:?} {ncl}cl {threads}thr");
+                assert_eq!(a.makespan, b.makespan, "{tag}");
+                assert_eq!(a.decisions, b.decisions, "{tag}");
+                assert_eq!(a.latencies, b.latencies, "{tag}");
+                assert_eq!(a.to_json().to_string(), b.to_json().to_string(), "{tag}");
+            }
         }
     }
 }
