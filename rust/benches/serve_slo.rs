@@ -16,10 +16,11 @@ use hsv::config::{HardwareConfig, SimConfig};
 use hsv::sched::SchedulerKind;
 use hsv::serve::{
     AdmissionPolicy, AutoscalePolicy, BatchPolicy, ServeConfig, ServeEngine, SloPolicy,
+    TenancyConfig, TenantSpec,
 };
 use hsv::util::json::Json;
 use hsv::util::stats::{geomean, mean};
-use hsv::workload::{ArrivalModel, WorkloadSpec};
+use hsv::workload::{ArrivalModel, Workload, WorkloadRequest, WorkloadSpec};
 
 fn traffic_suite(mean_gap: f64) -> Vec<(&'static str, ArrivalModel)> {
     vec![
@@ -403,5 +404,92 @@ fn main() {
         -1.0,
         0.5,
     );
+
+    // --- multi-tenant fair share: two tenants at weights 3:1, saturated ----
+    //
+    // Both tenants fully backlogged on the heaviest zoo model (whose cost
+    // equals the DRR quantum, so each cursor round dispatches exactly
+    // `weight` requests), one cluster at fair depth 1: the achieved share
+    // over the contended window — up to the gold tenant's last dispatch —
+    // must sit at the 3:1 weight ratio. Report-only in smoke (check_band
+    // warns, never aborts).
+    println!();
+    println!("--- two-tenant fair share (gold:silver = 3:1, saturated) ---");
+    let heaviest = (0..registry.len() as u32)
+        .max_by_key(|&id| registry.total_ops(id))
+        .unwrap();
+    let gold_n = common::sweep_requests() * 3;
+    let silver_n = gold_n * 3;
+    let trace = |tenant: u32, count: usize, id0: u64| -> Vec<WorkloadRequest> {
+        (0..count)
+            .map(|i| WorkloadRequest::new(id0 + i as u64, heaviest, 0).with_tenant(tenant))
+            .collect()
+    };
+    let mut requests = trace(0, gold_n, 0);
+    requests.extend(trace(1, silver_n, gold_n as u64));
+    let wl = Workload {
+        name: "two-tenant-saturated".to_string(),
+        cnn_ratio: 0.0,
+        seed: 0,
+        requests,
+        registry: registry.clone(),
+    };
+    let tcfg = TenancyConfig::new(vec![
+        TenantSpec::weighted("gold", 3),
+        TenantSpec::weighted("silver", 1),
+    ])
+    .with_depth(1);
+    let rep = ServeEngine::new(
+        hw.clone(),
+        SchedulerKind::Has,
+        sim.clone(),
+        ServeConfig {
+            policy: DispatchPolicy::LeastLoaded,
+            slo,
+            batch: BatchPolicy::Off,
+            admission: AdmissionPolicy::Open,
+            autoscale: AutoscalePolicy::Off,
+            ..Default::default()
+        },
+    )
+    .with_tenancy(tcfg)
+    .run(&wl);
+    let mut order: Vec<(u64, u64, u32)> =
+        rep.served.iter().map(|r| (r.dispatched_at, r.request_id, r.tenant)).collect();
+    order.sort_unstable();
+    let gold_last = order.iter().rposition(|&(_, _, t)| t == 0).unwrap_or(0);
+    let window = &order[..=gold_last];
+    let gold_w = window.iter().filter(|&&(_, _, t)| t == 0).count() as f64;
+    let silver_w = (window.iter().filter(|&&(_, _, t)| t == 1).count() as f64).max(1.0);
+    let share_ratio = gold_w / silver_w;
+    println!(
+        "{:<24} {:>8} {:>8} {:>11} {:>12} {:>12}",
+        "case", "gold", "silver", "share(3:1)", "gold p99(ms)", "silver p99(ms)"
+    );
+    println!(
+        "{:<24} {:>8} {:>8} {:>11.2} {:>12.3} {:>12.3}",
+        "saturated-1cl-depth1",
+        rep.tenant_served(0),
+        rep.tenant_served(1),
+        share_ratio,
+        rep.tenant_p99_ms(0),
+        rep.tenant_p99_ms(1)
+    );
+    let mut row = Json::obj();
+    row.set("traffic", "two-tenant-saturated")
+        .set("requests", gold_n + silver_n)
+        .set("tenant_weights", "3:1")
+        .set("gold_served", rep.tenant_served(0))
+        .set("silver_served", rep.tenant_served(1))
+        .set("share_ratio", share_ratio)
+        .set("gold_ops", rep.tenant_ops(0))
+        .set("silver_ops", rep.tenant_ops(1))
+        .set("gold_p99_ms", rep.tenant_p99_ms(0))
+        .set("silver_p99_ms", rep.tenant_p99_ms(1))
+        .set("gold_goodput_tops", rep.tenant_goodput_tops(0))
+        .set("silver_goodput_tops", rep.tenant_goodput_tops(1));
+    b.row(row);
+    common::check_band("two-tenant 3:1 achieved share ratio", share_ratio, 2.0, 4.5);
+
     b.finish();
 }

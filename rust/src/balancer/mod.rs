@@ -128,6 +128,36 @@ impl Backlog {
     }
 }
 
+/// §Multi-tenancy: deficit-round-robin dispatch state. One queue of
+/// request-table indices per tenant; a cursor walks the tenants and each
+/// *fresh* visit credits `weight × quantum` deficit, spent head-by-head at
+/// `registry.total_ops(model)` per dispatch. Long-run served work therefore
+/// converges to the weight vector whenever every tenant stays backlogged
+/// (classic DRR: Shreedhar & Varghese). The state is a few words per tenant
+/// and every per-decision read is the same O(1) `queued_pending` /
+/// `outstanding` signal the shared path uses, so the hot path stays
+/// incremental.
+#[derive(Debug, Clone)]
+struct FairShare {
+    /// Per-tenant weight (index = tenant id; all ≥ 1).
+    weights: Vec<u64>,
+    /// A cluster is *open* for fair dispatch only while it holds fewer than
+    /// this many undispatched-to-scheduler requests. Small depths are what
+    /// give DRR leverage: work parks in the balancer's per-tenant queues
+    /// (where the cursor arbitrates) instead of deep cluster FIFOs (where
+    /// arrival order would).
+    depth: usize,
+    /// Deficit credited per fresh cursor visit, before the weight factor.
+    quantum: u64,
+    /// Accumulated unspent deficit per tenant.
+    deficits: Vec<u64>,
+    /// Tenant the cursor points at. Starts at 0, so weight ties resolve to
+    /// the lower tenant id deterministically.
+    cursor: usize,
+    /// Whether the cursor's current visit already credited its deficit.
+    charged: bool,
+}
+
 /// The load balancer: request table + status view + dispatch.
 #[derive(Debug)]
 pub struct LoadBalancer {
@@ -139,6 +169,9 @@ pub struct LoadBalancer {
     /// Scan cursor: every entry before it is dispatched. Keeps per-epoch
     /// online dispatch O(newly-arrived) instead of O(table).
     scan_from: usize,
+    /// §Multi-tenancy: weighted fair-share dispatch state; `None` (the
+    /// default) leaves the shared arrival-order path untouched, bit for bit.
+    fair: Option<FairShare>,
     /// Decoded-packet counter (reporting).
     pub umf_packets_decoded: u64,
 }
@@ -151,8 +184,36 @@ impl LoadBalancer {
             model_table: HashMap::new(),
             rr_next: 0,
             scan_from: 0,
+            fair: None,
             umf_packets_decoded: 0,
         }
+    }
+
+    /// §Multi-tenancy: switch dispatch to weighted deficit round robin.
+    /// `weights[t]` is tenant `t`'s share (entries are clamped to ≥ 1; a
+    /// request's `user_id` names its tenant and out-of-range ids fold into
+    /// the last tenant). `depth` bounds the undispatched requests a cluster
+    /// may hold before fair dispatch stops feeding it; `quantum` is the
+    /// per-visit deficit credit in ops (callers pass the heaviest base
+    /// model's total ops so a weight-1 tenant earns at least one dispatch
+    /// per cursor round).
+    pub fn enable_fair_share(&mut self, weights: &[u64], depth: usize, quantum: u64) {
+        assert!(!weights.is_empty(), "fair share needs at least one tenant");
+        let weights: Vec<u64> = weights.iter().map(|&w| w.max(1)).collect();
+        let deficits = vec![0; weights.len()];
+        self.fair = Some(FairShare {
+            weights,
+            depth: depth.max(1),
+            quantum: quantum.max(1),
+            deficits,
+            cursor: 0,
+            charged: false,
+        });
+    }
+
+    /// Is deficit-round-robin dispatch active?
+    pub fn fair_enabled(&self) -> bool {
+        self.fair.is_some()
     }
 
     /// Register a model (UMF `model-load` handling): maps the user-visible
@@ -297,6 +358,9 @@ impl LoadBalancer {
         if !(0..clusters.len()).any(can) {
             return 0;
         }
+        if self.fair.is_some() {
+            return self.dispatch_fair_traced(clusters, registry, now, eligible, obs);
+        }
         let mut order: Vec<usize> = (self.scan_from..self.request_table.len())
             .filter(|&i| {
                 let e = &self.request_table[i];
@@ -328,41 +392,168 @@ impl LoadBalancer {
                     .map(|(i, _)| i)
                     .unwrap(),
             };
-            let e = &mut self.request_table[i];
-            e.cluster = Some(target as u32);
-            // Offline (clairvoyant) dispatch stamps the arrival itself; the
-            // online engine stamps its current cycle.
-            let stamp = if now == Cycle::MAX { e.arrival } else { now };
-            e.dispatched_at = Some(stamp);
-            obs.request_event(crate::obs::ReqEvent {
-                request_id: e.request_id,
-                cycle: stamp,
-                kind: crate::obs::ReqEventKind::Dispatched { cluster: target as u32 },
-            });
-            // The cluster must never book work before the controller routed
-            // it: a request held back by the eligibility mask (autoscaler
-            // scaled the fleet to zero dispatchable clusters for a stretch)
-            // dispatches under the current cycle, not its stale arrival.
-            // In the ordinary online path dispatch happens in the release
-            // epoch (arrival == now), and offline `now` is ∞ — both keep
-            // the plain arrival, bit for bit. The request table above keeps
-            // the true submission arrival for latency/SLO scoring.
-            let visible_arrival =
-                if now == Cycle::MAX { e.arrival } else { e.arrival.max(now) };
-            clusters[target].assign(
-                WorkloadRequest::new(e.request_id, e.model_id, visible_arrival)
-                    .with_priority(e.priority),
-                registry,
-            );
+            self.place(i, target, now, clusters, registry, obs);
         }
-        // Advance the cursor past the contiguous dispatched prefix (with
-        // arrival-ordered submissions — the serving engine's case — this is
-        // everything dispatched so far).
+        self.advance_scan_cursor();
+        dispatched
+    }
+
+    /// Route table entry `i` to cluster `target`: stamp the row, mirror the
+    /// decision into the sink, and hand the cluster the request. The single
+    /// placement path shared by arrival-order and fair-share dispatch, so
+    /// both leave bit-identical per-request state.
+    fn place(
+        &mut self,
+        i: usize,
+        target: usize,
+        now: Cycle,
+        clusters: &mut [SvCluster],
+        registry: &ModelRegistry,
+        obs: &mut dyn crate::obs::ObsSink,
+    ) {
+        let e = &mut self.request_table[i];
+        e.cluster = Some(target as u32);
+        // Offline (clairvoyant) dispatch stamps the arrival itself; the
+        // online engine stamps its current cycle.
+        let stamp = if now == Cycle::MAX { e.arrival } else { now };
+        e.dispatched_at = Some(stamp);
+        obs.request_event(crate::obs::ReqEvent {
+            request_id: e.request_id,
+            cycle: stamp,
+            kind: crate::obs::ReqEventKind::Dispatched { cluster: target as u32 },
+        });
+        // The cluster must never book work before the controller routed
+        // it: a request held back by the eligibility mask (autoscaler
+        // scaled the fleet to zero dispatchable clusters for a stretch)
+        // dispatches under the current cycle, not its stale arrival.
+        // In the ordinary online path dispatch happens in the release
+        // epoch (arrival == now), and offline `now` is ∞ — both keep
+        // the plain arrival, bit for bit. The request table above keeps
+        // the true submission arrival for latency/SLO scoring.
+        let visible_arrival = if now == Cycle::MAX { e.arrival } else { e.arrival.max(now) };
+        clusters[target].assign(
+            WorkloadRequest::new(e.request_id, e.model_id, visible_arrival)
+                .with_priority(e.priority),
+            registry,
+        );
+    }
+
+    /// Advance the cursor past the contiguous dispatched prefix (with
+    /// arrival-ordered submissions — the serving engine's case — this is
+    /// everything dispatched so far).
+    fn advance_scan_cursor(&mut self) {
         while self.scan_from < self.request_table.len()
             && self.request_table[self.scan_from].cluster.is_some()
         {
             self.scan_from += 1;
         }
+    }
+
+    /// §Multi-tenancy: the deficit-round-robin dispatch epoch. Pending
+    /// entries are grouped into per-tenant FIFO queues (ordered exactly as
+    /// the shared path orders its dispatches: arrival, then priority, then
+    /// submission) and the DRR cursor spends deficit head-by-head while any
+    /// *open* cluster remains — eligible and holding fewer than `depth`
+    /// undispatched requests. Entries left queued when every cluster is
+    /// closed stay in the table for a later epoch; a closed cluster has
+    /// work, so the engine's event clock always advances and the holdback
+    /// can never deadlock.
+    ///
+    /// Termination: every loop iteration either dispatches a head (finite
+    /// work), zeroes an empty queue's deficit and advances the cursor, or
+    /// credits/advances on insufficient deficit — and each fresh visit
+    /// grows the deficit by `weight × quantum ≥ 1`, so any head's cost is
+    /// eventually covered.
+    fn dispatch_fair_traced(
+        &mut self,
+        clusters: &mut [SvCluster],
+        registry: &ModelRegistry,
+        now: Cycle,
+        eligible: Option<&[bool]>,
+        obs: &mut dyn crate::obs::ObsSink,
+    ) -> usize {
+        let mut fair = self.fair.take().expect("fair dispatch without fair state");
+        let can = |i: usize| eligible.map_or(true, |m| m[i]);
+        let nt = fair.weights.len();
+        // Rebuild the per-tenant queues from the pending window. Identical
+        // inputs rebuild identical queues, so determinism is free, and the
+        // scan is O(pending) — the same window the shared path sorts.
+        let mut order: Vec<usize> = (self.scan_from..self.request_table.len())
+            .filter(|&i| {
+                let e = &self.request_table[i];
+                e.cluster.is_none() && e.arrival <= now
+            })
+            .collect();
+        order.sort_by_key(|&i| {
+            let e = &self.request_table[i];
+            (e.arrival, std::cmp::Reverse(e.priority))
+        });
+        let mut queues: Vec<std::collections::VecDeque<usize>> =
+            vec![std::collections::VecDeque::new(); nt];
+        for i in order {
+            let t = (self.request_table[i].user_id as usize).min(nt - 1);
+            queues[t].push_back(i);
+        }
+        let depth = fair.depth;
+        let open =
+            |clusters: &[SvCluster], i: usize| can(i) && clusters[i].queued_pending() < depth;
+        let mut dispatched = 0;
+        loop {
+            if queues.iter().all(|q| q.is_empty()) {
+                break;
+            }
+            if !(0..clusters.len()).any(|i| open(clusters, i)) {
+                break;
+            }
+            let t = fair.cursor % nt;
+            if queues[t].is_empty() {
+                // An idle tenant banks nothing: deficit only accrues against
+                // queued work (the standard DRR anti-burst rule).
+                fair.deficits[t] = 0;
+                fair.cursor = (fair.cursor + 1) % nt;
+                fair.charged = false;
+                continue;
+            }
+            if !fair.charged {
+                fair.deficits[t] =
+                    fair.deficits[t].saturating_add(fair.weights[t].saturating_mul(fair.quantum));
+                fair.charged = true;
+            }
+            let head = queues[t][0];
+            let cost = registry.total_ops(self.request_table[head].model_id).max(1);
+            if fair.deficits[t] < cost {
+                fair.cursor = (fair.cursor + 1) % nt;
+                fair.charged = false;
+                continue;
+            }
+            let target = match self.policy {
+                DispatchPolicy::RoundRobin => loop {
+                    let c = self.rr_next % clusters.len();
+                    self.rr_next += 1;
+                    if open(clusters, c) {
+                        break c;
+                    }
+                },
+                DispatchPolicy::LeastLoaded => clusters
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, _)| open(clusters, *i))
+                    .min_by_key(|(_, c)| c.outstanding(registry))
+                    .map(|(i, _)| i)
+                    .unwrap(),
+            };
+            self.place(head, target, now, clusters, registry, obs);
+            fair.deficits[t] -= cost;
+            queues[t].pop_front();
+            dispatched += 1;
+            if queues[t].is_empty() {
+                fair.deficits[t] = 0;
+                fair.cursor = (fair.cursor + 1) % nt;
+                fair.charged = false;
+            }
+        }
+        self.advance_scan_cursor();
+        self.fair = Some(fair);
         dispatched
     }
 
@@ -557,6 +748,109 @@ mod tests {
         lb.dispatch_ready_eligible(&mut cs, &reg, 0, Some(&[true, false, true]));
         let assigned: Vec<u32> = lb.request_table.iter().map(|e| e.cluster.unwrap()).collect();
         assert_eq!(assigned, vec![0, 2, 0, 2], "cluster 1 must receive nothing");
+    }
+
+    /// Records dispatch decisions in order — DRR's observable output.
+    struct DispatchLog(Vec<u64>);
+
+    impl crate::obs::ObsSink for DispatchLog {
+        fn request_event(&mut self, ev: crate::obs::ReqEvent) {
+            if matches!(ev.kind, crate::obs::ReqEventKind::Dispatched { .. }) {
+                self.0.push(ev.request_id);
+            }
+        }
+    }
+
+    const NEUTRAL_DEPTH: usize = usize::MAX / 2;
+
+    #[test]
+    fn fair_share_neutral_single_tenant_matches_arrival_order_path() {
+        let reg = ModelRegistry::standard();
+        let quantum = (0..reg.len() as u32).map(|id| reg.total_ops(id)).max().unwrap();
+        let mut base = LoadBalancer::new(DispatchPolicy::RoundRobin);
+        let mut fair = LoadBalancer::new(DispatchPolicy::RoundRobin);
+        base.register_registry(&reg);
+        fair.register_registry(&reg);
+        fair.enable_fair_share(&[1], NEUTRAL_DEPTH, quantum);
+        let mut cs_base = clusters(2);
+        let mut cs_fair = clusters(2);
+        // Mixed arrivals and a same-cycle priority tie.
+        let reqs = [
+            WorkloadRequest::new(0, 0, 50),
+            WorkloadRequest::new(1, 1, 50).with_priority(9),
+            WorkloadRequest::new(2, 0, 10),
+            WorkloadRequest::new(3, 2, 80),
+        ];
+        for r in reqs {
+            base.submit(r, 0).unwrap();
+            fair.submit(r, 0).unwrap();
+        }
+        assert_eq!(base.dispatch_ready(&mut cs_base, &reg, 100), 4);
+        assert_eq!(fair.dispatch_ready(&mut cs_fair, &reg, 100), 4);
+        let rows = |lb: &LoadBalancer| {
+            lb.request_table.iter().map(|e| (e.cluster, e.dispatched_at)).collect::<Vec<_>>()
+        };
+        assert_eq!(rows(&base), rows(&fair), "neutral fair share must not reroute anything");
+    }
+
+    #[test]
+    fn fair_share_interleaves_three_to_one() {
+        let reg = ModelRegistry::standard();
+        let mut lb = LoadBalancer::new(DispatchPolicy::RoundRobin);
+        lb.register_registry(&reg);
+        // Quantum = one model-0 dispatch, so the weights are the pattern.
+        lb.enable_fair_share(&[3, 1], NEUTRAL_DEPTH, reg.total_ops(0));
+        let mut cs = clusters(1);
+        for id in 0..8u64 {
+            lb.submit(WorkloadRequest::new(id, 0, 0), 0).unwrap();
+        }
+        for id in 8..16u64 {
+            lb.submit(WorkloadRequest::new(id, 0, 0), 1).unwrap();
+        }
+        let mut log = DispatchLog(Vec::new());
+        assert_eq!(lb.dispatch_ready_eligible_traced(&mut cs, &reg, 0, None, &mut log), 16);
+        // 3 tenant-0 dispatches per tenant-1 dispatch while both are
+        // backlogged; once tenant 0 drains, tenant 1 gets every slot.
+        assert_eq!(
+            log.0,
+            vec![0, 1, 2, 8, 3, 4, 5, 9, 6, 7, 10, 11, 12, 13, 14, 15],
+            "DRR must interleave 3:1 under contention"
+        );
+    }
+
+    #[test]
+    fn fair_share_weight_ties_resolve_to_lower_tenant_id() {
+        let reg = ModelRegistry::standard();
+        let mut lb = LoadBalancer::new(DispatchPolicy::RoundRobin);
+        lb.register_registry(&reg);
+        lb.enable_fair_share(&[1, 1], NEUTRAL_DEPTH, reg.total_ops(0));
+        let mut cs = clusters(1);
+        lb.submit(WorkloadRequest::new(0, 0, 0), 0).unwrap();
+        lb.submit(WorkloadRequest::new(1, 0, 0), 0).unwrap();
+        lb.submit(WorkloadRequest::new(10, 0, 0), 1).unwrap();
+        lb.submit(WorkloadRequest::new(11, 0, 0), 1).unwrap();
+        let mut log = DispatchLog(Vec::new());
+        assert_eq!(lb.dispatch_ready_eligible_traced(&mut cs, &reg, 0, None, &mut log), 4);
+        assert_eq!(log.0, vec![0, 10, 1, 11], "equal weights alternate, tenant 0 first");
+    }
+
+    #[test]
+    fn fair_share_depth_parks_work_behind_closed_clusters() {
+        let reg = ModelRegistry::standard();
+        let mut lb = LoadBalancer::new(DispatchPolicy::RoundRobin);
+        lb.register_registry(&reg);
+        lb.enable_fair_share(&[1, 1], 1, reg.total_ops(0));
+        let mut cs = clusters(1);
+        lb.submit(WorkloadRequest::new(0, 0, 0), 0).unwrap();
+        lb.submit(WorkloadRequest::new(1, 0, 0), 1).unwrap();
+        // Depth 1: the single cluster closes after one placement; the rest
+        // parks in the balancer where the DRR cursor arbitrates next epoch.
+        assert_eq!(lb.dispatch_ready(&mut cs, &reg, 0), 1);
+        assert_eq!(lb.request_table[0].cluster, Some(0));
+        assert_eq!(lb.queued(), 1, "second tenant's head must stay parked");
+        // Still closed (nothing drained): nothing moves, no spinning.
+        assert_eq!(lb.dispatch_ready(&mut cs, &reg, 0), 0);
+        assert_eq!(lb.queued(), 1);
     }
 
     #[test]

@@ -19,6 +19,7 @@ use hsv::report::{self, timeline};
 use hsv::sched::SchedulerKind;
 use hsv::serve::{
     AdmissionPolicy, AutoscalePolicy, BatchPolicy, ObsPolicy, ServeConfig, ServeEngine, SloPolicy,
+    TenancyConfig,
 };
 use hsv::umf;
 use hsv::util::cli::Args;
@@ -33,6 +34,8 @@ const USAGE: &str = "hsv <simulate|serve|dse|gpu|timeline|convert|zoo|pjrt> [--o
            [--admission-floor PRIO]
            [--autoscale off|threshold] [--autoscale-up DEPTH] [--autoscale-down DEPTH]
            [--autoscale-min N] [--autoscale-dwell CYCLES] [--autoscale-warmup CYCLES]
+           [--tenants 'gold:w3:q64:p2;silver:w1'] [--tenant-batching fuse|isolate]
+           [--tenant-depth N]
            [--trace out/trace.json] [--metrics out/metrics.csv]
            [--parallel] [--threads N]
            [--clusters N] [--small] [--out out/serve.json]
@@ -127,7 +130,7 @@ fn serve(args: &Args) {
             std::process::exit(2);
         }
     };
-    let wl = WorkloadSpec::ratio(
+    let mut wl = WorkloadSpec::ratio(
         args.f64("ratio", 0.5),
         args.usize("requests", 200),
         args.u64("seed", 42),
@@ -211,6 +214,36 @@ fn serve(args: &Args) {
             std::process::exit(2);
         }
     };
+    // Multi-tenancy: off unless --tenants names a contract (weights drive
+    // deficit-round-robin fair dispatch; quotas and floors gate admission;
+    // the report gains per-tenant views). The trace generator is
+    // tenant-blind, so requests are tagged round-robin across the named
+    // tenants — deterministic, and evenly loaded so the fair-share split is
+    // visible in the report.
+    let tenancy = args.str_opt("tenants").map(|spec| {
+        let mut cfg = TenancyConfig::parse(spec).unwrap_or_else(|e| {
+            eprintln!("bad --tenants spec: {e}");
+            std::process::exit(2);
+        });
+        match args.str("tenant-batching", "fuse").as_str() {
+            "fuse" => {}
+            "isolate" => cfg = cfg.with_fuse_across_tenants(false),
+            other => {
+                eprintln!("unknown --tenant-batching '{other}' (fuse|isolate)");
+                std::process::exit(2);
+            }
+        }
+        if let Some(d) = args.str_opt("tenant-depth") {
+            cfg = cfg.with_depth(d.parse().expect("--tenant-depth expects an integer"));
+        }
+        cfg
+    });
+    if let Some(cfg) = &tenancy {
+        let k = cfg.len() as u32;
+        for (i, r) in wl.requests.iter_mut().enumerate() {
+            r.tenant = (i as u32) % k;
+        }
+    }
     // Observability: recording turns on when either export path is given.
     // It is read-only — the report below is byte-identical either way.
     let trace_out = args.str_opt("trace");
@@ -226,6 +259,9 @@ fn serve(args: &Args) {
         sim,
         ServeConfig { policy, slo, batch, admission, autoscale, obs },
     );
+    if let Some(cfg) = tenancy {
+        engine = engine.with_tenancy(cfg);
+    }
     let r = engine.run(&wl);
     print!("{}", report::summarize_serve(&r));
     if let Some(tr) = &engine.obs {

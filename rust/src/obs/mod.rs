@@ -200,6 +200,11 @@ pub struct EpochSample {
 pub trait ObsSink {
     /// One request lifecycle event.
     fn request_event(&mut self, _ev: ReqEvent) {}
+    /// §Multi-tenancy: attribute a request to its tenant. Emitted once per
+    /// request at release when tenancy is on; a pure annotation, never part
+    /// of the causal event stream (so the 8-variant [`ReqEventKind`] space
+    /// — and every exporter matching on it — is untouched).
+    fn tenant_tag(&mut self, _request_id: u64, _tenant: u32) {}
     /// One autoscaler decision.
     fn scale_event(&mut self, _ev: &ScaleEvent) {}
     /// One per-epoch fleet snapshot.
@@ -315,6 +320,8 @@ pub struct RequestSpan {
     pub last_task_end: Option<Cycle>,
     /// Completion (cycle, cluster).
     pub completed: Option<(Cycle, u32)>,
+    /// Owning tenant (tenancy-on runs only; `None` when untagged).
+    pub tenant: Option<u32>,
 }
 
 /// The in-memory recorder: collects lifecycle events, scale decisions, the
@@ -334,6 +341,8 @@ pub struct ObsTrace {
     member_batch: FxHashMap<u64, u64>,
     /// fused emission id → member ids, in arrival order.
     batch_members: FxHashMap<u64, Vec<u64>>,
+    /// §Multi-tenancy: request id → tenant (from `tenant_tag` hooks).
+    tenants: FxHashMap<u64, u32>,
     makespan: Cycle,
 }
 
@@ -348,8 +357,14 @@ impl ObsTrace {
             tasks: Vec::new(),
             member_batch: FxHashMap::default(),
             batch_members: FxHashMap::default(),
+            tenants: FxHashMap::default(),
             makespan: 0,
         }
+    }
+
+    /// §Multi-tenancy: the tenant a request was attributed to, if tagged.
+    pub fn tenant_of(&self, request_id: u64) -> Option<u32> {
+        self.tenants.get(&request_id).copied()
     }
 
     /// Seal the trace at aggregation: stamp the run span and fan the
@@ -440,7 +455,11 @@ impl ObsTrace {
     /// task records resolve through the fused batch when coalesced).
     pub fn span_of(&self, request_id: u64) -> RequestSpan {
         let emission = self.emission_of(request_id);
-        let mut span = RequestSpan { request_id, ..RequestSpan::default() };
+        let mut span = RequestSpan {
+            request_id,
+            tenant: self.tenant_of(request_id),
+            ..RequestSpan::default()
+        };
         for ev in &self.events {
             if ev.request_id == request_id {
                 match ev.kind {
@@ -479,6 +498,10 @@ impl ObsSink for ObsTrace {
             self.batch_members.entry(batch_id).or_default().push(ev.request_id);
         }
         self.events.push(ev);
+    }
+
+    fn tenant_tag(&mut self, request_id: u64, tenant: u32) {
+        self.tenants.insert(request_id, tenant);
     }
 
     fn scale_event(&mut self, ev: &ScaleEvent) {
@@ -559,5 +582,17 @@ mod tests {
         assert_eq!(span.batch, Some(fused));
         assert_eq!(span.dispatched, Some((6, 0)));
         assert_eq!(t.request_ids(), vec![10, 11], "fused ids are not trace requests");
+    }
+
+    #[test]
+    fn tenant_tags_annotate_spans_without_entering_the_event_stream() {
+        let mut t = ObsTrace::new(ObsPolicy::on(), 1.0, 1);
+        t.request_event(ReqEvent { request_id: 5, cycle: 0, kind: ReqEventKind::Arrival });
+        t.tenant_tag(5, 2);
+        assert_eq!(t.tenant_of(5), Some(2));
+        assert_eq!(t.tenant_of(6), None);
+        assert_eq!(t.span_of(5).tenant, Some(2));
+        assert_eq!(t.span_of(6).tenant, None);
+        assert_eq!(t.events().len(), 1, "tags must not grow the causal event stream");
     }
 }

@@ -130,6 +130,11 @@ pub enum ShedReason {
     /// preceded by at least one deferral unless the headroom was already
     /// gone at first sight).
     HeadroomExhausted,
+    /// §Multi-tenancy: the owning tenant was already at its concurrent-work
+    /// quota ([`crate::serve::tenant::TenantSpec::quota`]) when the request
+    /// was released. Decided by the tenancy gate, recorded here so the shed
+    /// ledger stays the single refusal log.
+    TenantQuotaExceeded,
 }
 
 /// How a *served* request traveled through the admission stage. Shed
@@ -159,6 +164,8 @@ pub struct ShedRequest {
     /// Times the request was deferred before being shed.
     pub deferrals: u32,
     pub reason: ShedReason,
+    /// Owning tenant (0 for single-tenant serving).
+    pub tenant: u32,
 }
 
 /// One admission verdict. [`AdmissionController::decide`] exposes the raw
@@ -311,32 +318,7 @@ impl AdmissionController {
     ) -> Option<WorkloadRequest> {
         let deferrals = self.deferral_counts.get(&req.id).copied().unwrap_or(0);
         match self.decide(&req, now, deferrals, backlog, registry) {
-            Decision::Admit => {
-                obs.request_event(ReqEvent {
-                    request_id: req.id,
-                    cycle: now,
-                    kind: ReqEventKind::Admitted { deferred: deferrals > 0 },
-                });
-                let cost = match self.policy {
-                    AdmissionPolicy::DeadlineFeasible => {
-                        // Outstanding estimates are in proc-cycles; the wall-
-                        // clock floor spread back over the cluster's procs.
-                        self.floor(req.model_id, registry).saturating_mul(self.compute_procs)
-                    }
-                    _ => 0,
-                };
-                backlog.note_admitted(cost);
-                let mut out = req;
-                if deferrals > 0 {
-                    // The stage parked this request, so the cluster must not
-                    // book it before the re-release cycle: re-stamp the
-                    // arrival it dispatches under. The trace arrival stays
-                    // available via [`Self::original_arrival`] for latency
-                    // and deadline accounting.
-                    out.arrival = now;
-                }
-                Some(out)
-            }
+            Decision::Admit => Some(self.record_admit(req, now, deferrals, backlog, registry, obs)),
             Decision::Defer { until } => {
                 debug_assert!(until > now, "deferred release must be in the future");
                 obs.request_event(ReqEvent {
@@ -351,26 +333,121 @@ impl AdmissionController {
                 None
             }
             Decision::Shed(reason) => {
-                obs.request_event(ReqEvent {
-                    request_id: req.id,
-                    cycle: now,
-                    kind: ReqEventKind::Shed { reason },
-                });
-                let family = registry.graph(req.model_id).family;
-                self.shed.push(ShedRequest {
-                    request_id: req.id,
-                    model_id: req.model_id,
-                    family,
-                    arrival: req.arrival,
-                    priority: req.priority,
-                    decided_at: now,
-                    deadline: req.arrival.saturating_add(self.slo.deadline_for(family)),
-                    deferrals,
-                    reason,
-                });
+                self.record_shed(req, now, deferrals, reason, registry, obs);
                 None
             }
         }
+    }
+
+    /// The single admit path: event, backlog credit, deferred-release
+    /// re-stamp. Shared between policy-driven admits and tenant-floor
+    /// [`Self::force_admit`]s so both leave identical state behind.
+    fn record_admit(
+        &mut self,
+        req: WorkloadRequest,
+        now: Cycle,
+        deferrals: u32,
+        backlog: &mut Backlog,
+        registry: &ModelRegistry,
+        obs: &mut dyn ObsSink,
+    ) -> WorkloadRequest {
+        obs.request_event(ReqEvent {
+            request_id: req.id,
+            cycle: now,
+            kind: ReqEventKind::Admitted { deferred: deferrals > 0 },
+        });
+        let cost = match self.policy {
+            AdmissionPolicy::DeadlineFeasible => {
+                // Outstanding estimates are in proc-cycles; the wall-
+                // clock floor spread back over the cluster's procs.
+                self.floor(req.model_id, registry).saturating_mul(self.compute_procs)
+            }
+            _ => 0,
+        };
+        backlog.note_admitted(cost);
+        let mut out = req;
+        if deferrals > 0 {
+            // The stage parked this request, so the cluster must not
+            // book it before the re-release cycle: re-stamp the
+            // arrival it dispatches under. The trace arrival stays
+            // available via [`Self::original_arrival`] for latency
+            // and deadline accounting.
+            out.arrival = now;
+        }
+        out
+    }
+
+    /// The single shed path: event plus ledger entry.
+    fn record_shed(
+        &mut self,
+        req: WorkloadRequest,
+        now: Cycle,
+        deferrals: u32,
+        reason: ShedReason,
+        registry: &ModelRegistry,
+        obs: &mut dyn ObsSink,
+    ) {
+        obs.request_event(ReqEvent {
+            request_id: req.id,
+            cycle: now,
+            kind: ReqEventKind::Shed { reason },
+        });
+        let family = registry.graph(req.model_id).family;
+        self.shed.push(ShedRequest {
+            request_id: req.id,
+            model_id: req.model_id,
+            family,
+            arrival: req.arrival,
+            priority: req.priority,
+            decided_at: now,
+            deadline: req.arrival.saturating_add(self.slo.deadline_for(family)),
+            deferrals,
+            reason,
+            tenant: req.tenant,
+        });
+    }
+
+    /// §Multi-tenancy: admit `req` unconditionally, bypassing the policy's
+    /// verdict (a tenant under its admission floor is guaranteed capacity).
+    /// Leaves exactly the state a policy admit would: the Admitted event,
+    /// the same-epoch backlog credit, and the deferred-release re-stamp.
+    pub fn force_admit(
+        &mut self,
+        req: WorkloadRequest,
+        now: Cycle,
+        backlog: &mut Backlog,
+        registry: &ModelRegistry,
+        obs: &mut dyn ObsSink,
+    ) -> WorkloadRequest {
+        let deferrals = self.deferral_counts.get(&req.id).copied().unwrap_or(0);
+        self.record_admit(req, now, deferrals, backlog, registry, obs)
+    }
+
+    /// §Multi-tenancy: shed `req` with an externally decided reason (tenant
+    /// quota). Records the same event and ledger entry a policy shed would.
+    pub fn force_shed(
+        &mut self,
+        req: WorkloadRequest,
+        now: Cycle,
+        reason: ShedReason,
+        registry: &ModelRegistry,
+        obs: &mut dyn ObsSink,
+    ) {
+        let deferrals = self.deferral_counts.get(&req.id).copied().unwrap_or(0);
+        self.record_shed(req, now, deferrals, reason, registry, obs);
+    }
+
+    /// §Multi-tenancy: remove and return every deferred request whose
+    /// release cycle has come, in deterministic (release, id) order, WITHOUT
+    /// re-offering them. The tenancy gate routes each one back through its
+    /// quota/floor checks before the policy sees it again — [`Self::poll`]
+    /// would bypass the gate.
+    pub fn take_due(&mut self, now: Cycle) -> Vec<WorkloadRequest> {
+        let due: Vec<(Cycle, u64)> =
+            self.deferred.range(..=(now, u64::MAX)).map(|(&key, _)| key).collect();
+        due.into_iter()
+            .map(|key| self.deferred.remove(&key).expect("due key vanished"))
+            .collect()
     }
 
     /// Re-offer every deferred request whose release cycle has come.

@@ -126,11 +126,18 @@ struct PendingQueue {
 pub struct DynamicBatcher {
     policy: BatchPolicy,
     slo: SloPolicy,
-    /// Coalescing queues keyed by base model id. BTreeMap: wait-deadline
-    /// flushes must scan in a deterministic order.
-    queues: BTreeMap<u32, PendingQueue>,
+    /// §Multi-tenancy: when set, requests only coalesce with same-tenant
+    /// peers (the queue key grows a tenant group). Off by default — and the
+    /// default group is the constant 0, so single-tenant queue keys, and
+    /// therefore BTreeMap flush order, are bit-identical to the pre-tenancy
+    /// batcher.
+    isolate_tenants: bool,
+    /// Coalescing queues keyed by (base model id, tenant group). BTreeMap:
+    /// wait-deadline flushes must scan in a deterministic order.
+    queues: BTreeMap<(u32, u32), PendingQueue>,
     /// Fused registry model id per (base model id, batch size) — each
-    /// distinct batch width needs its own rewritten graph, built once.
+    /// distinct batch width needs its own rewritten graph, built once and
+    /// shared across tenants (the graph has no tenant in it).
     fused_models: HashMap<(u32, u32), u32>,
     /// Member lists of every fused emission, by fused request id.
     batches: HashMap<u64, FusedBatch>,
@@ -142,10 +149,27 @@ impl DynamicBatcher {
         DynamicBatcher {
             policy,
             slo,
+            isolate_tenants: false,
             queues: BTreeMap::new(),
             fused_models: HashMap::new(),
             batches: HashMap::new(),
             next_fused: FUSED_ID_BASE,
+        }
+    }
+
+    /// §Multi-tenancy: restrict coalescing to same-tenant members (builder
+    /// style). With `false` (the default) batches fuse across tenants.
+    pub fn with_tenant_isolation(mut self, isolate: bool) -> DynamicBatcher {
+        self.isolate_tenants = isolate;
+        self
+    }
+
+    /// Tenant group a request coalesces under.
+    fn group_of(&self, req: &WorkloadRequest) -> u32 {
+        if self.isolate_tenants {
+            req.tenant
+        } else {
+            0
         }
     }
 
@@ -193,14 +217,14 @@ impl DynamicBatcher {
             kind: ReqEventKind::Coalescing { model_id: req.model_id },
         });
         let family = registry.graph(req.model_id).family;
+        let key = (req.model_id, self.group_of(&req));
         let q = self
             .queues
-            .entry(req.model_id)
+            .entry(key)
             .or_insert_with(|| PendingQueue { family, since: now, members: Vec::new() });
         q.members.push(req);
         if q.members.len() as u32 >= self.policy.cap() {
-            let model_id = req.model_id;
-            vec![self.flush(model_id, now, registry, obs)]
+            vec![self.flush(key, now, registry, obs)]
         } else {
             Vec::new()
         }
@@ -227,24 +251,25 @@ impl DynamicBatcher {
         registry: &mut ModelRegistry,
         obs: &mut dyn ObsSink,
     ) -> Vec<WorkloadRequest> {
-        let due: Vec<u32> = self
+        let due: Vec<(u32, u32)> = self
             .queues
             .iter()
             .filter(|(_, q)| drain || now >= q.since.saturating_add(self.wait_budget(q.family)))
-            .map(|(&model_id, _)| model_id)
+            .map(|(&key, _)| key)
             .collect();
-        due.into_iter().map(|m| self.flush(m, now, registry, obs)).collect()
+        due.into_iter().map(|k| self.flush(k, now, registry, obs)).collect()
     }
 
     /// Emit one queue as a single load-balancer submission.
     fn flush(
         &mut self,
-        model_id: u32,
+        key: (u32, u32),
         now: Cycle,
         registry: &mut ModelRegistry,
         obs: &mut dyn ObsSink,
     ) -> WorkloadRequest {
-        let q = self.queues.remove(&model_id).expect("flush of an absent queue");
+        let model_id = key.0;
+        let q = self.queues.remove(&key).expect("flush of an absent queue");
         debug_assert!(!q.members.is_empty());
         if q.members.len() == 1 && q.members[0].arrival == now {
             // A singleton flushed with zero wait is just the original
@@ -279,11 +304,15 @@ impl DynamicBatcher {
                 kind: ReqEventKind::BatchFormed { batch_id: id, size: batch },
             });
         }
+        // The emission inherits the oldest member's tenant for attribution;
+        // completion fan-out restores each member's own tenant. 0 whenever
+        // tenancy is off (every request carries tenant 0 then).
+        let tenant = q.members[0].tenant;
         self.batches.insert(
             id,
             FusedBatch { base_model_id: model_id, fused_model_id, members: q.members },
         );
-        WorkloadRequest { id, model_id: fused_model_id, arrival: now, priority }
+        WorkloadRequest { id, model_id: fused_model_id, arrival: now, priority, tenant }
     }
 
     /// Earliest cycle at which a waiting queue must flush — a wake-up point
@@ -443,6 +472,31 @@ mod tests {
         assert_eq!(out[1].model_id, 3, "same-cycle singleton drains as itself via fan-out id");
         assert_eq!(b.pending(), 0);
         assert_eq!(b.next_flush(), None);
+    }
+
+    /// §Multi-tenancy: with isolation off two tenants fuse into one batch
+    /// (the pre-tenancy behavior, since every group is 0); with isolation on
+    /// the same offers land in per-tenant queues and never co-batch.
+    #[test]
+    fn tenant_isolation_splits_coalescing_queues() {
+        let mut reg = registry();
+        let policy = BatchPolicy::Sized { max_batch: 2, max_wait: 1_000_000 };
+        let mut fused = DynamicBatcher::new(policy, SloPolicy::default());
+        assert!(fused.offer(req(0, 2, 10).with_tenant(0), 10, &mut reg).is_empty());
+        let out = fused.offer(req(1, 2, 20).with_tenant(1), 20, &mut reg);
+        assert_eq!(out.len(), 1, "fuse-across-tenants coalesces both");
+        assert_eq!(fused.batch_of(out[0].id).unwrap().members.len(), 2);
+        assert_eq!(out[0].tenant, 0, "emission carries the oldest member's tenant");
+
+        let mut reg = registry();
+        let mut iso = DynamicBatcher::new(policy, SloPolicy::default())
+            .with_tenant_isolation(true);
+        assert!(iso.offer(req(0, 2, 10).with_tenant(0), 10, &mut reg).is_empty());
+        assert!(iso.offer(req(1, 2, 20).with_tenant(1), 20, &mut reg).is_empty());
+        assert_eq!(iso.pending(), 2, "isolated tenants wait in separate queues");
+        let out = iso.poll(20, true, &mut reg);
+        assert_eq!(out.len(), 2);
+        assert_eq!(iso.fused_count(), 0, "no cross-tenant fusion ever forms");
     }
 
     #[test]

@@ -13,10 +13,18 @@
 //!
 //! 1. **Release** — requests enter the serving path at their arrival cycle,
 //!    never earlier.
+//! 1a. **Tenant gate** — with a [`TenancyConfig`] installed
+//!    ([`ServeEngine::with_tenancy`]), each release is classified to its
+//!    tenant and passes the per-tenant quota/floor gate
+//!    ([`tenant::TenancyController`]) before the base admission policy
+//!    decides; dispatch runs deficit-round-robin over per-tenant queues
+//!    ([`LoadBalancer::enable_fair_share`]). Skipped entirely — bit for
+//!    bit — when no tenancy is configured.
 //! 1b. **Admit** — the admission stage ([`admission::AdmissionController`])
 //!    sheds or defers requests the fleet cannot serve in time (skipped
-//!    entirely — bit for bit — when [`AdmissionPolicy::Open`]): shed work
-//!    never costs a cycle, deferred work re-enters release later.
+//!    entirely — bit for bit — when [`AdmissionPolicy::Open`] and tenancy
+//!    is off): shed work never costs a cycle, deferred work re-enters
+//!    release later.
 //! 2. **Coalesce** — the dynamic batcher ([`batch::DynamicBatcher`]) holds
 //!    same-model requests back up to a size cap / wait deadline and emits
 //!    fused multi-batch requests (a pass-through when
@@ -54,6 +62,7 @@ pub mod admission;
 pub mod autoscale;
 pub mod batch;
 pub mod slo;
+pub mod tenant;
 
 pub use admission::{
     AdmissionController, AdmissionPolicy, Decision, Disposition, ShedReason, ShedRequest,
@@ -61,6 +70,7 @@ pub use admission::{
 pub use autoscale::{Autoscaler, AutoscalePolicy, PowerState, ScaleDirection, ScaleEvent};
 pub use batch::{BatchPolicy, DynamicBatcher, FusedBatch};
 pub use slo::SloPolicy;
+pub use tenant::{TenancyConfig, TenancyController, TenantCounters, TenantSpec};
 
 pub use crate::obs::ObsPolicy;
 
@@ -138,6 +148,9 @@ pub struct ServedRequest {
     /// shed requests never complete, so they appear in
     /// [`ServeReport::shed`] instead of here).
     pub disposition: Disposition,
+    /// The tenant the request was admitted under (always 0 when no
+    /// [`TenancyConfig`] is installed).
+    pub tenant: u32,
 }
 
 /// Aggregated result of one online serving run.
@@ -194,6 +207,12 @@ pub struct ServeReport {
     /// Static energy a fixed fleet (every cluster powered for the whole
     /// span) pays — the baseline the saving is measured against.
     pub fixed_fleet_static_energy_j: f64,
+    /// The tenancy configuration the run used (`None` = tenancy off; the
+    /// tenant JSON keys are gated on it, so the tenancy-off report stays
+    /// byte-identical to the pre-tenancy one).
+    pub tenancy: Option<TenancyConfig>,
+    /// Per-tenant gate tallies, indexed by tenant id (empty when off).
+    pub tenant_counters: Vec<TenantCounters>,
     /// Latency summary over `served`, computed once at aggregation (the
     /// percentile accessors all read this cache).
     latency_stats: Option<Summary>,
@@ -282,6 +301,74 @@ impl ServeReport {
             return None;
         }
         Some(shed as f64 / (served + shed) as f64)
+    }
+
+    /// Offered requests (served + shed) of one tenant.
+    pub fn tenant_requests(&self, tenant: u32) -> usize {
+        self.tenant_served(tenant) + self.tenant_shed(tenant)
+    }
+
+    /// Served requests of one tenant.
+    pub fn tenant_served(&self, tenant: u32) -> usize {
+        self.served.iter().filter(|r| r.tenant == tenant).count()
+    }
+
+    /// Shed requests of one tenant (quota sheds and base-policy sheds).
+    pub fn tenant_shed(&self, tenant: u32) -> usize {
+        self.shed.iter().filter(|s| s.tenant == tenant).count()
+    }
+
+    /// Useful operations served for one tenant — the quantity the DRR
+    /// weight vector conserves under saturation.
+    pub fn tenant_ops(&self, tenant: u32) -> u64 {
+        self.served.iter().filter(|r| r.tenant == tenant).map(|r| r.ops).sum()
+    }
+
+    /// All-requests deadline-miss rate of one tenant (shed counts as a
+    /// miss — the tenant's user never got an answer), 0 when never offered.
+    pub fn tenant_miss_rate(&self, tenant: u32) -> f64 {
+        let offered = self.tenant_requests(tenant);
+        if offered == 0 {
+            return 0.0;
+        }
+        let missed = self.served.iter().filter(|r| r.tenant == tenant && !r.met).count()
+            + self.tenant_shed(tenant);
+        missed as f64 / offered as f64
+    }
+
+    /// Fraction of one tenant's offered requests that were shed.
+    pub fn tenant_shed_rate(&self, tenant: u32) -> f64 {
+        let offered = self.tenant_requests(tenant);
+        if offered == 0 {
+            return 0.0;
+        }
+        self.tenant_shed(tenant) as f64 / offered as f64
+    }
+
+    /// p99 latency of one tenant's served requests in milliseconds — the
+    /// isolation bound `rust/tests/tenancy.rs` pins. 0 when nothing served.
+    pub fn tenant_p99_ms(&self, tenant: u32) -> f64 {
+        let lat: Vec<f64> = self
+            .served
+            .iter()
+            .filter(|r| r.tenant == tenant)
+            .map(|r| r.latency as f64)
+            .collect();
+        if lat.is_empty() {
+            return 0.0;
+        }
+        self.to_ms(Summary::of(&lat).p99)
+    }
+
+    /// Goodput in TOPS restricted to one tenant's deadline-met requests.
+    pub fn tenant_goodput_tops(&self, tenant: u32) -> f64 {
+        if self.makespan == 0 {
+            return 0.0;
+        }
+        let good: u64 =
+            self.served.iter().filter(|r| r.tenant == tenant && r.met).map(|r| r.ops).sum();
+        let seconds = self.makespan as f64 / (self.clock_ghz * 1e9);
+        good as f64 / seconds / 1e12
     }
 
     /// Powered cluster-cycles summed across the fleet — the occupancy
@@ -416,6 +503,42 @@ impl ServeReport {
                     .set("autoscale_warmup_cycles", warmup);
             }
         }
+        // Tenant keys appear only when a tenancy config is installed, so
+        // the tenancy-off report stays byte-identical to the pre-tenancy
+        // one (the same discipline as the batching / admission / autoscale
+        // keys above). Every per-tenant view is derived from the same
+        // served/shed records the aggregate keys read.
+        if let Some(tcfg) = &self.tenancy {
+            j.set("tenant_count", tcfg.len()).set(
+                "tenant_batching",
+                if tcfg.fuse_across_tenants { "fuse" } else { "isolate" },
+            );
+            if tcfg.depth != tenant::UNBOUNDED_DEPTH {
+                j.set("tenant_depth", tcfg.depth);
+            }
+            let mut arr = Vec::with_capacity(tcfg.len());
+            for (t, spec) in tcfg.specs.iter().enumerate() {
+                let t = t as u32;
+                let mut o = Json::obj();
+                o.set("name", spec.name.as_str())
+                    .set("weight", spec.weight)
+                    .set("floor", spec.floor)
+                    .set("class", spec.priority)
+                    .set("requests", self.tenant_requests(t))
+                    .set("served", self.tenant_served(t))
+                    .set("shed", self.tenant_shed(t))
+                    .set("ops", self.tenant_ops(t))
+                    .set("miss_rate", self.tenant_miss_rate(t))
+                    .set("shed_rate", self.tenant_shed_rate(t))
+                    .set("p99_ms", self.tenant_p99_ms(t))
+                    .set("goodput_tops", self.tenant_goodput_tops(t));
+                if let Some(q) = spec.quota {
+                    o.set("quota", q);
+                }
+                arr.push(o);
+            }
+            j.set("tenants", Json::Arr(arr));
+        }
         if let Some(m) = self.miss_rate_for(ModelFamily::Cnn) {
             j.set("miss_rate_cnn", m);
         }
@@ -441,6 +564,7 @@ fn scored(
     dispatched_at: Cycle,
     end: Cycle,
     disposition: Disposition,
+    tenant: u32,
 ) -> ServedRequest {
     let graph = registry.graph(model_id);
     let deadline = arrival + slo.deadline_for(graph.family);
@@ -461,6 +585,7 @@ fn scored(
         // re-walks model graphs.
         ops: registry.total_ops(model_id),
         disposition,
+        tenant,
     }
 }
 
@@ -512,6 +637,10 @@ pub struct ServeEngine {
     pub sched: SchedulerKind,
     pub sim: SimConfig,
     pub cfg: ServeConfig,
+    /// Multi-tenant contract (`None` = tenancy off: the tenant gate, fair
+    /// dispatch, and tenant report keys are all skipped bit for bit).
+    /// Lives outside [`ServeConfig`] so that struct stays `Copy`.
+    pub tenancy: Option<TenancyConfig>,
     /// The trace recorded by the last [`Self::run`] (`None` until a run
     /// completes with [`ObsPolicy`] enabled).
     pub obs: Option<ObsTrace>,
@@ -524,7 +653,7 @@ impl ServeEngine {
         sim: SimConfig,
         cfg: ServeConfig,
     ) -> ServeEngine {
-        ServeEngine { hw, sched, sim, cfg, obs: None }
+        ServeEngine { hw, sched, sim, cfg, tenancy: None, obs: None }
     }
 
     pub fn with_policy(mut self, policy: DispatchPolicy) -> ServeEngine {
@@ -549,6 +678,11 @@ impl ServeEngine {
 
     pub fn with_obs(mut self, obs: ObsPolicy) -> ServeEngine {
         self.cfg.obs = obs;
+        self
+    }
+
+    pub fn with_tenancy(mut self, tenancy: TenancyConfig) -> ServeEngine {
+        self.tenancy = Some(tenancy);
         self
     }
 
@@ -590,6 +724,21 @@ impl ServeEngine {
         let mut admission =
             AdmissionController::new(self.cfg.admission, self.cfg.slo, &self.hw, &self.sim);
         let mut autoscaler = Autoscaler::new(self.cfg.autoscale, self.hw.clusters);
+        // §Multi-tenancy: the gate, the batcher's isolation knob, and the
+        // balancer's fair-share dispatch all hang off one Option — with no
+        // config none of them exists (the off path is byte-identical to the
+        // pre-tenancy engine, pinned by rust/tests/serve.rs). The quantum is
+        // taken over *base* models: fused emissions can cost more and simply
+        // span several deficit rounds.
+        let mut tc = self.tenancy.clone().map(TenancyController::new);
+        if let Some(cfg) = tc.as_ref().map(|t| t.config()) {
+            batcher = batcher.with_tenant_isolation(!cfg.fuse_across_tenants);
+            lb.enable_fair_share(&cfg.weights(), cfg.depth, TenancyConfig::quantum(&registry));
+        }
+        // Completion high-water mark per cluster for the tenant outstanding
+        // debit: `completed` is append-only, so each epoch scans only the
+        // new tail (the same O(new work) discipline as the status table).
+        let mut completed_cursor = vec![0usize; clusters.len()];
 
         // The trace in arrival order (the generator emits it sorted; sort
         // defensively for hand-built traces, stable on same-cycle ids).
@@ -614,7 +763,7 @@ impl ServeEngine {
             //    off). Never earlier — the engine has no knowledge of the
             //    future trace.
             let mut emitted = Vec::new();
-            if admission.enabled() {
+            if admission.enabled() || tc.is_some() {
                 // Deferred re-releases first (they arrived earlier), then
                 // fresh arrivals; every same-epoch admission is folded into
                 // the backlog snapshot so the stage sees its own decisions.
@@ -623,20 +772,46 @@ impl ServeEngine {
                 // so count them toward the queue depth here.
                 let mut backlog = LoadBalancer::backlog(&clusters, &registry);
                 backlog.queued_requests += batcher.pending();
-                let mut admitted = admission.poll_traced(now, &mut backlog, &registry, sink);
+                // With tenancy on, every release — deferred or fresh — goes
+                // back through the gate (`poll` would bypass the quota and
+                // floor checks); without it the paths are exactly PR 7's.
+                let mut admitted = match tc.as_mut() {
+                    Some(t) => {
+                        let mut v = Vec::new();
+                        for r in admission.take_due(now) {
+                            v.extend(t.gate(r, now, &mut admission, &mut backlog, &registry, sink));
+                        }
+                        v
+                    }
+                    None => admission.poll_traced(now, &mut backlog, &registry, sink),
+                };
                 while next < n && trace[next].arrival <= now {
                     sink.request_event(ReqEvent {
                         request_id: trace[next].id,
                         cycle: trace[next].arrival,
                         kind: ReqEventKind::Arrival,
                     });
-                    admitted.extend(admission.offer_traced(
-                        trace[next],
-                        now,
-                        &mut backlog,
-                        &registry,
-                        sink,
-                    ));
+                    match tc.as_mut() {
+                        Some(t) => {
+                            let r = t.classify(trace[next]);
+                            sink.tenant_tag(r.id, r.tenant);
+                            admitted.extend(t.gate(
+                                r,
+                                now,
+                                &mut admission,
+                                &mut backlog,
+                                &registry,
+                                sink,
+                            ));
+                        }
+                        None => admitted.extend(admission.offer_traced(
+                            trace[next],
+                            now,
+                            &mut backlog,
+                            &registry,
+                            sink,
+                        )),
+                    }
                     next += 1;
                 }
                 for r in admitted {
@@ -678,9 +853,14 @@ impl ServeEngine {
                 if !lb.model_table.contains_key(&e.model_id) {
                     lb.register_model(e.model_id, e.model_id);
                 }
-                // Same synthetic 16-tenant user pool as the offline
-                // coordinator; dispatch priority travels on the request.
-                lb.submit(e, (e.id % 16) as u32)
+                // With tenancy on the submit key IS the tenant id — fair
+                // dispatch groups its per-tenant queues by it (a fused
+                // cross-tenant batch is charged to its first member).
+                // Without it, the same synthetic 16-tenant user pool as the
+                // offline coordinator; dispatch priority travels on the
+                // request either way.
+                let user = if tc.is_some() { e.tenant } else { (e.id % 16) as u32 };
+                lb.submit(e, user)
                     .expect("the engine registers every model id it submits");
             }
 
@@ -712,6 +892,25 @@ impl ServeEngine {
             //    fold and record below runs sequentially at this barrier.
             clusters = advance_clusters(clusters, &registry, now, pool.as_ref());
             epochs += 1;
+            // 3b. Debit tenant quotas for this epoch's completions: fused
+            //     completions fan back out to their members' tenants, solo
+            //     completions look the tenant up from the gate's record.
+            //     Read-only over the append-only completion logs.
+            if let Some(t) = tc.as_mut() {
+                for c in &clusters {
+                    let cur = &mut completed_cursor[c.id as usize];
+                    for r in &c.state.completed[*cur..] {
+                        if let Some(b) = batcher.batch_of(r.request_id) {
+                            for m in &b.members {
+                                t.note_completed(m.tenant);
+                            }
+                        } else if let Some(ten) = t.tenant_of(r.request_id) {
+                            t.note_completed(ten);
+                        }
+                    }
+                    *cur = c.state.completed.len();
+                }
+            }
             if let Some(rec) = recorder.as_mut() {
                 rec.epoch_sample(fleet_sample(
                     epochs - 1,
@@ -764,8 +963,17 @@ impl ServeEngine {
             }
         }
 
-        let report = self
-            .aggregate(wl, &registry, &lb, &batcher, &admission, &autoscaler, &clusters, epochs);
+        let report = self.aggregate(
+            wl,
+            &registry,
+            &lb,
+            &batcher,
+            &admission,
+            &autoscaler,
+            tc.as_ref(),
+            &clusters,
+            epochs,
+        );
         if let Some(mut rec) = recorder {
             // Harvest the per-task timelines and close the request spans
             // with their completion cycles — all read-only over state the
@@ -788,6 +996,7 @@ impl ServeEngine {
         batcher: &DynamicBatcher,
         admission: &AdmissionController,
         autoscaler: &Autoscaler,
+        tenancy: Option<&TenancyController>,
         clusters: &[SvCluster],
         epochs: u64,
     ) -> ServeReport {
@@ -847,7 +1056,8 @@ impl ServeEngine {
                     // and deadline accounting.
                     for m in &b.members {
                         // A deferred member dispatched under its re-release
-                        // cycle; score it from the true trace arrival.
+                        // cycle; score it from the true trace arrival. The
+                        // member carries its (classified) tenant directly.
                         let arrival = admission.original_arrival(m.id).unwrap_or(m.arrival);
                         let s = scored(
                             registry,
@@ -860,6 +1070,7 @@ impl ServeEngine {
                             stamp,
                             r.end,
                             admission.disposition_of(m.id),
+                            m.tenant,
                         );
                         total_ops += s.ops;
                         served.push(s);
@@ -867,6 +1078,9 @@ impl ServeEngine {
                 } else {
                     let arrival =
                         admission.original_arrival(r.request_id).unwrap_or(submitted);
+                    let tenant = tenancy
+                        .and_then(|t| t.tenant_of(r.request_id))
+                        .unwrap_or(0);
                     let s = scored(
                         registry,
                         &self.cfg.slo,
@@ -878,6 +1092,7 @@ impl ServeEngine {
                         stamp,
                         r.end,
                         admission.disposition_of(r.request_id),
+                        tenant,
                     );
                     total_ops += s.ops;
                     served.push(s);
@@ -924,6 +1139,8 @@ impl ServeEngine {
             scale_log: autoscaler.log().to_vec(),
             static_energy_j,
             fixed_fleet_static_energy_j,
+            tenancy: self.tenancy.clone(),
+            tenant_counters: tenancy.map(|t| t.counters().to_vec()).unwrap_or_default(),
             latency_stats,
         }
     }
@@ -1018,6 +1235,27 @@ mod tests {
         assert_eq!(rep.served.len(), 16);
         // all three clusters exist in the records' value range
         assert!(rep.served.iter().all(|r| r.cluster < 3));
+    }
+
+    #[test]
+    fn tenanted_run_serves_all_and_attributes_tenants() {
+        let a = WorkloadSpec::ratio(0.5, 6, 1).generate();
+        let b = WorkloadSpec::ratio(0.5, 6, 2).generate();
+        let wl = Workload::merge_tenants(&[(0, a), (1, b)]);
+        let cfg = TenancyConfig::parse("gold:w3;silver:w1").unwrap();
+        let rep = small_engine(SchedulerKind::Has).with_tenancy(cfg).run(&wl);
+        assert_eq!(rep.served.len(), 12);
+        assert_eq!(rep.tenant_served(0), 6);
+        assert_eq!(rep.tenant_served(1), 6);
+        assert_eq!(rep.tenant_counters.len(), 2);
+        assert_eq!(rep.tenant_counters[0].admitted, 6);
+        assert_eq!(rep.tenant_counters[0].completed, 6);
+        let j = rep.to_json();
+        assert_eq!(j.get("tenant_count").and_then(|v| v.as_f64()), Some(2.0));
+        let tenants = j.get("tenants").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(tenants.len(), 2);
+        assert_eq!(tenants[0].get("name").and_then(|v| v.as_str()), Some("gold"));
+        assert_eq!(tenants[0].get("served").and_then(|v| v.as_f64()), Some(6.0));
     }
 
     #[test]

@@ -1,0 +1,465 @@
+//! §Multi-tenancy — tenant registry, quotas, admission floors, and the
+//! serve-path gate (ROADMAP "Multi-tenant fairness and isolation").
+//!
+//! A datacenter fleet serving "millions of users" (paper §IV-B) is shared:
+//! requests belong to *tenants* with contractual weights, quotas, and SLO
+//! classes, and the scheduler's job is to keep one tenant's flash crowd
+//! from burning another tenant's deadline budget. "No DNN Left Behind"
+//! (arXiv:1901.06887) argues for exactly this layering — per-tenant streams
+//! above the placement engine — and the GPU-datacenter scheduling survey
+//! (arXiv:2205.11913) names fairness/isolation the defining gap between
+//! single-job schedulers and production fleets.
+//!
+//! ## The pieces
+//!
+//! - [`TenantSpec`] / [`TenancyConfig`]: the static contract — per-tenant
+//!   **weight** (fair-share ratio), optional **quota** (max concurrent
+//!   admitted-but-unfinished requests), **floor** (guaranteed admissions
+//!   that bypass the base [`crate::serve::AdmissionPolicy`]), and
+//!   **priority class** (layered over `WorkloadRequest::priority` at
+//!   release: the request keeps the max of its own and its tenant's
+//!   class). Parsed from the CLI `--tenants` spec by
+//!   [`TenancyConfig::parse`].
+//! - [`TenancyController`]: the runtime gate between request release and
+//!   admission. Order of checks per release: **quota** (at quota → shed
+//!   with [`ShedReason::TenantQuotaExceeded`], recorded in the shared shed
+//!   ledger), then **floor** (below the floor's outstanding count → force-
+//!   admit, bypassing the base policy but leaving identical admission
+//!   state, including the same-epoch [`Backlog::note_admitted`] credit the
+//!   other tenants' decisions see), else the base policy decides as usual.
+//! - Weighted fair-share *dispatch* lives in the balancer
+//!   ([`crate::balancer::LoadBalancer::enable_fair_share`], deficit round
+//!   robin); this module computes its inputs (weight vector, per-cluster
+//!   open depth, quantum).
+//!
+//! ## Fairness invariants (pinned by `rust/tests/tenancy.rs`)
+//!
+//! 1. **Isolation**: a misbehaving flash-crowd tenant cannot move a
+//!    well-behaved tenant's p99 beyond a stated bound.
+//! 2. **Weighted-share conservation**: under saturation, served work per
+//!    tenant converges to the weight vector within tolerance.
+//! 3. **Starvation-freedom**: every backlogged tenant with nonzero weight
+//!    makes progress every bounded number of dispatch opportunities.
+//!
+//! ## The off-path contract
+//!
+//! With no `TenancyConfig` installed the serve engine never constructs a
+//! controller, never calls the gate, never enables fair dispatch, and
+//! never emits tenant JSON keys: decision streams and serialized reports
+//! are byte-identical to the pre-tenancy engine. A *neutral* config (one
+//! tenant, weight 1, no quota, floor 0, class 0, unbounded depth) takes
+//! the tenancy code paths but reproduces the same scheduling decisions;
+//! only the gated tenant keys differ in the report.
+
+use crate::balancer::Backlog;
+use crate::obs::ObsSink;
+use crate::serve::admission::{AdmissionController, ShedReason};
+use crate::sim::Cycle;
+use crate::util::fasthash::FxHashMap;
+use crate::workload::{ModelRegistry, WorkloadRequest};
+
+/// Per-cluster open depth used when the spec names none: effectively
+/// unbounded, so fair dispatch degenerates to arrival order exactly like
+/// the shared path (the neutral-config equivalence relies on this).
+pub const UNBOUNDED_DEPTH: usize = usize::MAX / 2;
+
+/// One tenant's contract.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TenantSpec {
+    /// Display name (reports, traces).
+    pub name: String,
+    /// Fair-share weight (≥ 1): long-run served work under saturation is
+    /// proportional to it.
+    pub weight: u32,
+    /// Max concurrent admitted-but-unfinished requests; releases beyond it
+    /// shed with [`ShedReason::TenantQuotaExceeded`]. `None` = unlimited.
+    pub quota: Option<usize>,
+    /// Guaranteed concurrency: while the tenant has fewer than this many
+    /// requests outstanding, releases bypass the base admission policy.
+    pub floor: usize,
+    /// SLO class layered over request priority at release (the request
+    /// keeps `max(own, class)`).
+    pub priority: u32,
+}
+
+impl TenantSpec {
+    /// A weight-only tenant (no quota, no floor, class 0).
+    pub fn weighted(name: &str, weight: u32) -> TenantSpec {
+        TenantSpec {
+            name: name.to_string(),
+            weight: weight.max(1),
+            quota: None,
+            floor: 0,
+            priority: 0,
+        }
+    }
+
+    pub fn with_quota(mut self, quota: usize) -> TenantSpec {
+        self.quota = Some(quota);
+        self
+    }
+
+    pub fn with_floor(mut self, floor: usize) -> TenantSpec {
+        self.floor = floor;
+        self
+    }
+
+    pub fn with_class(mut self, priority: u32) -> TenantSpec {
+        self.priority = priority;
+        self
+    }
+}
+
+/// The fleet's tenancy configuration. Tenant ids are indices into `specs`;
+/// requests carrying an out-of-range `WorkloadRequest::tenant` fold into
+/// the last tenant (deterministic, never a panic).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TenancyConfig {
+    pub specs: Vec<TenantSpec>,
+    /// May the batcher fuse requests of different tenants into one batch?
+    /// `true` (the default) maximizes throughput; `false` buys isolation at
+    /// batch-formation cost.
+    pub fuse_across_tenants: bool,
+    /// Fair-dispatch holdback: a cluster holding this many undispatched
+    /// requests stops receiving work, parking the excess in the balancer's
+    /// per-tenant queues where the DRR cursor arbitrates.
+    pub depth: usize,
+}
+
+impl TenancyConfig {
+    pub fn new(specs: Vec<TenantSpec>) -> TenancyConfig {
+        assert!(!specs.is_empty(), "tenancy needs at least one tenant");
+        TenancyConfig { specs, fuse_across_tenants: true, depth: UNBOUNDED_DEPTH }
+    }
+
+    /// The neutral single-tenant config: takes the tenancy code paths but
+    /// reproduces the tenancy-off scheduling decisions exactly.
+    pub fn neutral() -> TenancyConfig {
+        TenancyConfig::new(vec![TenantSpec::weighted("default", 1)])
+    }
+
+    pub fn with_fuse_across_tenants(mut self, fuse: bool) -> TenancyConfig {
+        self.fuse_across_tenants = fuse;
+        self
+    }
+
+    pub fn with_depth(mut self, depth: usize) -> TenancyConfig {
+        self.depth = depth.max(1);
+        self
+    }
+
+    /// Parse the CLI `--tenants` spec: semicolon-separated tenants, each
+    /// `name:w<N>[:q<N>][:f<N>][:p<N>]` — weight, quota, floor, priority
+    /// class. Example: `"gold:w3:q64:p2;silver:w1"`.
+    pub fn parse(spec: &str) -> Result<TenancyConfig, String> {
+        let mut specs = Vec::new();
+        for part in spec.split(';').filter(|p| !p.trim().is_empty()) {
+            let mut fields = part.trim().split(':');
+            let name = fields.next().unwrap_or("").trim();
+            if name.is_empty() {
+                return Err(format!("tenant in '{part}' has no name"));
+            }
+            let mut t = TenantSpec::weighted(name, 1);
+            for f in fields {
+                let f = f.trim();
+                let (key, val) = f.split_at(1);
+                let n: u64 = val
+                    .parse()
+                    .map_err(|_| format!("bad tenant field '{f}' in '{part}'"))?;
+                match key {
+                    "w" => t.weight = (n as u32).max(1),
+                    "q" => t.quota = Some(n as usize),
+                    "f" => t.floor = n as usize,
+                    "p" => t.priority = n as u32,
+                    _ => return Err(format!("unknown tenant field '{f}' in '{part}'")),
+                }
+            }
+            specs.push(t);
+        }
+        if specs.is_empty() {
+            return Err("empty tenant spec".to_string());
+        }
+        Ok(TenancyConfig::new(specs))
+    }
+
+    pub fn len(&self) -> usize {
+        self.specs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+
+    /// The weight vector fair dispatch consumes.
+    pub fn weights(&self) -> Vec<u64> {
+        self.specs.iter().map(|s| s.weight as u64).collect()
+    }
+
+    /// Clamp a request's tenant id into range (out-of-range folds into the
+    /// last tenant).
+    pub fn clamp(&self, tenant: u32) -> usize {
+        (tenant as usize).min(self.specs.len() - 1)
+    }
+
+    /// The DRR per-visit deficit credit: the heaviest base model's total
+    /// ops, so a weight-1 tenant earns at least one solo dispatch per
+    /// cursor round.
+    pub fn quantum(registry: &ModelRegistry) -> u64 {
+        (0..registry.len() as u32).map(|id| registry.total_ops(id)).max().unwrap_or(1).max(1)
+    }
+}
+
+/// Per-tenant served/shed tallies the report views are built from.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TenantCounters {
+    /// Requests released into the gate.
+    pub released: u64,
+    /// Requests admitted (policy, floor, or open path).
+    pub admitted: u64,
+    /// Requests shed at the gate or by the base policy.
+    pub shed: u64,
+    /// Requests completed by a cluster.
+    pub completed: u64,
+}
+
+/// The runtime gate between request release and admission: tracks each
+/// tenant's outstanding (admitted-but-unfinished) count and applies quota
+/// and floor before the base [`crate::serve::AdmissionPolicy`] decides.
+#[derive(Debug)]
+pub struct TenancyController {
+    cfg: TenancyConfig,
+    /// Admitted-but-unfinished requests per tenant.
+    outstanding: Vec<usize>,
+    counters: Vec<TenantCounters>,
+    /// Request id → tenant, for completion debits and report attribution
+    /// (fused emissions fan back out through the batcher's member lists).
+    tenant_of: FxHashMap<u64, u32>,
+}
+
+impl TenancyController {
+    pub fn new(cfg: TenancyConfig) -> TenancyController {
+        let n = cfg.specs.len();
+        TenancyController {
+            cfg,
+            outstanding: vec![0; n],
+            counters: vec![TenantCounters::default(); n],
+            tenant_of: FxHashMap::default(),
+        }
+    }
+
+    pub fn config(&self) -> &TenancyConfig {
+        &self.cfg
+    }
+
+    /// Layer the tenant's SLO class over the request's own priority.
+    pub fn classify(&self, mut req: WorkloadRequest) -> WorkloadRequest {
+        let t = self.cfg.clamp(req.tenant);
+        req.tenant = t as u32;
+        req.priority = req.priority.max(self.cfg.specs[t].priority);
+        req
+    }
+
+    /// Gate one released (or re-released) request. Checks quota, then the
+    /// admission floor, then hands the base policy the final say. Returns
+    /// the request when admitted. Every admission — forced or policy — is
+    /// folded into `backlog`, so same-epoch decisions from other tenants
+    /// see this tenant's credits.
+    pub fn gate(
+        &mut self,
+        req: WorkloadRequest,
+        now: Cycle,
+        admission: &mut AdmissionController,
+        backlog: &mut Backlog,
+        registry: &ModelRegistry,
+        obs: &mut dyn ObsSink,
+    ) -> Option<WorkloadRequest> {
+        let t = self.cfg.clamp(req.tenant);
+        self.counters[t].released += 1;
+        let spec = &self.cfg.specs[t];
+        if let Some(q) = spec.quota {
+            if self.outstanding[t] >= q {
+                admission.force_shed(req, now, ShedReason::TenantQuotaExceeded, registry, obs);
+                self.counters[t].shed += 1;
+                return None;
+            }
+        }
+        let out = if self.outstanding[t] < spec.floor {
+            Some(admission.force_admit(req, now, backlog, registry, obs))
+        } else {
+            admission.offer_traced(req, now, backlog, registry, obs)
+        };
+        match out {
+            Some(r) => {
+                self.outstanding[t] += 1;
+                self.counters[t].admitted += 1;
+                self.tenant_of.insert(r.id, t as u32);
+                Some(r)
+            }
+            None => {
+                // Deferred requests come back through the gate via
+                // `AdmissionController::take_due`; policy sheds land in the
+                // shared ledger. Either way nothing is outstanding yet, but
+                // a policy shed is terminal for the tally.
+                if admission.shed().last().map(|s| s.request_id) == Some(req.id) {
+                    self.counters[t].shed += 1;
+                }
+                None
+            }
+        }
+    }
+
+    /// Debit one completion (the request finished on a cluster).
+    pub fn note_completed(&mut self, tenant: u32) {
+        let t = self.cfg.clamp(tenant);
+        self.outstanding[t] = self.outstanding[t].saturating_sub(1);
+        self.counters[t].completed += 1;
+    }
+
+    /// The tenant a request was admitted under, if the gate saw it.
+    pub fn tenant_of(&self, request_id: u64) -> Option<u32> {
+        self.tenant_of.get(&request_id).copied()
+    }
+
+    /// Admitted-but-unfinished count of one tenant.
+    pub fn outstanding(&self, tenant: u32) -> usize {
+        self.outstanding[self.cfg.clamp(tenant)]
+    }
+
+    /// Per-tenant tallies, indexed by tenant id.
+    pub fn counters(&self) -> &[TenantCounters] {
+        &self.counters
+    }
+
+    /// Released requests still counted outstanding (releases come back
+    /// through the gate individually, so this is a gate-level view, not an
+    /// engine-drain condition).
+    pub fn total_outstanding(&self) -> usize {
+        self.outstanding.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{HardwareConfig, SimConfig};
+    use crate::obs::NoopSink;
+    use crate::serve::admission::AdmissionPolicy;
+    use crate::serve::slo::SloPolicy;
+
+    fn admission(policy: AdmissionPolicy) -> AdmissionController {
+        AdmissionController::new(
+            policy,
+            SloPolicy::default(),
+            &HardwareConfig::small(),
+            &SimConfig::default(),
+        )
+    }
+
+    fn req(id: u64, tenant: u32) -> WorkloadRequest {
+        WorkloadRequest::new(id, 0, 0).with_tenant(tenant)
+    }
+
+    #[test]
+    fn parse_round_trips_the_readme_example() {
+        let cfg = TenancyConfig::parse("gold:w3:q64:p2;silver:w1").unwrap();
+        assert_eq!(cfg.len(), 2);
+        assert_eq!(cfg.specs[0].name, "gold");
+        assert_eq!(cfg.specs[0].weight, 3);
+        assert_eq!(cfg.specs[0].quota, Some(64));
+        assert_eq!(cfg.specs[0].priority, 2);
+        assert_eq!(cfg.specs[1].name, "silver");
+        assert_eq!(cfg.specs[1].weight, 1);
+        assert_eq!(cfg.specs[1].quota, None);
+        assert_eq!(cfg.weights(), vec![3, 1]);
+        assert!(TenancyConfig::parse("").is_err());
+        assert!(TenancyConfig::parse("a:x9").is_err());
+        assert!(TenancyConfig::parse("a:wfoo").is_err());
+        assert!(TenancyConfig::parse(":w1").is_err());
+    }
+
+    #[test]
+    fn quota_boundary_is_exact() {
+        let reg = ModelRegistry::standard();
+        let cfg = TenancyConfig::new(vec![TenantSpec::weighted("t", 1).with_quota(2)]);
+        let mut tc = TenancyController::new(cfg);
+        let mut adm = admission(AdmissionPolicy::Open);
+        let mut b = Backlog::idle();
+        // outstanding < quota admits; outstanding == quota sheds.
+        assert!(tc.gate(req(0, 0), 0, &mut adm, &mut b, &reg, &mut NoopSink).is_some());
+        assert!(tc.gate(req(1, 0), 0, &mut adm, &mut b, &reg, &mut NoopSink).is_some());
+        assert!(tc.gate(req(2, 0), 0, &mut adm, &mut b, &reg, &mut NoopSink).is_none());
+        assert_eq!(adm.shed().len(), 1);
+        assert_eq!(adm.shed()[0].reason, ShedReason::TenantQuotaExceeded);
+        assert_eq!(adm.shed()[0].tenant, 0);
+        // A completion frees one slot.
+        tc.note_completed(0);
+        assert_eq!(tc.outstanding(0), 1);
+        assert!(tc.gate(req(3, 0), 0, &mut adm, &mut b, &reg, &mut NoopSink).is_some());
+        assert_eq!(tc.counters()[0].released, 4);
+        assert_eq!(tc.counters()[0].admitted, 3);
+        assert_eq!(tc.counters()[0].shed, 1);
+    }
+
+    /// Floors bypass the base policy, and the forced admissions' backlog
+    /// credits are visible to the *other* tenant's same-epoch decisions —
+    /// the `Backlog::note_admitted` composition the serve engine relies on.
+    #[test]
+    fn floor_bypasses_policy_and_credits_cross_tenant_backlog() {
+        let reg = ModelRegistry::standard();
+        // Base policy: shed priority-0 traffic once depth exceeds 1.
+        let policy = AdmissionPolicy::PriorityThreshold { floor: 1, max_depth: 1 };
+        let cfg = TenancyConfig::new(vec![
+            TenantSpec::weighted("floored", 1).with_floor(2),
+            TenantSpec::weighted("plain", 1),
+        ]);
+        let mut tc = TenancyController::new(cfg);
+        let mut adm = admission(policy);
+        let mut b = Backlog::idle();
+        // Tenant 0's floor forces both admissions through even though the
+        // policy would shed the second (depth 1 == max_depth admits, but
+        // floor applies first anyway).
+        assert!(tc.gate(req(0, 0), 0, &mut adm, &mut b, &reg, &mut NoopSink).is_some());
+        assert!(tc.gate(req(1, 0), 0, &mut adm, &mut b, &reg, &mut NoopSink).is_some());
+        assert_eq!(b.queue_depth(), 2, "forced admits must credit the backlog");
+        // Tenant 1's same-epoch release now sees depth 2 > max_depth 1 and
+        // sheds at priority 0.
+        assert!(tc.gate(req(2, 1), 0, &mut adm, &mut b, &reg, &mut NoopSink).is_none());
+        assert_eq!(adm.shed().len(), 1);
+        assert_eq!(adm.shed()[0].reason, ShedReason::BelowPriorityFloor);
+        assert_eq!(adm.shed()[0].tenant, 1);
+        assert_eq!(tc.counters()[1].shed, 1, "policy sheds count against the tenant");
+        // Above its floor, tenant 0 is subject to the policy like anyone.
+        assert!(tc.gate(req(3, 0), 0, &mut adm, &mut b, &reg, &mut NoopSink).is_none());
+        assert_eq!(tc.counters()[0].shed, 1);
+    }
+
+    #[test]
+    fn classify_layers_the_slo_class_and_clamps_the_tenant() {
+        let cfg = TenancyConfig::new(vec![
+            TenantSpec::weighted("lo", 1),
+            TenantSpec::weighted("hi", 1).with_class(5),
+        ]);
+        let tc = TenancyController::new(cfg);
+        assert_eq!(tc.classify(req(0, 1)).priority, 5);
+        assert_eq!(tc.classify(req(0, 1).with_priority(9)).priority, 9, "max wins");
+        assert_eq!(tc.classify(req(0, 0)).priority, 0);
+        let folded = tc.classify(req(0, 7));
+        assert_eq!(folded.tenant, 1, "out-of-range tenants fold into the last");
+    }
+
+    #[test]
+    fn neutral_config_gates_everything_through_untouched() {
+        let reg = ModelRegistry::standard();
+        let mut tc = TenancyController::new(TenancyConfig::neutral());
+        let mut adm = admission(AdmissionPolicy::Open);
+        let mut b = Backlog::idle();
+        for i in 0..4 {
+            let r = req(i, 0);
+            let out = tc.gate(r, 0, &mut adm, &mut b, &reg, &mut NoopSink);
+            assert_eq!(out, Some(r), "neutral gate must not rewrite the request");
+        }
+        assert_eq!(tc.tenant_of(2), Some(0));
+        assert_eq!(tc.total_outstanding(), 4);
+        assert!(adm.shed().is_empty());
+    }
+}

@@ -88,16 +88,25 @@ pub struct WorkloadRequest {
     /// Dispatch priority (higher wins among same-cycle arrivals). 0 for
     /// ordinary traffic; serve-layer admission policies set it deliberately.
     pub priority: u32,
+    /// Owning tenant (§Multi-tenancy). 0 for single-tenant traces; the serve
+    /// layer only consults it when a `TenancyConfig` is installed, so the
+    /// field is inert everywhere else.
+    pub tenant: u32,
 }
 
 impl WorkloadRequest {
-    /// An ordinary (priority-0) request.
+    /// An ordinary (priority-0, tenant-0) request.
     pub fn new(id: u64, model_id: u32, arrival: Cycle) -> WorkloadRequest {
-        WorkloadRequest { id, model_id, arrival, priority: 0 }
+        WorkloadRequest { id, model_id, arrival, priority: 0, tenant: 0 }
     }
 
     pub fn with_priority(mut self, priority: u32) -> WorkloadRequest {
         self.priority = priority;
+        self
+    }
+
+    pub fn with_tenant(mut self, tenant: u32) -> WorkloadRequest {
+        self.tenant = tenant;
         self
     }
 }
@@ -116,6 +125,46 @@ impl Workload {
     /// Total useful operations across all requests.
     pub fn total_ops(&self) -> u64 {
         self.requests.iter().map(|r| self.registry.total_ops(r.model_id)).sum()
+    }
+
+    /// §Multi-tenancy: merge per-tenant traces into one serving trace.
+    ///
+    /// Each part's requests are tagged with its tenant id and the merged
+    /// trace is re-sorted by `(arrival, tenant, original id)` — a total,
+    /// deterministic order — then re-identified sequentially so request ids
+    /// stay unique across tenants (the serve layer keys per-request tables
+    /// by id). All parts must share one registry; the first part's is kept.
+    pub fn merge_tenants(parts: &[(u32, Workload)]) -> Workload {
+        assert!(!parts.is_empty(), "merge_tenants needs at least one part");
+        let mut merged: Vec<(Cycle, u32, u64, WorkloadRequest)> = Vec::new();
+        for (tenant, wl) in parts {
+            assert_eq!(
+                wl.registry.len(),
+                parts[0].1.registry.len(),
+                "merge_tenants: parts must share one registry"
+            );
+            for r in &wl.requests {
+                merged.push((r.arrival, *tenant, r.id, r.with_tenant(*tenant)));
+            }
+        }
+        merged.sort_by_key(|&(arrival, tenant, id, _)| (arrival, tenant, id));
+        let requests = merged
+            .into_iter()
+            .enumerate()
+            .map(|(i, (_, _, _, mut r))| {
+                r.id = i as u64;
+                r
+            })
+            .collect();
+        let names: Vec<String> =
+            parts.iter().map(|(t, wl)| format!("t{t}:{}", wl.name)).collect();
+        Workload {
+            name: names.join("+"),
+            cnn_ratio: parts[0].1.cnn_ratio,
+            seed: parts[0].1.seed,
+            requests,
+            registry: parts[0].1.registry.clone(),
+        }
     }
 
     /// Count of requests per model name (reporting).
@@ -417,6 +466,28 @@ mod tests {
         let wl = WorkloadSpec::ratio(0.5, 10, 4).generate();
         assert!(wl.requests.iter().all(|r| r.priority == 0));
         assert_eq!(WorkloadRequest::new(1, 0, 0).with_priority(7).priority, 7);
+    }
+
+    #[test]
+    fn default_tenant_is_zero_and_merge_is_deterministic() {
+        let wl = WorkloadSpec::ratio(0.5, 10, 4).generate();
+        assert!(wl.requests.iter().all(|r| r.tenant == 0));
+        let a = WorkloadSpec::ratio(0.5, 8, 1).generate();
+        let b = WorkloadSpec::ratio(0.5, 8, 2).generate();
+        let m1 = Workload::merge_tenants(&[(0, a.clone()), (1, b.clone())]);
+        let m2 = Workload::merge_tenants(&[(0, a.clone()), (1, b.clone())]);
+        assert_eq!(m1.requests, m2.requests);
+        assert_eq!(m1.requests.len(), 16);
+        // Ids are re-assigned sequentially and arrivals stay sorted.
+        for (i, r) in m1.requests.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+        }
+        for w in m1.requests.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival);
+        }
+        // Both tenants are present, and same-cycle ties order by tenant.
+        assert!(m1.requests.iter().any(|r| r.tenant == 0));
+        assert!(m1.requests.iter().any(|r| r.tenant == 1));
     }
 
     #[test]

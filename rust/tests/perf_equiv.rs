@@ -27,6 +27,7 @@ use hsv::sched::state::ClusterState;
 use hsv::sched::SchedulerKind;
 use hsv::serve::{
     AdmissionPolicy, AutoscalePolicy, BatchPolicy, ObsPolicy, ServeConfig, ServeEngine, SloPolicy,
+    TenancyConfig, TenantSpec,
 };
 use hsv::util::quick;
 use hsv::workload::{ArrivalModel, WorkloadSpec};
@@ -271,6 +272,78 @@ fn parallel_serve_identical_to_sequential_across_grid() {
                         seq.to_json().to_string(),
                         par.to_json().to_string(),
                         "{tag}: parallel advance changed the serialized report"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// §Multi-tenancy determinism grid: tenant mix × arrival model × scheduler
+/// × parallel on/off. The tenancy gate, DRR dispatch, and per-tenant report
+/// views must be deterministic across repeated runs AND bit-identical
+/// between the sequential and fork-join engines at every thread count —
+/// decision stream, served tuples (including the tenant tag), and the full
+/// serialized report with its per-tenant JSON block.
+#[test]
+fn tenanted_serve_identical_across_runs_and_thread_counts() {
+    // Mix 0: the neutral single tenant (every tenancy code path, no
+    // skew). Mix 1: a 3:1 weighted pair with a quota, a floor, isolated
+    // batching, and a finite fair-dispatch depth — the widest tenant
+    // decision surface.
+    let mixes: [(&str, fn() -> TenancyConfig); 2] = [
+        ("neutral", TenancyConfig::neutral as fn() -> TenancyConfig),
+        ("gold-silver", || {
+            TenancyConfig::new(vec![
+                TenantSpec::weighted("gold", 3).with_quota(6).with_class(1),
+                TenantSpec::weighted("silver", 1).with_floor(1),
+            ])
+            .with_fuse_across_tenants(false)
+            .with_depth(3)
+        }),
+    ];
+    for (mix_name, mix) in mixes {
+        for arrival in arrival_models() {
+            for sched in [SchedulerKind::Has, SchedulerKind::RoundRobin] {
+                let mut wl =
+                    WorkloadSpec::ratio(0.5, 16, 47).with_arrivals(arrival).generate();
+                let nt = mix().len() as u32;
+                for (i, r) in wl.requests.iter_mut().enumerate() {
+                    r.tenant = i as u32 % nt;
+                }
+                let hw = HardwareConfig::small().with_clusters(4);
+                let run = |sim: SimConfig| {
+                    ServeEngine::new(hw.clone(), sched, sim, full_stack())
+                        .with_tenancy(mix())
+                        .run(&wl)
+                };
+                let records = |r: &hsv::serve::ServeReport| {
+                    r.served
+                        .iter()
+                        .map(|s| (s.request_id, s.cluster, s.dispatched_at, s.end, s.tenant))
+                        .collect::<Vec<_>>()
+                };
+                let seq = run(SimConfig::default());
+                let again = run(SimConfig::default());
+                let tag = format!("{mix_name} {} {sched:?}", arrival.name());
+                assert_eq!(records(&seq), records(&again), "{tag}: nondeterministic rerun");
+                assert_eq!(
+                    seq.to_json().to_string(),
+                    again.to_json().to_string(),
+                    "{tag}: per-tenant JSON drifted between identical runs"
+                );
+                for threads in [1usize, 2, 8] {
+                    let par =
+                        run(SimConfig::default().with_parallel().with_threads(threads));
+                    let tag = format!("{tag} {threads}thr");
+                    assert_eq!(seq.makespan, par.makespan, "{tag}");
+                    assert_eq!(seq.decisions, par.decisions, "{tag}");
+                    assert_eq!(seq.epochs, par.epochs, "{tag}");
+                    assert_eq!(records(&seq), records(&par), "{tag}");
+                    assert_eq!(
+                        seq.to_json().to_string(),
+                        par.to_json().to_string(),
+                        "{tag}: parallel advance changed the tenant report"
                     );
                 }
             }

@@ -9,6 +9,7 @@ use hsv::sched::SchedulerKind;
 use hsv::serve::{
     AdmissionPolicy, AutoscalePolicy, BatchPolicy, ServeConfig, ServeEngine, SloPolicy,
 };
+use hsv::util::json::Json;
 use hsv::workload::{ArrivalModel, Workload, WorkloadSpec};
 
 /// Zero every arrival: the fully backlogged regime where an online engine
@@ -169,4 +170,72 @@ fn slo_scoring_orders_with_deadline() {
     assert!(r_loose.miss_rate() <= r_tight.miss_rate());
     assert_eq!(r_tight.miss_rate(), 1.0);
     assert!(r_loose.goodput_tops() >= r_tight.goodput_tops());
+}
+
+/// §Multi-tenancy off-pin: with no tenancy config the report JSON carries
+/// exactly the pre-tenancy key set across the whole traffic-model ×
+/// scheduler grid — no tenant key, no tenant substring anywhere in the
+/// serialized output, and no tenancy state on the report struct (the same
+/// discipline as the batch/admission/autoscale off-pins).
+#[test]
+fn tenants_off_reports_stay_byte_identical_to_the_pre_tenancy_shape() {
+    let expected: Vec<&str> = {
+        let mut v = vec![
+            "hw",
+            "scheduler",
+            "policy",
+            "workload",
+            "requests",
+            "makespan_cycles",
+            "tops",
+            "goodput_tops",
+            "utilization",
+            "mean_latency_ms",
+            "p50_ms",
+            "p95_ms",
+            "p99_ms",
+            "p999_ms",
+            "deadline_miss_rate",
+            "slo_cnn_ms",
+            "slo_transformer_ms",
+            "epochs",
+            "decisions",
+            "miss_rate_cnn",
+            "miss_rate_transformer",
+        ];
+        v.sort_unstable();
+        v
+    };
+    let models = [
+        ArrivalModel::Poisson,
+        ArrivalModel::diurnal(2_000_000.0),
+        ArrivalModel::bursty(60_000.0, 6_000.0),
+        ArrivalModel::ramp(4.0, 0.5),
+    ];
+    for m in models {
+        for sched in [SchedulerKind::Has, SchedulerKind::RoundRobin] {
+            let wl = WorkloadSpec::ratio(0.5, 12, 17).with_arrivals(m).generate();
+            let rep = engine(
+                HardwareConfig::small().with_clusters(2),
+                sched,
+                DispatchPolicy::LeastLoaded,
+            )
+            .run(&wl);
+            let tag = format!("{} {sched:?}", m.name());
+            let j = rep.to_json();
+            let mut keys: Vec<String> = match &j {
+                Json::Obj(map) => map.keys().cloned().collect(),
+                _ => panic!("report JSON must be an object"),
+            };
+            keys.sort_unstable();
+            assert_eq!(keys, expected, "{tag}: tenancy-off report keys drifted");
+            assert!(
+                !j.to_pretty().contains("tenant"),
+                "{tag}: tenancy-off report mentions tenants"
+            );
+            assert!(rep.tenancy.is_none(), "{tag}");
+            assert!(rep.tenant_counters.is_empty(), "{tag}");
+            assert!(rep.served.iter().all(|r| r.tenant == 0), "{tag}");
+        }
+    }
 }

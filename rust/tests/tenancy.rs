@@ -1,0 +1,510 @@
+//! §Multi-tenancy isolation suite — the fairness invariants the tenant
+//! layer promises, pinned as executable properties:
+//!
+//! 1. **Isolation**: a misbehaving flash-crowd tenant (8× arrival burst via
+//!    the MMPP model) cannot move a well-behaved tenant's p99 beyond a
+//!    stated bound, across seeds.
+//! 2. **Weighted-share conservation**: under saturation, served work per
+//!    tenant converges to the DRR weight vector within tolerance.
+//! 3. **Starvation-freedom**: every backlogged tenant with nonzero weight
+//!    is dispatched at least once every `K = 1 + Σ other weights`
+//!    dispatch opportunities (quantum = per-request cost here, so the
+//!    classic DRR round bound is exact).
+//!
+//! Plus the standing off-path contract: with tenancy off the report carries
+//! exactly the pre-tenancy key set, and a *neutral* config (one tenant,
+//! weight 1, no quota, floor 0, unbounded depth) reproduces the tenancy-off
+//! scheduling decisions bit for bit — the serialized reports differ only by
+//! the gated tenant keys.
+
+use hsv::balancer::DispatchPolicy;
+use hsv::config::{HardwareConfig, SimConfig};
+use hsv::sched::SchedulerKind;
+use hsv::serve::{
+    AdmissionPolicy, AutoscalePolicy, BatchPolicy, ServeConfig, ServeEngine, ServeReport,
+    ShedReason, SloPolicy, TenancyConfig, TenantSpec,
+};
+use hsv::util::json::Json;
+use hsv::util::quick;
+use hsv::workload::{ArrivalModel, ModelRegistry, Workload, WorkloadRequest, WorkloadSpec};
+
+fn engine(clusters: u32) -> ServeEngine {
+    ServeEngine::new(
+        HardwareConfig::small().with_clusters(clusters),
+        SchedulerKind::Has,
+        SimConfig::default(),
+        ServeConfig {
+            policy: DispatchPolicy::LeastLoaded,
+            slo: SloPolicy::default(),
+            batch: BatchPolicy::Off,
+            admission: AdmissionPolicy::Open,
+            autoscale: AutoscalePolicy::Off,
+            ..Default::default()
+        },
+    )
+}
+
+/// A hand-built single-model trace: `n` requests of `model`, one every
+/// `gap` cycles, tagged `tenant`, ids starting at `id0`.
+fn uniform_trace(model: u32, n: usize, gap: u64, tenant: u32, id0: u64) -> Vec<WorkloadRequest> {
+    (0..n)
+        .map(|i| WorkloadRequest::new(id0 + i as u64, model, gap * i as u64).with_tenant(tenant))
+        .collect()
+}
+
+fn wl_of(name: &str, requests: Vec<WorkloadRequest>) -> Workload {
+    Workload {
+        name: name.to_string(),
+        cnn_ratio: 0.0,
+        seed: 0,
+        requests,
+        registry: ModelRegistry::standard(),
+    }
+}
+
+/// The registry model with the fewest ops (cheap, fast isolated service).
+fn lightest_model(reg: &ModelRegistry) -> u32 {
+    (0..reg.len() as u32).min_by_key(|&id| reg.total_ops(id)).unwrap()
+}
+
+/// The registry model with the most ops — its cost equals the DRR quantum,
+/// so a weight-w tenant dispatches exactly w heads per fresh cursor visit.
+fn heaviest_model(reg: &ModelRegistry) -> u32 {
+    (0..reg.len() as u32).max_by_key(|&id| reg.total_ops(id)).unwrap()
+}
+
+/// Served requests in dispatch order: `(tenant, request_id)` sorted by
+/// `(dispatched_at, request_id)` — the sequence the DRR cursor produced.
+fn dispatch_order(rep: &ServeReport) -> Vec<(u32, u64)> {
+    let mut v: Vec<(u64, u64, u32)> =
+        rep.served.iter().map(|r| (r.dispatched_at, r.request_id, r.tenant)).collect();
+    v.sort();
+    v.into_iter().map(|(_, id, t)| (t, id)).collect()
+}
+
+fn json_keys(j: &Json) -> Vec<String> {
+    match j {
+        Json::Obj(m) => m.keys().cloned().collect(),
+        _ => panic!("report JSON must be an object"),
+    }
+}
+
+/// Property 1 — isolation. A well-behaved tenant (one request every
+/// 4 isolated-service-times, so ~25% solo load) shares the fleet with a
+/// flash crowd arriving 8× faster via the MMPP bursty model (bursts go
+/// 16×). With the crowd held to quota 2 and fair dispatch at depth 2, at
+/// most 2 crowd requests exist anywhere in the system when a victim
+/// request lands, so the victim waits at most a couple of crowd service
+/// times beyond its solo baseline. Stated bound, checked across seeds:
+///
+///   p99(victim | attacked) ≤ p99(victim | solo) + 8 × t_iso
+///
+/// where t_iso is the measured isolated latency of the victim's model.
+#[test]
+fn flash_crowd_cannot_move_victim_p99_beyond_bound() {
+    let reg = ModelRegistry::standard();
+    let m = lightest_model(&reg);
+    // Measure the isolated service time on the same fleet.
+    let iso = engine(2).run(&wl_of("iso", uniform_trace(m, 1, 1, 0, 0)));
+    assert_eq!(iso.served.len(), 1);
+    let t_iso_cycles = iso.served[0].latency.max(1);
+    let t_iso_ms = iso.p99_ms();
+    assert!(t_iso_ms > 0.0);
+    let gap = 4 * t_iso_cycles;
+    let victim = wl_of("victim", uniform_trace(m, 24, gap, 0, 0));
+    let solo = engine(2).run(&victim);
+    assert_eq!(solo.served.len(), 24);
+    let bound = solo.p99_ms() + 8.0 * t_iso_ms;
+    quick::check(0xFA12_C40D, 5, |g| {
+        let seed = g.rng.next_u64();
+        // The flash crowd: MMPP arrivals whose *normal* rate is already 8×
+        // the victim's and whose burst state doubles that again.
+        let mut crowd = WorkloadSpec::ratio(0.5, 160, seed)
+            .with_arrivals(ArrivalModel::bursty(gap as f64 / 8.0, gap as f64 / 16.0))
+            .generate();
+        for r in &mut crowd.requests {
+            r.model_id = m;
+        }
+        let merged = Workload::merge_tenants(&[(0, victim.clone()), (1, crowd)]);
+        let tcfg = TenancyConfig::new(vec![
+            TenantSpec::weighted("victim", 8),
+            TenantSpec::weighted("crowd", 1).with_quota(2),
+        ])
+        .with_depth(2);
+        let rep = engine(2).with_tenancy(tcfg).run(&merged);
+        assert_eq!(rep.tenant_served(0), 24, "the victim is never shed (seed {seed})");
+        // Non-vacuous: the crowd really overran its quota, and only the
+        // crowd was shed.
+        assert!(rep.tenant_shed(1) > 0, "crowd never hit quota — attack not exercised");
+        assert!(rep.shed.iter().all(|s| s.tenant == 1));
+        assert!(
+            rep.shed.iter().all(|s| s.reason == ShedReason::TenantQuotaExceeded),
+            "under Open admission only the quota sheds"
+        );
+        let p99 = rep.tenant_p99_ms(0);
+        assert!(
+            p99 <= bound,
+            "victim p99 {p99:.4}ms beyond bound {bound:.4}ms (solo {:.4}ms, t_iso {:.4}ms, seed {seed})",
+            solo.p99_ms(),
+            t_iso_ms,
+        );
+        true
+    });
+}
+
+/// Property 2 — weighted-share conservation. Two tenants, both fully
+/// backlogged on the heaviest model (cost == quantum, so deficit rounds
+/// dispatch exactly `weight` heads), weights 3:1, one cluster at depth 1.
+/// While both stay backlogged the dispatch stream must interleave 3:1: the
+/// first 40 dispatches contain tenant 1 ≈ 10 times, and the served-ops
+/// ratio over the contended window converges to the weight ratio within
+/// tolerance.
+#[test]
+fn weighted_share_conserves_the_weight_vector_under_saturation() {
+    let reg = ModelRegistry::standard();
+    let h = heaviest_model(&reg);
+    let mut requests = uniform_trace(h, 30, 0, 0, 0);
+    requests.extend(uniform_trace(h, 90, 0, 1, 30));
+    let wl = wl_of("saturated-3to1", requests);
+    let tcfg = TenancyConfig::new(vec![
+        TenantSpec::weighted("gold", 3),
+        TenantSpec::weighted("silver", 1),
+    ])
+    .with_depth(1);
+    let rep = engine(1).with_tenancy(tcfg).run(&wl);
+    assert_eq!(rep.served.len(), 120, "saturation must not lose work");
+    let order = dispatch_order(&rep);
+    // Tenant 0 stays backlogged through its 30 requests, i.e. through the
+    // first ~40 dispatch slots; DRR gives tenant 1 one slot in four there.
+    let t1_early = order[..40].iter().filter(|(t, _)| *t == 1).count();
+    assert!(
+        (8..=14).contains(&t1_early),
+        "expected ~10 silver dispatches in the first 40, got {t1_early}: {:?}",
+        &order[..40]
+    );
+    // Served-work ratio over the contended window (up to gold's last
+    // dispatch): converges to the 3:1 weight ratio within tolerance.
+    let gold_last = order.iter().rposition(|(t, _)| *t == 0).unwrap();
+    let window = &order[..=gold_last];
+    let gold = window.iter().filter(|(t, _)| *t == 0).count() as f64;
+    let silver = window.iter().filter(|(t, _)| *t == 1).count() as f64;
+    let ratio = gold / silver.max(1.0);
+    assert!(
+        (2.0..=4.5).contains(&ratio),
+        "served-share ratio {ratio:.2} strayed from the 3:1 weights (gold {gold}, silver {silver})"
+    );
+    // Uniform model: the ops view tells the same story as the count view.
+    assert_eq!(rep.tenant_ops(0), 30 * reg.total_ops(h));
+    assert_eq!(rep.tenant_ops(1), 90 * reg.total_ops(h));
+}
+
+/// Property 3 — starvation-freedom. Three backlogged tenants with weights
+/// 1 / 4 / 8 on the heaviest model (cost == quantum): every tenant must be
+/// dispatched at least once every `K = 1 + Σ other weights` dispatch
+/// opportunities while it has work — the classic DRR round bound, exact
+/// here — and every admitted request is eventually served.
+#[test]
+fn every_backlogged_tenant_makes_progress_within_k_dispatches() {
+    let reg = ModelRegistry::standard();
+    let h = heaviest_model(&reg);
+    let weights = [1u32, 4, 8];
+    let mut requests = Vec::new();
+    for (t, _) in weights.iter().enumerate() {
+        requests.extend(uniform_trace(h, 24, 0, t as u32, 24 * t as u64));
+    }
+    let wl = wl_of("three-tenant-backlog", requests);
+    let tcfg = TenancyConfig::new(vec![
+        TenantSpec::weighted("bronze", weights[0]),
+        TenantSpec::weighted("silver", weights[1]),
+        TenantSpec::weighted("gold", weights[2]),
+    ])
+    .with_depth(1);
+    let rep = engine(1).with_tenancy(tcfg).run(&wl);
+    assert_eq!(rep.served.len(), 72, "no admitted request may starve forever");
+    let order = dispatch_order(&rep);
+    let total_w: u32 = weights.iter().sum();
+    for (t, &w) in weights.iter().enumerate() {
+        assert_eq!(rep.tenant_served(t as u32), 24, "tenant {t} lost work");
+        let positions: Vec<usize> = order
+            .iter()
+            .enumerate()
+            .filter(|(_, (ten, _))| *ten == t as u32)
+            .map(|(i, _)| i)
+            .collect();
+        let k = (1 + total_w - w) as usize;
+        assert!(
+            positions[0] < total_w as usize,
+            "tenant {t} first dispatched at slot {} — starved through the first round",
+            positions[0]
+        );
+        for pair in positions.windows(2) {
+            let gap = pair[1] - pair[0];
+            assert!(
+                gap <= k,
+                "tenant {t} (weight {w}) waited {gap} dispatch slots, bound K = {k}"
+            );
+        }
+    }
+}
+
+/// Off-path pin: with no tenancy config the report carries exactly the
+/// pre-tenancy key set — not a single tenant key, byte for byte the PR 7
+/// shape (the same discipline as the batch/admission/autoscale off-pins).
+#[test]
+fn tenants_off_report_carries_exactly_the_pre_tenancy_keys() {
+    let wl = WorkloadSpec::ratio(0.5, 18, 13)
+        .with_arrivals(ArrivalModel::bursty(60_000.0, 6_000.0))
+        .generate();
+    let rep = engine(2).run(&wl);
+    let mut keys = json_keys(&rep.to_json());
+    keys.sort();
+    let mut expected: Vec<String> = [
+        "hw",
+        "scheduler",
+        "policy",
+        "workload",
+        "requests",
+        "makespan_cycles",
+        "tops",
+        "goodput_tops",
+        "utilization",
+        "mean_latency_ms",
+        "p50_ms",
+        "p95_ms",
+        "p99_ms",
+        "p999_ms",
+        "deadline_miss_rate",
+        "slo_cnn_ms",
+        "slo_transformer_ms",
+        "epochs",
+        "decisions",
+        "miss_rate_cnn",
+        "miss_rate_transformer",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    expected.sort();
+    assert_eq!(keys, expected, "tenancy-off report JSON grew or lost keys");
+    assert!(!rep.to_json().to_pretty().contains("tenant"));
+    assert!(rep.tenancy.is_none());
+    assert!(rep.tenant_counters.is_empty());
+}
+
+/// The neutral config (one tenant, weight 1, no quota, floor 0, unbounded
+/// depth) takes every tenancy code path — the gate, fair dispatch, the
+/// completion debits — yet must reproduce the tenancy-off scheduling
+/// decisions bit for bit under the full batching + admission stack; the
+/// serialized reports differ exactly by the gated tenant keys.
+#[test]
+fn neutral_tenancy_schedules_exactly_like_off() {
+    let wl = WorkloadSpec::ratio(0.5, 24, 9)
+        .with_arrivals(ArrivalModel::bursty(60_000.0, 6_000.0))
+        .generate();
+    let stack = |tenancy: bool| {
+        let mut e = engine(2)
+            .with_batch(BatchPolicy::SloAware { max_batch: 4 })
+            .with_admission(AdmissionPolicy::DeadlineFeasible);
+        if tenancy {
+            e = e.with_tenancy(TenancyConfig::neutral());
+        }
+        e.run(&wl)
+    };
+    let off = stack(false);
+    let neutral = stack(true);
+    let records = |r: &ServeReport| {
+        r.served
+            .iter()
+            .map(|s| (s.request_id, s.cluster, s.dispatched_at, s.end))
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(records(&off), records(&neutral), "neutral tenancy steered dispatch");
+    assert_eq!(off.makespan, neutral.makespan);
+    assert_eq!(off.decisions, neutral.decisions);
+    assert_eq!(off.epochs, neutral.epochs);
+    assert_eq!(off.deferred, neutral.deferred);
+    assert_eq!(
+        off.shed.iter().map(|s| (s.request_id, s.reason)).collect::<Vec<_>>(),
+        neutral.shed.iter().map(|s| (s.request_id, s.reason)).collect::<Vec<_>>(),
+    );
+    // The report shape differs from off exactly by the tenant keys (the
+    // neutral depth is unbounded, so no tenant_depth key either).
+    let (off_j, ten_j) = (off.to_json(), neutral.to_json());
+    let mut extra: Vec<String> =
+        json_keys(&ten_j).into_iter().filter(|k| off_j.get(k).is_none()).collect();
+    extra.sort();
+    assert_eq!(extra, vec!["tenant_batching", "tenant_count", "tenants"]);
+    for k in json_keys(&off_j) {
+        assert_eq!(
+            off_j.get(&k).map(|v| v.to_string()),
+            ten_j.get(&k).map(|v| v.to_string()),
+            "shared key {k} diverged between off and neutral tenancy"
+        );
+    }
+}
+
+/// Same-epoch composition of floors, the shared backlog, and the base
+/// policy: tenant 0's admission floor forces three admissions through a
+/// `PriorityThreshold` that would otherwise defer to depth, and those
+/// forced credits are what push tenant 1's same-epoch release over the
+/// policy's depth limit — the engine-level view of the
+/// `Backlog::note_admitted` composition the unit tests pin.
+#[test]
+fn floor_credits_are_visible_to_the_other_tenants_same_epoch_decisions() {
+    let reg = ModelRegistry::standard();
+    let m = lightest_model(&reg);
+    let mut requests = uniform_trace(m, 3, 0, 0, 0);
+    requests.extend(uniform_trace(m, 1, 0, 1, 3));
+    let wl = wl_of("floor-vs-threshold", requests);
+    let tcfg = TenancyConfig::new(vec![
+        TenantSpec::weighted("floored", 1).with_floor(3),
+        TenantSpec::weighted("plain", 1),
+    ]);
+    let rep = engine(1)
+        .with_admission(AdmissionPolicy::PriorityThreshold { floor: 1, max_depth: 2 })
+        .with_tenancy(tcfg)
+        .run(&wl);
+    assert_eq!(rep.tenant_served(0), 3, "the floor must force all three through");
+    assert_eq!(rep.tenant_shed(1), 1, "tenant 1 must see depth 3 > max_depth 2 and shed");
+    assert_eq!(rep.shed.len(), 1);
+    assert_eq!(rep.shed[0].reason, ShedReason::BelowPriorityFloor);
+    assert_eq!(rep.shed[0].tenant, 1);
+}
+
+/// Boundary at quota == depth: with quota 2 and fair depth 2 on one
+/// cluster, the tenant may hold exactly the cluster's open window; the
+/// third and fourth same-epoch releases shed at the quota, the first two
+/// are served.
+#[test]
+fn quota_equals_depth_boundary_is_exact() {
+    let reg = ModelRegistry::standard();
+    let m = lightest_model(&reg);
+    let wl = wl_of("quota-at-depth", uniform_trace(m, 4, 0, 0, 0));
+    let tcfg =
+        TenancyConfig::new(vec![TenantSpec::weighted("capped", 1).with_quota(2)]).with_depth(2);
+    let rep = engine(1).with_tenancy(tcfg).run(&wl);
+    assert_eq!(rep.tenant_served(0), 2);
+    assert_eq!(rep.tenant_shed(0), 2);
+    assert!(rep.shed.iter().all(|s| s.reason == ShedReason::TenantQuotaExceeded));
+    assert_eq!(rep.tenant_counters.len(), 1);
+    assert_eq!(rep.tenant_counters[0].released, 4);
+    assert_eq!(rep.tenant_counters[0].admitted, 2);
+    assert_eq!(rep.tenant_counters[0].shed, 2);
+    assert_eq!(rep.tenant_counters[0].completed, 2);
+}
+
+/// Weight ties resolve to the lower tenant id: equal weights alternate
+/// deterministically starting at tenant 0, end to end through the engine.
+#[test]
+fn weight_ties_alternate_starting_at_the_lower_tenant_id() {
+    let reg = ModelRegistry::standard();
+    let h = heaviest_model(&reg);
+    let mut requests = uniform_trace(h, 2, 0, 0, 0);
+    requests.extend(uniform_trace(h, 2, 0, 1, 2));
+    let wl = wl_of("tie", requests);
+    let tcfg = TenancyConfig::new(vec![
+        TenantSpec::weighted("a", 1),
+        TenantSpec::weighted("b", 1),
+    ])
+    .with_depth(1);
+    let rep = engine(1).with_tenancy(tcfg).run(&wl);
+    let tenants: Vec<u32> = dispatch_order(&rep).iter().map(|(t, _)| *t).collect();
+    assert_eq!(tenants, vec![0, 1, 0, 1], "1:1 weights must alternate from tenant 0");
+}
+
+/// The cross-tenant batching knob: with fusing on (the default) a same-
+/// model, same-epoch pair of tenants coalesces into one mixed batch; with
+/// isolation on every batch is tenant-pure — at the cost of smaller
+/// batches, never of lost work.
+#[test]
+fn batching_isolation_knob_controls_cross_tenant_fusing() {
+    let reg = ModelRegistry::standard();
+    let m = lightest_model(&reg);
+    // Interleaved ids so the fused coalescing queue necessarily mixes
+    // tenants regardless of flush order.
+    let requests = vec![
+        WorkloadRequest::new(0, m, 0).with_tenant(0),
+        WorkloadRequest::new(1, m, 0).with_tenant(1),
+        WorkloadRequest::new(2, m, 0).with_tenant(0),
+        WorkloadRequest::new(3, m, 0).with_tenant(1),
+    ];
+    let wl = wl_of("batch-mix", requests);
+    let specs = || {
+        vec![TenantSpec::weighted("a", 1), TenantSpec::weighted("b", 1)]
+    };
+    let run = |fuse: bool| {
+        engine(1)
+            .with_batch(BatchPolicy::SloAware { max_batch: 4 })
+            .with_tenancy(TenancyConfig::new(specs()).with_fuse_across_tenants(fuse))
+            .run(&wl)
+    };
+    let batch_tenants = |rep: &ServeReport| {
+        let mut by_batch: std::collections::BTreeMap<u64, Vec<u32>> =
+            std::collections::BTreeMap::new();
+        for r in rep.served.iter().filter(|r| r.batch.is_some()) {
+            by_batch.entry(r.batch.unwrap()).or_default().push(r.tenant);
+        }
+        by_batch
+    };
+    let fused = run(true);
+    assert_eq!(fused.served.len(), 4);
+    assert!(
+        batch_tenants(&fused).values().any(|ts| {
+            ts.contains(&0) && ts.contains(&1)
+        }),
+        "fusing on: the same-model same-epoch pair must share a batch"
+    );
+    let isolated = run(false);
+    assert_eq!(isolated.served.len(), 4, "isolation must not lose work");
+    for (b, ts) in batch_tenants(&isolated) {
+        let first = ts[0];
+        assert!(
+            ts.iter().all(|&t| t == first),
+            "isolation on: batch {b} mixes tenants {ts:?}"
+        );
+    }
+}
+
+/// Determinism and per-tenant accounting consistency: a two-tenant mixed
+/// run is bit-identical across repeats — including the serialized
+/// per-tenant JSON — and the tenant views tie out against the aggregate
+/// ledgers.
+#[test]
+fn tenant_views_are_deterministic_and_tie_out() {
+    let a = WorkloadSpec::ratio(0.7, 16, 21).generate();
+    let b = WorkloadSpec::ratio(0.3, 16, 22)
+        .with_arrivals(ArrivalModel::bursty(60_000.0, 6_000.0))
+        .generate();
+    let wl = Workload::merge_tenants(&[(0, a), (1, b)]);
+    let tcfg = || {
+        TenancyConfig::new(vec![
+            TenantSpec::weighted("gold", 3).with_quota(8).with_class(1),
+            TenantSpec::weighted("silver", 1).with_floor(1),
+        ])
+        .with_depth(4)
+    };
+    let run = || engine(2).with_tenancy(tcfg()).run(&wl);
+    let r1 = run();
+    let r2 = run();
+    assert_eq!(r1.to_json().to_string(), r2.to_json().to_string());
+    assert_eq!(
+        r1.served.iter().map(|s| (s.request_id, s.tenant, s.end)).collect::<Vec<_>>(),
+        r2.served.iter().map(|s| (s.request_id, s.tenant, s.end)).collect::<Vec<_>>(),
+    );
+    // The per-tenant views partition the aggregate ledgers exactly.
+    assert_eq!(r1.tenant_served(0) + r1.tenant_served(1), r1.served.len());
+    assert_eq!(r1.tenant_shed(0) + r1.tenant_shed(1), r1.shed.len());
+    assert_eq!(r1.tenant_ops(0) + r1.tenant_ops(1), r1.served.iter().map(|s| s.ops).sum());
+    for t in 0..2u32 {
+        assert_eq!(r1.tenant_requests(t), r1.tenant_served(t) + r1.tenant_shed(t));
+        assert!((0.0..=1.0).contains(&r1.tenant_miss_rate(t)));
+        assert!((0.0..=1.0).contains(&r1.tenant_shed_rate(t)));
+    }
+    // The counters agree with the report's own ledgers.
+    assert_eq!(r1.tenant_counters.len(), 2);
+    for t in 0..2usize {
+        assert_eq!(r1.tenant_counters[t].admitted, r1.tenant_served(t as u32) as u64);
+        assert_eq!(r1.tenant_counters[t].completed, r1.tenant_served(t as u32) as u64);
+        assert_eq!(r1.tenant_counters[t].shed, r1.tenant_shed(t as u32) as u64);
+    }
+}
