@@ -35,6 +35,15 @@
 //!   cold and wakes them (through a warm-up latency) as the aggregate
 //!   queue depth moves, charging static energy only for powered cycles
 //!   against the fixed-fleet baseline.
+//! - [`net`] — the protocol-driven serving front end: a framed binary codec
+//!   (UMF model submissions, inference requests, responses, client feedback)
+//!   hardened with length-prefixed bounds-checked readers, a deterministic
+//!   in-memory transport (real sockets behind the `wire` feature), the
+//!   dispatcher / handler session phase, and a closed-loop
+//!   [`net::DegradationController`] that answers sustained SLO pressure by
+//!   stepping down gracefully (longer batch wait → smaller model variant →
+//!   tighter tenant quota) before admission sheds. Front end off ⇒ decision
+//!   streams and report JSON byte-identical to the trace-driven engine.
 //! - [`obs`] — zero-dependency observability for the serving path: causal
 //!   per-request lifecycle spans, a bounded per-epoch fleet time series, and
 //!   exporters (Chrome trace-event JSON for Perfetto, metrics CSV, terminal
@@ -99,6 +108,7 @@ pub mod balancer;
 pub mod coordinator;
 pub mod workload;
 pub mod serve;
+pub mod net;
 pub mod obs;
 pub mod gpu;
 pub mod dse;

@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   simulate   run one workload on one configuration and print the report
 //!   serve      online SLO-aware serving over a traffic model (ServeReport)
+//!   gateway    protocol-driven serving: framed client script -> ServeReport
 //!   dse        sweep the single-cluster design space (Fig 9 data)
 //!   gpu        run the Titan RTX reference model (Fig 1 / Fig 10 baseline)
 //!   timeline   render the scheduling timeline (Fig 6)
@@ -15,6 +16,7 @@ use hsv::config::{HardwareConfig, SimConfig};
 use hsv::coordinator::Coordinator;
 use hsv::gpu;
 use hsv::model::zoo;
+use hsv::net::{ClientSpec, DegradationPolicy, Gateway, InMemoryTransport, Msg};
 use hsv::report::{self, timeline};
 use hsv::sched::SchedulerKind;
 use hsv::serve::{
@@ -25,7 +27,7 @@ use hsv::umf;
 use hsv::util::cli::Args;
 use hsv::workload::{suite_33, ArrivalModel, WorkloadSpec};
 
-const USAGE: &str = "hsv <simulate|serve|dse|gpu|timeline|convert|zoo|pjrt> [--options]
+const USAGE: &str = "hsv <simulate|serve|gateway|dse|gpu|timeline|convert|zoo|pjrt> [--options]
   simulate --ratio 0.5 --requests 40 --seed 42 --sched has|rr [--clusters N] [--small] [--timeline]
   serve    --ratio 0.5 --requests 200 --seed 42 --sched has|rr --policy ll|rr
            --traffic poisson|diurnal|bursty|ramp [--mean-gap 40000] [--slo-slack 4]
@@ -39,6 +41,13 @@ const USAGE: &str = "hsv <simulate|serve|dse|gpu|timeline|convert|zoo|pjrt> [--o
            [--trace out/trace.json] [--metrics out/metrics.csv]
            [--parallel] [--threads N]
            [--clusters N] [--small] [--out out/serve.json]
+  gateway  --ratio 0.5 --requests 200 --seed 42 --sched has|rr [--in-memory]
+           --traffic poisson|diurnal|bursty|ramp [--mean-gap 40000] [--slo-slack 4]
+           [--batch CAP] [--admission open|priority|deadline]
+           [--admission-threshold DEPTH] [--admission-floor PRIO]
+           [--degrade on|off] [--engage 0.8] [--disengage 0.4]
+           [--min-samples 8] [--dwell CYCLES]
+           [--clusters N] [--small] [--out out/gateway.json]
   dse      --requests 12 [--threads N] [--out out/dse.csv]
   gpu      --ratio 0.5 --requests 40 --seed 42
   timeline --ratio 0.5 --requests 6 --seed 1 --sched has [--width 100]
@@ -51,6 +60,7 @@ fn main() {
     match args.subcommand() {
         Some("simulate") => simulate(&args),
         Some("serve") => serve(&args),
+        Some("gateway") => gateway(&args),
         Some("dse") => dse(&args),
         Some("gpu") => gpu_cmd(&args),
         Some("timeline") => timeline_cmd(&args),
@@ -284,6 +294,123 @@ fn serve(args: &Args) {
             std::fs::create_dir_all(parent).expect("create output dir");
         }
         std::fs::write(out, r.to_json().to_pretty()).expect("write serve report");
+        println!("wrote {out}");
+    } else {
+        println!("{}", r.to_json().to_pretty());
+    }
+}
+
+/// §Front end: serve a framed client script through the protocol gateway.
+/// The default (`--in-memory`) transport is the deterministic byte
+/// schedule: one feedback-enabled client submits every request of a seeded
+/// workload as `Infer` frames, responses close the loop, and the
+/// degradation ladder answers sustained SLO pressure before admission
+/// sheds. Real sockets need a build with `--features wire`.
+fn gateway(args: &Args) {
+    if !args.bool("in-memory", true) {
+        eprintln!(
+            "only the deterministic in-memory transport is built in by default; \
+             rebuild with `--features wire` for real sockets"
+        );
+        std::process::exit(2);
+    }
+    let hw = hw_from_args(args);
+    let sched = SchedulerKind::from_name(&args.str("sched", "has")).expect("--sched has|rr");
+    let sim = sim_from_args(args);
+    let wl = WorkloadSpec::ratio(
+        args.f64("ratio", 0.5),
+        args.usize("requests", 200),
+        args.u64("seed", 42),
+    )
+    .with_mean_interarrival(args.f64("mean-gap", 40_000.0))
+    .with_arrivals(traffic_from_args(args))
+    .generate();
+    let slo = SloPolicy::calibrated(&wl.registry, &hw, sched, &sim, args.f64("slo-slack", 4.0));
+    let batch = {
+        let cap = args.u64("batch", 1) as u32;
+        if cap <= 1 { BatchPolicy::Off } else { BatchPolicy::SloAware { max_batch: cap } }
+    };
+    let admission = match args.str("admission", "open").as_str() {
+        "open" => AdmissionPolicy::Open,
+        "priority" => AdmissionPolicy::PriorityThreshold {
+            floor: u32::try_from(args.u64("admission-floor", 1)).unwrap_or_else(|_| {
+                eprintln!("--admission-floor must fit in a u32");
+                std::process::exit(2);
+            }),
+            max_depth: args.usize("admission-threshold", 8),
+        },
+        "deadline" => AdmissionPolicy::DeadlineFeasible,
+        other => {
+            eprintln!("unknown --admission '{other}' (open|priority|deadline)");
+            std::process::exit(2);
+        }
+    };
+    // The seeded client script: every workload request becomes an Infer
+    // frame from one feedback-enabled client, so responses close the loop.
+    let mut transport =
+        InMemoryTransport::new(&wl.name).with_base_registry(wl.registry.clone());
+    transport.add_client(ClientSpec { id: 0, feedback: true });
+    transport.send_msg(0, 0, &Msg::Hello { client_id: 0 });
+    for r in &wl.requests {
+        transport.send_msg(
+            r.arrival,
+            0,
+            &Msg::Infer {
+                request_id: r.id,
+                model_id: r.model_id,
+                arrival: r.arrival,
+                priority: r.priority,
+                tenant: r.tenant,
+            },
+        );
+    }
+    let degradation = match args.str("degrade", "on").as_str() {
+        "off" => None,
+        "on" => Some(DegradationPolicy {
+            engage: args.f64("engage", 0.8),
+            disengage: args.f64("disengage", 0.4),
+            min_samples: args.u64("min-samples", 8),
+            dwell: args.u64("dwell", 0),
+            alpha: args.f64("alpha", 0.2),
+        }),
+        other => {
+            eprintln!("unknown --degrade '{other}' (on|off)");
+            std::process::exit(2);
+        }
+    };
+    let mut engine = ServeEngine::new(
+        hw,
+        sched,
+        sim,
+        ServeConfig {
+            policy: DispatchPolicy::LeastLoaded,
+            slo,
+            batch,
+            admission,
+            autoscale: AutoscalePolicy::Off,
+            obs: ObsPolicy::Off,
+        },
+    );
+    let r = Gateway::serve(&mut engine, transport, degradation);
+    print!("{}", report::summarize_serve(&r));
+    if let Some(fs) = &r.front {
+        println!(
+            "gateway: {} frames in, {} rejected | {} responses, {} feedback | \
+             {} downgraded releases, {} ladder transitions (max level {})",
+            fs.frames_in,
+            fs.frames_rejected,
+            fs.responses,
+            fs.feedback,
+            fs.downgraded_releases,
+            fs.degrade_transitions,
+            fs.max_level
+        );
+    }
+    if let Some(out) = args.str_opt("out") {
+        if let Some(parent) = std::path::Path::new(out).parent() {
+            std::fs::create_dir_all(parent).expect("create output dir");
+        }
+        std::fs::write(out, r.to_json().to_pretty()).expect("write gateway report");
         println!("wrote {out}");
     } else {
         println!("{}", r.to_json().to_pretty());

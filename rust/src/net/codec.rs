@@ -1,0 +1,366 @@
+//! §Front end — the framed binary wire codec.
+//!
+//! Every message travels as one frame: `[u32 len][u8 tag][payload]`, with
+//! `len` counting the tag byte plus the payload (little-endian throughout,
+//! matching the UMF byte order). The payload is parsed with the bounds-
+//! checked [`ByteReader`] from `umf::bytes`, so a truncated, oversized, or
+//! malformed frame yields a typed [`NetError`] — never a panic, never a
+//! read past the declared length (the length-prefixed reader idiom; see
+//! the sub-reader in [`ByteReader::sub`] which `umf::packet` uses for its
+//! nested payload).
+//!
+//! [`decode_frame`] is the single parsing entry point; the incremental
+//! [`FrameReader`] layers stream reassembly on top of it for transports
+//! that deliver arbitrary byte chunks. Decoding is strict: a frame must be
+//! consumed exactly — trailing bytes inside the declared length are a
+//! [`NetError::Malformed`] error, so `encode ∘ decode` is the identity and
+//! nothing else round-trips.
+
+use crate::sim::Cycle;
+use crate::umf::{ByteReader, ByteWriter, UmfError};
+
+/// Hard ceiling on a frame's declared length (tag + payload): 16 MiB.
+/// A `len` above this is rejected before any buffering, so a hostile
+/// 4-byte header cannot make the reader reserve gigabytes.
+pub const MAX_FRAME: usize = 16 << 20;
+
+/// Typed decode failures of the wire codec.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum NetError {
+    /// Frame length field exceeds [`MAX_FRAME`] (or is zero).
+    Oversized(usize),
+    /// Unknown message tag.
+    BadTag(u8),
+    /// Payload does not parse, or its size disagrees with the frame length.
+    Malformed(String),
+}
+
+impl std::fmt::Display for NetError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            NetError::Oversized(n) => write!(f, "frame length {n} outside (0, {MAX_FRAME}]"),
+            NetError::BadTag(t) => write!(f, "unknown message tag {t}"),
+            NetError::Malformed(m) => write!(f, "malformed frame: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for NetError {}
+
+impl From<UmfError> for NetError {
+    fn from(e: UmfError) -> NetError {
+        match e {
+            // Inside a complete frame the reader can only run dry if the
+            // declared length lied about the payload size.
+            UmfError::Truncated(pos) => {
+                NetError::Malformed(format!("payload shorter than its frame length (at byte {pos})"))
+            }
+            other => NetError::Malformed(other.to_string()),
+        }
+    }
+}
+
+/// The messages of the gateway protocol. Client → gateway: `Hello`,
+/// `Submit`, `Infer`, `Feedback`. Gateway → client: `Response`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Msg {
+    /// Session open: a client announces its id.
+    Hello { client_id: u32 },
+    /// A UMF model-load packet ([`crate::umf::Frame`] bytes), verbatim.
+    /// The gateway decodes it with `umf::convert::decode_model` and adds
+    /// the model to the session registry.
+    Submit { umf: Vec<u8> },
+    /// One inference request against a registered model.
+    Infer { request_id: u64, model_id: u32, arrival: Cycle, priority: u32, tenant: u32 },
+    /// The gateway's completion notice for one request.
+    Response {
+        request_id: u64,
+        /// Model actually served (differs from the submitted id when the
+        /// model-variant lever was engaged at release).
+        model_id: u32,
+        end: Cycle,
+        latency: u64,
+        /// Relative SLO deadline the gateway held the request to.
+        deadline: Cycle,
+        met: bool,
+        degraded: bool,
+    },
+    /// Closed-loop client report: the latency the client observed for one
+    /// response, against the deadline it was promised.
+    Feedback { request_id: u64, observed_latency: u64, deadline: Cycle },
+}
+
+const TAG_HELLO: u8 = 0;
+const TAG_SUBMIT: u8 = 1;
+const TAG_INFER: u8 = 2;
+const TAG_RESPONSE: u8 = 3;
+const TAG_FEEDBACK: u8 = 4;
+
+impl Msg {
+    /// Wire tag of this message.
+    pub fn tag(&self) -> u8 {
+        match self {
+            Msg::Hello { .. } => TAG_HELLO,
+            Msg::Submit { .. } => TAG_SUBMIT,
+            Msg::Infer { .. } => TAG_INFER,
+            Msg::Response { .. } => TAG_RESPONSE,
+            Msg::Feedback { .. } => TAG_FEEDBACK,
+        }
+    }
+
+    /// Encode as one complete frame: `[u32 len][u8 tag][payload]`.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut p = ByteWriter::new();
+        match self {
+            Msg::Hello { client_id } => {
+                p.u32(*client_id);
+            }
+            Msg::Submit { umf } => {
+                assert!(umf.len() <= MAX_FRAME - 5, "UMF payload exceeds MAX_FRAME");
+                p.u32(umf.len() as u32).raw(umf);
+            }
+            Msg::Infer { request_id, model_id, arrival, priority, tenant } => {
+                p.u64(*request_id).u32(*model_id).u64(*arrival).u32(*priority).u32(*tenant);
+            }
+            Msg::Response { request_id, model_id, end, latency, deadline, met, degraded } => {
+                p.u64(*request_id)
+                    .u32(*model_id)
+                    .u64(*end)
+                    .u64(*latency)
+                    .u64(*deadline)
+                    .u8(*met as u8)
+                    .u8(*degraded as u8);
+            }
+            Msg::Feedback { request_id, observed_latency, deadline } => {
+                p.u64(*request_id).u64(*observed_latency).u64(*deadline);
+            }
+        }
+        let payload = p.into_vec();
+        let mut w = ByteWriter::new();
+        w.u32((payload.len() + 1) as u32).u8(self.tag()).raw(&payload);
+        w.into_vec()
+    }
+}
+
+/// Try to decode one frame from the front of `buf`.
+///
+/// Returns `Ok(None)` when `buf` holds only a frame prefix (more bytes
+/// needed), `Ok(Some((msg, consumed)))` on success, and a typed error when
+/// the bytes can never become a valid frame. Never panics, never reads
+/// past `4 + len`.
+pub fn decode_frame(buf: &[u8]) -> Result<Option<(Msg, usize)>, NetError> {
+    if buf.len() < 4 {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes(buf[0..4].try_into().unwrap()) as usize;
+    if len == 0 || len > MAX_FRAME {
+        return Err(NetError::Oversized(len));
+    }
+    if buf.len() < 4 + len {
+        return Ok(None);
+    }
+    let mut r = ByteReader::new(&buf[4..4 + len]);
+    let tag = r.u8()?;
+    let msg = match tag {
+        TAG_HELLO => Msg::Hello { client_id: r.u32()? },
+        TAG_SUBMIT => {
+            let n = r.u32()? as usize;
+            Msg::Submit { umf: r.raw(n)?.to_vec() }
+        }
+        TAG_INFER => Msg::Infer {
+            request_id: r.u64()?,
+            model_id: r.u32()?,
+            arrival: r.u64()?,
+            priority: r.u32()?,
+            tenant: r.u32()?,
+        },
+        TAG_RESPONSE => Msg::Response {
+            request_id: r.u64()?,
+            model_id: r.u32()?,
+            end: r.u64()?,
+            latency: r.u64()?,
+            deadline: r.u64()?,
+            met: r.u8()? != 0,
+            degraded: r.u8()? != 0,
+        },
+        TAG_FEEDBACK => Msg::Feedback {
+            request_id: r.u64()?,
+            observed_latency: r.u64()?,
+            deadline: r.u64()?,
+        },
+        t => return Err(NetError::BadTag(t)),
+    };
+    if r.remaining() != 0 {
+        return Err(NetError::Malformed(format!(
+            "{} trailing bytes inside the declared frame length",
+            r.remaining()
+        )));
+    }
+    Ok(Some((msg, 4 + len)))
+}
+
+/// Incremental frame reassembler for chunked byte streams: push bytes in
+/// whatever slices the transport delivers, pull complete messages out.
+///
+/// A decode error poisons the stream position (framing is lost once a
+/// header lies); the owner should drop the buffered bytes with [`reset`]
+/// or close the session.
+///
+/// [`reset`]: FrameReader::reset
+#[derive(Debug, Default)]
+pub struct FrameReader {
+    buf: Vec<u8>,
+}
+
+impl FrameReader {
+    pub fn new() -> FrameReader {
+        FrameReader { buf: Vec::new() }
+    }
+
+    /// Append a chunk of received bytes.
+    pub fn push(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Decode the next complete message, if one is buffered.
+    /// `Ok(None)` means "need more bytes".
+    pub fn next_msg(&mut self) -> Result<Option<Msg>, NetError> {
+        match decode_frame(&self.buf)? {
+            Some((msg, consumed)) => {
+                self.buf.drain(..consumed);
+                Ok(Some(msg))
+            }
+            None => Ok(None),
+        }
+    }
+
+    /// Bytes buffered but not yet consumed.
+    pub fn buffered(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Discard the buffer (recovery after a poisoned stream).
+    pub fn reset(&mut self) {
+        self.buf.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn samples() -> Vec<Msg> {
+        vec![
+            Msg::Hello { client_id: 7 },
+            Msg::Submit { umf: vec![1, 2, 3, 4, 5] },
+            Msg::Submit { umf: Vec::new() },
+            Msg::Infer { request_id: 42, model_id: 3, arrival: 1_000, priority: 2, tenant: 1 },
+            Msg::Response {
+                request_id: 42,
+                model_id: 3,
+                end: 5_000,
+                latency: 4_000,
+                deadline: 6_000,
+                met: true,
+                degraded: false,
+            },
+            Msg::Feedback { request_id: 42, observed_latency: 4_000, deadline: 6_000 },
+        ]
+    }
+
+    #[test]
+    fn every_message_round_trips() {
+        for msg in samples() {
+            let bytes = msg.encode();
+            let (decoded, consumed) = decode_frame(&bytes).unwrap().unwrap();
+            assert_eq!(decoded, msg);
+            assert_eq!(consumed, bytes.len(), "a frame is consumed exactly");
+        }
+    }
+
+    #[test]
+    fn prefixes_ask_for_more_bytes_never_err() {
+        for msg in samples() {
+            let bytes = msg.encode();
+            for cut in 0..bytes.len() {
+                assert_eq!(
+                    decode_frame(&bytes[..cut]).unwrap(),
+                    None,
+                    "a strict prefix is incomplete, not malformed"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_and_zero_lengths_are_rejected_before_buffering() {
+        let mut huge = ((MAX_FRAME + 1) as u32).to_le_bytes().to_vec();
+        huge.push(TAG_HELLO);
+        assert!(matches!(decode_frame(&huge), Err(NetError::Oversized(_))));
+        let zero = 0u32.to_le_bytes().to_vec();
+        assert!(matches!(decode_frame(&zero), Err(NetError::Oversized(0))));
+    }
+
+    #[test]
+    fn bad_tag_and_lying_lengths_are_typed_errors() {
+        let mut frame = 1u32.to_le_bytes().to_vec();
+        frame.push(200);
+        assert_eq!(decode_frame(&frame), Err(NetError::BadTag(200)));
+
+        // Frame length longer than the Hello payload: trailing bytes.
+        let mut padded = Msg::Hello { client_id: 1 }.encode();
+        let len = (padded.len() - 4 + 2) as u32;
+        padded[0..4].copy_from_slice(&len.to_le_bytes());
+        padded.extend_from_slice(&[0, 0]);
+        assert!(matches!(decode_frame(&padded), Err(NetError::Malformed(_))));
+
+        // Frame length shorter than the payload needs: truncated read,
+        // and the bytes beyond the declared length are never touched.
+        let mut clipped = Msg::Infer {
+            request_id: 1,
+            model_id: 0,
+            arrival: 0,
+            priority: 0,
+            tenant: 0,
+        }
+        .encode();
+        clipped[0..4].copy_from_slice(&5u32.to_le_bytes());
+        assert!(matches!(decode_frame(&clipped), Err(NetError::Malformed(_))));
+
+        // A Submit whose inner length points past the frame region.
+        let mut w = ByteWriter::new();
+        w.u32(6).u8(TAG_SUBMIT).u32(1_000);
+        assert!(matches!(decode_frame(&w.into_vec()), Err(NetError::Malformed(_))));
+    }
+
+    #[test]
+    fn frame_reader_reassembles_byte_by_byte() {
+        let msgs = samples();
+        let mut stream = Vec::new();
+        for m in &msgs {
+            stream.extend_from_slice(&m.encode());
+        }
+        let mut rd = FrameReader::new();
+        let mut out = Vec::new();
+        for b in stream {
+            rd.push(&[b]);
+            while let Some(m) = rd.next_msg().unwrap() {
+                out.push(m);
+            }
+        }
+        assert_eq!(out, msgs);
+        assert_eq!(rd.buffered(), 0);
+    }
+
+    #[test]
+    fn frame_reader_surfaces_poison_and_recovers_on_reset() {
+        let mut rd = FrameReader::new();
+        let mut bad = 1u32.to_le_bytes().to_vec();
+        bad.push(250);
+        rd.push(&bad);
+        assert!(rd.next_msg().is_err());
+        rd.reset();
+        rd.push(&Msg::Hello { client_id: 9 }.encode());
+        assert_eq!(rd.next_msg().unwrap(), Some(Msg::Hello { client_id: 9 }));
+    }
+}

@@ -1,0 +1,308 @@
+//! §Front end — the closed-loop degradation control plane.
+//!
+//! Clients report the latency they actually observed per response
+//! ([`crate::net::codec::Msg::Feedback`]); this module turns that signal
+//! into graceful degradation *before* the admission controller sheds.
+//! "No DNN Left Behind" (arXiv:1901.06887) frames the serving-system goal
+//! exactly this way: under overload, degrade every request a little rather
+//! than drop some requests entirely.
+//!
+//! ## The pressure signal
+//!
+//! Each feedback packet contributes `observed_latency / deadline` — 1.0
+//! means the request spent its whole SLO budget. The controller keeps an
+//! EWMA of this ratio ([`DegradationController::observe`]); sustained
+//! pressure above [`DegradationPolicy::engage`] steps the ladder up,
+//! sustained relief below [`DegradationPolicy::disengage`] steps it down.
+//!
+//! ## The ladder
+//!
+//! Levers engage cheapest-first, one level per transition (dwell-gated so
+//! the controller cannot flap within a control interval):
+//!
+//! | level | lever                   | effect                                   |
+//! |------:|-------------------------|------------------------------------------|
+//! | 1     | [`Lever::BatchWait`]    | batcher wait budget × 2 (bigger batches) |
+//! | 2     | [`Lever::ModelVariant`] | serve the family's smallest model        |
+//! | 3     | [`Lever::TenantQuota`]  | effective tenant quotas × 1/2            |
+//!
+//! Shedding ([`crate::serve::AdmissionPolicy`]) stays the last resort: the
+//! ladder reduces per-request cost so the backlog the admission stage
+//! watches stops growing before its shed threshold trips. Level 0 is the
+//! neutral point — every lever setting at level 0 is bit-identical to a
+//! controller-free engine, which is what the front-end-off byte-identity
+//! contract rests on.
+//!
+//! Every transition is recorded through [`ObsSink::degrade_event`], the
+//! same side-log discipline as tenant tags: annotations, never causal
+//! request events.
+
+use crate::obs::ObsSink;
+use crate::sim::Cycle;
+
+/// Highest ladder level (every lever engaged).
+pub const MAX_LEVEL: u8 = 3;
+
+/// One degradation lever.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Lever {
+    /// Stretch the batcher's wait budget (level 1).
+    BatchWait,
+    /// Serve the family's smallest model variant (level 2).
+    ModelVariant,
+    /// Tighten effective tenant quotas (level 3).
+    TenantQuota,
+}
+
+impl Lever {
+    /// Short label used in traces and reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Lever::BatchWait => "batch-wait",
+            Lever::ModelVariant => "model-variant",
+            Lever::TenantQuota => "tenant-quota",
+        }
+    }
+
+    /// The lever that engages when the ladder reaches `level`.
+    pub fn at_level(level: u8) -> Option<Lever> {
+        match level {
+            1 => Some(Lever::BatchWait),
+            2 => Some(Lever::ModelVariant),
+            3 => Some(Lever::TenantQuota),
+            _ => None,
+        }
+    }
+}
+
+/// One ladder transition, recorded through [`ObsSink::degrade_event`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DegradeEvent {
+    pub cycle: Cycle,
+    /// The lever that changed state.
+    pub lever: Lever,
+    /// `true` = the lever engaged, `false` = it released.
+    pub engaged: bool,
+    /// Ladder level after the transition (0 = fully restored).
+    pub level: u8,
+    /// The EWMA pressure that drove the transition.
+    pub pressure: f64,
+}
+
+/// Knobs of the closed-loop controller.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DegradationPolicy {
+    /// EWMA pressure at or above which the ladder steps up one level.
+    pub engage: f64,
+    /// EWMA pressure at or below which the ladder steps down one level.
+    pub disengage: f64,
+    /// Feedback packets required before the controller acts at all.
+    pub min_samples: u64,
+    /// Minimum cycles between ladder transitions (anti-flap).
+    pub dwell: Cycle,
+    /// EWMA smoothing factor in (0, 1]: weight of the newest sample.
+    pub alpha: f64,
+}
+
+impl Default for DegradationPolicy {
+    fn default() -> DegradationPolicy {
+        DegradationPolicy { engage: 0.8, disengage: 0.4, min_samples: 8, dwell: 0, alpha: 0.2 }
+    }
+}
+
+/// What the engaged levers ask of the serve stages this epoch. The neutral
+/// settings are exactly the lever-free engine's constants, so applying them
+/// is bit-identical to not having a controller at all.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LeverSettings {
+    /// Batcher wait-budget multiplier ([`crate::serve::DynamicBatcher::set_wait_stretch`]).
+    pub wait_stretch: u32,
+    /// Rewrite releases to the family's smallest model variant?
+    pub downgrade: bool,
+    /// Effective tenant-quota scale as `num/den`
+    /// ([`crate::serve::TenancyController::set_quota_scale`]).
+    pub quota_scale: (u32, u32),
+}
+
+impl LeverSettings {
+    /// Level-0 settings: every lever at its contract value.
+    pub fn neutral() -> LeverSettings {
+        LeverSettings { wait_stretch: 1, downgrade: false, quota_scale: (1, 1) }
+    }
+}
+
+impl Default for LeverSettings {
+    fn default() -> LeverSettings {
+        LeverSettings::neutral()
+    }
+}
+
+/// The closed-loop controller: EWMA pressure in, lever settings out.
+#[derive(Debug, Clone)]
+pub struct DegradationController {
+    policy: DegradationPolicy,
+    pressure: f64,
+    samples: u64,
+    level: u8,
+    last_transition: Option<Cycle>,
+}
+
+impl DegradationController {
+    pub fn new(policy: DegradationPolicy) -> DegradationController {
+        DegradationController { policy, pressure: 0.0, samples: 0, level: 0, last_transition: None }
+    }
+
+    /// Fold one client feedback packet into the pressure EWMA.
+    pub fn observe(&mut self, observed_latency: u64, deadline: Cycle) {
+        let x = observed_latency as f64 / deadline.max(1) as f64;
+        self.pressure = if self.samples == 0 {
+            x
+        } else {
+            self.policy.alpha * x + (1.0 - self.policy.alpha) * self.pressure
+        };
+        self.samples += 1;
+    }
+
+    /// Take one control decision at `now`: at most one ladder step, dwell-
+    /// gated, recorded through `obs`. Returns the settings the serve stages
+    /// should run with until the next step.
+    pub fn step(&mut self, now: Cycle, obs: &mut dyn ObsSink) -> LeverSettings {
+        if self.samples >= self.policy.min_samples {
+            let dwell_ok = self
+                .last_transition
+                .map_or(true, |t| now >= t.saturating_add(self.policy.dwell));
+            if dwell_ok {
+                if self.pressure >= self.policy.engage && self.level < MAX_LEVEL {
+                    self.level += 1;
+                    self.last_transition = Some(now);
+                    obs.degrade_event(&DegradeEvent {
+                        cycle: now,
+                        lever: Lever::at_level(self.level).expect("level in 1..=MAX"),
+                        engaged: true,
+                        level: self.level,
+                        pressure: self.pressure,
+                    });
+                } else if self.pressure <= self.policy.disengage && self.level > 0 {
+                    let released = Lever::at_level(self.level).expect("level in 1..=MAX");
+                    self.level -= 1;
+                    self.last_transition = Some(now);
+                    obs.degrade_event(&DegradeEvent {
+                        cycle: now,
+                        lever: released,
+                        engaged: false,
+                        level: self.level,
+                        pressure: self.pressure,
+                    });
+                }
+            }
+        }
+        self.settings()
+    }
+
+    /// The settings the current ladder level asks for.
+    pub fn settings(&self) -> LeverSettings {
+        LeverSettings {
+            wait_stretch: if self.level >= 1 { 2 } else { 1 },
+            downgrade: self.level >= 2,
+            quota_scale: if self.level >= 3 { (1, 2) } else { (1, 1) },
+        }
+    }
+
+    pub fn level(&self) -> u8 {
+        self.level
+    }
+
+    /// Current EWMA pressure (0 until the first sample).
+    pub fn pressure(&self) -> f64 {
+        self.pressure
+    }
+
+    /// Feedback packets folded in so far.
+    pub fn samples(&self) -> u64 {
+        self.samples
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::NoopSink;
+
+    fn pressured(ctl: &mut DegradationController, ratio_pct: u64, n: u64) {
+        for _ in 0..n {
+            ctl.observe(ratio_pct, 100);
+        }
+    }
+
+    #[test]
+    fn ladder_engages_in_order_and_releases_in_reverse() {
+        let mut ctl = DegradationController::new(DegradationPolicy::default());
+        assert_eq!(ctl.settings(), LeverSettings::neutral());
+        pressured(&mut ctl, 150, 20); // sustained 1.5× pressure
+        let mut sink = NoopSink;
+        for expect in 1..=MAX_LEVEL {
+            ctl.step(expect as Cycle * 100, &mut sink);
+            assert_eq!(ctl.level(), expect);
+        }
+        // Saturates at the top.
+        ctl.step(1_000, &mut sink);
+        assert_eq!(ctl.level(), MAX_LEVEL);
+        let s = ctl.settings();
+        assert_eq!(s.wait_stretch, 2);
+        assert!(s.downgrade);
+        assert_eq!(s.quota_scale, (1, 2));
+        // Relief steps back down one level at a time to neutral.
+        pressured(&mut ctl, 10, 60);
+        for expect in (0..MAX_LEVEL).rev() {
+            ctl.step(2_000 + expect as Cycle, &mut sink);
+            assert_eq!(ctl.level(), expect);
+        }
+        assert_eq!(ctl.settings(), LeverSettings::neutral());
+    }
+
+    #[test]
+    fn dwell_gates_transitions() {
+        let policy = DegradationPolicy { dwell: 1_000, ..DegradationPolicy::default() };
+        let mut ctl = DegradationController::new(policy);
+        pressured(&mut ctl, 200, 20);
+        let mut sink = NoopSink;
+        ctl.step(0, &mut sink);
+        assert_eq!(ctl.level(), 1);
+        ctl.step(500, &mut sink);
+        assert_eq!(ctl.level(), 1, "within the dwell window");
+        ctl.step(1_000, &mut sink);
+        assert_eq!(ctl.level(), 2, "dwell elapsed");
+    }
+
+    #[test]
+    fn controller_waits_for_min_samples() {
+        let policy = DegradationPolicy { min_samples: 8, ..DegradationPolicy::default() };
+        let mut ctl = DegradationController::new(policy);
+        pressured(&mut ctl, 300, 7);
+        let mut sink = NoopSink;
+        ctl.step(10, &mut sink);
+        assert_eq!(ctl.level(), 0, "seven samples are not enough evidence");
+        pressured(&mut ctl, 300, 1);
+        ctl.step(20, &mut sink);
+        assert_eq!(ctl.level(), 1);
+    }
+
+    #[test]
+    fn transitions_are_recorded_through_the_sink() {
+        use crate::obs::{ObsPolicy, ObsTrace};
+        let mut ctl = DegradationController::new(DegradationPolicy::default());
+        let mut trace = ObsTrace::new(ObsPolicy::on(), 1.0, 1);
+        pressured(&mut ctl, 150, 10);
+        ctl.step(42, &mut trace);
+        pressured(&mut ctl, 1, 80);
+        ctl.step(99, &mut trace);
+        let log = trace.degrade_log();
+        assert_eq!(log.len(), 2);
+        assert_eq!(log[0].lever, Lever::BatchWait);
+        assert!(log[0].engaged);
+        assert_eq!(log[0].cycle, 42);
+        assert_eq!(log[1].lever, Lever::BatchWait);
+        assert!(!log[1].engaged);
+        assert_eq!(log[1].level, 0);
+    }
+}

@@ -1,0 +1,215 @@
+//! §Front end — the session dispatcher.
+//!
+//! The serve loop used to be handed a finished [`Workload`]; the gateway
+//! splits that into three stages. This module is the first two — the
+//! *dispatcher* (per-client frame reassembly and protocol-state checks)
+//! and the *handler* (what each message means: `Submit` grows the session
+//! registry through the hardened UMF decoder, `Infer` becomes a
+//! [`WorkloadRequest`]). The third stage, the control plane, lives in
+//! [`crate::net::control`] and only sees the session after it is built.
+//!
+//! Rejections are counted, never fatal: a malformed frame poisons only the
+//! offending client's stream, and a bad message (unknown model, duplicate
+//! request id, a client speaking the server's side of the protocol) is
+//! dropped with a typed reason while the rest of the session proceeds.
+
+use crate::net::codec::{FrameReader, Msg, NetError};
+use crate::net::transport::InMemoryTransport;
+use crate::sim::Cycle;
+use crate::umf::{decode_model, Frame};
+use crate::util::fasthash::FxHashMap;
+use crate::workload::{ModelRegistry, Workload, WorkloadRequest};
+
+/// Counters of the session phase, folded into the gateway's
+/// [`FrontStats`](crate::net::gateway::FrontStats).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SessionStats {
+    /// Frames that decoded successfully.
+    pub frames_in: u64,
+    /// Byte streams or messages rejected (codec errors + protocol errors).
+    pub frames_rejected: u64,
+    pub hellos: u64,
+    /// Models added to the session registry via UMF `Submit`.
+    pub submits: u64,
+    /// Inference requests accepted into the session workload.
+    pub infers: u64,
+}
+
+/// Builds a serving session from decoded messages.
+#[derive(Debug)]
+pub struct Dispatcher {
+    registry: ModelRegistry,
+    requests: Vec<WorkloadRequest>,
+    /// Request id → submitting client (also the duplicate-id guard).
+    owner: FxHashMap<u64, u32>,
+    pub stats: SessionStats,
+}
+
+impl Dispatcher {
+    /// A session starting from `base` (models clients may reference
+    /// without submitting them first).
+    pub fn new(base: ModelRegistry) -> Dispatcher {
+        Dispatcher {
+            registry: base,
+            requests: Vec::new(),
+            owner: FxHashMap::default(),
+            stats: SessionStats::default(),
+        }
+    }
+
+    /// Apply one decoded message from `client`. An `Err` means the message
+    /// was dropped (the caller counts it); the session stays consistent.
+    pub fn handle(&mut self, client: u32, msg: Msg) -> Result<(), NetError> {
+        match msg {
+            Msg::Hello { .. } => {
+                self.stats.hellos += 1;
+            }
+            Msg::Submit { umf } => {
+                let frame = Frame::decode(&umf)?;
+                let graph = decode_model(&frame)?;
+                self.registry.add(graph);
+                self.stats.submits += 1;
+            }
+            Msg::Infer { request_id, model_id, arrival, priority, tenant } => {
+                if (model_id as usize) >= self.registry.len() {
+                    return Err(NetError::Malformed(format!(
+                        "infer {request_id} names unknown model {model_id}"
+                    )));
+                }
+                if self.owner.contains_key(&request_id) {
+                    return Err(NetError::Malformed(format!(
+                        "duplicate request id {request_id}"
+                    )));
+                }
+                self.owner.insert(request_id, client);
+                self.requests.push(WorkloadRequest {
+                    id: request_id,
+                    model_id,
+                    arrival,
+                    priority,
+                    tenant,
+                });
+                self.stats.infers += 1;
+            }
+            Msg::Response { .. } | Msg::Feedback { .. } => {
+                // Server-side / post-response messages have no place in the
+                // session-building phase.
+                return Err(NetError::Malformed(format!(
+                    "unexpected client message (tag {})",
+                    msg.tag()
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Run the whole session phase over a transport's ingress: reassemble
+    /// each client's byte stream, decode, dispatch. A codec error drops
+    /// the client's remaining buffered bytes (framing is lost) but later
+    /// deliveries from the same client start a fresh stream.
+    pub fn drain(&mut self, transport: &mut InMemoryTransport) {
+        // Deterministic per-client reassembly state; BTreeMap not needed —
+        // iteration order never matters, ingress order drives everything.
+        let mut readers: FxHashMap<u32, FrameReader> = FxHashMap::default();
+        for (_cycle, client, bytes) in transport.drain_ingress() {
+            let rd = readers.entry(client).or_default();
+            rd.push(&bytes);
+            loop {
+                match rd.next_msg() {
+                    Ok(Some(msg)) => {
+                        self.stats.frames_in += 1;
+                        if self.handle(client, msg).is_err() {
+                            self.stats.frames_rejected += 1;
+                        }
+                    }
+                    Ok(None) => break,
+                    Err(_) => {
+                        self.stats.frames_rejected += 1;
+                        rd.reset();
+                        break;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Current session registry (base models + accepted submissions).
+    pub fn registry(&self) -> &ModelRegistry {
+        &self.registry
+    }
+
+    /// Close the session: the workload the engine will serve, plus the
+    /// request-id → client ownership map for response routing.
+    pub fn finish(self, name: String) -> (Workload, FxHashMap<u64, u32>, SessionStats) {
+        let wl = Workload {
+            name,
+            cnn_ratio: 0.0,
+            seed: 0,
+            requests: self.requests,
+            registry: self.registry,
+        };
+        (wl, self.owner, self.stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::umf::encode_model;
+
+    fn infer(id: u64, model: u32, arrival: Cycle) -> Msg {
+        Msg::Infer { request_id: id, model_id: model, arrival, priority: 0, tenant: 0 }
+    }
+
+    #[test]
+    fn submit_grows_the_registry_and_infer_targets_it() {
+        let base = ModelRegistry::standard();
+        let base_len = base.len() as u32;
+        let mut d = Dispatcher::new(base);
+        let g = ModelRegistry::standard().graph(0).clone();
+        let umf = encode_model(&g, 1, 1, 99).encode();
+        d.handle(5, Msg::Submit { umf }).unwrap();
+        assert_eq!(d.registry().len() as u32, base_len + 1);
+        d.handle(5, infer(1, base_len, 10)).unwrap();
+        let (wl, owner, stats) = d.finish("sess".into());
+        assert_eq!(wl.requests.len(), 1);
+        assert_eq!(wl.requests[0].model_id, base_len);
+        assert_eq!(owner.get(&1), Some(&5));
+        assert_eq!((stats.submits, stats.infers), (1, 1));
+    }
+
+    #[test]
+    fn bad_messages_are_rejected_without_corrupting_the_session() {
+        let mut d = Dispatcher::new(ModelRegistry::standard());
+        assert!(d.handle(0, infer(1, 10_000, 0)).is_err(), "unknown model");
+        d.handle(0, infer(1, 0, 0)).unwrap();
+        assert!(d.handle(0, infer(1, 0, 5)).is_err(), "duplicate request id");
+        assert!(d
+            .handle(0, Msg::Feedback { request_id: 1, observed_latency: 1, deadline: 1 })
+            .is_err());
+        assert!(d.handle(0, Msg::Submit { umf: vec![1, 2, 3] }).is_err(), "garbage UMF");
+        let (wl, owner, _) = d.finish("sess".into());
+        assert_eq!(wl.requests.len(), 1);
+        assert_eq!(owner.len(), 1);
+    }
+
+    #[test]
+    fn drain_reassembles_split_frames_and_isolates_poisoned_clients() {
+        let mut t = InMemoryTransport::new("sess");
+        // Client 0: one Infer frame split across two deliveries.
+        let frame = infer(7, 0, 100).encode();
+        let (a, b) = frame.split_at(6);
+        t.push(100, 0, a.to_vec());
+        t.push(101, 0, b.to_vec());
+        // Client 1: garbage with a huge length header, then (post-poison,
+        // fresh delivery) a valid frame.
+        t.push(100, 1, vec![0xff; 8]);
+        t.push(200, 1, infer(8, 0, 200).encode());
+        let mut d = Dispatcher::new(ModelRegistry::standard());
+        d.drain(&mut t);
+        let (wl, _, stats) = d.finish("sess".into());
+        assert_eq!(wl.requests.len(), 2);
+        assert_eq!(stats.frames_in, 2);
+        assert_eq!(stats.frames_rejected, 1);
+    }
+}

@@ -1,0 +1,321 @@
+//! §Front end — the gateway orchestration and the serve-loop hooks.
+//!
+//! [`Gateway::serve`] is the protocol-driven entry point: it runs the
+//! session phase (dispatcher over the transport's byte schedule), builds
+//! the [`Workload`] the engine will serve, and threads a [`FrontPlane`]
+//! through `ServeEngine::run_front`. The front plane is the per-epoch face
+//! of the front end inside the serve loop:
+//!
+//! - **levers** — at the top of each epoch the loop applies the current
+//!   [`LeverSettings`] (batch-wait stretch, tenant-quota scale);
+//! - **rewrite** — each fresh release may be rewritten to the family's
+//!   smallest model variant when that lever is engaged;
+//! - **after_advance** — each epoch's completions become [`Msg::Response`]
+//!   frames; feedback-enabled clients echo a [`Msg::Feedback`] the same
+//!   epoch (zero delay — the closed loop adds no clock events), which the
+//!   [`DegradationController`] folds into its pressure signal before
+//!   taking one control step.
+//!
+//! With the front plane absent (`ServeEngine::run`) or all levers neutral
+//! (replay transports, no degradation policy), every hook is a bit-exact
+//! no-op: decision streams and report JSON stay byte-identical to the
+//! trace-driven engine. `rust/tests/net.rs` pins both directions.
+
+use crate::cluster::SvCluster;
+use crate::net::codec::{decode_frame, Msg};
+use crate::net::control::{DegradationController, DegradationPolicy, LeverSettings};
+use crate::net::dispatcher::{Dispatcher, SessionStats};
+use crate::net::transport::{ClientSpec, InMemoryTransport};
+use crate::obs::ObsSink;
+use crate::serve::{DynamicBatcher, ServeEngine, ServeReport, SloPolicy};
+use crate::sim::Cycle;
+use crate::util::fasthash::{FxHashMap, FxHashSet};
+use crate::workload::{ModelRegistry, Workload, WorkloadRequest};
+
+/// Counters of one gateway run, attached to the report as the
+/// `gateway_*` JSON keys (present only for gateway runs — the front-end-
+/// off report stays byte-identical to the trace-driven one).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FrontStats {
+    /// Frames that decoded successfully in the session phase.
+    pub frames_in: u64,
+    /// Byte streams or messages rejected in the session phase.
+    pub frames_rejected: u64,
+    pub hellos: u64,
+    /// Models added to the session registry via UMF `Submit`.
+    pub submits: u64,
+    /// Inference requests accepted into the session workload.
+    pub infers: u64,
+    /// Response frames sent to clients.
+    pub responses: u64,
+    /// Feedback frames received from clients (the closed loop).
+    pub feedback: u64,
+    /// Releases rewritten to a smaller model variant by the ladder.
+    pub downgraded_releases: u64,
+    /// Degradation-ladder transitions (engagements + releases).
+    pub degrade_transitions: u64,
+    /// Highest ladder level the run reached.
+    pub max_level: u8,
+}
+
+impl FrontStats {
+    fn from_session(s: SessionStats) -> FrontStats {
+        FrontStats {
+            frames_in: s.frames_in,
+            frames_rejected: s.frames_rejected,
+            hellos: s.hellos,
+            submits: s.submits,
+            infers: s.infers,
+            ..FrontStats::default()
+        }
+    }
+}
+
+/// The front end's per-epoch presence inside the serve loop. Every method
+/// is a bit-exact no-op at neutral settings; the loop only calls them when
+/// a gateway run installed a plane.
+pub struct FrontPlane {
+    slo: SloPolicy,
+    clients: Vec<ClientSpec>,
+    /// Request id → submitting client (response routing).
+    owner: FxHashMap<u64, u32>,
+    /// Request id → true submission arrival (responses measure the
+    /// client-observed latency from here, not from any re-release).
+    arrival_of: FxHashMap<u64, Cycle>,
+    /// Base model id → the family's smallest variant (the level-2 lever).
+    downgrade_to: FxHashMap<u32, u32>,
+    /// Requests the model-variant lever rewrote.
+    downgraded: FxHashSet<u64>,
+    controller: Option<DegradationController>,
+    settings: LeverSettings,
+    /// Per-cluster completion high-water marks (same append-only-tail
+    /// discipline as the engine's tenant debit scan).
+    cursors: Vec<usize>,
+    pub stats: FrontStats,
+}
+
+impl FrontPlane {
+    pub fn new(
+        wl: &Workload,
+        slo: SloPolicy,
+        clients: Vec<ClientSpec>,
+        owner: FxHashMap<u64, u32>,
+        degradation: Option<DegradationPolicy>,
+        session: SessionStats,
+    ) -> FrontPlane {
+        let mut arrival_of = FxHashMap::default();
+        for r in &wl.requests {
+            arrival_of.insert(r.id, r.arrival);
+        }
+        // The level-2 rewrite target: per family, the registered model with
+        // the fewest total operations (ties to the lowest id — stable
+        // across runs by construction).
+        let mut smallest: FxHashMap<crate::model::ModelFamily, u32> = FxHashMap::default();
+        for id in 0..wl.registry.len() as u32 {
+            let fam = wl.registry.graph(id).family;
+            let best = smallest.entry(fam).or_insert(id);
+            if wl.registry.total_ops(id) < wl.registry.total_ops(*best) {
+                *best = id;
+            }
+        }
+        let mut downgrade_to = FxHashMap::default();
+        for id in 0..wl.registry.len() as u32 {
+            downgrade_to.insert(id, smallest[&wl.registry.graph(id).family]);
+        }
+        FrontPlane {
+            slo,
+            clients,
+            owner,
+            arrival_of,
+            downgrade_to,
+            downgraded: FxHashSet::default(),
+            controller: degradation.map(DegradationController::new),
+            settings: LeverSettings::neutral(),
+            cursors: Vec::new(),
+            stats: FrontStats::from_session(session),
+        }
+    }
+
+    /// The lever settings the serve stages should run this epoch with.
+    pub(crate) fn levers(&self) -> LeverSettings {
+        self.settings
+    }
+
+    /// Apply the model-variant lever to one fresh release. Identity when
+    /// the lever is disengaged.
+    pub(crate) fn rewrite(&mut self, mut req: WorkloadRequest) -> WorkloadRequest {
+        if self.settings.downgrade {
+            if let Some(&small) = self.downgrade_to.get(&req.model_id) {
+                if small != req.model_id {
+                    req.model_id = small;
+                    self.downgraded.insert(req.id);
+                    self.stats.downgraded_releases += 1;
+                }
+            }
+        }
+        req
+    }
+
+    /// Close this epoch: turn new completions into response frames, loop
+    /// feedback into the controller, take one control step. Read-only over
+    /// engine state — the only mutations are to the plane itself and the
+    /// observability side-log.
+    pub(crate) fn after_advance(
+        &mut self,
+        now: Cycle,
+        clusters: &[SvCluster],
+        batcher: &DynamicBatcher,
+        registry: &ModelRegistry,
+        obs: &mut dyn ObsSink,
+    ) {
+        if self.cursors.len() != clusters.len() {
+            self.cursors = vec![0; clusters.len()];
+        }
+        for c in clusters {
+            let cur = &mut self.cursors[c.id as usize];
+            for r in &c.state.completed[*cur..] {
+                if let Some(b) = batcher.batch_of(r.request_id) {
+                    for m in &b.members {
+                        self.respond(m.id, b.base_model_id, r.end, registry);
+                    }
+                } else {
+                    self.respond(r.request_id, r.model_id, r.end, registry);
+                }
+            }
+            *cur = c.state.completed.len();
+        }
+        if let Some(ctl) = self.controller.as_mut() {
+            let before = ctl.level();
+            self.settings = ctl.step(now, obs);
+            if ctl.level() != before {
+                self.stats.degrade_transitions += 1;
+            }
+            self.stats.max_level = self.stats.max_level.max(ctl.level());
+        }
+    }
+
+    /// Send one response over the wire and, for feedback-enabled clients,
+    /// receive the echoed feedback frame — both directions go through the
+    /// real codec, so the closed loop exercises encode ∘ decode end to end.
+    fn respond(&mut self, request_id: u64, model_id: u32, end: Cycle, registry: &ModelRegistry) {
+        let arrival = self.arrival_of.get(&request_id).copied().unwrap_or(0);
+        let latency = end.saturating_sub(arrival);
+        let deadline = self.slo.deadline_for(registry.graph(model_id).family);
+        let response = Msg::Response {
+            request_id,
+            model_id,
+            end,
+            latency,
+            deadline,
+            met: latency <= deadline,
+            degraded: self.downgraded.contains(&request_id),
+        };
+        let wire = response.encode();
+        self.stats.responses += 1;
+        let client = self.owner.get(&request_id).copied().unwrap_or(0);
+        let feedback_on = self.clients.iter().any(|c| c.id == client && c.feedback);
+        if !feedback_on {
+            return;
+        }
+        // The scripted client: decode the response frame, echo the observed
+        // latency back as a feedback frame, which the gateway decodes in
+        // turn. Same epoch, zero delay — no clock events are added.
+        if let Ok(Some((Msg::Response { request_id, latency, deadline, .. }, _))) =
+            decode_frame(&wire)
+        {
+            let echo =
+                Msg::Feedback { request_id, observed_latency: latency, deadline }.encode();
+            if let Ok(Some((Msg::Feedback { observed_latency, deadline, .. }, _))) =
+                decode_frame(&echo)
+            {
+                self.stats.feedback += 1;
+                if let Some(ctl) = self.controller.as_mut() {
+                    ctl.observe(observed_latency, deadline);
+                }
+            }
+        }
+    }
+}
+
+/// The protocol-driven serving entry point.
+pub struct Gateway;
+
+impl Gateway {
+    /// Serve everything a transport's clients submitted: session phase
+    /// (frame reassembly → dispatch → workload), then the engine run with
+    /// the front plane's hooks installed. `degradation` arms the closed
+    /// loop; `None` serves at fixed (neutral) settings.
+    pub fn serve(
+        engine: &mut ServeEngine,
+        mut transport: InMemoryTransport,
+        degradation: Option<DegradationPolicy>,
+    ) -> ServeReport {
+        let base =
+            transport.base_registry.clone().unwrap_or_else(ModelRegistry::standard);
+        let mut dispatcher = Dispatcher::new(base);
+        dispatcher.drain(&mut transport);
+        let (wl, owner, session) = dispatcher.finish(transport.workload_name.clone());
+        let mut front = FrontPlane::new(
+            &wl,
+            engine.cfg.slo,
+            transport.clients().to_vec(),
+            owner,
+            degradation,
+            session,
+        );
+        let mut report = engine.run_front(&wl, Some(&mut front));
+        report.front = Some(front.stats);
+        report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{HardwareConfig, SimConfig};
+    use crate::sched::SchedulerKind;
+    use crate::serve::ServeConfig;
+    use crate::workload::WorkloadSpec;
+
+    #[test]
+    fn replay_serves_every_scripted_request() {
+        let wl = WorkloadSpec::ratio(0.5, 10, 17).generate();
+        let transport = InMemoryTransport::replay(&wl);
+        let mut eng = ServeEngine::new(
+            HardwareConfig::small(),
+            SchedulerKind::Has,
+            SimConfig::default(),
+            ServeConfig::default(),
+        );
+        let rep = Gateway::serve(&mut eng, transport, None);
+        assert_eq!(rep.served.len(), wl.requests.len());
+        let fs = rep.front.expect("gateway runs attach front stats");
+        assert_eq!(fs.infers, wl.requests.len() as u64);
+        assert_eq!(fs.responses, wl.requests.len() as u64);
+        assert_eq!(fs.feedback, 0, "replay clients do not close the loop");
+        assert_eq!(fs.frames_rejected, 0);
+        let j = rep.to_json();
+        assert_eq!(
+            j.get("gateway_responses").and_then(|v| v.as_f64()),
+            Some(wl.requests.len() as f64)
+        );
+    }
+
+    #[test]
+    fn downgrade_map_points_each_family_to_its_smallest_model() {
+        let wl = WorkloadSpec::ratio(0.5, 4, 3).generate();
+        let front = FrontPlane::new(
+            &wl,
+            SloPolicy::default(),
+            vec![],
+            FxHashMap::default(),
+            None,
+            SessionStats::default(),
+        );
+        for (&id, &small) in &front.downgrade_to {
+            let fam = wl.registry.graph(id).family;
+            assert_eq!(wl.registry.graph(small).family, fam, "rewrite stays in-family");
+            assert!(wl.registry.total_ops(small) <= wl.registry.total_ops(id));
+        }
+    }
+}

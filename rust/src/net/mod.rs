@@ -1,0 +1,46 @@
+//! §Front end — the protocol-driven serving front end.
+//!
+//! Until now the serve engine was handed a finished
+//! [`Workload`](crate::workload::Workload); real
+//! serving systems receive their work over a wire. This module is that
+//! wire, split the way the serve loop itself is staged:
+//!
+//! - [`codec`] — the framed binary protocol (`[u32 len][u8 tag][payload]`)
+//!   carrying UMF model submissions, inference requests, responses, and
+//!   client feedback. Built on the hardened length-prefixed readers in
+//!   `umf::bytes`: truncated, oversized, or malformed frames return typed
+//!   [`NetError`]s — never a panic, never an over-read.
+//! - [`transport`] — the deterministic in-memory byte schedule the gateway
+//!   consumes by default (seeded, epoch-stepped, end-to-end testable with
+//!   no I/O). Real TCP sockets live in [`socket`] behind the `wire`
+//!   feature and feed the same schedule.
+//! - [`dispatcher`] — the session phase: per-client frame reassembly,
+//!   protocol-state checks, and the handler that turns messages into a
+//!   session registry + workload.
+//! - [`control`] — the closed loop: clients report observed latency per
+//!   response; the [`DegradationController`] answers sustained SLO
+//!   pressure by stepping down gracefully (longer batch wait → smaller
+//!   model variant → tighter tenant quota) *before* admission sheds.
+//! - [`gateway`] — the orchestration that threads a [`FrontPlane`]
+//!   through the serve loop's hooks.
+//!
+//! **Contract:** with the front end off, decision streams and report JSON
+//! are byte-identical to the trace-driven engine; and a gateway run over
+//! [`InMemoryTransport::replay`] reproduces the trace-driven report
+//! exactly. Both are pinned by `rust/tests/net.rs`.
+
+pub mod codec;
+pub mod control;
+pub mod dispatcher;
+pub mod gateway;
+#[cfg(feature = "wire")]
+pub mod socket;
+pub mod transport;
+
+pub use codec::{decode_frame, FrameReader, Msg, NetError, MAX_FRAME};
+pub use control::{
+    DegradationController, DegradationPolicy, DegradeEvent, Lever, LeverSettings, MAX_LEVEL,
+};
+pub use dispatcher::{Dispatcher, SessionStats};
+pub use gateway::{FrontPlane, FrontStats, Gateway};
+pub use transport::{ClientSpec, InMemoryTransport};

@@ -1,0 +1,65 @@
+//! §Front end — real TCP sockets behind the `wire` feature.
+//!
+//! The default gateway transport is the deterministic in-memory schedule
+//! (`net::transport`); this module is the thin, optional bridge to actual
+//! sockets for interactive use. It deliberately contains no protocol
+//! logic: bytes read from a socket feed the same incremental
+//! [`FrameReader`] and land in the same [`InMemoryTransport`] schedule the
+//! deterministic path uses, so everything testable stays under the seeded
+//! path and this file stays I/O-only glue.
+//!
+//! Build with `--features wire` to enable; the default build compiles none
+//! of this (CI runs the deterministic path only).
+
+use std::io::Read;
+use std::net::{TcpListener, TcpStream};
+
+use crate::net::codec::NetError;
+use crate::net::transport::{ClientSpec, InMemoryTransport};
+use crate::sim::Cycle;
+
+/// Accept `clients` connections on `addr`, read each stream to EOF, and
+/// schedule the raw bytes into an in-memory transport. Each connection
+/// becomes one client (ids in accept order); `cycle_per_chunk` spaces
+/// successive reads on the virtual clock so arrival cycles are
+/// reproducible given the same byte streams.
+pub fn collect(
+    addr: &str,
+    workload_name: &str,
+    clients: u32,
+    cycle_per_chunk: Cycle,
+) -> Result<InMemoryTransport, NetError> {
+    let listener = TcpListener::bind(addr)
+        .map_err(|e| NetError::Malformed(format!("bind {addr}: {e}")))?;
+    let mut transport = InMemoryTransport::new(workload_name);
+    for client in 0..clients {
+        let (stream, _) = listener
+            .accept()
+            .map_err(|e| NetError::Malformed(format!("accept: {e}")))?;
+        transport.add_client(ClientSpec { id: client, feedback: true });
+        drain_stream(stream, client, cycle_per_chunk, &mut transport)?;
+    }
+    Ok(transport)
+}
+
+fn drain_stream(
+    mut stream: TcpStream,
+    client: u32,
+    cycle_per_chunk: Cycle,
+    transport: &mut InMemoryTransport,
+) -> Result<(), NetError> {
+    let mut cycle: Cycle = 0;
+    let mut chunk = [0u8; 4096];
+    loop {
+        match stream.read(&mut chunk) {
+            Ok(0) => return Ok(()),
+            Ok(n) => {
+                transport.push(cycle, client, chunk[..n].to_vec());
+                cycle = cycle.saturating_add(cycle_per_chunk);
+            }
+            Err(e) => {
+                return Err(NetError::Malformed(format!("read from client {client}: {e}")))
+            }
+        }
+    }
+}

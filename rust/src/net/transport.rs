@@ -1,0 +1,167 @@
+//! §Front end — the deterministic in-memory transport.
+//!
+//! The default transport is not a socket: it is a seeded, epoch-stepped
+//! byte schedule. Each entry says "at cycle `t`, client `c` delivered
+//! these bytes" — the bytes themselves are codec frames (or garbage, for
+//! hardening tests), and the gateway reassembles them per client with a
+//! [`FrameReader`](crate::net::codec::FrameReader). Because the schedule
+//! is plain data, an end-to-end gateway run is exactly reproducible and
+//! testable with no I/O, threads, or timing dependence; real sockets live
+//! behind the `wire` feature in `net::socket`.
+//!
+//! [`InMemoryTransport::replay`] is the contract constructor: it turns an
+//! existing [`Workload`] into the equivalent client script (one `Infer`
+//! frame per request, arrival carried inside the payload), which the
+//! gateway must serve to a report byte-identical to the trace-driven
+//! engine's.
+
+use crate::net::codec::Msg;
+use crate::sim::Cycle;
+use crate::workload::{ModelRegistry, Workload};
+
+/// One gateway client of the in-memory transport.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ClientSpec {
+    pub id: u32,
+    /// Does this client close the loop — echo each response's observed
+    /// latency back as a `Feedback` frame? Replay clients do not, so the
+    /// degradation controller sees no signal and the engine stays on the
+    /// trace-identical neutral path.
+    pub feedback: bool,
+}
+
+/// A deterministic schedule of byte deliveries, ordered by cycle (stable
+/// within a cycle: push order).
+#[derive(Debug, Clone, Default)]
+pub struct InMemoryTransport {
+    /// `(cycle, client, bytes)` in push order; sorted stably by cycle when
+    /// the gateway drains it.
+    ingress: Vec<(Cycle, u32, Vec<u8>)>,
+    clients: Vec<ClientSpec>,
+    /// Name the session's workload will carry (reports key on it).
+    pub workload_name: String,
+    /// Models known before any `Submit` frame arrives. `None` starts the
+    /// session from the standard zoo.
+    pub base_registry: Option<ModelRegistry>,
+}
+
+impl InMemoryTransport {
+    pub fn new(workload_name: &str) -> InMemoryTransport {
+        InMemoryTransport {
+            ingress: Vec::new(),
+            clients: Vec::new(),
+            workload_name: workload_name.to_string(),
+            base_registry: None,
+        }
+    }
+
+    /// Start the session from `registry` instead of the standard zoo.
+    pub fn with_base_registry(mut self, registry: ModelRegistry) -> InMemoryTransport {
+        self.base_registry = Some(registry);
+        self
+    }
+
+    /// Register a client. Unknown client ids in the ingress are still
+    /// dispatched (frames speak for themselves); the spec only controls
+    /// response feedback.
+    pub fn add_client(&mut self, spec: ClientSpec) {
+        self.clients.retain(|c| c.id != spec.id);
+        self.clients.push(spec);
+    }
+
+    pub fn clients(&self) -> &[ClientSpec] {
+        &self.clients
+    }
+
+    /// Schedule raw bytes from `client` at `cycle` — any slice of a frame
+    /// stream, including deliberately malformed bytes.
+    pub fn push(&mut self, cycle: Cycle, client: u32, bytes: Vec<u8>) {
+        self.ingress.push((cycle, client, bytes));
+    }
+
+    /// Encode `msg` as one frame and schedule it.
+    pub fn send_msg(&mut self, cycle: Cycle, client: u32, msg: &Msg) {
+        self.push(cycle, client, msg.encode());
+    }
+
+    /// Scheduled deliveries in `(cycle, push order)` — the order the
+    /// gateway's session phase consumes them in.
+    pub fn drain_ingress(&mut self) -> Vec<(Cycle, u32, Vec<u8>)> {
+        let mut entries = std::mem::take(&mut self.ingress);
+        entries.sort_by_key(|(cycle, _, _)| *cycle);
+        entries
+    }
+
+    /// Number of scheduled deliveries.
+    pub fn pending(&self) -> usize {
+        self.ingress.len()
+    }
+
+    /// The contract constructor: one feedback-less client replaying `wl`
+    /// as `Infer` frames over the workload's own registry. Serving this
+    /// transport must reproduce `ServeEngine::run(&wl)` exactly.
+    pub fn replay(wl: &Workload) -> InMemoryTransport {
+        let mut t = InMemoryTransport::new(&wl.name).with_base_registry(wl.registry.clone());
+        t.add_client(ClientSpec { id: 0, feedback: false });
+        t.send_msg(0, 0, &Msg::Hello { client_id: 0 });
+        for r in &wl.requests {
+            t.send_msg(
+                r.arrival,
+                0,
+                &Msg::Infer {
+                    request_id: r.id,
+                    model_id: r.model_id,
+                    arrival: r.arrival,
+                    priority: r.priority,
+                    tenant: r.tenant,
+                },
+            );
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ingress_drains_in_cycle_order_stable_within_a_cycle() {
+        let mut t = InMemoryTransport::new("wl");
+        t.send_msg(500, 1, &Msg::Hello { client_id: 1 });
+        t.send_msg(100, 0, &Msg::Hello { client_id: 0 });
+        t.push(100, 2, vec![0xff]);
+        let drained = t.drain_ingress();
+        assert_eq!(
+            drained.iter().map(|(c, cl, _)| (*c, *cl)).collect::<Vec<_>>(),
+            vec![(100, 0), (100, 2), (500, 1)]
+        );
+        assert_eq!(t.pending(), 0);
+    }
+
+    #[test]
+    fn replay_scripts_one_infer_frame_per_request() {
+        use crate::net::codec::decode_frame;
+        let wl = crate::workload::WorkloadSpec::ratio(0.5, 24, 9)
+            .with_mean_interarrival(1_000.0)
+            .generate();
+        let mut t = InMemoryTransport::replay(&wl);
+        assert_eq!(t.clients().len(), 1);
+        assert!(!t.clients()[0].feedback);
+        assert_eq!(t.base_registry.as_ref().map(|r| r.len()), Some(wl.registry.len()));
+        let drained = t.drain_ingress();
+        assert_eq!(drained.len(), wl.requests.len() + 1, "hello + one frame per request");
+        // Every scheduled frame decodes back to the request it encodes.
+        let mut infers = 0;
+        for (cycle, _, bytes) in &drained {
+            let (msg, consumed) = decode_frame(bytes).unwrap().unwrap();
+            assert_eq!(consumed, bytes.len());
+            if let Msg::Infer { request_id, arrival, .. } = msg {
+                assert_eq!(arrival, *cycle, "arrival rides inside the payload");
+                assert!(wl.requests.iter().any(|r| r.id == request_id && r.arrival == arrival));
+                infers += 1;
+            }
+        }
+        assert_eq!(infers, wl.requests.len());
+    }
+}

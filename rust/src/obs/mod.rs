@@ -56,6 +56,7 @@ pub mod export;
 pub use chrome::chrome_trace;
 pub use export::{metrics_csv, summary};
 
+use crate::net::control::DegradeEvent;
 use crate::sched::state::TaskRecord;
 use crate::serve::admission::ShedReason;
 use crate::serve::autoscale::{PowerState, ScaleEvent};
@@ -207,6 +208,11 @@ pub trait ObsSink {
     fn tenant_tag(&mut self, _request_id: u64, _tenant: u32) {}
     /// One autoscaler decision.
     fn scale_event(&mut self, _ev: &ScaleEvent) {}
+    /// §Front end: one degradation-ladder transition (a lever engaging or
+    /// releasing under closed-loop SLO pressure). Like [`Self::tenant_tag`],
+    /// a side-log annotation — never part of the causal request event
+    /// stream, so the 8-variant [`ReqEventKind`] space stays untouched.
+    fn degrade_event(&mut self, _ev: &DegradeEvent) {}
     /// One per-epoch fleet snapshot.
     fn epoch_sample(&mut self, _s: EpochSample) {}
     /// One booked task execution, harvested from a cluster timeline.
@@ -343,6 +349,8 @@ pub struct ObsTrace {
     batch_members: FxHashMap<u64, Vec<u64>>,
     /// §Multi-tenancy: request id → tenant (from `tenant_tag` hooks).
     tenants: FxHashMap<u64, u32>,
+    /// §Front end: degradation-ladder transitions, in decision order.
+    degrade_log: Vec<DegradeEvent>,
     makespan: Cycle,
 }
 
@@ -358,6 +366,7 @@ impl ObsTrace {
             member_batch: FxHashMap::default(),
             batch_members: FxHashMap::default(),
             tenants: FxHashMap::default(),
+            degrade_log: Vec::new(),
             makespan: 0,
         }
     }
@@ -402,6 +411,11 @@ impl ObsTrace {
     /// Autoscaler decisions, in decision order.
     pub fn scale_log(&self) -> &[ScaleEvent] {
         &self.scale_log
+    }
+
+    /// §Front end: degradation-ladder transitions, in decision order.
+    pub fn degrade_log(&self) -> &[DegradeEvent] {
+        &self.degrade_log
     }
 
     /// Retained epoch samples (bounded; see [`Reservoir`]).
@@ -508,6 +522,10 @@ impl ObsSink for ObsTrace {
         self.scale_log.push(*ev);
     }
 
+    fn degrade_event(&mut self, ev: &DegradeEvent) {
+        self.degrade_log.push(*ev);
+    }
+
     fn epoch_sample(&mut self, s: EpochSample) {
         self.samples.push(s);
     }
@@ -594,5 +612,23 @@ mod tests {
         assert_eq!(t.span_of(5).tenant, Some(2));
         assert_eq!(t.span_of(6).tenant, None);
         assert_eq!(t.events().len(), 1, "tags must not grow the causal event stream");
+    }
+
+    #[test]
+    fn degrade_transitions_land_in_the_side_log_not_the_event_stream() {
+        use crate::net::control::Lever;
+        let mut t = ObsTrace::new(ObsPolicy::on(), 1.0, 1);
+        t.request_event(ReqEvent { request_id: 5, cycle: 0, kind: ReqEventKind::Arrival });
+        t.degrade_event(&DegradeEvent {
+            cycle: 10,
+            lever: Lever::BatchWait,
+            engaged: true,
+            level: 1,
+            pressure: 1.5,
+        });
+        assert_eq!(t.degrade_log().len(), 1);
+        assert_eq!(t.degrade_log()[0].lever, Lever::BatchWait);
+        assert!(t.degrade_log()[0].engaged);
+        assert_eq!(t.events().len(), 1, "transitions must not grow the causal event stream");
     }
 }

@@ -142,6 +142,12 @@ pub struct DynamicBatcher {
     /// Member lists of every fused emission, by fused request id.
     batches: HashMap<u64, FusedBatch>,
     next_fused: u64,
+    /// Degradation lever (gateway control plane): multiplies every queue's
+    /// wait budget, trading latency headroom for bigger batches under
+    /// sustained SLO pressure. Neutral `1` leaves every flush decision —
+    /// and therefore the decision stream — bit-identical to the lever-free
+    /// batcher.
+    wait_stretch: u32,
 }
 
 impl DynamicBatcher {
@@ -154,7 +160,19 @@ impl DynamicBatcher {
             fused_models: HashMap::new(),
             batches: HashMap::new(),
             next_fused: FUSED_ID_BASE,
+            wait_stretch: 1,
         }
+    }
+
+    /// Set the degradation wait multiplier (clamped ≥ 1). `1` restores the
+    /// policy's native wait budget exactly.
+    pub fn set_wait_stretch(&mut self, stretch: u32) {
+        self.wait_stretch = stretch.max(1);
+    }
+
+    /// The current degradation wait multiplier.
+    pub fn wait_stretch(&self) -> u32 {
+        self.wait_stretch
     }
 
     /// §Multi-tenancy: restrict coalescing to same-tenant members (builder
@@ -173,13 +191,15 @@ impl DynamicBatcher {
         }
     }
 
-    /// Cycles a queue of `family` may hold its oldest member.
+    /// Cycles a queue of `family` may hold its oldest member (the policy's
+    /// native budget times the degradation wait multiplier).
     fn wait_budget(&self, family: ModelFamily) -> Cycle {
-        match self.policy {
+        let base = match self.policy {
             BatchPolicy::Off => 0,
             BatchPolicy::Sized { max_wait, .. } => max_wait,
             BatchPolicy::SloAware { .. } => self.slo.deadline_for(family) / SLO_WAIT_DIVISOR,
-        }
+        };
+        base.saturating_mul(self.wait_stretch as Cycle)
     }
 
     /// Offer one released request to the coalescing stage. Returns the
@@ -497,6 +517,24 @@ mod tests {
         let out = iso.poll(20, true, &mut reg);
         assert_eq!(out.len(), 2);
         assert_eq!(iso.fused_count(), 0, "no cross-tenant fusion ever forms");
+    }
+
+    #[test]
+    fn wait_stretch_multiplies_the_budget_and_restores_neutrally() {
+        let mut reg = registry();
+        let mut b = DynamicBatcher::new(
+            BatchPolicy::Sized { max_batch: 8, max_wait: 500 },
+            SloPolicy::default(),
+        );
+        assert!(b.offer(req(0, 1, 100), 100, &mut reg).is_empty());
+        assert_eq!(b.next_flush(), Some(600), "neutral stretch is the native budget");
+        b.set_wait_stretch(2);
+        assert_eq!(b.next_flush(), Some(1_100));
+        assert!(b.poll(600, false, &mut reg).is_empty(), "stretched queue keeps waiting");
+        b.set_wait_stretch(0); // clamps to 1
+        assert_eq!(b.wait_stretch(), 1);
+        assert_eq!(b.next_flush(), Some(600));
+        assert_eq!(b.poll(600, false, &mut reg).len(), 1);
     }
 
     #[test]

@@ -78,6 +78,7 @@ use std::sync::Arc;
 
 use crate::balancer::{DispatchPolicy, LoadBalancer};
 use crate::cluster::{advance_clusters, SvCluster};
+use crate::net::{FrontPlane, FrontStats};
 use crate::config::{HardwareConfig, SimConfig};
 use crate::model::ModelFamily;
 use crate::obs::{ClusterSample, EpochSample, NoopSink, ObsSink, ObsTrace, ReqEvent, ReqEventKind};
@@ -213,6 +214,11 @@ pub struct ServeReport {
     pub tenancy: Option<TenancyConfig>,
     /// Per-tenant gate tallies, indexed by tenant id (empty when off).
     pub tenant_counters: Vec<TenantCounters>,
+    /// §Front end: gateway counters, `Some` only when the run went through
+    /// [`crate::net::Gateway::serve`] (the `gateway_*` JSON keys are gated
+    /// on it, so the front-end-off report stays byte-identical to the
+    /// trace-driven one).
+    pub front: Option<FrontStats>,
     /// Latency summary over `served`, computed once at aggregation (the
     /// percentile accessors all read this cache).
     latency_stats: Option<Summary>,
@@ -539,6 +545,21 @@ impl ServeReport {
             }
             j.set("tenants", Json::Arr(arr));
         }
+        // §Front end: gateway keys appear only when the run went through
+        // the protocol front end, so every front-end-off report stays
+        // byte-identical to the trace-driven one (the same discipline as
+        // the batching / admission / autoscale / tenant keys above).
+        if let Some(fs) = &self.front {
+            j.set("gateway_frames_in", fs.frames_in)
+                .set("gateway_frames_rejected", fs.frames_rejected)
+                .set("gateway_submits", fs.submits)
+                .set("gateway_infers", fs.infers)
+                .set("gateway_responses", fs.responses)
+                .set("gateway_feedback", fs.feedback)
+                .set("gateway_downgraded_releases", fs.downgraded_releases)
+                .set("gateway_degrade_transitions", fs.degrade_transitions)
+                .set("gateway_max_degrade_level", u64::from(fs.max_level));
+        }
         if let Some(m) = self.miss_rate_for(ModelFamily::Cnn) {
             j.set("miss_rate_cnn", m);
         }
@@ -691,6 +712,22 @@ impl ServeEngine {
     /// trace + epoch time series into [`Self::obs`] — recording is strictly
     /// read-only, so the report is byte-identical either way.
     pub fn run(&mut self, wl: &Workload) -> ServeReport {
+        self.run_front(wl, None)
+    }
+
+    /// §Front end: the same discrete-event loop with the gateway's
+    /// [`FrontPlane`] hooks installed — lever application at the top of
+    /// each epoch, release rewriting, and the post-advance response /
+    /// feedback / control step. `None` (the [`Self::run`] path) skips
+    /// every hook, and a present plane at neutral settings applies only
+    /// bit-exact no-ops, so decision streams and the report are
+    /// byte-identical to the trace-driven engine either way (pinned by
+    /// `rust/tests/net.rs`).
+    pub(crate) fn run_front(
+        &mut self,
+        wl: &Workload,
+        mut front: Option<&mut FrontPlane>,
+    ) -> ServeReport {
         self.obs = None;
         let obs_on = self.cfg.obs.enabled();
         // Tracing needs the per-task timeline. Forcing it on is report-pure:
@@ -757,6 +794,17 @@ impl ServeEngine {
                 Some(r) => r,
                 None => &mut noop,
             };
+            // 0. §Front end: apply the gateway's lever settings for this
+            //    epoch. Neutral settings — the only settings when the
+            //    plane is absent or its controller is idle — restore every
+            //    knob to its contract value, bit for bit.
+            if let Some(f) = front.as_deref_mut() {
+                let s = f.levers();
+                batcher.set_wait_stretch(s.wait_stretch);
+                if let Some(t) = tc.as_mut() {
+                    t.set_quota_scale(s.quota_scale.0, s.quota_scale.1);
+                }
+            }
             // 1. Release: requests whose arrival cycle has come enter the
             //    admission stage and then the batcher's coalescing queues
             //    (both pass-throughs when admission is `Open` / batching is
@@ -791,9 +839,17 @@ impl ServeEngine {
                         cycle: trace[next].arrival,
                         kind: ReqEventKind::Arrival,
                     });
+                    // §Front end: the model-variant lever rewrites a fresh
+                    // release to the family's smallest model (identity when
+                    // disengaged or absent). Deferred re-releases were
+                    // rewritten at first release and re-enter as-is.
+                    let released = match front.as_deref_mut() {
+                        Some(f) => f.rewrite(trace[next]),
+                        None => trace[next],
+                    };
                     match tc.as_mut() {
                         Some(t) => {
-                            let r = t.classify(trace[next]);
+                            let r = t.classify(released);
                             sink.tenant_tag(r.id, r.tenant);
                             admitted.extend(t.gate(
                                 r,
@@ -805,7 +861,7 @@ impl ServeEngine {
                             ));
                         }
                         None => admitted.extend(admission.offer_traced(
-                            trace[next],
+                            released,
                             now,
                             &mut backlog,
                             &registry,
@@ -829,8 +885,13 @@ impl ServeEngine {
                         cycle: trace[next].arrival,
                         kind: ReqEventKind::Arrival,
                     });
+                    // §Front end: same rewrite as the admission path above.
+                    let released = match front.as_deref_mut() {
+                        Some(f) => f.rewrite(trace[next]),
+                        None => trace[next],
+                    };
                     emitted.extend(batcher.offer_traced(
-                        trace[next],
+                        released,
                         now,
                         Arc::make_mut(&mut registry),
                         sink,
@@ -910,6 +971,18 @@ impl ServeEngine {
                     }
                     *cur = c.state.completed.len();
                 }
+            }
+            // 3c. §Front end: this epoch's completions become response
+            //     frames; feedback-enabled clients echo observed latency
+            //     the same epoch (zero delay — no clock events added) and
+            //     the degradation controller takes one control step.
+            //     Read-only over engine state.
+            if let Some(f) = front.as_deref_mut() {
+                let fsink: &mut dyn ObsSink = match recorder.as_mut() {
+                    Some(r) => r,
+                    None => &mut noop,
+                };
+                f.after_advance(now, &clusters, &batcher, &registry, fsink);
             }
             if let Some(rec) = recorder.as_mut() {
                 rec.epoch_sample(fleet_sample(
@@ -1141,6 +1214,9 @@ impl ServeEngine {
             fixed_fleet_static_energy_j,
             tenancy: self.tenancy.clone(),
             tenant_counters: tenancy.map(|t| t.counters().to_vec()).unwrap_or_default(),
+            // The gateway attaches its stats after the run; the engine
+            // itself never fills this.
+            front: None,
             latency_stats,
         }
     }

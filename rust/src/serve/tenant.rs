@@ -150,27 +150,39 @@ impl TenancyConfig {
 
     /// Parse the CLI `--tenants` spec: semicolon-separated tenants, each
     /// `name:w<N>[:q<N>][:f<N>][:p<N>]` — weight, quota, floor, priority
-    /// class. Example: `"gold:w3:q64:p2;silver:w1"`.
+    /// class. Example: `"gold:w3:q64:p2;silver:w1"`. Tenant names must be
+    /// unique (per-tenant report views key on them). Every malformed input
+    /// returns `Err` — this path faces untrusted CLI/gateway bytes.
     pub fn parse(spec: &str) -> Result<TenancyConfig, String> {
-        let mut specs = Vec::new();
+        let mut specs: Vec<TenantSpec> = Vec::new();
         for part in spec.split(';').filter(|p| !p.trim().is_empty()) {
             let mut fields = part.trim().split(':');
             let name = fields.next().unwrap_or("").trim();
             if name.is_empty() {
                 return Err(format!("tenant in '{part}' has no name"));
             }
+            if specs.iter().any(|s| s.name == name) {
+                return Err(format!("duplicate tenant name '{name}'"));
+            }
             let mut t = TenantSpec::weighted(name, 1);
             for f in fields {
                 let f = f.trim();
-                let (key, val) = f.split_at(1);
+                // Char-safe split: `split_at(1)` is a byte index and aborts
+                // on an empty field or a multi-byte first character.
+                let mut chars = f.chars();
+                let key = match chars.next() {
+                    Some(c) => c,
+                    None => return Err(format!("empty tenant field in '{part}'")),
+                };
+                let val = chars.as_str();
                 let n: u64 = val
                     .parse()
                     .map_err(|_| format!("bad tenant field '{f}' in '{part}'"))?;
                 match key {
-                    "w" => t.weight = (n as u32).max(1),
-                    "q" => t.quota = Some(n as usize),
-                    "f" => t.floor = n as usize,
-                    "p" => t.priority = n as u32,
+                    'w' => t.weight = (n as u32).max(1),
+                    'q' => t.quota = Some(n as usize),
+                    'f' => t.floor = n as usize,
+                    'p' => t.priority = n as u32,
                     _ => return Err(format!("unknown tenant field '{f}' in '{part}'")),
                 }
             }
@@ -234,6 +246,10 @@ pub struct TenancyController {
     /// Request id → tenant, for completion debits and report attribution
     /// (fused emissions fan back out through the batcher's member lists).
     tenant_of: FxHashMap<u64, u32>,
+    /// Degradation lever (gateway control plane): effective quota is
+    /// `quota * num / den`, floored at 1. Neutral `(1, 1)` leaves every
+    /// gate comparison bit-identical to the lever-free controller.
+    quota_scale: (u32, u32),
 }
 
 impl TenancyController {
@@ -244,6 +260,24 @@ impl TenancyController {
             outstanding: vec![0; n],
             counters: vec![TenantCounters::default(); n],
             tenant_of: FxHashMap::default(),
+            quota_scale: (1, 1),
+        }
+    }
+
+    /// Set the degradation quota multiplier (`num/den`, clamped ≥ 1/den).
+    /// `(1, 1)` restores the contractual quotas exactly.
+    pub fn set_quota_scale(&mut self, num: u32, den: u32) {
+        self.quota_scale = (num.max(1), den.max(1));
+    }
+
+    /// The quota actually enforced for a contractual quota `q` under the
+    /// current degradation scale.
+    pub fn effective_quota(&self, q: usize) -> usize {
+        let (num, den) = self.quota_scale;
+        if num == den {
+            q
+        } else {
+            ((q as u64).saturating_mul(num as u64) / den as u64).max(1) as usize
         }
     }
 
@@ -276,7 +310,7 @@ impl TenancyController {
         let t = self.cfg.clamp(req.tenant);
         self.counters[t].released += 1;
         let spec = &self.cfg.specs[t];
-        if let Some(q) = spec.quota {
+        if let Some(q) = spec.quota.map(|q| self.effective_quota(q)) {
             if self.outstanding[t] >= q {
                 admission.force_shed(req, now, ShedReason::TenantQuotaExceeded, registry, obs);
                 self.counters[t].shed += 1;
@@ -375,6 +409,43 @@ mod tests {
         assert!(TenancyConfig::parse("a:x9").is_err());
         assert!(TenancyConfig::parse("a:wfoo").is_err());
         assert!(TenancyConfig::parse(":w1").is_err());
+    }
+
+    /// Regression: `split_at(1)` was a byte-index slice, so an empty field
+    /// (`gold::w2`) or a multi-byte first character aborted the process
+    /// instead of returning `Err`. Duplicate names are rejected too —
+    /// per-tenant report views key on the name.
+    #[test]
+    fn parse_rejects_malformed_specs_without_panicking() {
+        assert!(TenancyConfig::parse("gold::w2").is_err(), "empty field");
+        assert!(TenancyConfig::parse("gold:w2:").is_err(), "trailing empty field");
+        assert!(TenancyConfig::parse("gold:échelle").is_err(), "multi-byte field key");
+        assert!(TenancyConfig::parse("gold:Ω1").is_err(), "multi-byte field key");
+        assert!(TenancyConfig::parse("a:w1;a:w2").is_err(), "duplicate tenant name");
+        assert!(TenancyConfig::parse("a:w1;b:w2").is_ok());
+        // Whitespace-only tenant entries are skipped, not parsed as names.
+        assert!(TenancyConfig::parse(" ; ;a:w1").is_ok());
+    }
+
+    #[test]
+    fn quota_scale_tightens_and_restores() {
+        let reg = ModelRegistry::standard();
+        let cfg = TenancyConfig::new(vec![TenantSpec::weighted("t", 1).with_quota(4)]);
+        let mut tc = TenancyController::new(cfg);
+        assert_eq!(tc.effective_quota(4), 4, "neutral scale is exact");
+        tc.set_quota_scale(1, 2);
+        assert_eq!(tc.effective_quota(4), 2);
+        assert_eq!(tc.effective_quota(1), 1, "floored at 1");
+        let mut adm = admission(AdmissionPolicy::Open);
+        let mut b = Backlog::idle();
+        assert!(tc.gate(req(0, 0), 0, &mut adm, &mut b, &reg, &mut NoopSink).is_some());
+        assert!(tc.gate(req(1, 0), 0, &mut adm, &mut b, &reg, &mut NoopSink).is_some());
+        // Halved quota (2) sheds the third even though the contract says 4.
+        assert!(tc.gate(req(2, 0), 0, &mut adm, &mut b, &reg, &mut NoopSink).is_none());
+        assert_eq!(adm.shed().last().map(|s| s.reason), Some(ShedReason::TenantQuotaExceeded));
+        // Restoring the neutral scale re-opens the contractual headroom.
+        tc.set_quota_scale(1, 1);
+        assert!(tc.gate(req(3, 0), 0, &mut adm, &mut b, &reg, &mut NoopSink).is_some());
     }
 
     #[test]

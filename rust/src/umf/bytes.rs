@@ -115,6 +115,15 @@ impl<'a> ByteReader<'a> {
     pub fn raw(&mut self, n: usize) -> Result<&'a [u8], UmfError> {
         self.take(n)
     }
+
+    /// Split off a bounded sub-reader over the next `n` bytes (the
+    /// length-prefixed reader idiom): the parent advances past the region
+    /// in one step, and reads inside the child are bounds-checked against
+    /// the region alone — a lying inner length can neither over-read into
+    /// the bytes that follow nor panic.
+    pub fn sub(&mut self, n: usize) -> Result<ByteReader<'a>, UmfError> {
+        Ok(ByteReader::new(self.take(n)?))
+    }
 }
 
 #[cfg(test)]
@@ -148,5 +157,21 @@ mod tests {
     fn bad_utf8_is_an_error() {
         let mut r = ByteReader::new(&[2, 0, 0xff, 0xfe]);
         assert!(matches!(r.str(), Err(UmfError::Malformed(_))));
+    }
+
+    #[test]
+    fn sub_reader_bounds_inner_reads() {
+        let mut w = ByteWriter::new();
+        w.u32(7).u32(0xdead_beef);
+        let v = w.into_vec();
+        let mut r = ByteReader::new(&v);
+        let mut inner = r.sub(4).unwrap();
+        assert_eq!(inner.u32().unwrap(), 7);
+        // The child is exhausted: it cannot reach the parent's next word.
+        assert!(matches!(inner.u8(), Err(UmfError::Truncated(_))));
+        // The parent resumed exactly past the region.
+        assert_eq!(r.u32().unwrap(), 0xdead_beef);
+        // Requesting a region longer than what remains is a typed error.
+        assert!(matches!(r.sub(1), Err(UmfError::Truncated(_))));
     }
 }

@@ -167,41 +167,45 @@ impl InfoPacket {
         }
         let outputs = r.u8()?;
         let attrs = AttrFlags::from_bits(r.u8()?);
-        let start = r.pos();
-        let gemm = if attrs.gemm { Some((r.u64()?, r.u64()?, r.u64()?)) } else { None };
+        // Bound every payload read with a sub-reader over exactly the
+        // declared size: a lying `payload_size` can neither consume the
+        // next packet's bytes (over-read) nor leave stragglers behind —
+        // both cases are typed errors, checked against this region alone.
+        let mut p = r.sub(payload_size as usize)?;
+        let gemm = if attrs.gemm { Some((p.u64()?, p.u64()?, p.u64()?)) } else { None };
         let conv = if attrs.conv {
             Some(ConvAttrs {
-                in_c: r.u32()?,
-                out_c: r.u32()?,
-                in_h: r.u32()?,
-                in_w: r.u32()?,
-                kh: r.u32()?,
-                kw: r.u32()?,
-                stride: r.u32()?,
-                padding: r.u32()?,
-                groups: r.u32()?,
+                in_c: p.u32()?,
+                out_c: p.u32()?,
+                in_h: p.u32()?,
+                in_w: p.u32()?,
+                kh: p.u32()?,
+                kw: p.u32()?,
+                stride: p.u32()?,
+                padding: p.u32()?,
+                groups: p.u32()?,
             })
         } else {
             None
         };
-        let vector = if attrs.vector { Some((r.u64()?, r.u64()?)) } else { None };
-        let data_bytes = if attrs.data { Some(r.u64()?) } else { None };
-        let n_deps = r.u16()? as usize;
+        let vector = if attrs.vector { Some((p.u64()?, p.u64()?)) } else { None };
+        let data_bytes = if attrs.data { Some(p.u64()?) } else { None };
+        let n_deps = p.u16()? as usize;
         if n_deps > 4096 {
             return Err(UmfError::Malformed(format!("too many deps: {n_deps}")));
         }
         let mut deps = Vec::with_capacity(n_deps);
         for _ in 0..n_deps {
-            deps.push(r.u32()?);
+            deps.push(p.u32()?);
         }
-        let param_owner = r.u32()?;
-        let param_bytes = r.u64()?;
-        let input_bytes = r.u64()?;
-        let output_bytes = r.u64()?;
-        let consumed = (r.pos() - start) as u32;
-        if consumed != payload_size {
+        let param_owner = p.u32()?;
+        let param_bytes = p.u64()?;
+        let input_bytes = p.u64()?;
+        let output_bytes = p.u64()?;
+        if p.remaining() != 0 {
             return Err(UmfError::Malformed(format!(
-                "info payload size mismatch: declared {payload_size}, consumed {consumed}"
+                "info payload size mismatch: declared {payload_size}, {} bytes unread",
+                p.remaining()
             )));
         }
         Ok(InfoPacket {
@@ -466,6 +470,41 @@ mod tests {
         let back = InfoPacket::decode(&mut r).unwrap();
         assert_eq!(p, back);
         assert_eq!(r.remaining(), 0);
+    }
+
+    /// A lying `payload_size` must be a typed error in every direction:
+    /// too small (reads would cross the region), too large (region eats the
+    /// following packet's bytes, leaving stragglers), or past end-of-buffer.
+    #[test]
+    fn lying_info_payload_size_cannot_over_read() {
+        let p = InfoPacket {
+            layer_id: 1,
+            op: OpKind::Gemm,
+            inputs: vec![TensorRole::Activation],
+            outputs: 1,
+            attrs: AttrFlags { gemm: true, ..Default::default() },
+            gemm: Some((4, 4, 4)),
+            conv: None,
+            vector: None,
+            data_bytes: None,
+            deps: vec![],
+            param_owner: 1,
+            param_bytes: 0,
+            input_bytes: 0,
+            output_bytes: 0,
+        };
+        let mut w = ByteWriter::new();
+        p.encode(&mut w, 0);
+        let good = w.into_vec();
+        let true_size = u32::from_le_bytes(good[0..4].try_into().unwrap());
+        for lie in [0u32, true_size - 1, true_size + 1, true_size + 64, u32::MAX] {
+            let mut bad = good.clone();
+            bad[0..4].copy_from_slice(&lie.to_le_bytes());
+            // Pad so an oversized (but in-bounds) lie has bytes to steal.
+            bad.extend_from_slice(&[0u8; 64]);
+            let mut r = ByteReader::new(&bad);
+            assert!(InfoPacket::decode(&mut r).is_err(), "lie {lie} must not decode");
+        }
     }
 
     #[test]

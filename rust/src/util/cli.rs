@@ -71,11 +71,16 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// Boolean flags: presence means true. The greedy parser in
+    /// [`Args::from_iter`] records `--parallel out.json` as
+    /// `parallel=out.json`, so an allow-list of truthy tokens would silently
+    /// read that as *false*; instead only an explicit false-y value
+    /// (`false`/`0`/`no`/`off`) turns a present flag off.
     pub fn bool(&self, key: &str, default: bool) -> bool {
-        self.opts
-            .get(key)
-            .map(|v| matches!(v.as_str(), "true" | "1" | "yes" | "on"))
-            .unwrap_or(default)
+        match self.opts.get(key) {
+            Some(v) => !matches!(v.as_str(), "false" | "0" | "no" | "off"),
+            None => default,
+        }
     }
 
     /// First positional argument (the subcommand), if any.
@@ -117,5 +122,24 @@ mod tests {
         let a = parse("--a --b 3");
         assert!(a.bool("a", false));
         assert_eq!(a.u64("b", 0), 3);
+    }
+
+    /// Regression: a bare boolean flag followed by a positional swallows the
+    /// positional into its value (`--parallel out.json` → parallel=out.json).
+    /// Presence must still read as true — only explicit false-y tokens may
+    /// turn a present flag off.
+    #[test]
+    fn flag_before_positional_still_reads_true() {
+        let a = parse("serve --parallel out.json");
+        assert!(a.bool("parallel", false), "presence means true even when the parser captured the next token");
+        assert!(a.bool("parallel", true));
+        // Explicit false-y tokens, in both `--k v` and `--k=v` forms.
+        for tok in ["false", "0", "no", "off"] {
+            assert!(!parse(&format!("--x {tok}")).bool("x", true));
+            assert!(!parse(&format!("--x={tok}")).bool("x", true));
+        }
+        // Truthy spellings keep working.
+        assert!(parse("--x=1").bool("x", false));
+        assert!(parse("--x yes").bool("x", false));
     }
 }

@@ -1,0 +1,476 @@
+//! §Front end integration tests: the input-boundary no-panic properties
+//! (codec, tenancy spec parser, CLI tokenizer), codec round-trip identity,
+//! the front-end-off byte-identity pin, replay exactness against the
+//! trace-driven engine, and the closed-loop degradation acceptance run
+//! (levers engage before admission sheds; goodput beats shed-only).
+
+use hsv::balancer::DispatchPolicy;
+use hsv::config::{HardwareConfig, SimConfig};
+use hsv::coordinator::Coordinator;
+use hsv::model::ModelFamily;
+use hsv::net::{
+    decode_frame, ClientSpec, DegradationPolicy, FrameReader, Gateway, InMemoryTransport, Msg,
+};
+use hsv::obs::ObsPolicy;
+use hsv::sched::SchedulerKind;
+use hsv::serve::{
+    AdmissionPolicy, AutoscalePolicy, BatchPolicy, ServeConfig, ServeEngine, ServeReport,
+    SloPolicy, TenancyConfig,
+};
+use hsv::sim::Cycle;
+use hsv::util::cli::Args;
+use hsv::util::json::Json;
+use hsv::util::quick::{check, Gen};
+use hsv::workload::{ArrivalModel, ModelRegistry, Workload, WorkloadRequest, WorkloadSpec};
+
+/// One arbitrary protocol message (all five tags, arbitrary field values).
+fn arb_msg(g: &mut Gen) -> Msg {
+    match g.usize_in(0, 4) {
+        0 => Msg::Hello { client_id: g.u64_in(0, u32::MAX as u64) as u32 },
+        1 => Msg::Submit { umf: g.vec(64, |g| g.u64_in(0, 255) as u8) },
+        2 => Msg::Infer {
+            request_id: g.u64_in(0, 1 << 62),
+            model_id: g.u64_in(0, u32::MAX as u64) as u32,
+            arrival: g.u64_in(0, 1 << 62),
+            priority: g.u64_in(0, u32::MAX as u64) as u32,
+            tenant: g.u64_in(0, u32::MAX as u64) as u32,
+        },
+        3 => Msg::Response {
+            request_id: g.u64_in(0, 1 << 62),
+            model_id: g.u64_in(0, u32::MAX as u64) as u32,
+            end: g.u64_in(0, 1 << 62),
+            latency: g.u64_in(0, 1 << 62),
+            deadline: g.u64_in(0, 1 << 62),
+            met: g.bool(),
+            degraded: g.bool(),
+        },
+        _ => Msg::Feedback {
+            request_id: g.u64_in(0, 1 << 62),
+            observed_latency: g.u64_in(0, 1 << 62),
+            deadline: g.u64_in(0, 1 << 62),
+        },
+    }
+}
+
+/// Satellite: every codec message survives encode ∘ decode exactly, and a
+/// frame is consumed to its last byte (strict framing — nothing else
+/// round-trips).
+#[test]
+fn codec_round_trip_is_identity_for_every_message() {
+    check(11, 400, |g| {
+        let msg = arb_msg(g);
+        let bytes = msg.encode();
+        match decode_frame(&bytes) {
+            Ok(Some((decoded, consumed))) => decoded == msg && consumed == bytes.len(),
+            _ => false,
+        }
+    });
+}
+
+/// Satellite: the frame decoder never panics — not on garbage, not on
+/// mutated valid frames, not on truncations, and not on any chunking of a
+/// byte stream through the incremental reader. `quick::check` treats a
+/// panic inside the property as a failure.
+#[test]
+fn frame_decoder_never_panics_on_arbitrary_input() {
+    check(13, 600, |g| {
+        // A byte soup: valid frames, mutated frames, truncations, garbage.
+        let mut stream: Vec<u8> = Vec::new();
+        for _ in 0..g.usize_in(0, 4) {
+            match g.usize_in(0, 3) {
+                0 => stream.extend_from_slice(&arb_msg(g).encode()),
+                1 => {
+                    let mut frame = arb_msg(g).encode();
+                    let at = g.usize_in(0, frame.len() - 1);
+                    frame[at] = frame[at].wrapping_add(g.u64_in(1, 255) as u8);
+                    stream.extend_from_slice(&frame);
+                }
+                2 => {
+                    let frame = arb_msg(g).encode();
+                    let cut = g.usize_in(0, frame.len());
+                    stream.extend_from_slice(&frame[..cut]);
+                }
+                _ => stream.extend(g.vec(32, |g| g.u64_in(0, 255) as u8)),
+            }
+        }
+        // Direct decode of every suffix start is panic-free.
+        let starts = [0, stream.len() / 2, stream.len().saturating_sub(3)];
+        for &s in &starts {
+            let _ = decode_frame(&stream[s.min(stream.len())..]);
+        }
+        // The incremental reader survives any chunking; errors poison the
+        // stream and reset recovers, never a panic. Each successful
+        // next_msg consumes ≥ 5 bytes, so the inner loop terminates.
+        let mut rd = FrameReader::new();
+        let mut off = 0;
+        while off < stream.len() {
+            let take = g.usize_in(1, 7).min(stream.len() - off);
+            rd.push(&stream[off..off + take]);
+            off += take;
+            loop {
+                match rd.next_msg() {
+                    Ok(Some(_)) => {}
+                    Ok(None) => break,
+                    Err(_) => {
+                        rd.reset();
+                        break;
+                    }
+                }
+            }
+        }
+        true
+    });
+}
+
+/// Satellite: the tenancy spec parser returns `Err` — never panics — on
+/// arbitrary input, including multi-byte UTF-8 in any position (the
+/// original byte-slicing bug) and duplicate names.
+#[test]
+fn tenancy_parse_never_panics_on_arbitrary_specs() {
+    let alphabet = [
+        "a", "b", "tenant", "0", "1", "97", ":", ";", "w", "q", "f", "p", " ", "\t", "é", "Ω",
+        "爱", "-", "w3", ":q2",
+    ];
+    check(17, 500, |g| {
+        let spec: String =
+            g.vec(24, |g| (*g.pick(&alphabet)).to_string()).concat();
+        let _ = TenancyConfig::parse(&spec);
+        true
+    });
+}
+
+/// Satellite: the CLI tokenizer and its non-numeric accessors never panic
+/// on arbitrary token streams (flags, values, positionals, unicode, empty
+/// strings — in any order).
+#[test]
+fn args_never_panic_on_arbitrary_token_streams() {
+    let vocab = [
+        "--batch", "--batch=8", "--", "-x", "gateway", "serve", "12", "--flag=value", "--é=Ω",
+        "", "--degrade", "off", "positional", "--slo-slack", "3.5", "--tenants", "a:w1;b:w2",
+    ];
+    check(19, 500, |g| {
+        let tokens: Vec<String> = g.vec(12, |g| (*g.pick(&vocab)).to_string());
+        let args = Args::from_iter(tokens);
+        let _ = args.subcommand();
+        let _ = args.has("batch");
+        let _ = args.str("batch", "default");
+        let _ = args.str_opt("tenants");
+        let _ = args.bool("degrade", true);
+        true
+    });
+}
+
+/// The 21 report keys of the trace-driven engine (pinned since the
+/// pre-tenancy shape; tenancy/gateway keys are feature-gated on top).
+fn base_report_keys() -> Vec<&'static str> {
+    let mut v = vec![
+        "hw",
+        "scheduler",
+        "policy",
+        "workload",
+        "requests",
+        "makespan_cycles",
+        "tops",
+        "goodput_tops",
+        "utilization",
+        "mean_latency_ms",
+        "p50_ms",
+        "p95_ms",
+        "p99_ms",
+        "p999_ms",
+        "deadline_miss_rate",
+        "slo_cnn_ms",
+        "slo_transformer_ms",
+        "epochs",
+        "decisions",
+        "miss_rate_cnn",
+        "miss_rate_transformer",
+    ];
+    v.sort_unstable();
+    v
+}
+
+fn sorted_keys(j: &Json) -> Vec<String> {
+    let mut keys: Vec<String> = match j {
+        Json::Obj(map) => map.keys().cloned().collect(),
+        _ => panic!("report JSON must be an object"),
+    };
+    keys.sort_unstable();
+    keys
+}
+
+/// §Front end off-pin: a trace-driven run carries exactly the pre-gateway
+/// key set — no `gateway` substring anywhere in the serialized report, no
+/// front stats on the struct. A gateway run adds exactly the nine
+/// `gateway_*` keys and nothing else.
+#[test]
+fn front_end_off_reports_stay_byte_identical_to_the_trace_driven_shape() {
+    let wl = WorkloadSpec::ratio(0.5, 12, 17).generate();
+    let mut eng = ServeEngine::new(
+        HardwareConfig::small(),
+        SchedulerKind::Has,
+        SimConfig::default(),
+        ServeConfig::default(),
+    );
+    let rep = eng.run(&wl);
+    assert!(rep.front.is_none(), "the engine never fills front stats on its own");
+    let j = rep.to_json();
+    assert_eq!(sorted_keys(&j), base_report_keys(), "front-end-off report keys drifted");
+    assert!(
+        !j.to_pretty().contains("gateway"),
+        "front-end-off report mentions the gateway"
+    );
+
+    let mut gw_eng = ServeEngine::new(
+        HardwareConfig::small(),
+        SchedulerKind::Has,
+        SimConfig::default(),
+        ServeConfig::default(),
+    );
+    let gw = Gateway::serve(&mut gw_eng, InMemoryTransport::replay(&wl), None);
+    let mut expected: Vec<String> =
+        base_report_keys().iter().map(|s| s.to_string()).collect();
+    expected.extend(
+        [
+            "gateway_frames_in",
+            "gateway_frames_rejected",
+            "gateway_submits",
+            "gateway_infers",
+            "gateway_responses",
+            "gateway_feedback",
+            "gateway_downgraded_releases",
+            "gateway_degrade_transitions",
+            "gateway_max_degrade_level",
+        ]
+        .iter()
+        .map(|s| s.to_string()),
+    );
+    expected.sort_unstable();
+    assert_eq!(
+        sorted_keys(&gw.to_json()),
+        expected,
+        "gateway report must add exactly the gateway_* keys"
+    );
+}
+
+/// §Front end replay contract: serving a `Workload` through the in-memory
+/// transport (session phase, frame decode, neutral front plane) reproduces
+/// the trace-driven report exactly — byte-identical JSON, same decision
+/// count, same per-request completions — across traffic models and serve
+/// stages (batching + admission exercised too).
+#[test]
+fn replay_transport_reproduces_the_trace_driven_report_exactly() {
+    let cases: Vec<(ArrivalModel, ServeConfig)> = vec![
+        (ArrivalModel::Poisson, ServeConfig::default()),
+        (
+            ArrivalModel::bursty(60_000.0, 6_000.0),
+            ServeConfig {
+                batch: BatchPolicy::SloAware { max_batch: 4 },
+                admission: AdmissionPolicy::PriorityThreshold { floor: 1, max_depth: 8 },
+                ..ServeConfig::default()
+            },
+        ),
+        (ArrivalModel::ramp(4.0, 0.5), ServeConfig::default()),
+    ];
+    for (model, cfg) in cases {
+        let tag = model.name();
+        let wl = WorkloadSpec::ratio(0.5, 20, 17).with_arrivals(model).generate();
+        let hw = HardwareConfig::small();
+        let trace =
+            ServeEngine::new(hw.clone(), SchedulerKind::Has, SimConfig::default(), cfg).run(&wl);
+        let mut gw_eng =
+            ServeEngine::new(hw, SchedulerKind::Has, SimConfig::default(), cfg);
+        let mut gw = Gateway::serve(&mut gw_eng, InMemoryTransport::replay(&wl), None);
+
+        let fs = gw.front.take().expect("gateway runs attach front stats");
+        assert_eq!(fs.frames_rejected, 0, "{tag}: replay frames must all decode");
+        assert_eq!(fs.infers, wl.requests.len() as u64, "{tag}");
+
+        assert_eq!(
+            trace.to_json().to_pretty(),
+            gw.to_json().to_pretty(),
+            "{tag}: replay report is not byte-identical to the trace-driven report"
+        );
+        assert_eq!(trace.decisions, gw.decisions, "{tag}");
+        assert_eq!(trace.epochs, gw.epochs, "{tag}");
+        assert_eq!(trace.served.len(), gw.served.len(), "{tag}");
+        for (a, b) in trace.served.iter().zip(&gw.served) {
+            assert_eq!(
+                (a.request_id, a.end, a.met),
+                (b.request_id, b.end, b.met),
+                "{tag}: completion streams diverged"
+            );
+        }
+    }
+}
+
+/// Single-request latency of `id` on one idle cluster (the same
+/// calibration primitive `SloPolicy::calibrated` uses).
+fn solo_latency(
+    registry: &ModelRegistry,
+    hw: &HardwareConfig,
+    sched: SchedulerKind,
+    sim: &SimConfig,
+    id: u32,
+) -> u64 {
+    let wl = Workload {
+        name: format!("solo_{id}"),
+        cnn_ratio: 0.0,
+        seed: 0,
+        requests: vec![WorkloadRequest::new(0, id, 0)],
+        registry: registry.clone(),
+    };
+    Coordinator::new(hw.clone().with_clusters(1), sched, sim.clone()).run(&wl).latencies[0]
+}
+
+/// Mean single-request latency of a 50/50 family mix over the zoo.
+fn mean_service(
+    registry: &ModelRegistry,
+    hw: &HardwareConfig,
+    sched: SchedulerKind,
+    sim: &SimConfig,
+) -> f64 {
+    let mut sum = [0.0f64; 2];
+    let mut n = [0u32; 2];
+    for id in 0..registry.len() as u32 {
+        let fam = match registry.graph(id).family {
+            ModelFamily::Cnn => 0,
+            ModelFamily::Transformer => 1,
+        };
+        sum[fam] += solo_latency(registry, hw, sched, sim, id) as f64;
+        n[fam] += 1;
+    }
+    0.5 * (sum[0] / n[0] as f64) + 0.5 * (sum[1] / n[1] as f64)
+}
+
+/// §Front end acceptance: under a sustained flash crowd the closed loop
+/// steps the ladder up *before* the admission stage sheds anything, holds
+/// the admitted-request p99 inside the loosest family SLO, and answers
+/// strictly more requests within their SLO than the shed-only baseline —
+/// across seeds. Goodput here is the user-facing one (requests answered on
+/// time): the model-variant lever deliberately trades useful ops per
+/// request for on-time answers, which is the whole point of degrading
+/// before shedding.
+#[test]
+fn closed_loop_degradation_beats_shed_only_under_flash_crowd() {
+    let hw = HardwareConfig::small();
+    let sim = SimConfig::default();
+    let sched = SchedulerKind::Has;
+    let registry = ModelRegistry::standard();
+    let slack = 8.0;
+    let slo = SloPolicy::calibrated(&registry, &hw, sched, &sim, slack);
+    // Self-calibrate the overload: 1.6× the fleet's sustainable rate for
+    // this exact hardware + zoo, independent of absolute cycle scales.
+    let mean_s = mean_service(&registry, &hw, sched, &sim);
+    let admission = AdmissionPolicy::PriorityThreshold { floor: 1, max_depth: 12 };
+
+    for seed in [5u64, 23, 71] {
+        let wl = WorkloadSpec::ratio(0.5, 120, seed)
+            .with_mean_interarrival(mean_s / 1.6)
+            .generate();
+
+        // Shed-only baseline: the trace-driven engine, same admission gate,
+        // no closed loop.
+        let base_cfg = ServeConfig {
+            policy: DispatchPolicy::LeastLoaded,
+            slo,
+            batch: BatchPolicy::Off,
+            admission,
+            autoscale: AutoscalePolicy::Off,
+            obs: ObsPolicy::Off,
+        };
+        let base =
+            ServeEngine::new(hw.clone(), sched, sim.clone(), base_cfg).run(&wl);
+        assert!(
+            !base.shed.is_empty(),
+            "seed {seed}: the shed-only baseline never shed — the flash crowd \
+             calibration is not overloading the fleet"
+        );
+
+        // The closed loop: one feedback-enabled client scripting the same
+        // workload, degradation armed, obs on so ladder transitions land in
+        // the side-log.
+        let mut transport =
+            InMemoryTransport::new(&wl.name).with_base_registry(wl.registry.clone());
+        transport.add_client(ClientSpec { id: 0, feedback: true });
+        transport.send_msg(0, 0, &Msg::Hello { client_id: 0 });
+        for r in &wl.requests {
+            transport.send_msg(
+                r.arrival,
+                0,
+                &Msg::Infer {
+                    request_id: r.id,
+                    model_id: r.model_id,
+                    arrival: r.arrival,
+                    priority: r.priority,
+                    tenant: r.tenant,
+                },
+            );
+        }
+        let policy = DegradationPolicy {
+            engage: 0.5,
+            disengage: 0.2,
+            min_samples: 6,
+            dwell: mean_s as Cycle,
+            alpha: 0.3,
+        };
+        let mut eng = ServeEngine::new(
+            hw.clone(),
+            sched,
+            sim.clone(),
+            ServeConfig { obs: ObsPolicy::on(), ..base_cfg },
+        );
+        let rep = Gateway::serve(&mut eng, transport, Some(policy));
+        let fs = rep.front.expect("gateway runs attach front stats");
+
+        // The loop closed and the ladder climbed to the model-variant lever.
+        assert!(fs.feedback > 0, "seed {seed}: no feedback frames came back");
+        assert!(fs.degrade_transitions >= 1, "seed {seed}: the ladder never moved");
+        assert!(
+            fs.max_level >= 2 && fs.downgraded_releases > 0,
+            "seed {seed}: the model-variant lever never engaged (max level {}, {} downgrades)",
+            fs.max_level,
+            fs.downgraded_releases
+        );
+
+        // Levers engage before admission sheds (if it ever needed to).
+        let first_engage = eng
+            .obs
+            .as_ref()
+            .expect("obs was on")
+            .degrade_log()
+            .first()
+            .map(|e| e.cycle)
+            .expect("transitions were recorded through the sink");
+        if let Some(first_shed) = rep.shed.iter().map(|s| s.decided_at).min() {
+            assert!(
+                first_engage <= first_shed,
+                "seed {seed}: shed at {first_shed} before the first lever at {first_engage}"
+            );
+        }
+
+        // Admitted p99 stays inside the loosest family SLO.
+        let p99 = rep.latency_summary().expect("requests were served").p99;
+        let bound = slo.cnn_deadline.max(slo.transformer_deadline) as f64;
+        assert!(
+            p99 <= bound,
+            "seed {seed}: admitted p99 {p99:.0} cycles exceeds the SLO bound {bound:.0}"
+        );
+
+        // Goodput (requests answered within their SLO) beats shed-only, and
+        // the loop never sheds more than the baseline.
+        let met = |r: &ServeReport| r.served.iter().filter(|s| s.met).count();
+        assert!(
+            met(&rep) > met(&base),
+            "seed {seed}: closed loop met {} requests vs shed-only {}",
+            met(&rep),
+            met(&base)
+        );
+        assert!(
+            rep.shed.len() <= base.shed.len(),
+            "seed {seed}: degradation shed more ({}) than the shed-only baseline ({})",
+            rep.shed.len(),
+            base.shed.len()
+        );
+    }
+}
