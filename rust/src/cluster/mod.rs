@@ -204,6 +204,22 @@ impl SvCluster {
         self.next_pending >= self.pending.len() && !self.state.has_work()
     }
 
+    /// §Fault tolerance: hard-crash this cluster. Every request that has not
+    /// fully completed — assigned-but-unadmitted (`pending` tail), queued,
+    /// and in-flight — is lost; the ids are returned so the serve layer can
+    /// reclaim and re-dispatch them elsewhere. Completed history and booked
+    /// timing stay intact (the accelerator's past work happened; only
+    /// unfinished state dies with it). The incremental load counters are
+    /// zeroed to match the now-empty queues, so a later `outstanding` read
+    /// (the balancer never routes here again — the health mask pins the
+    /// cluster ineligible — but folds still scan it) stays consistent.
+    pub fn fail(&mut self) -> Vec<u64> {
+        let mut ids = self.state.crash_clear();
+        ids.extend(self.pending.drain(self.next_pending..).map(|r| r.id));
+        self.queued_ops_est = 0;
+        ids
+    }
+
     /// Furthest cycle this cluster has booked work to — the cycle its last
     /// admitted task completes (0 if it never ran anything). The serve-layer
     /// autoscaler uses this as the floor of a powered-down cluster's energy

@@ -20,8 +20,8 @@ use hsv::net::{ClientSpec, DegradationPolicy, Gateway, InMemoryTransport, Msg};
 use hsv::report::{self, timeline};
 use hsv::sched::SchedulerKind;
 use hsv::serve::{
-    AdmissionPolicy, AutoscalePolicy, BatchPolicy, ObsPolicy, ServeConfig, ServeEngine, SloPolicy,
-    TenancyConfig,
+    AdmissionPolicy, AutoscalePolicy, BatchPolicy, FaultSpec, ObsPolicy, ServeConfig, ServeEngine,
+    SloPolicy, TenancyConfig,
 };
 use hsv::umf;
 use hsv::util::cli::Args;
@@ -38,6 +38,8 @@ const USAGE: &str = "hsv <simulate|serve|gateway|dse|gpu|timeline|convert|zoo|pj
            [--autoscale-min N] [--autoscale-dwell CYCLES] [--autoscale-warmup CYCLES]
            [--tenants 'gold:w3:q64:p2;silver:w1'] [--tenant-batching fuse|isolate]
            [--tenant-depth N]
+           [--faults 'crash:C@T;stall:C@T+D;slow:C@T+DxM;warmfail:C@T;mtbf:MEAN@HORIZON']
+           (fault knobs: seed=S retry=N backoff=B recover=on|off)
            [--trace out/trace.json] [--metrics out/metrics.csv]
            [--parallel] [--threads N]
            [--clusters N] [--small] [--out out/serve.json]
@@ -47,6 +49,7 @@ const USAGE: &str = "hsv <simulate|serve|gateway|dse|gpu|timeline|convert|zoo|pj
            [--admission-threshold DEPTH] [--admission-floor PRIO]
            [--degrade on|off] [--engage 0.8] [--disengage 0.4]
            [--min-samples 8] [--dwell CYCLES]
+           [--faults 'crash:C@T;link:CLIENT@K;...'] (same grammar as serve, plus link)
            [--clusters N] [--small] [--out out/gateway.json]
   dse      --requests 12 [--threads N] [--out out/dse.csv]
   gpu      --ratio 0.5 --requests 40 --seed 42
@@ -272,6 +275,17 @@ fn serve(args: &Args) {
     if let Some(cfg) = tenancy {
         engine = engine.with_tenancy(cfg);
     }
+    // §Fault tolerance: off unless --faults names a schedule. Cluster
+    // directives inject seeded crashes/stalls/stragglers/warm-up failures;
+    // the engine reclaims and retries a crashed cluster's work under the
+    // retry/backoff knobs and sheds the remainder with a typed reason.
+    if let Some(spec) = args.str_opt("faults") {
+        let spec = FaultSpec::parse(spec).unwrap_or_else(|e| {
+            eprintln!("bad --faults spec: {e}");
+            std::process::exit(2);
+        });
+        engine = engine.with_faults(spec);
+    }
     let r = engine.run(&wl);
     print!("{}", report::summarize_serve(&r));
     if let Some(tr) = &engine.obs {
@@ -391,6 +405,16 @@ fn gateway(args: &Args) {
             obs: ObsPolicy::Off,
         },
     );
+    // §Fault tolerance: the gateway additionally honors `link:CLIENT@K`
+    // directives, which truncate scheduled deliveries mid-frame before the
+    // session phase reassembles them.
+    if let Some(spec) = args.str_opt("faults") {
+        let spec = FaultSpec::parse(spec).unwrap_or_else(|e| {
+            eprintln!("bad --faults spec: {e}");
+            std::process::exit(2);
+        });
+        engine = engine.with_faults(spec);
+    }
     let r = Gateway::serve(&mut engine, transport, degradation);
     print!("{}", report::summarize_serve(&r));
     if let Some(fs) = &r.front {

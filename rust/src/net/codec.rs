@@ -152,7 +152,7 @@ pub fn decode_frame(buf: &[u8]) -> Result<Option<(Msg, usize)>, NetError> {
     if buf.len() < 4 {
         return Ok(None);
     }
-    let len = u32::from_le_bytes(buf[0..4].try_into().unwrap()) as usize;
+    let len = u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]) as usize;
     if len == 0 || len > MAX_FRAME {
         return Err(NetError::Oversized(len));
     }

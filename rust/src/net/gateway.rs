@@ -27,7 +27,9 @@ use crate::net::control::{DegradationController, DegradationPolicy, LeverSetting
 use crate::net::dispatcher::{Dispatcher, SessionStats};
 use crate::net::transport::{ClientSpec, InMemoryTransport};
 use crate::obs::ObsSink;
-use crate::serve::{DynamicBatcher, ServeEngine, ServeReport, SloPolicy};
+use crate::serve::{
+    DynamicBatcher, FaultEvent, FaultKind, ServeEngine, ServeReport, SloPolicy,
+};
 use crate::sim::Cycle;
 use crate::util::fasthash::{FxHashMap, FxHashSet};
 use crate::workload::{ModelRegistry, Workload, WorkloadRequest};
@@ -252,6 +254,22 @@ impl Gateway {
     ) -> ServeReport {
         let base =
             transport.base_registry.clone().unwrap_or_else(ModelRegistry::standard);
+        // §Fault tolerance: link faults mutate the byte schedule before any
+        // frame is reassembled — each truncated delivery feeds the
+        // FrameReader's poison/reset path in the session phase below, and
+        // the events ride into the engine's fault report via `link_faults`.
+        let links: Vec<(u32, u32)> =
+            engine.faults.as_ref().map(|s| s.links()).unwrap_or_default();
+        for (client, delivery) in links {
+            if let Some(cycle) = transport.truncate_delivery(client, delivery) {
+                engine.link_faults.push(FaultEvent {
+                    cycle,
+                    kind: FaultKind::LinkDrop,
+                    cluster: client,
+                    request_id: delivery as u64,
+                });
+            }
+        }
         let mut dispatcher = Dispatcher::new(base);
         dispatcher.drain(&mut transport);
         let (wl, owner, session) = dispatcher.finish(transport.workload_name.clone());

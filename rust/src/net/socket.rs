@@ -31,6 +31,18 @@ pub fn collect(
 ) -> Result<InMemoryTransport, NetError> {
     let listener = TcpListener::bind(addr)
         .map_err(|e| NetError::Malformed(format!("bind {addr}: {e}")))?;
+    collect_listener(listener, workload_name, clients, cycle_per_chunk)
+}
+
+/// [`collect`] over an already-bound listener — lets a test bind
+/// `127.0.0.1:0`, learn the ephemeral port, and connect a client thread
+/// before accepting (the loopback CI smoke for the `wire` feature).
+pub fn collect_listener(
+    listener: TcpListener,
+    workload_name: &str,
+    clients: u32,
+    cycle_per_chunk: Cycle,
+) -> Result<InMemoryTransport, NetError> {
     let mut transport = InMemoryTransport::new(workload_name);
     for client in 0..clients {
         let (stream, _) = listener

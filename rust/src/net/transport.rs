@@ -97,6 +97,25 @@ impl InMemoryTransport {
         self.ingress.len()
     }
 
+    /// §Fault tolerance: cut client `client`'s `delivery`-th scheduled
+    /// delivery (0-based, push order) down to its first half — a mid-frame
+    /// connection drop. The gateway's [`FrameReader`] sees a frame that
+    /// never finishes; the next delivery's bytes land misaligned and drive
+    /// the reader's poison/reset recovery path. Returns the delivery's
+    /// cycle, or `None` if the client has fewer deliveries scheduled.
+    ///
+    /// [`FrameReader`]: crate::net::codec::FrameReader
+    pub fn truncate_delivery(&mut self, client: u32, delivery: u32) -> Option<Cycle> {
+        let entry = self
+            .ingress
+            .iter_mut()
+            .filter(|(_, c, _)| *c == client)
+            .nth(delivery as usize)?;
+        let keep = entry.2.len() / 2;
+        entry.2.truncate(keep);
+        Some(entry.0)
+    }
+
     /// The contract constructor: one feedback-less client replaying `wl`
     /// as `Infer` frames over the workload's own registry. Serving this
     /// transport must reproduce `ServeEngine::run(&wl)` exactly.

@@ -59,6 +59,7 @@ pub use export::{metrics_csv, summary};
 use crate::net::control::DegradeEvent;
 use crate::sched::state::TaskRecord;
 use crate::serve::admission::ShedReason;
+use crate::serve::fault::FaultEvent;
 use crate::serve::autoscale::{PowerState, ScaleEvent};
 use crate::serve::batch::FUSED_ID_BASE;
 use crate::serve::ServeReport;
@@ -213,6 +214,12 @@ pub trait ObsSink {
     /// a side-log annotation — never part of the causal request event
     /// stream, so the 8-variant [`ReqEventKind`] space stays untouched.
     fn degrade_event(&mut self, _ev: &DegradeEvent) {}
+    /// §Fault tolerance: one fault-injection or recovery action (crash,
+    /// stall window, slowdown, warm-up failure, link drop, reclaim, retry,
+    /// fault shed). Like [`Self::degrade_event`], a side-log annotation —
+    /// never part of the causal request event stream, so the 8-variant
+    /// [`ReqEventKind`] space stays untouched.
+    fn fault_event(&mut self, _ev: &FaultEvent) {}
     /// One per-epoch fleet snapshot.
     fn epoch_sample(&mut self, _s: EpochSample) {}
     /// One booked task execution, harvested from a cluster timeline.
@@ -351,6 +358,8 @@ pub struct ObsTrace {
     tenants: FxHashMap<u64, u32>,
     /// §Front end: degradation-ladder transitions, in decision order.
     degrade_log: Vec<DegradeEvent>,
+    /// §Fault tolerance: fault/recovery actions, in injection order.
+    fault_log: Vec<FaultEvent>,
     makespan: Cycle,
 }
 
@@ -367,6 +376,7 @@ impl ObsTrace {
             batch_members: FxHashMap::default(),
             tenants: FxHashMap::default(),
             degrade_log: Vec::new(),
+            fault_log: Vec::new(),
             makespan: 0,
         }
     }
@@ -416,6 +426,11 @@ impl ObsTrace {
     /// §Front end: degradation-ladder transitions, in decision order.
     pub fn degrade_log(&self) -> &[DegradeEvent] {
         &self.degrade_log
+    }
+
+    /// §Fault tolerance: fault/recovery actions, in injection order.
+    pub fn fault_log(&self) -> &[FaultEvent] {
+        &self.fault_log
     }
 
     /// Retained epoch samples (bounded; see [`Reservoir`]).
@@ -526,6 +541,10 @@ impl ObsSink for ObsTrace {
         self.degrade_log.push(*ev);
     }
 
+    fn fault_event(&mut self, ev: &FaultEvent) {
+        self.fault_log.push(*ev);
+    }
+
     fn epoch_sample(&mut self, s: EpochSample) {
         self.samples.push(s);
     }
@@ -630,5 +649,22 @@ mod tests {
         assert_eq!(t.degrade_log()[0].lever, Lever::BatchWait);
         assert!(t.degrade_log()[0].engaged);
         assert_eq!(t.events().len(), 1, "transitions must not grow the causal event stream");
+    }
+
+    #[test]
+    fn fault_actions_land_in_the_side_log_not_the_event_stream() {
+        use crate::serve::fault::FaultKind;
+        let mut t = ObsTrace::new(ObsPolicy::on(), 1.0, 1);
+        t.request_event(ReqEvent { request_id: 5, cycle: 0, kind: ReqEventKind::Arrival });
+        t.fault_event(&FaultEvent {
+            cycle: 42,
+            kind: FaultKind::Crash,
+            cluster: 1,
+            request_id: 0,
+        });
+        assert_eq!(t.fault_log().len(), 1);
+        assert_eq!(t.fault_log()[0].cluster, 1);
+        assert!(matches!(t.fault_log()[0].kind, FaultKind::Crash));
+        assert_eq!(t.events().len(), 1, "faults must not grow the causal event stream");
     }
 }

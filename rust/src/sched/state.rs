@@ -488,6 +488,37 @@ impl ClusterState {
         }
         (ops, count)
     }
+
+    /// §Fault tolerance: a crash wipes the scheduling table. Every queued
+    /// request — including partially scheduled ones — is dropped and its
+    /// id returned so the serve loop can reclaim it; the in-flight counters
+    /// and round-robin cursor reset to the empty-table state. Work already
+    /// booked stays booked (the energy was spent, the decisions were
+    /// taken, the timeline happened) and completed requests stay completed
+    /// — a crash loses in-flight progress, not history.
+    pub fn crash_clear(&mut self) -> Vec<u64> {
+        let ids = self.queues.iter().map(|q| q.request_id).collect();
+        self.queues.clear();
+        self.inflight_ops_est = 0;
+        self.inflight_task_count = 0;
+        self.rr_cursor = 0;
+        ids
+    }
+
+    /// §Fault tolerance: delay all future work by `bubble` cycles — every
+    /// processor's booking frontier moves out uniformly, so a stall or a
+    /// straggler window shows up as later starts for everything scheduled
+    /// after it. A uniform bump keeps the relative processor order (and
+    /// thus every subsequent scheduling decision shape) intact, and cancels
+    /// out of the booked-cycles load signal, so the balancer sees the delay
+    /// only through the work taking longer to finish. Capping the
+    /// `run_until` horizon instead would be a no-op: slicing the horizon is
+    /// pinned bit-identical to a one-shot run.
+    pub fn fault_bubble(&mut self, bubble: Cycle) {
+        for p in &mut self.procs {
+            p.free_at = p.free_at.saturating_add(bubble);
+        }
+    }
 }
 
 #[cfg(test)]

@@ -135,6 +135,11 @@ pub enum ShedReason {
     /// was released. Decided by the tenancy gate, recorded here so the shed
     /// ledger stays the single refusal log.
     TenantQuotaExceeded,
+    /// §Fault tolerance: the request was reclaimed from a crashed cluster
+    /// and its retry budget ran out (or recovery is disabled). Decided by
+    /// the fault-recovery stage, recorded here so the shed ledger stays the
+    /// single refusal log.
+    ClusterFault,
 }
 
 /// How a *served* request traveled through the admission stage. Shed

@@ -171,6 +171,10 @@ pub struct Autoscaler {
     last_off: Vec<Cycle>,
     last_change: Option<(ScaleDirection, Cycle)>,
     log: Vec<ScaleEvent>,
+    /// §Fault tolerance: clusters hard-crashed by the fault injector. A dead
+    /// cluster is permanently Cold — the scale-up path must never pick it as
+    /// a wake target (the silicon is gone, not merely powered off).
+    dead: Vec<bool>,
 }
 
 impl Autoscaler {
@@ -185,6 +189,7 @@ impl Autoscaler {
             last_off: vec![0; n],
             last_change: None,
             log: Vec::new(),
+            dead: vec![false; n],
         }
     }
 
@@ -235,6 +240,49 @@ impl Autoscaler {
                 _ => None,
             })
             .min()
+    }
+
+    /// §Fault tolerance: a cluster hard-crashed at `now`. It transitions to
+    /// `Cold` as an *unplanned* power-down — no drain protocol, the work is
+    /// already lost — and is marked dead so no later scale-up wakes it. The
+    /// powered interval closes honestly at the later of the crash cycle and
+    /// the cluster's last booked completion (`booked_through`): the silicon
+    /// burned leakage right up to the moment it died, and work booked past
+    /// the crash was energy already spent. `last_change` is untouched — a
+    /// crash is not a scale decision and must not open or reset a dwell
+    /// window.
+    pub fn force_cold(&mut self, i: usize, now: Cycle, booked_through: Cycle) {
+        if i >= self.states.len() || self.dead[i] {
+            return;
+        }
+        if let Some(on) = self.on_since[i].take() {
+            let off = now.max(booked_through).max(on);
+            self.intervals[i].push((on, off));
+            self.last_off[i] = off;
+        }
+        self.states[i] = PowerState::Cold;
+        self.dead[i] = true;
+        self.mask[i] = false;
+    }
+
+    /// §Fault tolerance: a warm-up failure at `now`. Only a `Warming`
+    /// cluster is affected — the power-up sequence aborts and the cluster
+    /// falls back to `Cold`, charged for the cycles it spent half-warm (the
+    /// PLL and SRAM init burned power even though no work ever landed). The
+    /// cluster is *not* dead: a later scale-up may retry the wake. Returns
+    /// whether the fault applied.
+    pub fn fail_warmup(&mut self, i: usize, now: Cycle) -> bool {
+        if i >= self.states.len() || !matches!(self.states[i], PowerState::Warming { .. }) {
+            return false;
+        }
+        if let Some(on) = self.on_since[i].take() {
+            let off = now.max(on);
+            self.intervals[i].push((on, off));
+            self.last_off[i] = off;
+        }
+        self.states[i] = PowerState::Cold;
+        self.mask[i] = false;
+        true
     }
 
     /// One control epoch at cycle `now`: finish due warm-ups, power down
@@ -320,11 +368,15 @@ impl Autoscaler {
         {
             // Cheapest capacity first: cancel a drain (the cluster is
             // still powered), else wake the lowest-id cold cluster.
-            let target = self
-                .states
-                .iter()
-                .position(|s| *s == PowerState::Draining)
-                .or_else(|| self.states.iter().position(|s| *s == PowerState::Cold));
+            // §Fault tolerance: dead clusters are unwakeable — skip them.
+            let target = self.states.iter().position(|s| *s == PowerState::Draining).or_else(
+                || {
+                    self.states
+                        .iter()
+                        .enumerate()
+                        .position(|(i, s)| *s == PowerState::Cold && !self.dead[i])
+                },
+            );
             if let Some(i) = target {
                 if self.states[i] == PowerState::Cold {
                     // Power on now; never overlap the previous interval
@@ -555,6 +607,47 @@ mod tests {
         a.observe(20, &depth(5), &cs, &reg);
         assert_eq!(a.states()[1], PowerState::Active, "zero warm-up is immediate");
         assert!(a.dispatch_mask()[1]);
+    }
+
+    #[test]
+    fn crashed_cluster_is_never_rewoken() {
+        let reg = ModelRegistry::standard();
+        let cs = clusters(3);
+        let mut a = Autoscaler::new(threshold(4, 1, 1, 0), 3);
+        // Crash cluster 1 at cycle 100 with work booked through 250.
+        a.force_cold(1, 100, 250);
+        assert_eq!(a.states()[1], PowerState::Cold);
+        assert!(!a.dispatch_mask()[1]);
+        // Drain cluster 2 and let it go cold so both 1 and 2 are Cold.
+        a.observe(200, &depth(0), &cs, &reg);
+        a.observe(300, &depth(0), &cs, &reg);
+        assert_eq!(a.states()[2], PowerState::Cold);
+        // A backlog spike wakes the healthy cold cluster 2, never dead 1.
+        a.observe(400, &depth(9), &cs, &reg);
+        assert!(matches!(a.states()[2], PowerState::Warming { .. }));
+        assert_eq!(a.states()[1], PowerState::Cold, "dead cluster stays cold");
+        // The crash charged cluster 1 through its booked work, nothing more.
+        assert_eq!(a.powered_cycles(1_000)[1], 250);
+    }
+
+    #[test]
+    fn warmup_failure_falls_back_to_cold_and_can_retry() {
+        let reg = ModelRegistry::standard();
+        let cs = clusters(2);
+        let mut a = Autoscaler::new(threshold(4, 1, 1, 0), 2);
+        a.observe(0, &depth(0), &cs, &reg); // drain 1
+        a.observe(10, &depth(0), &cs, &reg); // 1 goes cold
+        a.observe(1_000, &depth(5), &cs, &reg); // wake 1: warming until 2_000
+        assert!(matches!(a.states()[1], PowerState::Warming { .. }));
+        assert!(a.fail_warmup(1, 1_500), "warming cluster fails its warm-up");
+        assert_eq!(a.states()[1], PowerState::Cold);
+        assert!(!a.fail_warmup(1, 1_600), "only a Warming cluster can fail warm-up");
+        // Not dead: the next spike retries the wake.
+        a.observe(3_000, &depth(5), &cs, &reg);
+        assert!(matches!(a.states()[1], PowerState::Warming { .. }));
+        // Charged for the aborted half-warm window 1_000..1_500 plus the
+        // initial 0..10 span and the successful re-wake through end of run.
+        assert_eq!(a.powered_cycles(10_000)[1], 10 + 500 + 7_000);
     }
 
     #[test]

@@ -1,0 +1,625 @@
+//! §Fault tolerance — seeded fault injection and the recovery bookkeeping.
+//!
+//! The serve fleet so far was perfectly reliable: a request dispatched to a
+//! cluster was guaranteed to complete. Real datacenter serving is not —
+//! accelerators crash, warm-ups fail, stragglers appear, links drop bytes
+//! mid-frame. This module injects those failures *deterministically*: a
+//! [`FaultSpec`] (the `--faults` grammar) expands into a [`FaultSchedule`]
+//! of cycle-stamped directives, and a per-run [`FaultInjector`] drives them
+//! through the serve loop's health stage:
+//!
+//! - **crash** — the cluster dies permanently: its queued + in-flight
+//!   requests are reclaimed, it is marked ineligible in the dispatch mask,
+//!   and (when autoscaling is on) it transitions through the power-state
+//!   machine as an unplanned Cold that the autoscaler may cover by waking a
+//!   spare. Reclaimed requests are re-dispatched under a per-request retry
+//!   budget with deterministic linear backoff (they re-enter the event
+//!   clock like deferred releases); exhausted retries shed with the typed
+//!   [`ShedReason::ClusterFault`](crate::serve::admission::ShedReason).
+//! - **stall** — the cluster is ineligible for the window and its
+//!   processors pick up an idle bubble of the full window length.
+//! - **slow** — a straggler: the cluster stays eligible but progresses at
+//!   `1/M` speed over the window, modeled as a bubble of `D - D/M` on every
+//!   processor's booking frontier (capping the `run_until` horizon instead
+//!   would be a no-op — slicing the horizon is pinned bit-identical to a
+//!   one-shot run).
+//! - **warmfail** — a warming cluster fails its cold start and returns to
+//!   Cold (the autoscaler may try again later).
+//! - **link** — a client's Kth scheduled gateway delivery is truncated
+//!   mid-frame, feeding the `FrameReader` poison/reset path.
+//! - **mtbf** — a seeded exponential crash schedule expanded at build time
+//!   (victims drawn uniformly from the not-yet-crashed set, always leaving
+//!   at least one cluster out of its own schedule).
+//!
+//! The standing contract: **faults off → decision streams and report JSON
+//! byte-identical to the fault-free engine** (the `fault_*` report keys are
+//! gated on the config), and under any seeded schedule every released
+//! request either completes exactly once or sheds with a typed reason —
+//! none lost, none duplicated. Both are pinned in `rust/tests/fault.rs`.
+
+use crate::sim::Cycle;
+use crate::util::fasthash::{FxHashMap, FxHashSet};
+use crate::util::prng::Rng;
+use crate::workload::WorkloadRequest;
+use std::collections::BTreeMap;
+
+/// Default per-request retry budget (`retry=` knob).
+pub const DEFAULT_RETRY_BUDGET: u32 = 2;
+/// Default backoff unit in cycles (`backoff=` knob): the Nth retry of a
+/// request releases `N × backoff` cycles after its reclaim.
+pub const DEFAULT_BACKOFF: Cycle = 50_000;
+
+/// One parsed fault directive. Cluster directives carry the cycle they
+/// activate at; `Link` targets the gateway's byte schedule instead and
+/// `Mtbf` expands into `Crash` directives at build time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultDirective {
+    /// `crash:C@T` — cluster `C` dies permanently at cycle `T`.
+    Crash { cluster: u32, at: Cycle },
+    /// `stall:C@T+D` — cluster `C` makes no progress in `[T, T+D)`.
+    Stall { cluster: u32, at: Cycle, dur: Cycle },
+    /// `slow:C@T+DxM` — cluster `C` runs `M×` slower over `[T, T+D)`.
+    Slow { cluster: u32, at: Cycle, dur: Cycle, factor: u32 },
+    /// `warmfail:C@T` — if cluster `C` is warming at `T`, the warm-up fails.
+    WarmupFail { cluster: u32, at: Cycle },
+    /// `link:C@K` — truncate client `C`'s Kth scheduled delivery (0-based)
+    /// mid-frame.
+    Link { client: u32, delivery: u32 },
+    /// `mtbf:MEAN@HORIZON` — seeded exponential crashes with mean gap
+    /// `MEAN` cycles until `HORIZON`, leaving ≥ 1 cluster unscheduled.
+    Mtbf { mean: Cycle, horizon: Cycle },
+}
+
+impl FaultDirective {
+    /// The cycle a cluster directive activates at (`Link`/`Mtbf` have no
+    /// activation cycle of their own and sort first).
+    fn at(&self) -> Cycle {
+        match *self {
+            FaultDirective::Crash { at, .. }
+            | FaultDirective::Stall { at, .. }
+            | FaultDirective::Slow { at, .. }
+            | FaultDirective::WarmupFail { at, .. } => at,
+            FaultDirective::Link { .. } | FaultDirective::Mtbf { .. } => 0,
+        }
+    }
+}
+
+/// The parsed `--faults` configuration: raw directives plus the recovery
+/// knobs. Built once per engine (`ServeEngine::with_faults`), expanded into
+/// a [`FaultSchedule`] per run once the cluster count is known.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultSpec {
+    pub directives: Vec<FaultDirective>,
+    /// Seed of the `mtbf` expansion.
+    pub seed: u64,
+    /// Retries allowed per request before it sheds (`retry=`).
+    pub retry_budget: u32,
+    /// Linear-backoff unit in cycles (`backoff=`).
+    pub backoff: Cycle,
+    /// `recover=off` disables re-dispatch entirely: reclaimed requests shed
+    /// immediately (the no-recovery baseline of the `serve_slo` sweep).
+    pub recover: bool,
+}
+
+impl FaultSpec {
+    /// An empty spec: no directives, default knobs. Running with it is
+    /// decision-stream-identical to running with faults off (the report
+    /// just gains the zeroed `fault_*` keys).
+    pub fn none() -> FaultSpec {
+        FaultSpec {
+            directives: Vec::new(),
+            seed: 1,
+            retry_budget: DEFAULT_RETRY_BUDGET,
+            backoff: DEFAULT_BACKOFF,
+            recover: true,
+        }
+    }
+
+    /// Parse the `--faults` grammar: `;`-separated directives
+    /// (`crash:C@T`, `stall:C@T+D`, `slow:C@T+DxM`, `warmfail:C@T`,
+    /// `link:C@K`, `mtbf:MEAN@HORIZON`) and knobs (`seed=S`, `retry=N`,
+    /// `backoff=B`, `recover=on|off`). The spec faces untrusted CLI bytes,
+    /// so every malformed input returns `Err` — never a panic.
+    pub fn parse(spec: &str) -> Result<FaultSpec, String> {
+        let mut out = FaultSpec::none();
+        for raw in spec.split(';') {
+            let tok = raw.trim();
+            if tok.is_empty() {
+                continue;
+            }
+            if let Some((key, val)) = tok.split_once('=') {
+                match key.trim() {
+                    "seed" => out.seed = num(val, "seed")?,
+                    "retry" => out.retry_budget = num(val, "retry")? as u32,
+                    "backoff" => out.backoff = num(val, "backoff")?,
+                    "recover" => {
+                        out.recover = match val.trim() {
+                            "on" => true,
+                            "off" => false,
+                            other => return Err(format!("recover={other} (want on|off)")),
+                        }
+                    }
+                    other => return Err(format!("unknown knob '{other}'")),
+                }
+                continue;
+            }
+            let (kind, rest) = tok
+                .split_once(':')
+                .ok_or_else(|| format!("directive '{tok}' is not kind:args"))?;
+            out.directives.push(parse_directive(kind.trim(), rest.trim())?);
+        }
+        Ok(out)
+    }
+
+    /// The gateway-side link faults: `(client, delivery)` pairs.
+    pub fn links(&self) -> Vec<(u32, u32)> {
+        self.directives
+            .iter()
+            .filter_map(|d| match *d {
+                FaultDirective::Link { client, delivery } => Some((client, delivery)),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Expand into the concrete per-run schedule for a fleet of `clusters`:
+    /// `mtbf` directives become seeded `Crash` directives, link faults are
+    /// split out for the gateway, and the cluster directives are stably
+    /// sorted by activation cycle.
+    pub fn schedule(&self, clusters: usize) -> FaultSchedule {
+        let mut directives = Vec::new();
+        for d in &self.directives {
+            match *d {
+                FaultDirective::Link { .. } => {}
+                FaultDirective::Mtbf { mean, horizon } => {
+                    expand_mtbf(mean, horizon, clusters, self.seed, &mut directives)
+                }
+                other => directives.push(other),
+            }
+        }
+        directives.sort_by_key(|d| d.at());
+        FaultSchedule {
+            directives,
+            links: self.links(),
+            retry_budget: self.retry_budget,
+            backoff: self.backoff,
+            recover: self.recover,
+        }
+    }
+}
+
+fn num(s: &str, what: &str) -> Result<u64, String> {
+    s.trim().parse::<u64>().map_err(|_| format!("{what}: '{s}' is not a non-negative integer"))
+}
+
+fn parse_directive(kind: &str, rest: &str) -> Result<FaultDirective, String> {
+    // Every cluster directive is `C@T...`; mtbf reuses the same shape.
+    let (head, tail) = rest
+        .split_once('@')
+        .ok_or_else(|| format!("{kind}:{rest} is missing '@'"))?;
+    match kind {
+        "crash" => Ok(FaultDirective::Crash {
+            cluster: num(head, "cluster")? as u32,
+            at: num(tail, "cycle")?,
+        }),
+        "warmfail" => Ok(FaultDirective::WarmupFail {
+            cluster: num(head, "cluster")? as u32,
+            at: num(tail, "cycle")?,
+        }),
+        "stall" => {
+            let (at, dur) = tail
+                .split_once('+')
+                .ok_or_else(|| format!("stall:{rest} is missing '+DUR'"))?;
+            Ok(FaultDirective::Stall {
+                cluster: num(head, "cluster")? as u32,
+                at: num(at, "cycle")?,
+                dur: num(dur, "duration")?,
+            })
+        }
+        "slow" => {
+            let (at, win) = tail
+                .split_once('+')
+                .ok_or_else(|| format!("slow:{rest} is missing '+DURxM'"))?;
+            let (dur, factor) = win
+                .split_once('x')
+                .ok_or_else(|| format!("slow:{rest} is missing 'xM'"))?;
+            let factor = num(factor, "factor")? as u32;
+            if factor == 0 {
+                return Err("slow factor must be >= 1".to_string());
+            }
+            Ok(FaultDirective::Slow {
+                cluster: num(head, "cluster")? as u32,
+                at: num(at, "cycle")?,
+                dur: num(dur, "duration")?,
+                factor,
+            })
+        }
+        "link" => Ok(FaultDirective::Link {
+            client: num(head, "client")? as u32,
+            delivery: num(tail, "delivery")? as u32,
+        }),
+        "mtbf" => {
+            let mean = num(head, "mtbf mean")?;
+            if mean == 0 {
+                return Err("mtbf mean must be >= 1 cycle".to_string());
+            }
+            Ok(FaultDirective::Mtbf { mean, horizon: num(tail, "horizon")? })
+        }
+        other => Err(format!(
+            "unknown directive '{other}' (crash|stall|slow|warmfail|link|mtbf)"
+        )),
+    }
+}
+
+/// Draw an exponential crash schedule: gaps ~ Exp(1/mean), victims uniform
+/// over the clusters this expansion has not yet crashed. At least one
+/// cluster is always left out so the fleet can never lose every cluster to
+/// the mtbf process alone (explicit `crash:` directives may still finish
+/// the job — the conservation sweep handles that).
+fn expand_mtbf(
+    mean: Cycle,
+    horizon: Cycle,
+    clusters: usize,
+    seed: u64,
+    out: &mut Vec<FaultDirective>,
+) {
+    let mut rng = Rng::new(seed ^ 0xFA017_5EED);
+    let mut alive: Vec<u32> = (0..clusters as u32).collect();
+    let mut t: Cycle = 0;
+    while alive.len() > 1 {
+        let gap = rng.exp(1.0 / mean as f64).ceil() as u64;
+        t = t.saturating_add(gap.max(1));
+        if t > horizon {
+            break;
+        }
+        let victim = alive.swap_remove(rng.index(alive.len()));
+        out.push(FaultDirective::Crash { cluster: victim, at: t });
+    }
+}
+
+/// The concrete per-run schedule: cluster directives sorted by activation
+/// cycle (mtbf expanded), gateway link faults, and the recovery knobs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultSchedule {
+    pub directives: Vec<FaultDirective>,
+    /// `(client, delivery)` truncations for the gateway byte schedule.
+    pub links: Vec<(u32, u32)>,
+    pub retry_budget: u32,
+    pub backoff: Cycle,
+    pub recover: bool,
+}
+
+/// What happened, for the observability side-log and the report counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    Crash,
+    StallStart,
+    StallEnd,
+    Slowdown,
+    WarmupFail,
+    /// `cluster` carries the client id and `request_id` the delivery index.
+    LinkDrop,
+    /// A queued/in-flight request pulled off a crashed cluster.
+    Reclaim,
+    /// A reclaimed request rescheduled for re-dispatch.
+    Retry,
+    /// A reclaimed request that exhausted its retry budget (or recovery is
+    /// off, or no healthy cluster ever took it) and shed.
+    FaultShed,
+}
+
+/// One fault or recovery action, recorded through
+/// [`ObsSink::fault_event`](crate::obs::ObsSink::fault_event) — a side-log
+/// beside `degrade_event`, so the request-lifecycle event stream stays
+/// byte-identical with faults off.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultEvent {
+    pub cycle: Cycle,
+    pub kind: FaultKind,
+    /// The cluster acted on (for `LinkDrop`: the client id).
+    pub cluster: u32,
+    /// The request acted on (0 for cluster-level events; for `LinkDrop`:
+    /// the truncated delivery index).
+    pub request_id: u64,
+}
+
+/// Counters of one faulted run, surfaced as the `fault_*` report keys
+/// (present only when a fault spec is configured).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultReport {
+    pub crashes: u64,
+    pub stalls: u64,
+    pub slowdowns: u64,
+    pub warmup_fails: u64,
+    pub link_drops: u64,
+    /// Requests reclaimed off crashed clusters (fused emissions count once).
+    pub reclaimed: u64,
+    /// Re-dispatch attempts scheduled.
+    pub retries: u64,
+    /// Requests shed with `ShedReason::ClusterFault` (per member).
+    pub fault_sheds: u64,
+    /// Reclaimed requests that later completed on another cluster
+    /// (fused emissions count once).
+    pub recovered: u64,
+}
+
+/// A reclaimed request waiting out its retry backoff.
+#[derive(Debug, Clone, Copy)]
+pub struct PendingRetry {
+    pub req: WorkloadRequest,
+    /// The balancer user id the request was originally submitted under.
+    pub user: u32,
+}
+
+/// Per-run fault state machine: walks the schedule, tracks per-cluster
+/// health, and holds the retry queue that re-enters the event clock.
+#[derive(Debug)]
+pub struct FaultInjector {
+    directives: Vec<FaultDirective>,
+    cursor: usize,
+    crashed: Vec<bool>,
+    /// 0 = not stalled; otherwise the cycle the stall window ends.
+    stalled_until: Vec<Cycle>,
+    /// `(release_cycle, request_id)` → retry, so releases drain in
+    /// deterministic (cycle, id) order.
+    retries: BTreeMap<(Cycle, u64), PendingRetry>,
+    attempts: FxHashMap<u64, u32>,
+    reclaimed: FxHashSet<u64>,
+    retry_budget: u32,
+    backoff: Cycle,
+    recover: bool,
+    pub report: FaultReport,
+}
+
+impl FaultInjector {
+    pub fn new(schedule: FaultSchedule, clusters: usize) -> FaultInjector {
+        FaultInjector {
+            directives: schedule.directives,
+            cursor: 0,
+            crashed: vec![false; clusters],
+            stalled_until: vec![0; clusters],
+            retries: BTreeMap::new(),
+            attempts: FxHashMap::default(),
+            reclaimed: FxHashSet::default(),
+            retry_budget: schedule.retry_budget,
+            backoff: schedule.backoff,
+            recover: schedule.recover,
+            report: FaultReport::default(),
+        }
+    }
+
+    /// Directives whose activation cycle has arrived, in schedule order.
+    pub fn due(&mut self, now: Cycle) -> Vec<FaultDirective> {
+        let start = self.cursor;
+        while self.cursor < self.directives.len() && self.directives[self.cursor].at() <= now {
+            self.cursor += 1;
+        }
+        self.directives[start..self.cursor].to_vec()
+    }
+
+    /// Clusters whose stall window just closed (emits one `StallEnd` each).
+    pub fn expire_stalls(&mut self, now: Cycle) -> Vec<u32> {
+        let mut ended = Vec::new();
+        for (c, until) in self.stalled_until.iter_mut().enumerate() {
+            if *until != 0 && *until <= now {
+                *until = 0;
+                ended.push(c as u32);
+            }
+        }
+        ended
+    }
+
+    pub fn set_crashed(&mut self, cluster: usize) {
+        self.crashed[cluster] = true;
+        self.stalled_until[cluster] = 0;
+    }
+
+    pub fn is_crashed(&self, cluster: usize) -> bool {
+        self.crashed[cluster]
+    }
+
+    pub fn set_stalled(&mut self, cluster: usize, until: Cycle) {
+        self.stalled_until[cluster] = self.stalled_until[cluster].max(until);
+    }
+
+    /// May the dispatch stage hand `cluster` work at `now`? Crashed ∨
+    /// mid-stall → no. Stragglers (slowdowns) stay eligible — that is what
+    /// makes them painful.
+    pub fn eligible(&self, cluster: usize, now: Cycle) -> bool {
+        !self.crashed[cluster] && self.stalled_until[cluster] <= now
+    }
+
+    /// First sight of `id` on a crashed cluster? (Counts once per request.)
+    pub fn mark_reclaimed(&mut self, id: u64) -> bool {
+        self.reclaimed.insert(id)
+    }
+
+    pub fn was_reclaimed(&self, id: u64) -> bool {
+        self.reclaimed.contains(&id)
+    }
+
+    /// Schedule a reclaimed request for re-dispatch under the retry budget
+    /// with linear backoff (`N × backoff` after the Nth reclaim). `false`
+    /// means the caller must shed it (`ShedReason::ClusterFault`).
+    pub fn schedule_retry(&mut self, req: WorkloadRequest, user: u32, now: Cycle) -> bool {
+        if !self.recover {
+            return false;
+        }
+        let n = self.attempts.entry(req.id).or_insert(0);
+        if *n >= self.retry_budget {
+            return false;
+        }
+        *n += 1;
+        let release = now.saturating_add(self.backoff.saturating_mul(*n as u64));
+        self.retries.insert((release, req.id), PendingRetry { req, user });
+        self.report.retries += 1;
+        true
+    }
+
+    /// Retries whose backoff has elapsed, in (cycle, id) order.
+    pub fn due_retries(&mut self, now: Cycle) -> Vec<PendingRetry> {
+        let rest = self.retries.split_off(&(now + 1, 0));
+        let due = std::mem::replace(&mut self.retries, rest);
+        due.into_values().collect()
+    }
+
+    /// Everything still waiting out a backoff (the end-of-run conservation
+    /// sweep sheds these when the loop exits before they release).
+    pub fn drain_retries(&mut self) -> Vec<PendingRetry> {
+        std::mem::take(&mut self.retries).into_values().collect()
+    }
+
+    /// The next cycle the injector needs the event clock to visit: the
+    /// next directive activation, the earliest stall end, or the earliest
+    /// retry release.
+    pub fn next_event(&self, now: Cycle) -> Option<Cycle> {
+        let mut next: Option<Cycle> = None;
+        let mut fold = |t: Cycle| next = Some(next.map_or(t, |c| c.min(t)));
+        if let Some(d) = self.directives.get(self.cursor) {
+            fold(d.at());
+        }
+        for &until in &self.stalled_until {
+            if until > now {
+                fold(until);
+            }
+        }
+        if let Some((&(t, _), _)) = self.retries.first_key_value() {
+            fold(t);
+        }
+        next
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_every_directive_kind_and_knob() {
+        let spec = FaultSpec::parse(
+            "crash:1@2000; stall:0@1500+400 ;slow:2@100+900x4;warmfail:3@50;\
+             link:0@2;mtbf:500000@5000000;seed=9;retry=5;backoff=123;recover=off",
+        )
+        .unwrap();
+        assert_eq!(spec.seed, 9);
+        assert_eq!(spec.retry_budget, 5);
+        assert_eq!(spec.backoff, 123);
+        assert!(!spec.recover);
+        assert_eq!(spec.directives.len(), 6);
+        assert_eq!(spec.directives[0], FaultDirective::Crash { cluster: 1, at: 2000 });
+        assert_eq!(spec.directives[1], FaultDirective::Stall { cluster: 0, at: 1500, dur: 400 });
+        assert_eq!(
+            spec.directives[2],
+            FaultDirective::Slow { cluster: 2, at: 100, dur: 900, factor: 4 }
+        );
+        assert_eq!(spec.directives[3], FaultDirective::WarmupFail { cluster: 3, at: 50 });
+        assert_eq!(spec.directives[4], FaultDirective::Link { client: 0, delivery: 2 });
+        assert_eq!(spec.links(), vec![(0, 2)]);
+        assert_eq!(spec.directives[5], FaultDirective::Mtbf { mean: 500_000, horizon: 5_000_000 });
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs_without_panicking() {
+        for bad in [
+            "crash:1",          // missing @T
+            "crash:x@5",        // non-numeric cluster
+            "stall:0@5",        // missing +D
+            "slow:0@5+9",       // missing xM
+            "slow:0@5+9x0",     // factor 0
+            "mtbf:0@100",       // zero mean
+            "nuke:0@5",         // unknown kind
+            "recover=maybe",    // bad knob value
+            "turbo=1",          // unknown knob
+            "justwords",        // no kind:args shape
+        ] {
+            assert!(FaultSpec::parse(bad).is_err(), "'{bad}' should not parse");
+        }
+        let empty = FaultSpec::parse("").unwrap();
+        assert_eq!(empty, FaultSpec::none());
+        assert_eq!(FaultSpec::parse(" ; ;").unwrap(), FaultSpec::none());
+    }
+
+    #[test]
+    fn mtbf_expansion_is_deterministic_and_keeps_one_cluster_alive() {
+        let spec = FaultSpec::parse("mtbf:1000@1000000;seed=7").unwrap();
+        let a = spec.schedule(4);
+        let b = spec.schedule(4);
+        assert_eq!(a, b, "same seed, same schedule");
+        // A tight mean over a long horizon crashes everything it may: all
+        // but one cluster, each exactly once, in nondecreasing cycle order.
+        assert_eq!(a.directives.len(), 3);
+        let mut victims: Vec<u32> = a
+            .directives
+            .iter()
+            .map(|d| match *d {
+                FaultDirective::Crash { cluster, .. } => cluster,
+                ref other => panic!("mtbf expanded to {other:?}"),
+            })
+            .collect();
+        victims.sort_unstable();
+        victims.dedup();
+        assert_eq!(victims.len(), 3, "each victim crashes once");
+        let ats: Vec<Cycle> = a.directives.iter().map(|d| d.at()).collect();
+        assert!(ats.windows(2).all(|w| w[0] <= w[1]), "sorted by cycle");
+        // A different seed draws a different schedule.
+        let other = FaultSpec::parse("mtbf:1000@1000000;seed=8").unwrap().schedule(4);
+        assert_ne!(a, other);
+    }
+
+    #[test]
+    fn injector_walks_directives_and_tracks_health() {
+        let spec = FaultSpec::parse("crash:1@500;stall:0@200+300").unwrap();
+        let mut inj = FaultInjector::new(spec.schedule(2), 2);
+        assert_eq!(inj.next_event(0), Some(200));
+        assert!(inj.due(100).is_empty());
+        let due = inj.due(250);
+        assert_eq!(due, vec![FaultDirective::Stall { cluster: 0, at: 200, dur: 300 }]);
+        inj.set_stalled(0, 250 + 300);
+        assert!(!inj.eligible(0, 250), "mid-stall is ineligible");
+        assert!(inj.eligible(1, 250));
+        assert_eq!(inj.next_event(250), Some(500), "min(crash at, stall end)");
+        assert_eq!(inj.due(600).len(), 1);
+        inj.set_crashed(1);
+        assert!(!inj.eligible(1, 600));
+        assert_eq!(inj.expire_stalls(600), vec![0]);
+        assert!(inj.eligible(0, 600), "stall window closed");
+        assert_eq!(inj.next_event(600), None);
+    }
+
+    #[test]
+    fn retry_budget_exhausts_then_sheds_and_backoff_is_linear() {
+        let spec = FaultSpec::parse("retry=2;backoff=100").unwrap();
+        let mut inj = FaultInjector::new(spec.schedule(1), 1);
+        let req = WorkloadRequest::new(7, 0, 50);
+        assert!(inj.schedule_retry(req, 3, 1_000));
+        assert_eq!(inj.next_event(1_000), Some(1_100), "1st retry after 1x backoff");
+        let due = inj.due_retries(1_100);
+        assert_eq!(due.len(), 1);
+        assert_eq!((due[0].req.id, due[0].user), (7, 3));
+        assert!(inj.schedule_retry(req, 3, 2_000));
+        assert_eq!(inj.next_event(2_000), Some(2_200), "2nd retry after 2x backoff");
+        assert_eq!(inj.due_retries(2_200).len(), 1);
+        assert!(!inj.schedule_retry(req, 3, 3_000), "budget of 2 exhausted");
+        assert_eq!(inj.report.retries, 2);
+        // recover=off never retries at all.
+        let off = FaultSpec::parse("recover=off").unwrap();
+        let mut inj = FaultInjector::new(off.schedule(1), 1);
+        assert!(!inj.schedule_retry(req, 3, 0));
+        assert_eq!(inj.report.retries, 0);
+    }
+
+    #[test]
+    fn due_retries_release_in_cycle_then_id_order_and_drain_takes_the_rest() {
+        let spec = FaultSpec::parse("retry=4;backoff=100").unwrap();
+        let mut inj = FaultInjector::new(spec.schedule(1), 1);
+        for id in [9u64, 2, 5] {
+            assert!(inj.schedule_retry(WorkloadRequest::new(id, 0, 0), 0, 0));
+        }
+        assert!(inj.schedule_retry(WorkloadRequest::new(1, 0, 0), 0, 400));
+        let due: Vec<u64> = inj.due_retries(100).iter().map(|p| p.req.id).collect();
+        assert_eq!(due, vec![2, 5, 9], "same cycle drains in id order");
+        let rest: Vec<u64> = inj.drain_retries().iter().map(|p| p.req.id).collect();
+        assert_eq!(rest, vec![1]);
+        assert_eq!(inj.next_event(0), None);
+    }
+}

@@ -61,6 +61,7 @@
 pub mod admission;
 pub mod autoscale;
 pub mod batch;
+pub mod fault;
 pub mod slo;
 pub mod tenant;
 
@@ -69,6 +70,7 @@ pub use admission::{
 };
 pub use autoscale::{Autoscaler, AutoscalePolicy, PowerState, ScaleDirection, ScaleEvent};
 pub use batch::{BatchPolicy, DynamicBatcher, FusedBatch};
+pub use fault::{FaultEvent, FaultInjector, FaultKind, FaultReport, FaultSchedule, FaultSpec};
 pub use slo::SloPolicy;
 pub use tenant::{TenancyConfig, TenancyController, TenantCounters, TenantSpec};
 
@@ -87,7 +89,9 @@ use crate::sim::power::EnergyMeter;
 use crate::sim::Cycle;
 use crate::util::json::Json;
 use crate::util::stats::Summary;
-use crate::workload::{ModelRegistry, Workload};
+use crate::workload::{ModelRegistry, Workload, WorkloadRequest};
+
+use fault::FaultDirective;
 
 /// Serving-engine policy knobs.
 #[derive(Debug, Clone, Copy)]
@@ -219,6 +223,10 @@ pub struct ServeReport {
     /// on it, so the front-end-off report stays byte-identical to the
     /// trace-driven one).
     pub front: Option<FrontStats>,
+    /// §Fault tolerance: fault/recovery counters, `Some` only when a fault
+    /// spec is configured (the `fault_*` JSON keys are gated on it, so the
+    /// faults-off report stays byte-identical to the fault-free one).
+    pub faults: Option<FaultReport>,
     /// Latency summary over `served`, computed once at aggregation (the
     /// percentile accessors all read this cache).
     latency_stats: Option<Summary>,
@@ -560,6 +568,21 @@ impl ServeReport {
                 .set("gateway_degrade_transitions", fs.degrade_transitions)
                 .set("gateway_max_degrade_level", u64::from(fs.max_level));
         }
+        // §Fault tolerance: fault keys appear only when a fault spec is
+        // configured, so every faults-off report stays byte-identical to
+        // the fault-free one (the same discipline as the batching /
+        // admission / autoscale / tenant / gateway keys above).
+        if let Some(f) = &self.faults {
+            j.set("fault_crashes", f.crashes)
+                .set("fault_stalls", f.stalls)
+                .set("fault_slowdowns", f.slowdowns)
+                .set("fault_warmup_fails", f.warmup_fails)
+                .set("fault_link_drops", f.link_drops)
+                .set("fault_reclaimed", f.reclaimed)
+                .set("fault_retries", f.retries)
+                .set("fault_sheds", f.fault_sheds)
+                .set("fault_recovered", f.recovered);
+        }
         if let Some(m) = self.miss_rate_for(ModelFamily::Cnn) {
             j.set("miss_rate_cnn", m);
         }
@@ -652,6 +675,47 @@ fn fleet_sample(
     }
 }
 
+/// §Fault tolerance: shed one reclaimed emission with
+/// [`ShedReason::ClusterFault`], fanning a fused emission back out to its
+/// members so the shed ledger — and the conservation contract (every
+/// released request completes exactly once or sheds with a typed reason) —
+/// stays per-request. With tenancy on, the members' in-flight debits are
+/// returned to their tenants (the request will never complete; leaving the
+/// quota charged would leak capacity forever). `cluster` is the crashed
+/// cluster for reclaim-path sheds and `u32::MAX` for the end-of-run
+/// conservation sweep (no single cluster is responsible — the fleet ran
+/// out).
+#[allow(clippy::too_many_arguments)]
+fn shed_faulted(
+    req: WorkloadRequest,
+    cluster: u32,
+    now: Cycle,
+    inj: &mut FaultInjector,
+    admission: &mut AdmissionController,
+    batcher: &DynamicBatcher,
+    mut tc: Option<&mut TenancyController>,
+    registry: &ModelRegistry,
+    obs: &mut dyn ObsSink,
+) {
+    let members: Vec<WorkloadRequest> = match batcher.batch_of(req.id) {
+        Some(b) => b.members.clone(),
+        None => vec![req],
+    };
+    for m in members {
+        admission.force_shed(m, now, ShedReason::ClusterFault, registry, obs);
+        inj.report.fault_sheds += 1;
+        obs.fault_event(&FaultEvent {
+            cycle: now,
+            kind: FaultKind::FaultShed,
+            cluster,
+            request_id: m.id,
+        });
+        if let Some(t) = tc.as_deref_mut() {
+            t.note_completed(m.tenant);
+        }
+    }
+}
+
 /// The online serving engine: balancer + clusters + event clock.
 pub struct ServeEngine {
     pub hw: HardwareConfig,
@@ -662,6 +726,15 @@ pub struct ServeEngine {
     /// dispatch, and tenant report keys are all skipped bit for bit).
     /// Lives outside [`ServeConfig`] so that struct stays `Copy`.
     pub tenancy: Option<TenancyConfig>,
+    /// §Fault tolerance: the seeded fault schedule (`None` = faults off:
+    /// the health stage, retry queue, and `fault_*` report keys are all
+    /// skipped bit for bit). Lives outside [`ServeConfig`] so that struct
+    /// stays `Copy` (the same discipline as `tenancy`).
+    pub faults: Option<FaultSpec>,
+    /// §Fault tolerance: link-fault events the gateway injected into the
+    /// byte schedule before the run (the engine drains them into the fault
+    /// report + obs side-log at the top of `run_front`).
+    pub(crate) link_faults: Vec<FaultEvent>,
     /// The trace recorded by the last [`Self::run`] (`None` until a run
     /// completes with [`ObsPolicy`] enabled).
     pub obs: Option<ObsTrace>,
@@ -674,7 +747,16 @@ impl ServeEngine {
         sim: SimConfig,
         cfg: ServeConfig,
     ) -> ServeEngine {
-        ServeEngine { hw, sched, sim, cfg, tenancy: None, obs: None }
+        ServeEngine {
+            hw,
+            sched,
+            sim,
+            cfg,
+            tenancy: None,
+            faults: None,
+            link_faults: Vec::new(),
+            obs: None,
+        }
     }
 
     pub fn with_policy(mut self, policy: DispatchPolicy) -> ServeEngine {
@@ -704,6 +786,14 @@ impl ServeEngine {
 
     pub fn with_tenancy(mut self, tenancy: TenancyConfig) -> ServeEngine {
         self.tenancy = Some(tenancy);
+        self
+    }
+
+    /// §Fault tolerance: install a seeded fault schedule. The spec expands
+    /// into a concrete [`FaultSchedule`] per run, once the cluster count is
+    /// known.
+    pub fn with_faults(mut self, faults: FaultSpec) -> ServeEngine {
+        self.faults = Some(faults);
         self
     }
 
@@ -777,6 +867,27 @@ impl ServeEngine {
         // new tail (the same O(new work) discipline as the status table).
         let mut completed_cursor = vec![0usize; clusters.len()];
 
+        // §Fault tolerance: expand the spec into a concrete seeded schedule
+        // now that the cluster count is known. With no spec there is no
+        // injector — the health stage, the composed dispatch mask, the
+        // retry clock, and the end-of-run sweep are all skipped bit for
+        // bit (pinned by rust/tests/fault.rs).
+        let mut injector = self
+            .faults
+            .as_ref()
+            .map(|spec| FaultInjector::new(spec.schedule(clusters.len()), clusters.len()));
+        if let Some(inj) = injector.as_mut() {
+            // Link faults fired in the gateway's byte schedule before this
+            // run started; fold them into the report and the side-log so
+            // one place holds the whole fault story.
+            for ev in self.link_faults.drain(..) {
+                inj.report.link_drops += 1;
+                if let Some(rec) = recorder.as_mut() {
+                    rec.fault_event(&ev);
+                }
+            }
+        }
+
         // The trace in arrival order (the generator emits it sorted; sort
         // defensively for hand-built traces, stable on same-cycle ids).
         let mut trace = wl.requests.clone();
@@ -803,6 +914,160 @@ impl ServeEngine {
                 batcher.set_wait_stretch(s.wait_stretch);
                 if let Some(t) = tc.as_mut() {
                     t.set_quota_scale(s.quota_scale.0, s.quota_scale.1);
+                }
+            }
+            // 0b. §Fault tolerance: the health stage. Due faults fire
+            //     before release/dispatch so this epoch's routing already
+            //     sees the damage: a crash reclaims the cluster's queued +
+            //     in-flight requests (retry under budget, typed shed when
+            //     exhausted) and hands the carcass to the autoscaler as an
+            //     unplanned Cold; a stall opens an ineligibility window and
+            //     bubbles booked work; a straggler stays eligible but runs
+            //     slow; a warm-up failure drops a Warming cluster back to
+            //     Cold. Due retries re-enter the balancer here. Skipped
+            //     entirely — bit for bit — with no fault spec.
+            if let Some(inj) = injector.as_mut() {
+                for c in inj.expire_stalls(now) {
+                    sink.fault_event(&FaultEvent {
+                        cycle: now,
+                        kind: FaultKind::StallEnd,
+                        cluster: c,
+                        request_id: 0,
+                    });
+                }
+                for d in inj.due(now) {
+                    match d {
+                        FaultDirective::Crash { cluster, .. } => {
+                            let c = cluster as usize;
+                            if c >= clusters.len() || inj.is_crashed(c) {
+                                continue;
+                            }
+                            inj.set_crashed(c);
+                            inj.report.crashes += 1;
+                            sink.fault_event(&FaultEvent {
+                                cycle: now,
+                                kind: FaultKind::Crash,
+                                cluster,
+                                request_id: 0,
+                            });
+                            // An unplanned power-off: the autoscaler stops
+                            // charging static energy and will never re-wake
+                            // this cluster (it may wake a spare instead).
+                            if autoscaler.enabled() {
+                                autoscaler.force_cold(c, now, clusters[c].booked_through());
+                            }
+                            for id in clusters[c].fail() {
+                                if inj.mark_reclaimed(id) {
+                                    inj.report.reclaimed += 1;
+                                }
+                                sink.fault_event(&FaultEvent {
+                                    cycle: now,
+                                    kind: FaultKind::Reclaim,
+                                    cluster,
+                                    request_id: id,
+                                });
+                                // Rebuild the request from the balancer's
+                                // ledger (the latest entry wins: a request
+                                // crashed twice has one row per attempt).
+                                let (model_id, arrival, priority, user) = {
+                                    let e = lb
+                                        .request_table
+                                        .iter()
+                                        .rev()
+                                        .find(|e| e.request_id == id)
+                                        .expect("reclaimed request missing from the request table");
+                                    (e.model_id, e.arrival, e.priority, e.user_id)
+                                };
+                                let tenant = if tc.is_some() { user } else { 0 };
+                                let req = WorkloadRequest::new(id, model_id, arrival)
+                                    .with_priority(priority)
+                                    .with_tenant(tenant);
+                                if inj.schedule_retry(req, user, now) {
+                                    sink.fault_event(&FaultEvent {
+                                        cycle: now,
+                                        kind: FaultKind::Retry,
+                                        cluster,
+                                        request_id: id,
+                                    });
+                                } else {
+                                    shed_faulted(
+                                        req,
+                                        cluster,
+                                        now,
+                                        inj,
+                                        &mut admission,
+                                        &batcher,
+                                        tc.as_mut(),
+                                        &registry,
+                                        sink,
+                                    );
+                                }
+                            }
+                        }
+                        FaultDirective::Stall { cluster, dur, .. } => {
+                            let c = cluster as usize;
+                            if c >= clusters.len() || inj.is_crashed(c) {
+                                continue;
+                            }
+                            // Booked work slips by the full window; the
+                            // cluster takes nothing new until it ends.
+                            clusters[c].state.fault_bubble(dur);
+                            inj.set_stalled(c, now.saturating_add(dur));
+                            inj.report.stalls += 1;
+                            sink.fault_event(&FaultEvent {
+                                cycle: now,
+                                kind: FaultKind::StallStart,
+                                cluster,
+                                request_id: 0,
+                            });
+                        }
+                        FaultDirective::Slow { cluster, dur, factor, .. } => {
+                            let c = cluster as usize;
+                            if c >= clusters.len() || inj.is_crashed(c) {
+                                continue;
+                            }
+                            // A straggler at speed 1/M over a window D does
+                            // D/M of its work: booked completions slip by
+                            // the lost D - D/M, but the cluster stays
+                            // eligible — exactly the degraded-not-dead case
+                            // health-aware dispatch must tolerate.
+                            clusters[c].state.fault_bubble(dur - dur / factor as u64);
+                            inj.report.slowdowns += 1;
+                            sink.fault_event(&FaultEvent {
+                                cycle: now,
+                                kind: FaultKind::Slowdown,
+                                cluster,
+                                request_id: 0,
+                            });
+                        }
+                        FaultDirective::WarmupFail { cluster, .. } => {
+                            let c = cluster as usize;
+                            if c < clusters.len()
+                                && autoscaler.enabled()
+                                && autoscaler.fail_warmup(c, now)
+                            {
+                                inj.report.warmup_fails += 1;
+                                sink.fault_event(&FaultEvent {
+                                    cycle: now,
+                                    kind: FaultKind::WarmupFail,
+                                    cluster,
+                                    request_id: 0,
+                                });
+                            }
+                        }
+                        // Link faults fire in the gateway's byte schedule,
+                        // Mtbf expands at schedule build — neither reaches
+                        // the injector's directive stream.
+                        FaultDirective::Link { .. } | FaultDirective::Mtbf { .. } => {}
+                    }
+                }
+                // Due retries re-enter the balancer with their original
+                // arrival stamp (latency is measured from first arrival —
+                // a recovered request still pays for the crash). The model
+                // id was registered at first submit, fused ids included.
+                for pr in inj.due_retries(now) {
+                    lb.submit(pr.req, pr.user)
+                        .expect("retried request names a model the engine registered");
                 }
             }
             // 1. Release: requests whose arrival cycle has come enter the
@@ -944,7 +1209,21 @@ impl ServeEngine {
             // 2. Online dispatch against live cluster status, restricted to
             //    powered, non-draining clusters when autoscaling (`None`
             //    mask is exactly `dispatch_ready`, bit for bit).
-            let mask = autoscaler.enabled().then(|| autoscaler.dispatch_mask());
+            //    §Fault tolerance: with an injector the health mask composes
+            //    in — crashed clusters and open stall windows are
+            //    ineligible, stragglers stay in. With every cluster healthy
+            //    the composed mask equals the base mask entry for entry, so
+            //    dispatch takes the exact same decisions.
+            let mask_owned: Option<Vec<bool>> = injector.as_ref().map(|inj| {
+                let base = autoscaler.enabled().then(|| autoscaler.dispatch_mask());
+                (0..clusters.len())
+                    .map(|i| base.map_or(true, |m| m[i]) && inj.eligible(i, now))
+                    .collect()
+            });
+            let mask: Option<&[bool]> = match &mask_owned {
+                Some(m) => Some(m.as_slice()),
+                None => autoscaler.enabled().then(|| autoscaler.dispatch_mask()),
+            };
             lb.dispatch_ready_eligible_traced(&mut clusters, &registry, now, mask, sink);
 
             // 3. Advance every cluster's scheduler to the horizon — the
@@ -1030,13 +1309,99 @@ impl ServeEngine {
                     t_next = Some(t_next.map_or(e, |t| t.min(e)));
                 }
             }
+            // §Fault tolerance: the next scheduled fault, the earliest
+            // stall-window end, and the earliest due retry are all clock
+            // events — a crash must fire even if nothing else happens that
+            // cycle, and a retry must wake an otherwise-idle loop (always
+            // absent with faults off).
+            if let Some(inj) = injector.as_ref() {
+                if let Some(f) = inj.next_event(now) {
+                    t_next = Some(t_next.map_or(f, |t| t.min(f)));
+                }
+            }
             match t_next {
                 Some(t) => now = t.max(now + 1),
                 None => break,
             }
         }
 
-        let report = self.aggregate(
+        // §Fault tolerance: the conservation sweep. The loop exits when no
+        // clock event remains, which with a gutted fleet can leave work the
+        // balancer could never place: retries still waiting for a healthy
+        // cluster and submitted-but-undispatched entries. Every released
+        // request must complete exactly once or shed with a typed reason
+        // (the rust/tests/fault.rs chaos contract), so both sets shed here
+        // with `ShedReason::ClusterFault` — there is no single culpable
+        // cluster, hence `u32::MAX`. The sweep runs before `aggregate` so
+        // the sheds land in the report it builds.
+        if let Some(inj) = injector.as_mut() {
+            let sink: &mut dyn ObsSink = match recorder.as_mut() {
+                Some(r) => r,
+                None => &mut noop,
+            };
+            for pr in inj.drain_retries() {
+                shed_faulted(
+                    pr.req,
+                    u32::MAX,
+                    now,
+                    inj,
+                    &mut admission,
+                    &batcher,
+                    tc.as_mut(),
+                    &registry,
+                    sink,
+                );
+            }
+            // One shed per distinct undispatched id: a request reclaimed
+            // and resubmitted has several ledger rows, only the newest of
+            // which can still be undispatched — but guard against
+            // duplicates anyway, conservation is the whole point.
+            let mut seen = crate::util::fasthash::FxHashSet::default();
+            let undispatched: Vec<u64> = lb
+                .request_table
+                .iter()
+                .filter(|e| e.cluster.is_none() && seen.insert(e.request_id))
+                .map(|e| e.request_id)
+                .collect();
+            for id in undispatched {
+                let (model_id, arrival, priority, user) = {
+                    let e = lb
+                        .request_table
+                        .iter()
+                        .rev()
+                        .find(|e| e.request_id == id)
+                        .expect("undispatched id came from the request table");
+                    (e.model_id, e.arrival, e.priority, e.user_id)
+                };
+                let tenant = if tc.is_some() { user } else { 0 };
+                let req = WorkloadRequest::new(id, model_id, arrival)
+                    .with_priority(priority)
+                    .with_tenant(tenant);
+                shed_faulted(
+                    req,
+                    u32::MAX,
+                    now,
+                    inj,
+                    &mut admission,
+                    &batcher,
+                    tc.as_mut(),
+                    &registry,
+                    sink,
+                );
+            }
+            // Recovered = reclaimed off a crashed cluster and later
+            // completed elsewhere. Completion logs are append-only, so one
+            // pass over the final state sees every completion of the run.
+            for c in &clusters {
+                for r in &c.state.completed {
+                    if inj.was_reclaimed(r.request_id) {
+                        inj.report.recovered += 1;
+                    }
+                }
+            }
+        }
+
+        let mut report = self.aggregate(
             wl,
             &registry,
             &lb,
@@ -1047,6 +1412,9 @@ impl ServeEngine {
             &clusters,
             epochs,
         );
+        if let Some(inj) = injector {
+            report.faults = Some(inj.report);
+        }
         if let Some(mut rec) = recorder {
             // Harvest the per-task timelines and close the request spans
             // with their completion cycles — all read-only over state the
@@ -1217,6 +1585,9 @@ impl ServeEngine {
             // The gateway attaches its stats after the run; the engine
             // itself never fills this.
             front: None,
+            // run_front overwrites this from the injector after the
+            // conservation sweep; aggregate itself never sees the injector.
+            faults: None,
             latency_stats,
         }
     }

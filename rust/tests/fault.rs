@@ -1,0 +1,387 @@
+//! §Fault tolerance integration tests.
+//!
+//! Two standing contracts are pinned here:
+//!
+//! 1. **Faults off → byte identity.** With no fault spec the engine's
+//!    decision streams and report JSON are byte-identical to the pre-fault
+//!    engine — the report key set is pinned, and an *empty* spec changes
+//!    behavior not at all (it only adds the zeroed `fault_*` keys).
+//! 2. **Conservation.** Under any seeded chaos schedule, every released
+//!    request completes exactly once or sheds with a typed reason — no
+//!    request is lost, duplicated, or silently dropped — deterministically
+//!    across repeat runs and across the sequential/parallel engines.
+
+use std::collections::HashMap;
+
+use hsv::config::{HardwareConfig, SimConfig};
+use hsv::sched::SchedulerKind;
+use hsv::serve::{
+    AutoscalePolicy, BatchPolicy, FaultSpec, ServeConfig, ServeEngine, ServeReport, ShedReason,
+};
+use hsv::util::json::Json;
+use hsv::workload::{ArrivalModel, Workload, WorkloadSpec};
+
+/// The 21 report keys of the fault-free default-config engine (the same
+/// pin `rust/tests/net.rs` holds for the front end).
+fn base_report_keys() -> Vec<&'static str> {
+    let mut v = vec![
+        "hw",
+        "scheduler",
+        "policy",
+        "workload",
+        "requests",
+        "makespan_cycles",
+        "tops",
+        "goodput_tops",
+        "utilization",
+        "mean_latency_ms",
+        "p50_ms",
+        "p95_ms",
+        "p99_ms",
+        "p999_ms",
+        "deadline_miss_rate",
+        "slo_cnn_ms",
+        "slo_transformer_ms",
+        "epochs",
+        "decisions",
+        "miss_rate_cnn",
+        "miss_rate_transformer",
+    ];
+    v.sort_unstable();
+    v
+}
+
+/// The nine config-gated fault keys, present exactly when a spec is set.
+const FAULT_KEYS: [&str; 9] = [
+    "fault_crashes",
+    "fault_stalls",
+    "fault_slowdowns",
+    "fault_warmup_fails",
+    "fault_link_drops",
+    "fault_reclaimed",
+    "fault_retries",
+    "fault_sheds",
+    "fault_recovered",
+];
+
+fn sorted_keys(j: &Json) -> Vec<String> {
+    let mut keys: Vec<String> = match j {
+        Json::Obj(map) => map.keys().cloned().collect(),
+        _ => panic!("report JSON must be an object"),
+    };
+    keys.sort_unstable();
+    keys
+}
+
+fn engine(hw: HardwareConfig, sched: SchedulerKind, sim: SimConfig, cfg: ServeConfig) -> ServeEngine {
+    ServeEngine::new(hw, sched, sim, cfg)
+}
+
+/// Every released request lands exactly once in `served ∪ shed`, and every
+/// fault shed carries the typed reason.
+fn assert_conserved(tag: &str, wl: &Workload, rep: &ServeReport) {
+    let mut seen: HashMap<u64, u32> = HashMap::new();
+    for s in &rep.served {
+        *seen.entry(s.request_id).or_insert(0) += 1;
+    }
+    for s in &rep.shed {
+        *seen.entry(s.request_id).or_insert(0) += 1;
+        if s.reason == ShedReason::ClusterFault {
+            assert!(
+                rep.faults.is_some(),
+                "{tag}: a ClusterFault shed can only come from the injector"
+            );
+        }
+    }
+    assert_eq!(
+        seen.len(),
+        wl.requests.len(),
+        "{tag}: served ∪ shed covers a different id set than the trace"
+    );
+    for r in &wl.requests {
+        assert_eq!(
+            seen.get(&r.id),
+            Some(&1),
+            "{tag}: request {} must complete exactly once or shed exactly once",
+            r.id
+        );
+    }
+}
+
+/// Contract 1a: the faults-off report carries exactly the pre-fault key
+/// set — no `fault` substring anywhere in the serialized JSON.
+#[test]
+fn faults_off_report_key_set_is_pinned() {
+    let wl = WorkloadSpec::ratio(0.5, 12, 17).generate();
+    let rep = engine(
+        HardwareConfig::small(),
+        SchedulerKind::Has,
+        SimConfig::default(),
+        ServeConfig::default(),
+    )
+    .run(&wl);
+    assert!(rep.faults.is_none(), "the engine never fills fault counters on its own");
+    assert_eq!(sorted_keys(&rep.to_json()), base_report_keys(), "faults-off keys drifted");
+    assert!(
+        !rep.to_json().to_pretty().contains("fault"),
+        "faults-off report mentions faults"
+    );
+}
+
+/// Contract 1b: an *empty* spec is behaviorally identical to no spec —
+/// same decisions, epochs, makespan, and completion stream — and the JSON
+/// differs by exactly the nine zeroed `fault_*` keys.
+#[test]
+fn empty_fault_spec_changes_nothing_but_the_gated_keys() {
+    let wl = WorkloadSpec::ratio(0.5, 30, 23)
+        .with_arrivals(ArrivalModel::bursty(60_000.0, 6_000.0))
+        .generate();
+    let hw = HardwareConfig::small().with_clusters(3);
+    let vanilla = engine(hw.clone(), SchedulerKind::Has, SimConfig::default(), ServeConfig::default())
+        .run(&wl);
+    let faulted = engine(hw, SchedulerKind::Has, SimConfig::default(), ServeConfig::default())
+        .with_faults(FaultSpec::none())
+        .run(&wl);
+
+    assert_eq!(vanilla.decisions, faulted.decisions, "decision streams diverged");
+    assert_eq!(vanilla.epochs, faulted.epochs);
+    assert_eq!(vanilla.makespan, faulted.makespan);
+    assert_eq!(vanilla.served.len(), faulted.served.len());
+    for (a, b) in vanilla.served.iter().zip(&faulted.served) {
+        assert_eq!(
+            (a.request_id, a.cluster, a.dispatched_at, a.end, a.met),
+            (b.request_id, b.cluster, b.dispatched_at, b.end, b.met),
+            "completion streams diverged under an empty spec"
+        );
+    }
+
+    let fr = faulted.faults.expect("a configured spec always attaches counters");
+    assert_eq!(
+        (fr.crashes, fr.stalls, fr.slowdowns, fr.warmup_fails, fr.link_drops),
+        (0, 0, 0, 0, 0)
+    );
+    assert_eq!((fr.reclaimed, fr.retries, fr.fault_sheds, fr.recovered), (0, 0, 0, 0));
+
+    let mut expected: Vec<String> = base_report_keys().iter().map(|s| s.to_string()).collect();
+    expected.extend(FAULT_KEYS.iter().map(|s| s.to_string()));
+    expected.sort_unstable();
+    assert_eq!(
+        sorted_keys(&faulted.to_json()),
+        expected,
+        "a fault spec must add exactly the fault_* keys"
+    );
+}
+
+/// Contract 2: the chaos grid. A schedule mixing an explicit crash, a
+/// stall, a straggler, and a seeded mtbf process, over every arrival model
+/// × scheduler × sequential/2-thread/8-thread combination: conservation
+/// holds, repeat runs are byte-identical, and the parallel engine matches
+/// the sequential one byte for byte.
+#[test]
+fn chaos_schedules_conserve_every_request_deterministically() {
+    let spec = FaultSpec::parse(
+        "crash:0@400000;stall:1@200000+150000;slow:2@100000+200000x3;\
+         mtbf:900000@2500000;seed=9;retry=2;backoff=30000",
+    )
+    .expect("the chaos spec parses");
+    let hw = HardwareConfig::small().with_clusters(4);
+    let cfg = ServeConfig {
+        batch: BatchPolicy::SloAware { max_batch: 4 },
+        ..ServeConfig::default()
+    };
+    let arrivals: Vec<(&str, ArrivalModel)> = vec![
+        ("poisson", ArrivalModel::Poisson),
+        ("bursty", ArrivalModel::bursty(50_000.0, 5_000.0)),
+        ("ramp", ArrivalModel::ramp(4.0, 0.5)),
+    ];
+    for (name, model) in arrivals {
+        for sched in [SchedulerKind::Has, SchedulerKind::RoundRobin] {
+            let tag = format!("{name}/{}", sched.name());
+            let wl = WorkloadSpec::ratio(0.5, 60, 29)
+                .with_mean_interarrival(30_000.0)
+                .with_arrivals(model)
+                .generate();
+            let run = |threads: usize| -> ServeReport {
+                let mut sim = SimConfig::default();
+                if threads > 0 {
+                    sim.parallel = true;
+                    sim.threads = threads;
+                }
+                engine(hw.clone(), sched, sim, cfg)
+                    .with_faults(spec.clone())
+                    .run(&wl)
+            };
+            let seq = run(0);
+            assert_conserved(&tag, &wl, &seq);
+            let fr = seq.faults.expect("counters attach");
+            // At least one crash always fires: the explicit crash:0
+            // directive, unless the seeded mtbf process crashed cluster 0
+            // first — in which case that crash counted instead. The stall
+            // and straggler windows fire at most once each (skipped if the
+            // mtbf process killed their cluster before the window opened).
+            assert!(fr.crashes >= 1, "{tag}: no crash fired");
+            assert!(fr.stalls <= 1 && fr.slowdowns <= 1, "{tag}");
+            // Conservation cross-check at the counter level: everything
+            // reclaimed either recovered or shed (sheds may also come from
+            // the end-of-run sweep of never-dispatched work).
+            assert!(
+                fr.recovered + fr.fault_sheds >= fr.reclaimed,
+                "{tag}: reclaimed work leaked ({} reclaimed, {} recovered, {} shed)",
+                fr.reclaimed,
+                fr.recovered,
+                fr.fault_sheds
+            );
+
+            // Determinism: an identical rerun is byte-identical.
+            let again = run(0);
+            assert_eq!(
+                seq.to_json().to_pretty(),
+                again.to_json().to_pretty(),
+                "{tag}: repeat run diverged"
+            );
+            // And the fork-join engine takes the same decisions bit for bit.
+            for threads in [2usize, 8] {
+                let par = run(threads);
+                assert_eq!(
+                    seq.to_json().to_pretty(),
+                    par.to_json().to_pretty(),
+                    "{tag}: {threads}-thread run diverged from sequential"
+                );
+            }
+        }
+    }
+}
+
+/// Stalls and stragglers degrade service without losing work: the windows
+/// open and close on schedule, every request still completes (nothing
+/// sheds — only crashes lose in-flight work), and the run stays
+/// deterministic.
+#[test]
+fn stall_and_straggler_windows_never_lose_requests() {
+    let wl = WorkloadSpec::ratio(0.5, 40, 37)
+        .with_mean_interarrival(25_000.0)
+        .generate();
+    let hw = HardwareConfig::small().with_clusters(2);
+    let spec = FaultSpec::parse("stall:0@100000+80000;slow:1@50000+100000x4")
+        .expect("spec parses");
+    let rep = engine(hw, SchedulerKind::Has, SimConfig::default(), ServeConfig::default())
+        .with_faults(spec)
+        .run(&wl);
+    assert_conserved("stall+slow", &wl, &rep);
+    let fr = rep.faults.expect("counters attach");
+    assert_eq!((fr.stalls, fr.slowdowns, fr.crashes), (1, 1, 0));
+    assert_eq!(fr.reclaimed, 0, "only crashes reclaim work");
+    assert_eq!(rep.served.len(), wl.requests.len(), "degraded-not-dead clusters lose nothing");
+    assert!(rep.shed.is_empty());
+}
+
+/// Recovery off + a fleet-wide crash: everything not already completed
+/// sheds with the typed `ClusterFault` reason — nothing hangs, nothing is
+/// dropped untyped, and the loop still terminates.
+#[test]
+fn losing_every_cluster_sheds_the_remainder_with_a_typed_reason() {
+    let wl = WorkloadSpec::ratio(0.5, 40, 31)
+        .with_mean_interarrival(20_000.0)
+        .generate();
+    let hw = HardwareConfig::small().with_clusters(2);
+    let spec = FaultSpec::parse("crash:0@300000;crash:1@300000;recover=off")
+        .expect("spec parses");
+    let rep = engine(hw, SchedulerKind::Has, SimConfig::default(), ServeConfig::default())
+        .with_faults(spec)
+        .run(&wl);
+    assert_conserved("all-crash", &wl, &rep);
+    let fr = rep.faults.expect("counters attach");
+    assert_eq!(fr.crashes, 2);
+    assert_eq!(fr.retries, 0, "recover=off never schedules a retry");
+    assert_eq!(fr.recovered, 0);
+    assert!(!rep.shed.is_empty(), "a dead fleet must shed its backlog");
+    assert!(
+        rep.shed.iter().all(|s| s.reason == ShedReason::ClusterFault),
+        "every fault shed carries the typed reason"
+    );
+    assert_eq!(fr.fault_sheds, rep.shed.len() as u64);
+    assert_eq!(rep.served.len() + rep.shed.len(), wl.requests.len());
+}
+
+/// The acceptance bar: against the same mid-run crash, recovery (reclaim +
+/// re-dispatch under the retry budget) serves strictly more requests than
+/// the shed-on-crash baseline, and the report proves work actually moved —
+/// reclaimed > 0 on both, recovered > 0 only with recovery on.
+#[test]
+fn recovery_beats_the_no_recovery_baseline_after_a_crash() {
+    let hw = HardwareConfig::small().with_clusters(2);
+    let wl = WorkloadSpec::ratio(0.5, 60, 43)
+        .with_mean_interarrival(5_000.0)
+        .generate();
+    // Calibrate the crash to the middle of the fault-free run, so cluster 0
+    // dies with real queued + in-flight work.
+    let base = engine(hw.clone(), SchedulerKind::Has, SimConfig::default(), ServeConfig::default())
+        .run(&wl);
+    assert_eq!(base.served.len(), wl.requests.len());
+    let crash_at = base.makespan / 2;
+
+    let run = |recover: &str| -> ServeReport {
+        let spec =
+            FaultSpec::parse(&format!("crash:0@{crash_at};retry=3;backoff=20000;recover={recover}"))
+                .expect("spec parses");
+        engine(hw.clone(), SchedulerKind::Has, SimConfig::default(), ServeConfig::default())
+            .with_faults(spec)
+            .run(&wl)
+    };
+    let with_recovery = run("on");
+    let without = run("off");
+    assert_conserved("recover=on", &wl, &with_recovery);
+    assert_conserved("recover=off", &wl, &without);
+
+    let fr_on = with_recovery.faults.expect("counters attach");
+    let fr_off = without.faults.expect("counters attach");
+    assert!(fr_on.reclaimed > 0, "the crash must reclaim in-flight work");
+    assert!(fr_off.reclaimed > 0);
+    assert!(fr_on.retries > 0);
+    assert!(fr_on.recovered > 0, "reclaimed work must complete elsewhere");
+    assert!(fr_off.fault_sheds > 0, "the baseline sheds what it cannot retry");
+    assert!(
+        with_recovery.served.len() > without.served.len(),
+        "recovery served {} requests vs {} without — re-dispatch bought nothing",
+        with_recovery.served.len(),
+        without.served.len()
+    );
+}
+
+/// Crash × autoscale composition: a crashed cluster goes through the power
+/// ledger as an unplanned Cold (its powered cycles stop at the crash) and
+/// the autoscaler never re-wakes it — it wakes a spare instead when the
+/// backlog demands capacity.
+#[test]
+fn a_crashed_cluster_powers_off_and_is_never_rewoken() {
+    let hw = HardwareConfig::small().with_clusters(3);
+    let wl = WorkloadSpec::ratio(0.5, 50, 47)
+        .with_mean_interarrival(8_000.0)
+        .generate();
+    let cfg = ServeConfig {
+        autoscale: AutoscalePolicy::Threshold {
+            up: 2,
+            down: 0,
+            min_active: 1,
+            dwell: 10_000,
+            warmup: 20_000,
+        },
+        ..ServeConfig::default()
+    };
+    let probe = engine(hw.clone(), SchedulerKind::Has, SimConfig::default(), cfg).run(&wl);
+    let crash_at = probe.makespan / 3;
+    let spec = FaultSpec::parse(&format!("crash:0@{crash_at};retry=3;backoff=20000"))
+        .expect("spec parses");
+    let rep = engine(hw, SchedulerKind::Has, SimConfig::default(), cfg)
+        .with_faults(spec)
+        .run(&wl);
+    assert_conserved("crash+autoscale", &wl, &rep);
+    let fr = rep.faults.expect("counters attach");
+    assert_eq!(fr.crashes, 1);
+    assert!(
+        rep.powered_cycles[0] < rep.makespan,
+        "the crashed cluster must stop accruing powered cycles ({} vs makespan {})",
+        rep.powered_cycles[0],
+        rep.makespan
+    );
+}
